@@ -1,0 +1,42 @@
+//! Bench: cache policy micro-ops + full trace-replay throughput.
+//! One criterion-style target per paper-relevant axis (harness = false).
+
+use moe_offload::bench_harness::Bencher;
+use moe_offload::cache::{LayerCache, PolicyKind};
+use moe_offload::sim::{cachesim, tracegen};
+
+fn main() {
+    let mut b = Bencher::new(2, 10);
+
+    // micro: hot-path lookup+insert mix per policy
+    for kind in PolicyKind::all_online() {
+        let mut cache: LayerCache<u64> = LayerCache::new(4, kind.build(0, None));
+        let pattern: Vec<usize> = (0..10_000).map(|i| (i * 7 + i / 13) % 8).collect();
+        b.bench_units(
+            &format!("policy/{}/lookup+insert", kind.name()),
+            Some((pattern.len() as f64, "op")),
+            &mut || {
+                for &e in &pattern {
+                    if cache.access(e).is_none() {
+                        cache.insert(e, e as u64);
+                    }
+                }
+            },
+        );
+    }
+
+    // macro: full 32-layer trace replay (the paper's analysis workload)
+    let trace = tracegen::generate(&tracegen::TraceGenConfig::mixtral(256, 0));
+    for kind in [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::LfuAged, PolicyKind::Belady] {
+        b.bench_units(
+            &format!("replay/{}/256tok-32layer", kind.name()),
+            Some((256.0, "tok")),
+            &mut || {
+                let mut t = trace.clone();
+                cachesim::replay(&mut t, kind, 4, 0)
+            },
+        );
+    }
+
+    println!("{}", b.render());
+}

@@ -1,0 +1,89 @@
+//! Bench: end-to-end decode tokens/s through the full engine (cache +
+//! transfer + prefetch), native backend by default so the bench runs
+//! without artifacts; pass --pjrt (env MOE_BENCH_PJRT=1) to bench the AOT
+//! path when artifacts/ exists.
+
+use moe_offload::bench_harness::Bencher;
+use moe_offload::cache::PolicyKind;
+use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::model::sampler::{Sampler, Sampling};
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::{ModelConfig, Weights};
+use moe_offload::offload::prefetch::PrefetchConfig;
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+use moe_offload::runtime::{native::NativeBackend, Backend};
+use moe_offload::sim::hardware;
+use std::sync::Arc;
+
+fn bench_config(
+    b: &mut Bencher,
+    name: &str,
+    weights: &Arc<Weights>,
+    make_backend: &dyn Fn() -> Box<dyn Backend>,
+    policy: PolicyKind,
+    spec: bool,
+    overlap: bool,
+    n_tokens: usize,
+) {
+    let store =
+        Arc::new(HostExpertStore::build(weights, Scheme::Int4 { block: 16 }).unwrap());
+    b.bench_units(name, Some((n_tokens as f64, "tok")), &mut || {
+        let mut engine = InferenceEngine::new(
+            make_backend(),
+            Arc::clone(&store),
+            EngineConfig {
+                cache_capacity: 4,
+                policy,
+                prefetch: PrefetchConfig { enabled: spec, k: 2 },
+                overlap,
+                profile: hardware::by_name("A6000").unwrap(),
+                seed: 0,
+                record_trace: false,
+            },
+        );
+        let mut sampler = Sampler::new(Sampling::Greedy, 0);
+        let prompt = [1u32, 7, 42, 9];
+        engine.generate(&prompt, n_tokens - prompt.len(), &mut sampler).unwrap()
+    });
+}
+
+fn main() {
+    // small config so the native matmuls keep iterations short
+    let cfg = ModelConfig { n_layers: 6, ..ModelConfig::DEFAULT };
+    let weights = Arc::new(generate_weights(cfg, 42));
+    let mut b = Bencher::new(1, 5);
+
+    let native = {
+        let w = Arc::clone(&weights);
+        move || -> Box<dyn Backend> { Box::new(NativeBackend::new(Arc::clone(&w))) }
+    };
+    for (name, policy, spec, overlap) in [
+        ("e2e/native/lru", PolicyKind::Lru, false, false),
+        ("e2e/native/lfu", PolicyKind::Lfu, false, false),
+        ("e2e/native/lfu-aged", PolicyKind::LfuAged, false, false),
+        ("e2e/native/lru+spec", PolicyKind::Lru, true, false),
+        ("e2e/native/lru+spec+overlap", PolicyKind::Lru, true, true),
+    ] {
+        bench_config(&mut b, name, &weights, &native, policy, spec, overlap, 16);
+    }
+
+    // PJRT path (opt-in: needs artifacts/)
+    if std::env::var("MOE_BENCH_PJRT").ok().as_deref() == Some("1") {
+        use moe_offload::runtime::artifacts::Artifacts;
+        use moe_offload::runtime::pjrt::PjrtBackend;
+        let artifacts = Artifacts::load(std::path::Path::new("artifacts")).expect("artifacts");
+        let aw = Arc::new(Weights::load(&artifacts.weights_path).unwrap());
+        let artifacts = Arc::new(artifacts);
+        let make = {
+            let aw = Arc::clone(&aw);
+            move || -> Box<dyn Backend> {
+                Box::new(PjrtBackend::new(&artifacts, &aw).unwrap())
+            }
+        };
+        bench_config(&mut b, "e2e/pjrt/lfu", &aw, &make, PolicyKind::Lfu, false, false, 12);
+        bench_config(&mut b, "e2e/pjrt/lru+spec", &aw, &make, PolicyKind::Lru, true, false, 12);
+    }
+
+    println!("{}", b.render());
+}

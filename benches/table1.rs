@@ -1,0 +1,17 @@
+//! Bench target for paper Table 1: regenerates the table end-to-end
+//! (trace gen -> LRU replay at each offload count -> cost model) and
+//! times the pipeline.
+
+use moe_offload::bench_harness::Bencher;
+use moe_offload::figures::{table1, FigCtx};
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("bench-t1-{}", std::process::id()));
+    let ctx = FigCtx::synthetic(&dir, 128, 0);
+    let mut b = Bencher::new(1, 5);
+    b.bench("table1/regenerate", || table1::run(&ctx).unwrap());
+    println!("{}", b.render());
+    println!("--- Table 1 output ---");
+    println!("{}", std::fs::read_to_string(dir.join("table1.txt")).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}

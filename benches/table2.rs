@@ -1,0 +1,16 @@
+//! Bench target for paper Table 2: regenerates the LRU-vs-LFU × 4-GPU
+//! comparison (fitted + physical profiles) and times the pipeline.
+
+use moe_offload::bench_harness::Bencher;
+use moe_offload::figures::{table2, FigCtx};
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("bench-t2-{}", std::process::id()));
+    let ctx = FigCtx::synthetic(&dir, 128, 0);
+    let mut b = Bencher::new(1, 5);
+    b.bench("table2/regenerate", || table2::run(&ctx).unwrap());
+    println!("{}", b.render());
+    println!("--- Table 2 output ---");
+    println!("{}", std::fs::read_to_string(dir.join("table2.txt")).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}

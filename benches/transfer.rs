@@ -1,0 +1,32 @@
+//! Bench: host-store build + per-expert transfer (dequantize) rates by
+//! quantization scheme — the CPU half of the offloading hot path.
+
+use moe_offload::bench_harness::Bencher;
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::ModelConfig;
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+
+fn main() {
+    let weights = generate_weights(ModelConfig::DEFAULT, 42);
+    let mut b = Bencher::new(1, 8);
+
+    for scheme in [Scheme::F32, Scheme::Int8 { block: 64 }, Scheme::Int4 { block: 16 }] {
+        let store = HostExpertStore::build(&weights, scheme).unwrap();
+        let bytes = store.expert_transfer_bytes();
+        b.bench_units(
+            &format!("dequant/{}/{}KB-expert", scheme.name(), bytes / 1024),
+            Some((weights.config.expert_bytes_f32() as f64 / 1e6, "MBf32"),),
+            &mut || store.fetch(0, 0),
+        );
+    }
+
+    // store construction (startup cost)
+    for scheme in [Scheme::Int8 { block: 64 }, Scheme::Int4 { block: 16 }] {
+        b.bench(&format!("store-build/{}", scheme.name()), || {
+            HostExpertStore::build(&weights, scheme).unwrap().total_bytes()
+        });
+    }
+
+    println!("{}", b.render());
+}

@@ -1,0 +1,172 @@
+//! End-to-end serving driver (DESIGN.md §5 "E2E driver"): start the HTTP
+//! server on a real model backend, fire a batch of concurrent client
+//! requests, and report latency percentiles + aggregate throughput — the
+//! serving-paper validation workload.
+//!
+//!     cargo run --release --example serve_load -- --requests 8 --n 12
+//!
+//! Flags: --backend native|pjrt (default native for speed)
+//!        --requests N  --concurrency C  --n tokens-per-request
+
+use anyhow::Result;
+use moe_offload::cache::PolicyKind;
+use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::offload::prefetch::PrefetchConfig;
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+use moe_offload::runtime::{artifacts::Artifacts, native::NativeBackend, pjrt::PjrtBackend, Backend};
+use moe_offload::serve;
+use moe_offload::sim::hardware;
+use moe_offload::util::cliargs::Args;
+use moe_offload::util::json;
+use moe_offload::util::stats::Summary;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const PROMPTS: [&str; 4] = [
+    "Introduce yourself, limit your response in 50 words.",
+    "Explain mixture-of-experts offloading in one paragraph.",
+    "What is the capital of France and why does caching matter?",
+    "Summarize the benefits of LFU over LRU for expert caching.",
+];
+
+fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or(0);
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, body))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())?;
+    let n_requests = args.usize_or("requests", 8)?;
+    let concurrency = args.usize_or("concurrency", 4)?;
+    let n_tokens = args.usize_or("n", 12)?;
+    let backend_kind = args.str_or("backend", "native");
+    let artifacts_dir = args.str_or("artifacts", "artifacts");
+
+    // start the server on an ephemeral port
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = Arc::clone(&shutdown);
+    let server = std::thread::spawn(move || {
+        let make = move || -> Result<InferenceEngine> {
+            let artifacts = Artifacts::load(Path::new(&artifacts_dir))?;
+            let weights = Arc::new(moe_offload::model::Weights::load(&artifacts.weights_path)?);
+            let backend: Box<dyn Backend> = match backend_kind.as_str() {
+                "pjrt" => Box::new(PjrtBackend::new(&artifacts, &weights)?),
+                _ => Box::new(NativeBackend::new(Arc::clone(&weights))),
+            };
+            let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 })?);
+            Ok(InferenceEngine::new(
+                backend,
+                store,
+                EngineConfig {
+                    cache_capacity: 4,
+                    policy: PolicyKind::Lfu,
+                    prefetch: PrefetchConfig { enabled: true, k: 2 },
+                    overlap: false,
+                    profile: hardware::by_name("A100").unwrap(),
+                    seed: 0,
+                    record_trace: false,
+                },
+            ))
+        };
+        let _ = serve::serve(listener, make, 4, sd);
+    });
+
+    // wait for health
+    loop {
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+            let mut b = String::new();
+            let _ = s.read_to_string(&mut b);
+            if b.contains("200") {
+                break;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("server up on {addr}; firing {n_requests} requests ({concurrency} concurrent) ...");
+
+    // client load
+    let t0 = Instant::now();
+    let latencies = Arc::new(std::sync::Mutex::new(Summary::new()));
+    let errors = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for w in 0..concurrency {
+        let latencies = Arc::clone(&latencies);
+        let errors = Arc::clone(&errors);
+        handles.push(std::thread::spawn(move || {
+            let per_worker = n_requests / concurrency + usize::from(w < n_requests % concurrency);
+            for i in 0..per_worker {
+                let prompt = PROMPTS[(w + i) % PROMPTS.len()];
+                let body = format!(
+                    r#"{{"prompt":"{prompt}","n_tokens":{n_tokens},"greedy":true}}"#
+                );
+                let t = Instant::now();
+                match http_post(addr, "/generate", &body) {
+                    Ok((200, resp_body)) => {
+                        latencies.lock().unwrap().add(t.elapsed().as_secs_f64());
+                        let v = json::parse(&resp_body).expect("json response");
+                        assert_eq!(v.get("n_generated").as_usize(), Some(n_tokens));
+                    }
+                    other => {
+                        eprintln!("request failed: {other:?}");
+                        errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // metrics endpoint
+    let (_, metrics_body) = {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n")?;
+        let mut b = String::new();
+        s.read_to_string(&mut b)?;
+        (200u16, b.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
+    };
+
+    let lat = latencies.lock().unwrap();
+    println!("\n== serve_load results ==");
+    println!("requests ok: {}  errors: {}", lat.n(), errors.load(Ordering::Relaxed));
+    println!(
+        "latency: mean {:.0} ms  p50 {:.0} ms  p99 {:.0} ms",
+        1e3 * lat.mean(),
+        1e3 * lat.p50(),
+        1e3 * lat.p99()
+    );
+    println!(
+        "throughput: {:.2} req/s, {:.1} generated tok/s aggregate",
+        lat.n() as f64 / wall,
+        (lat.n() * n_tokens) as f64 / wall
+    );
+    println!("server metrics: {metrics_body}");
+
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = server.join();
+    assert_eq!(errors.load(Ordering::Relaxed), 0, "requests failed");
+    Ok(())
+}

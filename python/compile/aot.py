@@ -1,0 +1,207 @@
+"""AOT compile path: lower every MiniMixtral stage to HLO text artifacts.
+
+This is the only place python touches the system: ``make artifacts`` runs it
+once, producing everything the rust coordinator needs to be self-contained:
+
+    artifacts/
+      manifest.json        stage metadata (shapes/dtypes/arity) + config
+      <stage>.hlo.txt      one HLO-text module per stage (embed, attn,
+                           router, expert, final)
+      weights.bin          deterministic synthetic weights (MOEW format)
+      testvec.json         golden vectors: per-stage checks + an 8-token
+                           greedy decode with per-layer expert selections,
+                           used by `moe-offload selfcheck` to validate the
+                           rust PJRT + native paths against jax
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import weights as weights_mod
+from compile.model import DEFAULT, TINY, ModelConfig, forward_token, make_stages
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_to_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_stages(cfg: ModelConfig, out_dir: str) -> list:
+    """Lower every stage, write ``<name>.hlo.txt``, return manifest entries."""
+    entries = []
+    for name, (fn, example_args) in make_stages(cfg).items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as fh:
+            fh.write(text)
+        out_specs = jax.eval_shape(fn, *example_args)
+        if not isinstance(out_specs, tuple):
+            out_specs = (out_specs,)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [_spec_to_json(s) for s in example_args],
+                "outputs": [_spec_to_json(s) for s in out_specs],
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"  lowered {name:8s} -> {fname} ({len(text)} chars)")
+    return entries
+
+
+def golden_decode(cfg: ModelConfig, params: dict, prompt_toks, n_gen: int):
+    """Greedy-decode ``n_gen`` tokens; record selections + logit digests.
+
+    The rust selfcheck replays the same decode through the PJRT artifacts
+    (and the native fallback) and asserts: same expert selections at every
+    (token, layer), same argmax tokens, logit checksums within tolerance.
+    """
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    s, nh, hd = cfg.max_seq, cfg.n_heads, cfg.head_dim
+    k_caches = [jnp.zeros((s, nh, hd), jnp.float32) for _ in range(cfg.n_layers)]
+    v_caches = [jnp.zeros((s, nh, hd), jnp.float32) for _ in range(cfg.n_layers)]
+
+    toks = list(prompt_toks)
+    steps = []
+    pos = 0
+    next_tok = None
+    # teacher-force the prompt, then generate greedily
+    total = len(prompt_toks) + n_gen
+    for step in range(total):
+        tok = toks[step] if step < len(prompt_toks) else next_tok
+        if step >= len(prompt_toks):
+            toks.append(tok)
+        logits, k_caches, v_caches, trace = forward_token(
+            cfg, jparams, jnp.asarray([tok], jnp.int32), k_caches, v_caches,
+            jnp.int32(pos),
+        )
+        next_tok = int(jnp.argmax(logits[0]))
+        steps.append(
+            {
+                "pos": pos,
+                "token": int(tok),
+                "argmax": next_tok,
+                "logits_sum": float(jnp.sum(logits)),
+                "logits_max": float(jnp.max(logits)),
+                "experts": [[int(i) for i in idx] for idx, _, _ in trace],
+                "expert_weights": [[float(x) for x in w] for _, w, _ in trace],
+            }
+        )
+        pos += 1
+    return {"prompt": [int(t) for t in prompt_toks], "n_gen": n_gen, "steps": steps}
+
+
+def stage_vectors(cfg: ModelConfig, params: dict) -> dict:
+    """Small per-stage golden vectors (layer 0) for debugging the rust port."""
+    stages = make_stages(cfg)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(0, 1, (1, cfg.hidden_size)).astype(np.float32))
+    p = lambda n: jnp.asarray(params[n])
+    out = {"x": x[0].tolist()}
+
+    (xe,) = stages["embed"][0](jnp.asarray([3], jnp.int32), p("embed.table"))
+    out["embed_tok3"] = xe[0].tolist()
+
+    s, nh, hd = cfg.max_seq, cfg.n_heads, cfg.head_dim
+    kc = jnp.zeros((s, nh, hd), jnp.float32)
+    vc = jnp.zeros((s, nh, hd), jnp.float32)
+    x_res, kc2, vc2 = stages["attn"][0](
+        x, p("layer.0.ln1"), p("layer.0.wq"), p("layer.0.wk"),
+        p("layer.0.wv"), p("layer.0.wo"), kc, vc, jnp.int32(0),
+    )
+    out["attn_x_res"] = x_res[0].tolist()
+    out["attn_kc_sum"] = float(jnp.sum(kc2))
+    out["attn_vc_sum"] = float(jnp.sum(vc2))
+
+    hn, probs = stages["router"][0](x, p("layer.0.ln2"), p("layer.0.gate"))
+    out["router_h"] = hn[0].tolist()
+    out["router_probs"] = probs[0].tolist()
+
+    (y,) = stages["expert"][0](
+        hn, p("layer.0.expert.0.w1"), p("layer.0.expert.0.w3"),
+        p("layer.0.expert.0.w2"),
+    )
+    out["expert0_y"] = y[0].tolist()
+
+    (logits,) = stages["final"][0](x, p("final.ln"), p("final.lm_head"))
+    out["final_logits_sum"] = float(jnp.sum(logits))
+    out["final_logits_first8"] = logits[0][:8].tolist()
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tiny", action="store_true", help="use the tiny test config")
+    ap.add_argument("--seed", type=int, default=42)
+    ap.add_argument("--skip-golden", action="store_true")
+    ap.add_argument("--golden-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = TINY if args.tiny else DEFAULT
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print(f"[aot] config: {cfg}")
+    print("[aot] lowering stages to HLO text...")
+    stage_entries = lower_stages(cfg, args.out_dir)
+
+    print("[aot] generating weights...")
+    params = weights_mod.generate(cfg, seed=args.seed)
+    wpath = os.path.join(args.out_dir, "weights.bin")
+    weights_mod.save(wpath, cfg, params)
+    n_params = sum(int(np.prod(a.shape)) for a in params.values())
+    print(f"[aot] wrote {wpath}: {n_params/1e6:.1f} M params")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "config": cfg.to_dict(),
+        "seed": args.seed,
+        "stages": stage_entries,
+        "weights": "weights.bin",
+        "testvec": None if args.skip_golden else "testvec.json",
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+
+    if not args.skip_golden:
+        print("[aot] computing golden vectors (stage + decode)...")
+        tv = {
+            "stages": stage_vectors(cfg, params),
+            "decode": golden_decode(
+                cfg, params, prompt_toks=[1, 7, 42, 9], n_gen=args.golden_tokens
+            ),
+        }
+        with open(os.path.join(args.out_dir, "testvec.json"), "w") as fh:
+            json.dump(tv, fh)
+        print("[aot] wrote testvec.json")
+
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

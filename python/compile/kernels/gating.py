@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: MoE router (gating network) with fused stable softmax.
+
+The gating network is a bias-free linear layer ``[H, E]`` followed by a
+softmax over the ``E`` experts (paper §4.3). Fusing the matmul and the
+numerically-stable softmax keeps the tiny ``[B, E]`` logits in VMEM.
+
+The same kernel serves two call sites in the rust coordinator:
+  * the layer's own routing (which experts to activate), and
+  * speculative expert pre-fetching — the *next* layer's gate applied to the
+    *current* layer's hidden states (paper §3.2) — identical computation,
+    different weight operand.
+
+``interpret=True``: see moe_ffn.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gating_kernel(h_ref, w_ref, o_ref):
+    logits = h_ref[...] @ w_ref[...]  # [B, E]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def gate_probs(h, gate_w):
+    """Router probabilities: ``softmax(h @ gate_w, axis=-1)``.
+
+    Args:
+      h:      [B, H] (RMS-normalized) hidden states.
+      gate_w: [H, E] gating network weight.
+
+    Returns:
+      [B, E] expert selection probabilities (rows sum to 1).
+    """
+    b, h_dim = h.shape
+    h2, e = gate_w.shape
+    assert h_dim == h2, f"h/gate_w mismatch: {h.shape} vs {gate_w.shape}"
+    return pl.pallas_call(
+        _gating_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, e), h.dtype),
+        interpret=True,
+    )(h, gate_w)

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: fused SwiGLU expert FFN.
+
+This is the paper's per-token compute hot spot: one Mixtral-style expert
+
+    y = (silu(x @ w1) * (x @ w3)) @ w2
+
+computed as a single fused Pallas kernel so the intermediate ``[B, F]``
+activations never round-trip through HBM.
+
+TPU adaptation of the paper's GPU setting (DESIGN.md §Hardware-Adaptation):
+the kernel is blocked over the FFN dimension ``F``. Per grid step ``j`` it
+streams one ``(H, FB)`` block of ``w1``/``w3`` and the matching ``(FB, H)``
+block of ``w2`` through VMEM while ``x`` (``[B, H]``) and the accumulator
+(``[B, H]``) stay resident, accumulating
+
+    y += (silu(x @ w1[:, j]) * (x @ w3[:, j])) @ w2[j, :]
+
+The BlockSpec grid expresses the HBM->VMEM schedule that the paper's expert
+offloading expresses one level up (host->HBM over PCIe): stream the cold
+weights, keep the hot activations resident.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact runs on
+the rust-side CPU client. Real-TPU efficiency is assessed analytically in
+EXPERIMENTS.md §Perf (VMEM footprint / MXU utilization from the block shapes).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default FFN-dimension block. 256 keeps the per-step VMEM footprint at
+# B*H + 2*H*FB + FB*H + B*FB floats (~0.8 MB for H=256, FB=256, f32), far
+# under the ~16 MB VMEM budget, leaving headroom for double buffering.
+DEFAULT_BLOCK_F = 256
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One FFN-dimension block of the fused SwiGLU expert."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    a = x @ w1_ref[...]  # [B, FB] gate path
+    g = a * jax.nn.sigmoid(a)  # silu
+    u = x @ w3_ref[...]  # [B, FB] up path
+    o_ref[...] += (g * u) @ w2_ref[...]  # [B, H] partial down-projection
+
+
+@partial(jax.jit, static_argnames=("block_f",))
+def expert_ffn(x, w1, w3, w2, *, block_f: int | None = None):
+    """Fused SwiGLU expert FFN: ``(silu(x@w1) * (x@w3)) @ w2``.
+
+    Args:
+      x:  [B, H] activations (resident in VMEM for the whole grid).
+      w1: [H, F] gate projection.
+      w3: [H, F] up projection.
+      w2: [F, H] down projection.
+      block_f: FFN-dimension tile; must divide F. Defaults to
+        ``min(F, DEFAULT_BLOCK_F)``.
+
+    Returns:
+      [B, H] expert output.
+    """
+    b, h = x.shape
+    h2, f = w1.shape
+    assert h == h2, f"x/w1 mismatch: {x.shape} vs {w1.shape}"
+    assert w3.shape == (h, f), f"bad w3 {w3.shape}"
+    assert w2.shape == (f, h), f"bad w2 {w2.shape}"
+    if block_f is None:
+        block_f = min(f, DEFAULT_BLOCK_F)
+    if f % block_f != 0:
+        raise ValueError(f"block_f={block_f} must divide F={f}")
+    grid = (f // block_f,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, h), lambda j: (0, 0)),
+            pl.BlockSpec((h, block_f), lambda j: (0, j)),
+            pl.BlockSpec((h, block_f), lambda j: (0, j)),
+            pl.BlockSpec((block_f, h), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, h), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)

@@ -1,0 +1,228 @@
+"""L2: MiniMixtral — a Mixtral-architecture MoE decoder, split into stages.
+
+The model is a faithful scale-down of Mixtral 8x7B (the paper's testbed):
+decoder-only transformer where every FFN is a top-2-of-8 MoE layer with a
+bias-free linear gating network, RMSNorm pre-norms, RoPE attention.
+
+The forward pass is deliberately split into **per-stage jitted functions**
+rather than one monolithic graph, because the paper's contribution lives
+*between* the stages: after ``router`` produces the expert probabilities for
+layer *l*, the rust coordinator (L3) consults the expert cache, transfers
+missing experts (charging the simulated PCIe clock), optionally speculatively
+pre-loads layer *l+1*'s guesses, and only then invokes ``expert_ffn`` per
+activated expert with the weight buffers it chose to make resident.
+Top-k selection, expert-output weighting, the residual adds around the MoE
+block, and sampling are done in rust (tiny vector ops; keeping them in L3
+gives the cache/prefetch logic full control).
+
+Stages (all f32, batch fixed at B=1 decode, matching the paper's setup):
+
+  embed  (tok i32[1], table[V,H])                          -> x[1,H]
+  attn   (x[1,H], ln1[H], wq,wk,wv,wo[H,H],
+          k_cache[S,nh,hd], v_cache[S,nh,hd], pos i32[])   -> (x_res[1,H], k_cache', v_cache')
+  router (x_res[1,H], ln2[H], gate_w[H,E])                 -> (h[1,H], probs[1,E])
+  expert (h[1,H], w1[H,F], w3[H,F], w2[F,H])               -> y[1,H]   (Pallas)
+  final  (x[1,H], lnf[H], lm_head[H,V])                    -> logits[1,V]
+
+Composition per layer (done by L3, mirrored by ``forward_reference``):
+
+  x_res, kc, vc = attn(x, ...)
+  h, probs      = router(x_res, ...)
+  sel, w        = topk2(probs); w /= sum(w)
+  x             = x_res + sum_i w_i * expert(h, W[sel_i])
+"""
+
+from dataclasses import dataclass, asdict, field
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import moe_ffn, gating
+from compile.kernels.ref import rmsnorm_ref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """MiniMixtral hyper-parameters (Mixtral-8x7B scaled to ~79 M params)."""
+
+    vocab_size: int = 1024
+    hidden_size: int = 256
+    n_layers: int = 12
+    n_heads: int = 8
+    n_experts: int = 8
+    top_k: int = 2
+    ffn_size: int = 1024
+    max_seq: int = 256
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden_size // self.n_heads
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# A tiny config for fast tests; same code paths, smaller dims.
+TINY = ModelConfig(
+    vocab_size=64,
+    hidden_size=32,
+    n_layers=2,
+    n_heads=4,
+    n_experts=8,
+    top_k=2,
+    ffn_size=64,
+    max_seq=16,
+)
+
+DEFAULT = ModelConfig()
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def _rope(x, pos, theta: float):
+    """Rotate-half RoPE for one position. x: [nh, hd], pos: scalar i32."""
+    nh, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    angle = pos.astype(jnp.float32) * freqs  # [half]
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[:, :half], x[:, half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# stages
+# --------------------------------------------------------------------------
+
+def make_stages(cfg: ModelConfig):
+    """Build the per-stage functions for ``cfg``.
+
+    Returns a dict name -> (fn, example_args) where example_args are
+    ShapeDtypeStructs suitable for ``jax.jit(fn).lower(*example_args)``.
+    """
+    v, h = cfg.vocab_size, cfg.hidden_size
+    e, f, s = cfg.n_experts, cfg.ffn_size, cfg.max_seq
+    nh, hd = cfg.n_heads, cfg.head_dim
+    eps, theta = cfg.rms_eps, cfg.rope_theta
+
+    def embed(tok, table):
+        # tok: i32[1]; table: [V, H]  ->  x: [1, H]
+        return (jnp.take(table, tok, axis=0),)
+
+    def attn(x, ln1, wq, wk, wv, wo, k_cache, v_cache, pos):
+        # Pre-norm multi-head attention with RoPE and a static-shape KV
+        # cache updated in place at `pos`. Returns the post-residual hidden
+        # states (the paper's "hidden states obtained after the multi-head
+        # attention block", i.e. the speculative-gating input).
+        hn = rmsnorm_ref(x, ln1, eps)  # [1, H]
+        q = (hn @ wq).reshape(nh, hd)
+        k = (hn @ wk).reshape(nh, hd)
+        val = (hn @ wv).reshape(nh, hd)
+        q = _rope(q, pos, theta)
+        k = _rope(k, pos, theta)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None], (pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, val[None], (pos, 0, 0))
+        scores = jnp.einsum("nd,snd->ns", q, k_cache) / jnp.sqrt(
+            jnp.float32(hd)
+        )  # [nh, S]
+        mask = jnp.arange(s)[None, :] > pos  # causal: future positions
+        scores = jnp.where(mask, -1e30, scores)
+        att = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("ns,snd->nd", att, v_cache).reshape(1, h) @ wo
+        return x + o, k_cache, v_cache
+
+    def router(x_res, ln2, gate_w):
+        # Post-attention norm + gating (Pallas kernel). Returns both the
+        # normed hidden states (the experts' input) and the probabilities
+        # (L3 takes top-k). Also invoked by the speculative prefetcher with
+        # the *next* layer's (ln2, gate_w).
+        hn = rmsnorm_ref(x_res, ln2, eps)
+        probs = gating.gate_probs(hn, gate_w)
+        return hn, probs
+
+    def expert(hn, w1, w3, w2):
+        # One expert's fused SwiGLU FFN — the L1 Pallas hot-spot kernel.
+        # block_f choice is per-target (EXPERIMENTS.md §Perf): on a real TPU
+        # the grid streams (H,256) weight tiles through VMEM (double-buffer
+        # headroom under the ~16 MB budget); on the CPU-PJRT artifact the
+        # interpret-mode grid lowers to an HLO while-loop with dynamic
+        # slices, which costs ~21x wallclock — so the shipped artifact uses
+        # a single full-F block (measured 3316 -> 154 us/call at F=1024).
+        return (moe_ffn.expert_ffn(hn, w1, w3, w2, block_f=f),)
+
+    def final(x, lnf, lm_head):
+        hn = rmsnorm_ref(x, lnf, eps)
+        return (hn @ lm_head,)
+
+    f32, i32 = jnp.float32, jnp.int32
+    sd = jax.ShapeDtypeStruct
+    return {
+        "embed": (embed, (sd((1,), i32), sd((v, h), f32))),
+        "attn": (
+            attn,
+            (
+                sd((1, h), f32), sd((h,), f32),
+                sd((h, h), f32), sd((h, h), f32), sd((h, h), f32), sd((h, h), f32),
+                sd((s, nh, hd), f32), sd((s, nh, hd), f32),
+                sd((), i32),
+            ),
+        ),
+        "router": (router, (sd((1, h), f32), sd((h,), f32), sd((h, e), f32))),
+        "expert": (
+            expert,
+            (sd((1, h), f32), sd((h, f), f32), sd((h, f), f32), sd((f, h), f32)),
+        ),
+        "final": (final, (sd((1, h), f32), sd((h,), f32), sd((h, v), f32))),
+    }
+
+
+# --------------------------------------------------------------------------
+# monolithic reference forward (tests + trace capture only; never exported)
+# --------------------------------------------------------------------------
+
+def topk_renorm(probs, k: int):
+    """Top-k expert selection with renormalized weights (Mixtral style)."""
+    w, idx = jax.lax.top_k(probs[0], k)
+    w = w / jnp.sum(w)
+    return idx, w
+
+
+def forward_token(cfg: ModelConfig, params: dict, tok, k_caches, v_caches, pos):
+    """Run one token through all layers by composing the stage functions.
+
+    ``params`` layout matches weights.py. Returns (logits, k_caches,
+    v_caches, trace) where trace is the per-layer list of (selected experts,
+    weights, probs) — the ground truth the rust tracing system reproduces.
+    """
+    stages = make_stages(cfg)
+    embed, attn, router = stages["embed"][0], stages["attn"][0], stages["router"][0]
+    expert, final = stages["expert"][0], stages["final"][0]
+
+    (x,) = embed(tok, params["embed.table"])
+    trace = []
+    for l in range(cfg.n_layers):
+        p = lambda name: params[f"layer.{l}.{name}"]
+        x, k_caches[l], v_caches[l] = attn(
+            x, p("ln1"), p("wq"), p("wk"), p("wv"), p("wo"),
+            k_caches[l], v_caches[l], pos,
+        )
+        hn, probs = router(x, p("ln2"), p("gate"))
+        idx, w = topk_renorm(probs, cfg.top_k)
+        y = jnp.zeros_like(x)
+        for j in range(cfg.top_k):
+            ej = idx[j]
+            # gather the expert weights (reference path only; rust selects
+            # buffers instead of gathering)
+            w1 = jnp.stack([params[f"layer.{l}.expert.{i}.w1"] for i in range(cfg.n_experts)])[ej]
+            w3 = jnp.stack([params[f"layer.{l}.expert.{i}.w3"] for i in range(cfg.n_experts)])[ej]
+            w2 = jnp.stack([params[f"layer.{l}.expert.{i}.w2"] for i in range(cfg.n_experts)])[ej]
+            (yj,) = expert(hn, w1, w3, w2)
+            y = y + w[j] * yj
+        x = x + y
+        trace.append((idx, w, probs))
+    (logits,) = final(x, params["final.ln"], params["final.lm_head"])
+    return logits, k_caches, v_caches, trace

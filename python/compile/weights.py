@@ -1,0 +1,133 @@
+"""Synthetic MiniMixtral weights: generation and the MOEW binary format.
+
+The paper evaluates on Mixtral-8x7B-Instruct, whose weights (~90 GB fp16)
+are unavailable here (DESIGN.md §3). We generate deterministic synthetic
+weights instead, with one deliberately shaped component:
+
+**Gate-column scaling for expert imbalance.** Paper §5.2 observes that the
+distribution of activated experts is skewed — concentrated on a few experts,
+most strongly in the *middle* layers. The gating network is a bias-free
+linear layer, so a constant per-expert logit offset is not expressible;
+instead we scale each expert's gate *column norm*. For RMS-normed hidden
+states, logit_e ~ N(0, s_e^2 * |h|^2 / H): experts with larger column scale
+produce more extreme logits and win top-k more often, yielding a skewed
+stationary activation distribution. The skew strength follows a sine bump
+over depth (peaks mid-network), matching §5.2's observation. Temporal
+locality then emerges for free, because consecutive tokens' residual-stream
+states are correlated.
+
+MOEW binary format (little-endian), read by ``rust/src/model/weights.rs``:
+
+    magic   b"MOEW"
+    version u32 = 1
+    hlen    u32 = length of the UTF-8 header JSON
+    header  JSON: {"config": {...},
+                   "tensors": [{"name", "shape", "offset", "nbytes"}, ...],
+                   "data_start": int}   # absolute file offset, 64-aligned
+    data    raw f32 tensors, each 64-byte aligned, offsets relative to
+            data_start
+"""
+
+import json
+
+import numpy as np
+
+from compile.model import ModelConfig
+
+MAGIC = b"MOEW"
+VERSION = 1
+ALIGN = 64
+
+
+def generate(cfg: ModelConfig, seed: int = 42) -> dict:
+    """Deterministic synthetic weights for ``cfg``. name -> np.float32 array."""
+    rng = np.random.default_rng(seed)
+    std = 0.02
+    h, v, f, e = cfg.hidden_size, cfg.vocab_size, cfg.ffn_size, cfg.n_experts
+
+    def dense(*shape):
+        return rng.normal(0.0, std, size=shape).astype(np.float32)
+
+    params = {"embed.table": dense(v, h)}
+    for l in range(cfg.n_layers):
+        pre = f"layer.{l}."
+        params[pre + "ln1"] = np.ones(h, dtype=np.float32)
+        params[pre + "ln2"] = np.ones(h, dtype=np.float32)
+        for name in ("wq", "wk", "wv", "wo"):
+            params[pre + name] = dense(h, h)
+        gate = dense(h, e)
+        # expert-imbalance shaping (see module docstring): skew strength
+        # peaks mid-network, expert ranking permuted per layer.
+        depth = l / max(cfg.n_layers - 1, 1)
+        alpha = 0.15 + 0.55 * np.sin(np.pi * depth)
+        ranks = rng.permutation(e)
+        scales = (1.0 / (ranks + 1.0)) ** alpha
+        scales = scales / scales.mean()
+        params[pre + "gate"] = (gate * scales[None, :]).astype(np.float32)
+        for x in range(e):
+            epre = f"{pre}expert.{x}."
+            params[epre + "w1"] = dense(h, f)
+            params[epre + "w3"] = dense(h, f)
+            params[epre + "w2"] = dense(f, h)
+    params["final.ln"] = np.ones(h, dtype=np.float32)
+    params["final.lm_head"] = dense(h, v)
+    return params
+
+
+def _align(n: int) -> int:
+    return (n + ALIGN - 1) // ALIGN * ALIGN
+
+
+def save(path: str, cfg: ModelConfig, params: dict) -> None:
+    """Write ``params`` in MOEW format (see module docstring)."""
+    tensors = []
+    offset = 0
+    for name, arr in params.items():
+        assert arr.dtype == np.float32, f"{name}: {arr.dtype}"
+        tensors.append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": arr.nbytes,
+            }
+        )
+        offset = _align(offset + arr.nbytes)
+
+    # data_start must itself be 64-aligned; pad the header.
+    prefix_len = len(MAGIC) + 8  # magic + version + hlen
+    header = {"config": cfg.to_dict(), "tensors": tensors, "data_start": 0}
+    # two-pass: compute data_start with a stable header length
+    raw = json.dumps(header).encode()
+    data_start = _align(prefix_len + len(raw) + 32)  # slack for the int
+    header["data_start"] = data_start
+    raw = json.dumps(header).encode()
+    assert prefix_len + len(raw) <= data_start, "header slack exceeded"
+
+    with open(path, "wb") as fh:
+        fh.write(MAGIC)
+        fh.write(np.uint32(VERSION).tobytes())
+        fh.write(np.uint32(len(raw)).tobytes())
+        fh.write(raw)
+        fh.write(b"\0" * (data_start - prefix_len - len(raw)))
+        for t, (name, arr) in zip(tensors, params.items()):
+            fh.seek(data_start + t["offset"])
+            fh.write(arr.tobytes())
+
+
+def load(path: str):
+    """Read a MOEW file back. Returns (config_dict, params)."""
+    with open(path, "rb") as fh:
+        blob = fh.read()
+    assert blob[:4] == MAGIC, "bad magic"
+    version = int(np.frombuffer(blob[4:8], np.uint32)[0])
+    assert version == VERSION, f"bad version {version}"
+    hlen = int(np.frombuffer(blob[8:12], np.uint32)[0])
+    header = json.loads(blob[12 : 12 + hlen].decode())
+    ds = header["data_start"]
+    params = {}
+    for t in header["tensors"]:
+        start = ds + t["offset"]
+        arr = np.frombuffer(blob[start : start + t["nbytes"]], np.float32)
+        params[t["name"]] = arr.reshape(t["shape"]).copy()
+    return header["config"], params

@@ -1,0 +1,98 @@
+"""AOT artifact integrity: HLO text parses, manifest complete, golden sane.
+
+Uses the TINY config into a tmpdir so the test is self-contained and fast;
+the shipped artifacts/ directory is produced by the same code path.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ART = None
+
+
+@pytest.fixture(scope="module")
+def art_dir(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--tiny", "--out-dir", out,
+         "--golden-tokens", "2"],
+        cwd=root, check=True, capture_output=True, env=env,
+    )
+    return out
+
+
+def test_manifest_complete(art_dir):
+    m = json.load(open(os.path.join(art_dir, "manifest.json")))
+    names = {s["name"] for s in m["stages"]}
+    assert names == {"embed", "attn", "router", "expert", "final"}
+    for s in m["stages"]:
+        assert os.path.exists(os.path.join(art_dir, s["file"]))
+        assert s["inputs"] and s["outputs"]
+    assert os.path.exists(os.path.join(art_dir, m["weights"]))
+    assert os.path.exists(os.path.join(art_dir, m["testvec"]))
+
+
+def test_hlo_text_is_parsable_module(art_dir):
+    """HLO text artifacts must look like `HloModule ...` with an ENTRY."""
+    m = json.load(open(os.path.join(art_dir, "manifest.json")))
+    for s in m["stages"]:
+        text = open(os.path.join(art_dir, s["file"])).read()
+        assert text.startswith("HloModule"), s["name"]
+        assert "ENTRY" in text, s["name"]
+        # 0.5.1 gate: HLO *text* interchange, never serialized protos
+        assert "\0" not in text
+
+
+def test_stage_shapes_match_config(art_dir):
+    m = json.load(open(os.path.join(art_dir, "manifest.json")))
+    cfg = m["config"]
+    st = {s["name"]: s for s in m["stages"]}
+    h, v, e, f = cfg["hidden_size"], cfg["vocab_size"], cfg["n_experts"], cfg["ffn_size"]
+    assert st["embed"]["inputs"][1]["shape"] == [v, h]
+    assert st["router"]["inputs"][2]["shape"] == [h, e]
+    assert st["router"]["outputs"][1]["shape"] == [1, e]
+    assert st["expert"]["inputs"][1]["shape"] == [h, f]
+    assert st["expert"]["outputs"][0]["shape"] == [1, h]
+    assert st["final"]["outputs"][0]["shape"] == [1, v]
+
+
+def test_golden_decode_structure(art_dir):
+    m = json.load(open(os.path.join(art_dir, "manifest.json")))
+    tv = json.load(open(os.path.join(art_dir, "testvec.json")))
+    cfg = m["config"]
+    dec = tv["decode"]
+    assert len(dec["steps"]) == len(dec["prompt"]) + dec["n_gen"]
+    for step in dec["steps"]:
+        assert len(step["experts"]) == cfg["n_layers"]
+        for sel, w in zip(step["experts"], step["expert_weights"]):
+            assert len(sel) == cfg["top_k"]
+            assert len(set(sel)) == cfg["top_k"]
+            assert all(0 <= x < cfg["n_experts"] for x in sel)
+            assert abs(sum(w) - 1.0) < 1e-4
+        assert 0 <= step["argmax"] < cfg["vocab_size"]
+
+
+def test_golden_continuity(art_dir):
+    """Generated token at step t equals argmax of step t-1 (greedy)."""
+    tv = json.load(open(os.path.join(art_dir, "testvec.json")))
+    dec = tv["decode"]
+    n_prompt = len(dec["prompt"])
+    for i, step in enumerate(dec["steps"]):
+        assert step["pos"] == i
+        if i >= n_prompt:
+            assert step["token"] == dec["steps"][i - 1]["argmax"]
+
+
+def test_stage_vectors_present(art_dir):
+    tv = json.load(open(os.path.join(art_dir, "testvec.json")))
+    sv = tv["stages"]
+    for key in ("x", "embed_tok3", "attn_x_res", "router_h", "router_probs",
+                "expert0_y", "final_logits_sum", "final_logits_first8"):
+        assert key in sv
+    assert abs(sum(sv["router_probs"]) - 1.0) < 1e-5

@@ -1,0 +1,107 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes (and block sizes); assert_allclose against ref.py.
+This is the core correctness signal for the compute hot spot.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gating, moe_ffn, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+
+
+class TestExpertFfn:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        h=st.sampled_from([8, 32, 64, 256]),
+        f_mult=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, h, f_mult, seed):
+        rng = np.random.default_rng(seed)
+        f = 16 * f_mult
+        x = _rand(rng, b, h)
+        w1, w3, w2 = _rand(rng, h, f), _rand(rng, h, f), _rand(rng, f, h)
+        got = moe_ffn.expert_ffn(x, w1, w3, w2, block_f=16)
+        want = ref.expert_ffn_ref(x, w1, w3, w2)
+        # accumulation-order differences scale with the output magnitude
+        scale = float(jnp.max(jnp.abs(want))) + 1e-6
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-5 * scale)
+
+    @pytest.mark.parametrize("block_f", [16, 32, 64, 128])
+    def test_block_size_invariance(self, block_f):
+        """Output must not depend on the VMEM tile size."""
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 1, 64)
+        w1, w3, w2 = _rand(rng, 64, 128), _rand(rng, 64, 128), _rand(rng, 128, 64)
+        got = moe_ffn.expert_ffn(x, w1, w3, w2, block_f=block_f)
+        want = ref.expert_ffn_ref(x, w1, w3, w2)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_default_block_on_model_shapes(self):
+        """The exact shapes the AOT artifact is lowered with."""
+        rng = np.random.default_rng(1)
+        h, f = 256, 1024
+        x = _rand(rng, 1, h)
+        w1, w3, w2 = _rand(rng, h, f), _rand(rng, h, f), _rand(rng, f, h)
+        got = moe_ffn.expert_ffn(x, w1, w3, w2)
+        want = ref.expert_ffn_ref(x, w1, w3, w2)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_bad_block_rejected(self):
+        rng = np.random.default_rng(2)
+        x = _rand(rng, 1, 8)
+        w1, w3, w2 = _rand(rng, 8, 24), _rand(rng, 8, 24), _rand(rng, 24, 8)
+        with pytest.raises(ValueError, match="must divide"):
+            moe_ffn.expert_ffn(x, w1, w3, w2, block_f=16)
+
+    def test_zero_input_gives_zero(self):
+        rng = np.random.default_rng(3)
+        x = jnp.zeros((1, 32))
+        w1, w3, w2 = _rand(rng, 32, 32), _rand(rng, 32, 32), _rand(rng, 32, 32)
+        got = moe_ffn.expert_ffn(x, w1, w3, w2, block_f=16)
+        np.testing.assert_allclose(got, jnp.zeros((1, 32)), atol=1e-7)
+
+
+class TestGating:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        h=st.sampled_from([8, 32, 256]),
+        e=st.sampled_from([2, 4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, b, h, e, seed):
+        rng = np.random.default_rng(seed)
+        hdn = _rand(rng, b, h)
+        gw = _rand(rng, h, e)
+        got = gating.gate_probs(hdn, gw)
+        want = ref.gate_probs_ref(hdn, gw)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_rows_sum_to_one(self, seed):
+        rng = np.random.default_rng(seed)
+        hdn, gw = _rand(rng, 3, 32), _rand(rng, 32, 8)
+        probs = gating.gate_probs(hdn, gw)
+        np.testing.assert_allclose(jnp.sum(probs, axis=-1), jnp.ones(3), rtol=1e-5)
+        assert bool(jnp.all(probs >= 0))
+
+    def test_large_logits_stable(self):
+        """Stable softmax: huge logits must not overflow to nan/inf."""
+        hdn = jnp.full((1, 16), 100.0)
+        gw = jnp.eye(16, 8) * 50.0
+        probs = gating.gate_probs(hdn, gw)
+        assert bool(jnp.all(jnp.isfinite(probs)))
+        np.testing.assert_allclose(jnp.sum(probs), 1.0, rtol=1e-5)

@@ -1,0 +1,150 @@
+"""L2 model tests: stage shapes, composition, and MoE semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import weights as weights_mod
+from compile.kernels import ref
+from compile.model import TINY, forward_token, make_stages, topk_renorm
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in weights_mod.generate(CFG, seed=0).items()}
+
+
+@pytest.fixture(scope="module")
+def stages():
+    return make_stages(CFG)
+
+
+def test_stage_output_shapes(stages, params):
+    """Every stage produces the shapes the manifest promises."""
+    for name, (fn, example_args) in stages.items():
+        outs = jax.eval_shape(fn, *example_args)
+        outs = outs if isinstance(outs, tuple) else (outs,)
+        for o in outs:
+            assert all(d > 0 for d in o.shape), f"{name}: bad shape {o.shape}"
+
+
+def test_embed_is_table_row(stages, params):
+    (x,) = stages["embed"][0](jnp.asarray([5], jnp.int32), params["embed.table"])
+    np.testing.assert_allclose(x[0], params["embed.table"][5], rtol=1e-6)
+
+
+def test_attn_residual_property(stages, params):
+    """With zero o-projection, attention must be the identity (residual)."""
+    h, s, nh, hd = CFG.hidden_size, CFG.max_seq, CFG.n_heads, CFG.head_dim
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (1, h)).astype(np.float32))
+    kc = jnp.zeros((s, nh, hd))
+    vc = jnp.zeros((s, nh, hd))
+    x_res, _, _ = stages["attn"][0](
+        x, params["layer.0.ln1"], params["layer.0.wq"], params["layer.0.wk"],
+        params["layer.0.wv"], jnp.zeros((h, h)), kc, vc, jnp.int32(0),
+    )
+    np.testing.assert_allclose(x_res, x, rtol=1e-6)
+
+
+def test_attn_kv_cache_written_at_pos(stages, params):
+    h, s, nh, hd = CFG.hidden_size, CFG.max_seq, CFG.n_heads, CFG.head_dim
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (1, h)).astype(np.float32))
+    kc = jnp.zeros((s, nh, hd))
+    vc = jnp.zeros((s, nh, hd))
+    pos = 3
+    _, kc2, vc2 = stages["attn"][0](
+        x, params["layer.0.ln1"], params["layer.0.wq"], params["layer.0.wk"],
+        params["layer.0.wv"], params["layer.0.wo"], kc, vc, jnp.int32(pos),
+    )
+    # only row `pos` may be non-zero
+    assert float(jnp.abs(kc2[pos]).sum()) > 0
+    mask = jnp.arange(s) != pos
+    assert float(jnp.abs(kc2[mask]).sum()) == 0
+    assert float(jnp.abs(vc2[mask]).sum()) == 0
+
+
+def test_attn_causality(stages, params):
+    """Writing garbage into FUTURE cache rows must not change the output."""
+    h, s, nh, hd = CFG.hidden_size, CFG.max_seq, CFG.n_heads, CFG.head_dim
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 1, (1, h)).astype(np.float32))
+    args = (
+        params["layer.0.ln1"], params["layer.0.wq"], params["layer.0.wk"],
+        params["layer.0.wv"], params["layer.0.wo"],
+    )
+    pos = 4
+    kc = jnp.zeros((s, nh, hd))
+    vc = jnp.zeros((s, nh, hd))
+    a1, _, _ = stages["attn"][0](x, *args, kc, vc, jnp.int32(pos))
+    poison = jnp.asarray(rng.normal(0, 9, (s, nh, hd)).astype(np.float32))
+    future = (jnp.arange(s) > pos)[:, None, None]
+    kc_p = jnp.where(future, poison, kc)
+    vc_p = jnp.where(future, poison, vc)
+    a2, _, _ = stages["attn"][0](x, *args, kc_p, vc_p, jnp.int32(pos))
+    np.testing.assert_allclose(a1, a2, rtol=1e-5, atol=1e-6)
+
+
+def test_router_probs_normalized(stages, params):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 1, (1, CFG.hidden_size)).astype(np.float32))
+    hn, probs = stages["router"][0](x, params["layer.0.ln2"], params["layer.0.gate"])
+    np.testing.assert_allclose(jnp.sum(probs), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(
+        hn, ref.rmsnorm_ref(x, params["layer.0.ln2"], CFG.rms_eps), rtol=1e-5
+    )
+
+
+def test_topk_renorm():
+    probs = jnp.asarray([[0.05, 0.4, 0.1, 0.25, 0.05, 0.05, 0.05, 0.05]])
+    idx, w = topk_renorm(probs, 2)
+    assert set(np.asarray(idx).tolist()) == {1, 3}
+    np.testing.assert_allclose(jnp.sum(w), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(w[0] / w[1], 0.4 / 0.25, rtol=1e-5)
+
+
+def test_forward_token_runs_and_traces(params):
+    s, nh, hd = CFG.max_seq, CFG.n_heads, CFG.head_dim
+    kcs = [jnp.zeros((s, nh, hd)) for _ in range(CFG.n_layers)]
+    vcs = [jnp.zeros((s, nh, hd)) for _ in range(CFG.n_layers)]
+    logits, kcs, vcs, trace = forward_token(
+        CFG, params, jnp.asarray([1], jnp.int32), kcs, vcs, jnp.int32(0)
+    )
+    assert logits.shape == (1, CFG.vocab_size)
+    assert len(trace) == CFG.n_layers
+    for idx, w, probs in trace:
+        assert idx.shape == (CFG.top_k,)
+        assert len(set(np.asarray(idx).tolist())) == CFG.top_k  # distinct experts
+        np.testing.assert_allclose(jnp.sum(w), 1.0, rtol=1e-5)
+
+
+def test_forward_deterministic(params):
+    """Same token, same caches -> bit-identical logits (semantic transparency
+    baseline: the rust cache layers must preserve exactly this)."""
+    s, nh, hd = CFG.max_seq, CFG.n_heads, CFG.head_dim
+
+    def run():
+        kcs = [jnp.zeros((s, nh, hd)) for _ in range(CFG.n_layers)]
+        vcs = [jnp.zeros((s, nh, hd)) for _ in range(CFG.n_layers)]
+        logits, *_ = forward_token(
+            CFG, params, jnp.asarray([2], jnp.int32), kcs, vcs, jnp.int32(0)
+        )
+        return np.asarray(logits)
+
+    np.testing.assert_array_equal(run(), run())
+
+
+def test_gate_imbalance_shaping():
+    """weights.py §docstring: mid-network gate columns are more skewed."""
+    p = weights_mod.generate(TINY, seed=0)
+    norms_first = np.linalg.norm(p["layer.0.gate"], axis=0)
+    mid = TINY.n_layers // 2
+    norms_mid = np.linalg.norm(p[f"layer.{mid}.gate"], axis=0)
+    cv = lambda v: np.std(v) / np.mean(v)
+    assert cv(norms_mid) > cv(norms_first)

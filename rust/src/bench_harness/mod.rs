@@ -1,0 +1,131 @@
+//! Benchmark harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/p50/p99 reporting, used by every `benches/*.rs`
+//! target (`harness = false` in Cargo.toml).
+
+use crate::util::stats::{Summary, Table};
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+    /// Optional work units per iteration (tokens, lookups, bytes...).
+    pub units_per_iter: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn per_second(&self) -> Option<f64> {
+        self.units_per_iter
+            .map(|(u, _)| u / self.summary.mean().max(1e-12))
+    }
+}
+
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { results: Vec::new(), warmup: 2, iters: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { results: Vec::new(), warmup, iters }
+    }
+
+    /// Time `f` (whose return value is consumed to prevent DCE).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        self.bench_units(name, None, &mut f);
+    }
+
+    pub fn bench_units<T>(
+        &mut self,
+        name: &str,
+        units: Option<(f64, &'static str)>,
+        f: &mut impl FnMut() -> T,
+    ) {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            s.add(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            summary: s,
+            units_per_iter: units,
+        });
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["bench", "iters", "mean", "p50", "p99", "rate"]);
+        for r in &self.results {
+            let rate = match (r.per_second(), r.units_per_iter) {
+                (Some(v), Some((_, unit))) => format!("{v:.1} {unit}/s"),
+                _ => "-".to_string(),
+            };
+            t.row(&[
+                r.name.clone(),
+                r.iters.to_string(),
+                format_secs(r.summary.mean()),
+                format_secs(r.summary.p50()),
+                format_secs(r.summary.p99()),
+                rate,
+            ]);
+        }
+        t.render()
+    }
+}
+
+pub fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_iters() {
+        let mut b = Bencher::new(1, 5);
+        b.bench("noop", || 42);
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].summary.n(), 5);
+        assert!(b.render().contains("noop"));
+    }
+
+    #[test]
+    fn units_give_rate() {
+        let mut b = Bencher::new(0, 3);
+        b.bench_units("sleepy", Some((100.0, "tok")), &mut || {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+        let rate = b.results[0].per_second().unwrap();
+        assert!(rate > 1000.0 && rate < 60_000.0, "{rate}");
+        assert!(b.render().contains("tok/s"));
+    }
+
+    #[test]
+    fn format_secs_ranges() {
+        assert_eq!(format_secs(2.5), "2.500 s");
+        assert!(format_secs(0.002).ends_with("ms"));
+        assert!(format_secs(2e-6).ends_with("µs"));
+        assert!(format_secs(5e-9).ends_with("ns"));
+    }
+}

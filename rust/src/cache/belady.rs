@@ -1,0 +1,113 @@
+//! Belady's MIN — the clairvoyant optimal eviction policy, used in trace
+//! replay as the upper bound on what any online policy (LRU/LFU/...) could
+//! achieve. Evicts the resident expert whose *next* use lies farthest in
+//! the future (never-used-again first).
+//!
+//! Requires the layer's full activation trace up front (one entry per
+//! token: the set of activated experts), so it is only available in the
+//! simulator — the live engine cannot see the future, which is exactly the
+//! gap speculative prefetching (paper §3.2) tries to close.
+
+use super::{Expert, Policy};
+
+pub struct Belady {
+    /// next_use[e] = sorted positions (token indices) where e is activated.
+    next_use: Vec<Vec<u64>>,
+    /// Cursor per expert into `next_use`.
+    cursor: Vec<usize>,
+    /// Current token position, advanced via on_hit/on_insert ticks.
+    now_token: u64,
+}
+
+impl Belady {
+    /// `future`: per-token activated expert sets for this layer.
+    pub fn new(future: &[Vec<Expert>]) -> Self {
+        let max_e = future
+            .iter()
+            .flat_map(|s| s.iter().copied())
+            .max()
+            .map_or(0, |m| m + 1);
+        let mut next_use = vec![Vec::new(); max_e];
+        for (t, set) in future.iter().enumerate() {
+            for &e in set {
+                next_use[e].push(t as u64);
+            }
+        }
+        Belady { next_use, cursor: vec![0; max_e], now_token: 0 }
+    }
+
+    /// The replay loop calls this once per token before the lookups.
+    pub fn advance_token(&mut self, token_idx: u64) {
+        self.now_token = token_idx;
+        for e in 0..self.next_use.len() {
+            while self.cursor[e] < self.next_use[e].len()
+                && self.next_use[e][self.cursor[e]] < token_idx
+            {
+                self.cursor[e] += 1;
+            }
+        }
+    }
+
+    /// Next token index at which `e` is used at/after the current token.
+    fn next_use_of(&self, e: Expert) -> u64 {
+        if e >= self.next_use.len() {
+            return u64::MAX;
+        }
+        let mut c = self.cursor[e];
+        while c < self.next_use[e].len() {
+            let t = self.next_use[e][c];
+            if t > self.now_token {
+                return t;
+            }
+            c += 1;
+        }
+        u64::MAX
+    }
+}
+
+impl Policy for Belady {
+    fn name(&self) -> &'static str {
+        "belady"
+    }
+    fn on_hit(&mut self, _e: Expert, _tick: u64) {}
+    fn on_insert(&mut self, _e: Expert, _tick: u64) {}
+    fn victim(&mut self, resident: &[Expert], _tick: u64) -> Expert {
+        *resident
+            .iter()
+            .max_by_key(|e| (self.next_use_of(**e), **e))
+            .expect("victim() on empty resident set")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_farthest_next_use() {
+        // tokens: t0 {0,1}, t1 {0,2}, t2 {1}, t3 {2}
+        let future = vec![vec![0, 1], vec![0, 2], vec![1], vec![2]];
+        let mut b = Belady::new(&future);
+        b.advance_token(1);
+        // at t1: next use of 0 -> never (MAX), 1 -> t2, 2 -> t3 (cursor at t1 but >now)
+        assert_eq!(b.victim(&[0, 1, 2], 0), 0);
+        assert_eq!(b.victim(&[1, 2], 0), 2);
+    }
+
+    #[test]
+    fn never_used_again_evicted_first() {
+        let future = vec![vec![3], vec![4], vec![4]];
+        let mut b = Belady::new(&future);
+        b.advance_token(1);
+        assert_eq!(b.victim(&[3, 4], 0), 3);
+    }
+
+    #[test]
+    fn unknown_expert_is_never_used() {
+        let future = vec![vec![0]];
+        let mut b = Belady::new(&future);
+        b.advance_token(0);
+        // expert 9 not in trace at all -> farthest
+        assert_eq!(b.victim(&[0, 9], 0), 9);
+    }
+}

@@ -1,0 +1,48 @@
+//! FIFO — control baseline: evict in insertion order, ignoring use.
+
+use super::{Expert, Policy};
+use std::collections::HashMap;
+
+#[derive(Default)]
+pub struct Fifo {
+    inserted_at: HashMap<Expert, u64>,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Policy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn on_hit(&mut self, _e: Expert, _tick: u64) {}
+    fn on_insert(&mut self, e: Expert, tick: u64) {
+        self.inserted_at.insert(e, tick);
+    }
+    fn victim(&mut self, resident: &[Expert], _tick: u64) -> Expert {
+        *resident
+            .iter()
+            .min_by_key(|e| (self.inserted_at.get(e).copied().unwrap_or(0), **e))
+            .expect("victim() on empty resident set")
+    }
+    fn on_evict(&mut self, e: Expert) {
+        self.inserted_at.remove(&e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_oldest_insert_despite_hits() {
+        let mut p = Fifo::new();
+        p.on_insert(0, 1);
+        p.on_insert(1, 2);
+        p.on_hit(0, 3); // hits don't refresh FIFO order
+        assert_eq!(p.victim(&[0, 1], 4), 0);
+    }
+}

@@ -1,0 +1,88 @@
+//! LFU — the paper's proposed policy (§4.2): evict the least *frequently*
+//! used expert, exploiting the strong expert-imbalance phenomenon (§5.2).
+//!
+//! Frequency is cumulative over the whole decode and survives eviction —
+//! this matches the paper's implementation ("we added one usage count field
+//! in the information of experts") and produces its §5.3 observation that
+//! "some experts remain in the cache throughout all tokens". Ties break by
+//! recency, then index, for determinism.
+
+use super::{Expert, Policy};
+use std::collections::HashMap;
+
+#[derive(Default)]
+pub struct Lfu {
+    freq: HashMap<Expert, u64>,
+    last_access: HashMap<Expert, u64>,
+}
+
+impl Lfu {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn frequency(&self, e: Expert) -> u64 {
+        self.freq.get(&e).copied().unwrap_or(0)
+    }
+}
+
+impl Policy for Lfu {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+    fn on_hit(&mut self, e: Expert, tick: u64) {
+        *self.freq.entry(e).or_insert(0) += 1;
+        self.last_access.insert(e, tick);
+    }
+    fn on_insert(&mut self, e: Expert, tick: u64) {
+        *self.freq.entry(e).or_insert(0) += 1;
+        self.last_access.insert(e, tick);
+    }
+    fn victim(&mut self, resident: &[Expert], _tick: u64) -> Expert {
+        *resident
+            .iter()
+            .min_by_key(|e| {
+                (
+                    self.freq.get(e).copied().unwrap_or(0),
+                    self.last_access.get(e).copied().unwrap_or(0),
+                    **e,
+                )
+            })
+            .expect("victim() on empty resident set")
+    }
+    // NOTE: no on_evict cleanup — frequency is global history by design.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_frequent() {
+        let mut p = Lfu::new();
+        p.on_insert(0, 1);
+        p.on_insert(1, 2);
+        p.on_hit(0, 3);
+        p.on_hit(0, 4); // freq: 0 -> 3, 1 -> 1
+        assert_eq!(p.victim(&[0, 1], 5), 1);
+    }
+
+    #[test]
+    fn frequency_survives_eviction() {
+        let mut p = Lfu::new();
+        for t in 0..5 {
+            p.on_hit(7, t);
+        }
+        p.on_evict(7);
+        p.on_insert(7, 10); // comes back with freq 6
+        p.on_insert(3, 11); // freq 1
+        assert_eq!(p.victim(&[7, 3], 12), 3);
+    }
+
+    #[test]
+    fn tie_breaks_by_recency() {
+        let mut p = Lfu::new();
+        p.on_insert(0, 1);
+        p.on_insert(1, 2); // equal freq, 0 older
+        assert_eq!(p.victim(&[0, 1], 3), 0);
+    }
+}

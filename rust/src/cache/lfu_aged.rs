@@ -1,0 +1,98 @@
+//! LFU-aged — the paper's §6.1 future-work hybrid, implemented.
+//!
+//! The paper's takeaway: *"we cannot allow an expert to be unevictable just
+//! because it is popular. Some combination of popularity and unused count
+//! might be a better option."* This policy scores each resident expert as
+//! `freq * 0.5^((now - last_access) / half_life)` and evicts the minimum:
+//! popularity decays exponentially while an expert goes unused, so a
+//! formerly-hot expert eventually becomes evictable.
+
+use super::{Expert, Policy};
+use std::collections::HashMap;
+
+pub struct LfuAged {
+    freq: HashMap<Expert, f64>,
+    last_access: HashMap<Expert, u64>,
+    /// Ticks for the score to halve. One lookup = one tick; with top-2 of 8
+    /// experts a token is ~2 ticks, so 32 ≈ 16 tokens of grace.
+    pub half_life: f64,
+}
+
+impl Default for LfuAged {
+    fn default() -> Self {
+        LfuAged::new(32.0)
+    }
+}
+
+impl LfuAged {
+    pub fn new(half_life: f64) -> Self {
+        assert!(half_life > 0.0);
+        LfuAged { freq: HashMap::new(), last_access: HashMap::new(), half_life }
+    }
+
+    fn score(&self, e: Expert, now: u64) -> f64 {
+        let f = self.freq.get(&e).copied().unwrap_or(0.0);
+        let last = self.last_access.get(&e).copied().unwrap_or(0);
+        let idle = now.saturating_sub(last) as f64;
+        f * 0.5f64.powf(idle / self.half_life)
+    }
+}
+
+impl Policy for LfuAged {
+    fn name(&self) -> &'static str {
+        "lfu-aged"
+    }
+    fn on_hit(&mut self, e: Expert, tick: u64) {
+        *self.freq.entry(e).or_insert(0.0) += 1.0;
+        self.last_access.insert(e, tick);
+    }
+    fn on_insert(&mut self, e: Expert, tick: u64) {
+        *self.freq.entry(e).or_insert(0.0) += 1.0;
+        self.last_access.insert(e, tick);
+    }
+    fn victim(&mut self, resident: &[Expert], tick: u64) -> Expert {
+        *resident
+            .iter()
+            .min_by(|a, b| {
+                self.score(**a, tick)
+                    .partial_cmp(&self.score(**b, tick))
+                    .unwrap()
+                    .then(a.cmp(b))
+            })
+            .expect("victim() on empty resident set")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn popular_but_stale_becomes_evictable() {
+        let mut p = LfuAged::new(8.0);
+        for t in 0..20 {
+            p.on_hit(0, t); // expert 0 very popular early
+        }
+        p.on_insert(1, 21); // expert 1 fresh, freq 1
+        // immediately, 1 loses (0's score still high)
+        assert_eq!(p.victim(&[0, 1], 22), 1);
+        // but far in the future 0 has decayed below a recently-used 1
+        p.on_hit(1, 200);
+        assert_eq!(p.victim(&[0, 1], 201), 0);
+    }
+
+    #[test]
+    fn acts_like_lfu_at_equal_recency() {
+        let mut p = LfuAged::new(1e9); // effectively no decay
+        p.on_insert(0, 1);
+        p.on_insert(1, 1);
+        p.on_hit(0, 2);
+        assert_eq!(p.victim(&[0, 1], 3), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_half_life_rejected() {
+        LfuAged::new(0.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! LRU — the baseline policy (Eliseev & Mazur 2023, used by the paper's
+//! Figures 1–6). Evicts the least recently *accessed* expert. The paper's
+//! traces show its weakness: the cache "repeats history rather than
+//! predicting the future" when temporal locality is weak.
+
+use super::{Expert, Policy};
+use std::collections::HashMap;
+
+#[derive(Default)]
+pub struct Lru {
+    last_access: HashMap<Expert, u64>,
+}
+
+impl Lru {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Policy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+    fn on_hit(&mut self, e: Expert, tick: u64) {
+        self.last_access.insert(e, tick);
+    }
+    fn on_insert(&mut self, e: Expert, tick: u64) {
+        self.last_access.insert(e, tick);
+    }
+    fn victim(&mut self, resident: &[Expert], _tick: u64) -> Expert {
+        *resident
+            .iter()
+            .min_by_key(|e| (self.last_access.get(e).copied().unwrap_or(0), **e))
+            .expect("victim() on empty resident set")
+    }
+    fn on_evict(&mut self, e: Expert) {
+        self.last_access.remove(&e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recent() {
+        let mut p = Lru::new();
+        p.on_insert(0, 1);
+        p.on_insert(1, 2);
+        p.on_insert(2, 3);
+        p.on_hit(0, 4); // 0 refreshed; 1 is now oldest
+        assert_eq!(p.victim(&[0, 1, 2], 5), 1);
+    }
+
+    #[test]
+    fn deterministic_tiebreak() {
+        let mut p = Lru::new();
+        // never-seen experts tie at 0 -> lowest index wins
+        assert_eq!(p.victim(&[3, 1, 2], 1), 1);
+    }
+
+    #[test]
+    fn eviction_clears_state() {
+        let mut p = Lru::new();
+        p.on_insert(5, 10);
+        p.on_evict(5);
+        p.on_insert(6, 11);
+        // 5 re-inserted later should not remember its old timestamp
+        p.on_insert(5, 12);
+        assert_eq!(p.victim(&[5, 6], 13), 6);
+    }
+}

@@ -1,0 +1,298 @@
+//! Expert caching — the paper's central object of study.
+//!
+//! The GPU keeps a fixed-size per-layer cache of expert weights (paper:
+//! k of 8 experts per layer; "# offloads per layer" = 8 − k). On every MoE
+//! layer the activated experts are looked up; misses trigger a transfer
+//! from host memory and an eviction chosen by the policy:
+//!
+//! * [`lru`]  — baseline (Eliseev & Mazur 2023).
+//! * [`lfu`]  — the paper's proposal (§4.2): evict the least *frequently*
+//!   used; frequency is cumulative over the whole decode, which is what
+//!   makes popular experts effectively unevictable (§5.3 observation).
+//! * [`lfu_aged`] — the paper's §6.1 future-work hybrid ("popularity +
+//!   unused count"): frequency decayed by time since last use.
+//! * [`fifo`], [`random`] — control baselines.
+//! * [`belady`] — clairvoyant optimal for trace replay (upper bound).
+//!
+//! The cache is **semantically transparent**: it stores weights, never
+//! activations, so policy/size can never change model outputs — an
+//! invariant the property tests assert.
+
+pub mod belady;
+pub mod fifo;
+pub mod lfu;
+pub mod lfu_aged;
+pub mod lru;
+pub mod random;
+pub mod ttl;
+
+use crate::metrics::CacheStats;
+
+/// Expert index within one layer.
+pub type Expert = usize;
+
+/// Per-layer eviction policy. `tick` is a monotone access counter supplied
+/// by the cache (one per lookup), giving policies a deterministic notion of
+/// time that is identical between the live engine and the trace simulator.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+    /// Expert was found resident (a hit).
+    fn on_hit(&mut self, e: Expert, tick: u64);
+    /// Expert was inserted after a miss.
+    fn on_insert(&mut self, e: Expert, tick: u64);
+    /// Pick a victim among `resident` (non-empty). Must return one of them.
+    fn victim(&mut self, resident: &[Expert], tick: u64) -> Expert;
+    /// Expert was evicted (bookkeeping hook).
+    fn on_evict(&mut self, _e: Expert) {}
+}
+
+/// Policy constructors by name, shared by the CLI, simulator and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    Lfu,
+    LfuAged,
+    Fifo,
+    Random,
+    Belady,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Some(PolicyKind::Lru),
+            "lfu" => Some(PolicyKind::Lfu),
+            "lfu-aged" | "lfu_aged" | "hybrid" => Some(PolicyKind::LfuAged),
+            "fifo" => Some(PolicyKind::Fifo),
+            "random" => Some(PolicyKind::Random),
+            "belady" | "oracle" => Some(PolicyKind::Belady),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "lru",
+            PolicyKind::Lfu => "lfu",
+            PolicyKind::LfuAged => "lfu-aged",
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Random => "random",
+            PolicyKind::Belady => "belady",
+        }
+    }
+    /// Instantiate for one layer. `seed` feeds the random policy; `future`
+    /// (the layer's full activation sequence) is required for Belady.
+    pub fn build(&self, seed: u64, future: Option<&[Vec<Expert>]>) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Lru => Box::new(lru::Lru::new()),
+            PolicyKind::Lfu => Box::new(lfu::Lfu::new()),
+            PolicyKind::LfuAged => Box::new(lfu_aged::LfuAged::default()),
+            PolicyKind::Fifo => Box::new(fifo::Fifo::new()),
+            PolicyKind::Random => Box::new(random::RandomPolicy::new(seed)),
+            PolicyKind::Belady => Box::new(belady::Belady::new(
+                future.expect("belady needs the future trace"),
+            )),
+        }
+    }
+    pub fn all_online() -> [PolicyKind; 5] {
+        [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::LfuAged, PolicyKind::Fifo, PolicyKind::Random]
+    }
+}
+
+/// One layer's expert cache: capacity-bounded map expert -> V.
+pub struct LayerCache<V> {
+    capacity: usize,
+    entries: Vec<(Expert, V)>,
+    policy: Box<dyn Policy>,
+    tick: u64,
+    pub stats: CacheStats,
+}
+
+impl<V> LayerCache<V> {
+    pub fn new(capacity: usize, policy: Box<dyn Policy>) -> Self {
+        assert!(capacity > 0, "cache capacity must be > 0");
+        LayerCache { capacity, entries: Vec::with_capacity(capacity), policy, tick: 0, stats: CacheStats::default() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    /// Residents in unspecified order (for trace snapshots).
+    pub fn resident(&self) -> Vec<Expert> {
+        self.entries.iter().map(|(e, _)| *e).collect()
+    }
+    pub fn contains(&self, e: Expert) -> bool {
+        self.entries.iter().any(|(k, _)| *k == e)
+    }
+
+    /// Look up `e`, recording a hit or miss. Returns the value if resident.
+    pub fn access(&mut self, e: Expert) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == e) {
+            self.stats.hits += 1;
+            self.policy.on_hit(e, tick);
+            Some(&self.entries[i].1)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Check residency without counting a hit/miss (prefetch decisions,
+    /// trace snapshots).
+    pub fn peek(&self, e: Expert) -> Option<&V> {
+        self.entries.iter().find(|(k, _)| *k == e).map(|(_, v)| v)
+    }
+
+    /// Insert after a miss (or prefetch), evicting if full.
+    /// Returns the evicted (expert, value) if any.
+    pub fn insert(&mut self, e: Expert, v: V) -> Option<(Expert, V)> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == e) {
+            // refresh in place (e.g. prefetch of an already-resident expert)
+            self.entries[i].1 = v;
+            self.policy.on_hit(e, tick);
+            return None;
+        }
+        let mut evicted = None;
+        if self.entries.len() >= self.capacity {
+            let resident = self.resident();
+            let victim = self.policy.victim(&resident, tick);
+            assert!(
+                resident.contains(&victim),
+                "policy {} returned non-resident victim {victim}",
+                self.policy.name()
+            );
+            let i = self.entries.iter().position(|(k, _)| *k == victim).unwrap();
+            let (k, val) = self.entries.swap_remove(i);
+            self.policy.on_evict(k);
+            self.stats.evictions += 1;
+            evicted = Some((k, val));
+        }
+        self.policy.on_insert(e, tick);
+        self.entries.push((e, v));
+        evicted
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+}
+
+/// Whole-model expert cache: one [`LayerCache`] per MoE layer, as in the
+/// paper (capacity is per layer, "k of E experts cached").
+pub struct ExpertCache<V> {
+    pub layers: Vec<LayerCache<V>>,
+}
+
+impl<V> ExpertCache<V> {
+    pub fn new(n_layers: usize, capacity: usize, kind: PolicyKind, seed: u64) -> Self {
+        let layers = (0..n_layers)
+            .map(|l| LayerCache::new(capacity, kind.build(seed.wrapping_add(l as u64), None)))
+            .collect();
+        ExpertCache { layers }
+    }
+
+    pub fn layer(&mut self, l: usize) -> &mut LayerCache<V> {
+        &mut self.layers[l]
+    }
+
+    pub fn total_stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for l in &self.layers {
+            s.merge(&l.stats);
+        }
+        s
+    }
+
+    /// Total resident f32 bytes given a per-expert footprint.
+    pub fn resident_bytes(&self, expert_bytes: usize) -> usize {
+        self.layers.iter().map(|l| l.len() * expert_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(kind: PolicyKind, cap: usize) -> LayerCache<u32> {
+        LayerCache::new(cap, kind.build(0, None))
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = cache(PolicyKind::Lru, 2);
+        assert!(c.access(1).is_none());
+        c.insert(1, 10);
+        assert_eq!(c.access(1), Some(&10));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        for kind in PolicyKind::all_online() {
+            let mut c = cache(kind, 3);
+            for e in 0..20 {
+                c.access(e % 7);
+                if !c.contains(e % 7) {
+                    c.insert(e % 7, e as u32);
+                }
+                assert!(c.len() <= 3, "{}: {} resident", kind.name(), c.len());
+            }
+        }
+    }
+
+    #[test]
+    fn insert_existing_refreshes_not_grows() {
+        let mut c = cache(PolicyKind::Lru, 2);
+        c.insert(1, 10);
+        c.insert(1, 11);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.peek(1), Some(&11));
+    }
+
+    #[test]
+    fn eviction_returns_victim_value() {
+        let mut c = cache(PolicyKind::Fifo, 1);
+        c.insert(1, 10);
+        let ev = c.insert(2, 20);
+        assert_eq!(ev, Some((1, 10)));
+        assert!(c.contains(2));
+        assert!(!c.contains(1));
+    }
+
+    #[test]
+    fn peek_does_not_count() {
+        let mut c = cache(PolicyKind::Lru, 2);
+        c.insert(1, 10);
+        c.peek(1);
+        c.peek(2);
+        assert_eq!(c.stats.hits, 0);
+        assert_eq!(c.stats.misses, 0);
+    }
+
+    #[test]
+    fn policy_kind_parse() {
+        assert_eq!(PolicyKind::parse("LRU"), Some(PolicyKind::Lru));
+        assert_eq!(PolicyKind::parse("lfu_aged"), Some(PolicyKind::LfuAged));
+        assert_eq!(PolicyKind::parse("oracle"), Some(PolicyKind::Belady));
+        assert_eq!(PolicyKind::parse("arc"), None);
+    }
+
+    #[test]
+    fn expert_cache_resident_bytes() {
+        let mut ec: ExpertCache<()> = ExpertCache::new(2, 2, PolicyKind::Lru, 0);
+        ec.layer(0).insert(1, ());
+        ec.layer(0).insert(2, ());
+        ec.layer(1).insert(3, ());
+        assert_eq!(ec.resident_bytes(100), 300);
+    }
+}

@@ -1,0 +1,95 @@
+//! TTL-augmented LRU — the paper's §6.1 "early eviction on experts that
+//! have not been used for a long time period" direction.
+//!
+//! Behaves like LRU for victim selection, but additionally exposes
+//! `expired` so the engine/simulator can proactively drop entries idle for
+//! more than `ttl` ticks — freeing (simulated) device memory without
+//! waiting for capacity pressure. The paper's warning applies: proactive
+//! management only pays off when the freed space is used for something
+//! (e.g. speculative prefetch) and transfers overlap with compute.
+
+use super::{Expert, Policy};
+use std::collections::HashMap;
+
+pub struct TtlLru {
+    last_access: HashMap<Expert, u64>,
+    pub ttl: u64,
+}
+
+impl TtlLru {
+    pub fn new(ttl: u64) -> Self {
+        assert!(ttl > 0);
+        TtlLru { last_access: HashMap::new(), ttl }
+    }
+
+    /// Experts idle longer than the TTL (candidates for early eviction).
+    pub fn expired(&self, resident: &[Expert], now: u64) -> Vec<Expert> {
+        resident
+            .iter()
+            .copied()
+            .filter(|e| {
+                now.saturating_sub(self.last_access.get(e).copied().unwrap_or(0)) > self.ttl
+            })
+            .collect()
+    }
+}
+
+impl Policy for TtlLru {
+    fn name(&self) -> &'static str {
+        "ttl-lru"
+    }
+    fn on_hit(&mut self, e: Expert, tick: u64) {
+        self.last_access.insert(e, tick);
+    }
+    fn on_insert(&mut self, e: Expert, tick: u64) {
+        self.last_access.insert(e, tick);
+    }
+    fn victim(&mut self, resident: &[Expert], now: u64) -> Expert {
+        // expired entries first, then plain LRU
+        if let Some(&e) = self
+            .expired(resident, now)
+            .iter()
+            .min_by_key(|e| (self.last_access.get(e).copied().unwrap_or(0), **e))
+        {
+            return e;
+        }
+        *resident
+            .iter()
+            .min_by_key(|e| (self.last_access.get(e).copied().unwrap_or(0), **e))
+            .expect("victim() on empty resident set")
+    }
+    fn on_evict(&mut self, e: Expert) {
+        self.last_access.remove(&e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expired_detection() {
+        let mut p = TtlLru::new(10);
+        p.on_insert(0, 5);
+        p.on_insert(1, 14);
+        assert_eq!(p.expired(&[0, 1], 16), vec![0]);
+        assert!(p.expired(&[0, 1], 10).is_empty());
+    }
+
+    #[test]
+    fn victim_prefers_expired() {
+        let mut p = TtlLru::new(5);
+        p.on_insert(0, 1);
+        p.on_insert(1, 2);
+        p.on_hit(0, 20); // 1 is long idle
+        assert_eq!(p.victim(&[0, 1], 21), 1);
+    }
+
+    #[test]
+    fn falls_back_to_lru_when_nothing_expired() {
+        let mut p = TtlLru::new(1000);
+        p.on_insert(0, 1);
+        p.on_insert(1, 2);
+        assert_eq!(p.victim(&[0, 1], 3), 0);
+    }
+}

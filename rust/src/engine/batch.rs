@@ -1,0 +1,212 @@
+//! Multi-sequence decoding over one shared expert cache.
+//!
+//! The paper serves batch size 1; the natural serving extension (and the
+//! reason expert caching composes well with batching) is that concurrent
+//! sequences decoded in token-lockstep SHARE the per-layer expert cache:
+//! a transfer triggered by one sequence is a hit for every other sequence
+//! that activates the same expert in the same window — expert traffic
+//! amortizes across the batch. This module implements round-robin lockstep
+//! decoding of N sessions on one engine and exposes the aggregate stats so
+//! the amortization is measurable (see `batch_amortizes_transfers` test
+//! and the serve_load example).
+
+use crate::engine::InferenceEngine;
+use crate::model::sampler::Sampler;
+use crate::runtime::KvState;
+use crate::sim::costmodel::TokenEvents;
+use anyhow::Result;
+
+/// One in-flight decoding session.
+pub struct Session {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub n_prompt: usize,
+    pub target_new: usize,
+    pub kv: KvState,
+    pub pos: usize,
+    pub sampler: Sampler,
+    pub done: bool,
+    /// Next token to feed (sampled from the previous step's logits).
+    next_tok: Option<u32>,
+}
+
+impl Session {
+    pub fn new(
+        id: u64,
+        engine: &InferenceEngine,
+        prompt: &[u32],
+        target_new: usize,
+        sampler: Sampler,
+    ) -> Result<Session> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt.len() + target_new <= engine.config().max_seq,
+            "sequence too long"
+        );
+        Ok(Session {
+            id,
+            tokens: prompt.to_vec(),
+            n_prompt: prompt.len(),
+            target_new,
+            kv: engine.backend.new_kv()?,
+            pos: 0,
+            sampler,
+            done: false,
+            next_tok: None,
+        })
+    }
+
+    pub fn generated(&self) -> &[u32] {
+        &self.tokens[self.n_prompt..]
+    }
+}
+
+/// Decode all sessions to completion in round-robin token-lockstep.
+/// Returns per-token events (for the cost model) aggregated across
+/// sessions.
+pub fn decode_lockstep(
+    engine: &mut InferenceEngine,
+    sessions: &mut [Session],
+) -> Result<Vec<TokenEvents>> {
+    let mut all_events = Vec::new();
+    loop {
+        let mut progressed = false;
+        for s in sessions.iter_mut() {
+            if s.done {
+                continue;
+            }
+            let tok = if s.pos < s.n_prompt {
+                s.tokens[s.pos]
+            } else {
+                let t = s.next_tok.expect("sampled token");
+                s.tokens.push(t);
+                t
+            };
+            let mut ev = TokenEvents::default();
+            let logits = engine.step(tok, &mut s.kv, s.pos, &mut ev)?;
+            all_events.push(ev);
+            s.next_tok = Some(s.sampler.sample(&logits) as u32);
+            s.pos += 1;
+            progressed = true;
+            if s.pos >= s.n_prompt + s.target_new {
+                s.done = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    Ok(all_events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::PolicyKind;
+    use crate::engine::EngineConfig;
+    use crate::model::sampler::{Sampler, Sampling};
+    use crate::model::weights::generate_weights;
+    use crate::model::ModelConfig;
+    use crate::offload::store::HostExpertStore;
+    use crate::quant::Scheme;
+    use crate::runtime::native::NativeBackend;
+    use std::sync::Arc;
+
+    fn engine(capacity: usize) -> InferenceEngine {
+        let weights = Arc::new(generate_weights(ModelConfig::TINY, 42));
+        let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
+        let mut cfg = EngineConfig::baseline_lru(capacity);
+        cfg.policy = PolicyKind::Lfu;
+        cfg.record_trace = false;
+        InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg)
+    }
+
+    #[test]
+    fn lockstep_decodes_all_sessions() {
+        let mut eng = engine(4);
+        let mut sessions = Vec::new();
+        for i in 0..3u64 {
+            sessions.push(
+                Session::new(
+                    i,
+                    &eng,
+                    &[1 + i as u32, 5, 9],
+                    4,
+                    Sampler::new(Sampling::Greedy, i),
+                )
+                .unwrap(),
+            );
+        }
+        decode_lockstep(&mut eng, &mut sessions).unwrap();
+        for s in &sessions {
+            assert!(s.done);
+            assert_eq!(s.generated().len(), 4);
+        }
+    }
+
+    #[test]
+    fn lockstep_matches_sequential_outputs() {
+        // sharing the cache must not change any session's tokens
+        let mut eng1 = engine(8);
+        let mut s1 = Session::new(0, &eng1, &[2, 4], 5, Sampler::new(Sampling::Greedy, 0)).unwrap();
+        decode_lockstep(&mut eng1, std::slice::from_mut(&mut s1)).unwrap();
+
+        let mut eng2 = engine(8);
+        let mut batch = vec![
+            Session::new(0, &eng2, &[2, 4], 5, Sampler::new(Sampling::Greedy, 0)).unwrap(),
+            Session::new(1, &eng2, &[3, 7], 5, Sampler::new(Sampling::Greedy, 1)).unwrap(),
+        ];
+        decode_lockstep(&mut eng2, &mut batch).unwrap();
+        assert_eq!(batch[0].tokens, s1.tokens, "cache sharing changed outputs");
+    }
+
+    #[test]
+    fn batch_amortizes_transfers() {
+        // N sessions sharing one cache must transfer FEWER bytes per token
+        // than N independent single-session engines.
+        let n = 4u64;
+        let toks_each = 6;
+
+        // shared
+        let mut eng = engine(4);
+        let mut sessions: Vec<Session> = (0..n)
+            .map(|i| {
+                Session::new(i, &eng, &[1 + i as u32, 2], toks_each, Sampler::new(Sampling::Greedy, i))
+                    .unwrap()
+            })
+            .collect();
+        decode_lockstep(&mut eng, &mut sessions).unwrap();
+        let shared_stats = eng.cache_stats();
+        let shared_per_token =
+            shared_stats.misses as f64 / (n as f64 * (toks_each + 2) as f64);
+
+        // independent
+        let mut indep_misses = 0u64;
+        for i in 0..n {
+            let mut e = engine(4);
+            let mut s = Session::new(
+                i,
+                &e,
+                &[1 + i as u32, 2],
+                toks_each,
+                Sampler::new(Sampling::Greedy, i),
+            )
+            .unwrap();
+            decode_lockstep(&mut e, std::slice::from_mut(&mut s)).unwrap();
+            indep_misses += e.cache_stats().misses;
+        }
+        let indep_per_token = indep_misses as f64 / (n as f64 * (toks_each + 2) as f64);
+        assert!(
+            shared_per_token <= indep_per_token + 1e-9,
+            "shared {shared_per_token} vs independent {indep_per_token}"
+        );
+    }
+
+    #[test]
+    fn session_rejects_bad_inputs() {
+        let eng = engine(4);
+        assert!(Session::new(0, &eng, &[], 4, Sampler::new(Sampling::Greedy, 0)).is_err());
+        let long = vec![1u32; ModelConfig::TINY.max_seq + 1];
+        assert!(Session::new(0, &eng, &long, 0, Sampler::new(Sampling::Greedy, 0)).is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Inference engine — the L3 per-token decode loop where every offloading
+//! decision is made.
+//!
+//! For each token, for each layer:
+//!   1. run the attention stage (AOT artifact via PJRT, or native oracle),
+//!   2. run the router stage, take top-k experts in rust,
+//!   3. snapshot the expert cache (the paper's trace "gray squares"),
+//!   4. for each activated expert: cache hit -> use the resident device
+//!      buffers; miss -> transfer (dequantize + upload) and insert,
+//!      evicting per the configured policy (LRU/LFU/…),
+//!   5. optionally guess layer l+1's experts by applying its gate to this
+//!      layer's hidden states (speculative prefetch, §3.2) and transfer
+//!      them early — synchronously or via the overlap worker (§6.1),
+//!   6. combine expert outputs with renormalized gate weights + residual.
+//!
+//! Wallclock is measured; simulated device time is charged to a [`SimClock`]
+//! per the hardware profile (DESIGN.md §3): compute per stage, transfer per
+//! miss, with prefetched transfers hidden behind compute up to bus
+//! serialization.
+
+pub mod batch;
+pub mod selfcheck;
+
+use crate::cache::{ExpertCache, PolicyKind};
+use crate::metrics::{PrecisionRecall, Throughput};
+use crate::model::sampler::{top_k, Sampler};
+use crate::offload::overlap::OverlapWorker;
+use crate::offload::prefetch::PrefetchConfig;
+use crate::offload::store::HostExpertStore;
+use crate::offload::transfer::TransferEngine;
+use crate::runtime::{Backend, ExpertHandle, KvState};
+use crate::sim::costmodel::TokenEvents;
+use crate::sim::hardware::{HwProfile, ModelScale};
+use crate::trace::Trace;
+use crate::util::simclock::SimClock;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Experts kept per layer ("# offloads" = n_experts − capacity).
+    pub cache_capacity: usize,
+    pub policy: PolicyKind,
+    pub prefetch: PrefetchConfig,
+    /// Run prefetch dequantization on the overlap worker thread.
+    pub overlap: bool,
+    /// Hardware profile for the simulated clock.
+    pub profile: HwProfile,
+    pub seed: u64,
+    /// Record the full activation/cache trace.
+    pub record_trace: bool,
+}
+
+impl EngineConfig {
+    pub fn baseline_lru(capacity: usize) -> Self {
+        EngineConfig {
+            cache_capacity: capacity,
+            policy: PolicyKind::Lru,
+            prefetch: PrefetchConfig::default(),
+            overlap: false,
+            profile: crate::sim::hardware::physical()[0],
+            seed: 0,
+            record_trace: true,
+        }
+    }
+}
+
+/// Outcome of one `generate` call.
+pub struct GenerationOutput {
+    pub tokens: Vec<u32>,
+    pub generated: Vec<u32>,
+    pub trace: Option<Trace>,
+    pub events: Vec<TokenEvents>,
+    pub throughput: Throughput,
+    pub cache_stats: crate::metrics::CacheStats,
+    pub spec_pr: PrecisionRecall,
+    /// Peak simulated device bytes (static + resident experts + KV).
+    pub peak_resident_bytes: usize,
+    pub transfer_bytes: u64,
+}
+
+pub struct InferenceEngine {
+    pub backend: Box<dyn Backend>,
+    pub cfg: EngineConfig,
+    cache: ExpertCache<ExpertHandle>,
+    transfer: TransferEngine,
+    overlap: Option<OverlapWorker>,
+    clock: SimClock,
+    /// Simulated completion time of in-flight prefetches per (layer,expert).
+    pending_prefetch: Vec<(usize, usize, f64)>,
+    spec_pr: PrecisionRecall,
+    /// Pending speculative guess for the next layer: (layer, experts).
+    spec_guess: Option<(usize, Vec<usize>)>,
+    trace: Option<Trace>,
+    /// Per-layer compute seconds (dense) and per-expert seconds, derived
+    /// from the profile and the artifact's true dimensions.
+    dense_s_per_layer: f64,
+    expert_s: f64,
+    store: Arc<HostExpertStore>,
+}
+
+impl InferenceEngine {
+    pub fn new(
+        backend: Box<dyn Backend>,
+        store: Arc<HostExpertStore>,
+        cfg: EngineConfig,
+    ) -> Self {
+        let mc = *backend.config();
+        let scale = ModelScale {
+            name: "live",
+            n_layers: mc.n_layers,
+            hidden: mc.hidden_size,
+            ffn: mc.ffn_size,
+            n_experts: mc.n_experts,
+            top_k: mc.top_k,
+            expert_bytes: store.expert_transfer_bytes(),
+            expert_bytes_resident: mc.expert_bytes_f32(),
+            static_bytes: 0,
+        };
+        let dense_s_per_layer =
+            cfg.profile.compute_time(scale.dense_flops_per_token()) / mc.n_layers as f64;
+        let expert_s = cfg.profile.compute_time(scale.expert_flops());
+        let cache = ExpertCache::new(mc.n_layers, cfg.cache_capacity, cfg.policy, cfg.seed);
+        let overlap = (cfg.overlap).then(|| OverlapWorker::spawn(Arc::clone(&store)));
+        let trace = cfg
+            .record_trace
+            .then(|| Trace::new(mc.n_layers, mc.n_experts, mc.top_k));
+        InferenceEngine {
+            backend,
+            cfg,
+            cache,
+            transfer: TransferEngine::new(Arc::clone(&store)),
+            overlap,
+            clock: SimClock::new(),
+            pending_prefetch: Vec::new(),
+            spec_pr: PrecisionRecall::default(),
+            spec_guess: None,
+            trace,
+            dense_s_per_layer,
+            expert_s,
+            store,
+        }
+    }
+
+    pub fn config(&self) -> &crate::model::ModelConfig {
+        self.backend.config()
+    }
+
+    /// Simulated transfer duration of one expert.
+    fn transfer_s(&self) -> f64 {
+        self.cfg.profile.transfer_time(self.store.expert_transfer_bytes())
+    }
+
+    /// Ensure `e` is resident in layer `l`'s cache; returns whether it was a
+    /// hit and updates the sim clock for any stall.
+    fn ensure_resident(&mut self, l: usize, e: usize, ev: &mut TokenEvents) -> Result<bool> {
+        // already resident?
+        if self.cache.layers[l].access(e).is_some() {
+            // if it arrived via an in-flight prefetch, we may still need to
+            // wait for the (simulated) bus to finish delivering it
+            if let Some(i) = self
+                .pending_prefetch
+                .iter()
+                .position(|&(pl, pe, _)| pl == l && pe == e)
+            {
+                let (_, _, done_at) = self.pending_prefetch.swap_remove(i);
+                let now = self.clock.now();
+                if done_at > now {
+                    self.clock.advance(done_at - now);
+                } else {
+                    ev.hidden_transfers += 1;
+                }
+                self.cache.layers[l].stats.prefetch_hits += 1;
+            }
+            return Ok(true);
+        }
+        // miss: demand transfer, fully on the critical path
+        ev.misses += 1;
+        let handle = if let Some(w) = &mut self.overlap {
+            // an in-flight overlap prefetch may already have dequantized it
+            if let Some(r) = w.wait_for(l, e) {
+                self.backend.upload_expert(r.w1, r.w3, r.w2)?
+            } else {
+                let (h, _) = self.transfer.fetch(self.backend.as_ref(), l, e)?;
+                h
+            }
+        } else {
+            let (h, _) = self.transfer.fetch(self.backend.as_ref(), l, e)?;
+            h
+        };
+        let now = self.clock.now();
+        let done = self.transfer.schedule_bus(now, self.transfer_s());
+        self.clock.advance(done - now);
+        self.cache.layers[l].insert(e, handle);
+        Ok(false)
+    }
+
+    /// Issue speculative prefetches for `next_layer`.
+    fn prefetch(&mut self, next_layer: usize, guesses: &[usize], ev: &mut TokenEvents) -> Result<()> {
+        for &e in guesses {
+            if self.cache.layers[next_layer].peek(e).is_some() {
+                continue; // already resident: free
+            }
+            // transfer early; simulated completion is bus-serialized but NOT
+            // awaited — compute continues (overlap)
+            let now = self.clock.now();
+            let done = self.transfer.schedule_bus(now, self.transfer_s());
+            self.pending_prefetch.push((next_layer, e, done));
+            let handle = if let Some(w) = &mut self.overlap {
+                w.submit(next_layer, e);
+                None // uploaded lazily when collected or demanded
+            } else {
+                let (h, _) = self.transfer.fetch(self.backend.as_ref(), next_layer, e)?;
+                Some(h)
+            };
+            if let Some(h) = handle {
+                let evicted = self.cache.layers[next_layer].insert(e, h);
+                drop(evicted);
+            }
+            ev.wasted_prefetches += 1; // provisional; settled below
+        }
+        Ok(())
+    }
+
+    /// Collect overlap-worker results and upload them into the cache.
+    fn collect_overlap(&mut self) -> Result<()> {
+        if let Some(w) = &mut self.overlap {
+            for r in w.collect_ready() {
+                let handle = self.backend.upload_expert(r.w1, r.w3, r.w2)?;
+                self.cache.layers[r.layer].insert(r.expert, handle);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one token through the model; returns logits.
+    pub fn step(&mut self, tok: u32, kv: &mut KvState, pos: usize, ev: &mut TokenEvents) -> Result<Vec<f32>> {
+        let mc = *self.backend.config();
+        if let Some(t) = &mut self.trace {
+            t.push_token(tok);
+        }
+        let token_idx = self.trace.as_ref().map_or(0, |t| t.n_tokens() - 1);
+
+        let mut x = self.backend.embed(tok)?;
+        for l in 0..mc.n_layers {
+            self.collect_overlap()?;
+            let x_res = self.backend.attn(l, &x, kv, pos)?;
+            self.clock.advance(self.dense_s_per_layer);
+            let (h, probs) = self.backend.router(l, &x_res)?;
+            let selected = top_k(&probs, mc.top_k);
+            ev.activations += selected.len();
+
+            // settle last layer's speculative guess against the truth
+            if let Some((gl, guess)) = self.spec_guess.take() {
+                if gl == l {
+                    self.spec_pr.record(&guess, &selected);
+                    if let Some(t) = &mut self.trace {
+                        t.at_mut(token_idx, l).spec_guess = Some(guess.clone());
+                    }
+                    // correct guesses were not wasted
+                    let correct = guess.iter().filter(|g| selected.contains(g)).count();
+                    ev.wasted_prefetches = ev.wasted_prefetches.saturating_sub(correct);
+                }
+            }
+
+            // trace snapshot BEFORE the demand lookups (paper's figures)
+            if let Some(t) = &mut self.trace {
+                let rec = t.at_mut(token_idx, l);
+                rec.cached_before = self.cache.layers[l].resident();
+                rec.activated = selected.clone();
+            }
+
+            // renormalized top-k gate weights
+            let wsum: f32 = selected.iter().map(|&e| probs[e]).sum();
+            let gate_w: Vec<f32> = selected.iter().map(|&e| probs[e] / wsum).collect();
+            if let Some(t) = &mut self.trace {
+                t.at_mut(token_idx, l).weights = gate_w.clone();
+            }
+
+            // speculative guess for layer l+1 from THIS layer's post-attn
+            // hidden states (issued before the expert compute so transfers
+            // overlap with it)
+            if self.cfg.prefetch.enabled && l + 1 < mc.n_layers {
+                let spec_probs = self.backend.spec_router(l + 1, &x_res)?;
+                let guesses = top_k(&spec_probs, self.cfg.prefetch.k);
+                self.prefetch(l + 1, &guesses, ev)?;
+                self.spec_guess = Some((l + 1, guesses));
+            }
+
+            // expert compute with cache/transfer
+            let mut y = vec![0.0f32; mc.hidden_size];
+            for (j, &e) in selected.iter().enumerate() {
+                self.ensure_resident(l, e, ev)?;
+                let handle = self.cache.layers[l].peek(e).expect("just inserted");
+                let out = self.backend.expert(&h, handle)?;
+                let w = gate_w[j];
+                for (yv, &ov) in y.iter_mut().zip(&out) {
+                    *yv += w * ov;
+                }
+                self.clock.advance(self.expert_s);
+            }
+            for (xv, (&rv, &yv)) in x.iter_mut().zip(x_res.iter().zip(&y)) {
+                *xv = rv + yv;
+            }
+        }
+        let logits = self.backend.final_logits(&x)?;
+        Ok(logits)
+    }
+
+    /// Decode: teacher-force `prompt`, then sample `n_gen` tokens.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        n_gen: usize,
+        sampler: &mut Sampler,
+    ) -> Result<GenerationOutput> {
+        let mc = *self.backend.config();
+        let mut kv = self.backend.new_kv()?;
+        let mut tokens: Vec<u32> = prompt.to_vec();
+        let mut generated = Vec::with_capacity(n_gen);
+        let mut events = Vec::new();
+        let total = prompt.len() + n_gen;
+        anyhow::ensure!(total <= mc.max_seq, "sequence {total} exceeds max_seq {}", mc.max_seq);
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+
+        let wall0 = Instant::now();
+        let sim0 = self.clock.now();
+        let mut next_tok: Option<u32> = None;
+        let mut peak_bytes = 0usize;
+        for pos in 0..total {
+            let tok = if pos < prompt.len() { tokens[pos] } else { next_tok.unwrap() };
+            if pos >= prompt.len() {
+                tokens.push(tok);
+                generated.push(tok);
+            }
+            let mut ev = TokenEvents::default();
+            let logits = self.step(tok, &mut kv, pos, &mut ev)?;
+            events.push(ev);
+            next_tok = Some(sampler.sample(&logits) as u32);
+            let resident = self
+                .cache
+                .resident_bytes(mc.expert_bytes_f32())
+                + KvState::bytes(&mc);
+            peak_bytes = peak_bytes.max(resident);
+        }
+
+        let wall_s = wall0.elapsed().as_secs_f64();
+        let sim_s = self.clock.now() - sim0;
+        Ok(GenerationOutput {
+            tokens,
+            generated,
+            trace: self.trace.clone(),
+            events,
+            throughput: Throughput { tokens: total as u64, wall_s, sim_s },
+            cache_stats: self.cache.total_stats(),
+            spec_pr: self.spec_pr,
+            peak_resident_bytes: peak_bytes,
+            transfer_bytes: self.transfer.stats.bytes,
+        })
+    }
+
+    pub fn cache_stats(&self) -> crate::metrics::CacheStats {
+        self.cache.total_stats()
+    }
+    pub fn spec_precision_recall(&self) -> PrecisionRecall {
+        self.spec_pr
+    }
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.trace.take()
+    }
+    pub fn sim_now(&self) -> f64 {
+        self.clock.now()
+    }
+}

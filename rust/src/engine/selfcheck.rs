@@ -1,0 +1,238 @@
+//! Selfcheck: validate the rust runtimes against the JAX golden vectors.
+//!
+//! `python/compile/aot.py` records (a) per-stage outputs on fixed inputs
+//! and (b) an 8-token greedy decode with per-layer expert selections and
+//! logit digests. This module replays both through a [`Backend`] (PJRT or
+//! native) and reports per-check absolute errors — the cross-language,
+//! cross-runtime correctness anchor of the whole stack.
+
+use crate::cache::PolicyKind;
+use crate::engine::{EngineConfig, InferenceEngine};
+use crate::model::sampler::{Sampler, Sampling};
+use crate::offload::prefetch::PrefetchConfig;
+use crate::offload::store::HostExpertStore;
+use crate::quant::Scheme;
+use crate::runtime::{artifacts::Artifacts, Backend};
+use crate::sim::costmodel::TokenEvents;
+use crate::util::json::Value;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+pub struct CheckReport {
+    pub checks: Vec<(String, f64, f64)>, // (name, max_abs_err, tolerance)
+    pub passed: bool,
+}
+
+impl CheckReport {
+    fn add(&mut self, name: &str, err: f64, tol: f64) {
+        if err > tol {
+            self.passed = false;
+        }
+        self.checks.push((name.to_string(), err, tol));
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, err, tol) in &self.checks {
+            out.push_str(&format!(
+                "  {} {name}: max_abs_err {err:.3e} (tol {tol:.1e})\n",
+                if err <= tol { "PASS" } else { "FAIL" }
+            ));
+        }
+        out.push_str(if self.passed { "selfcheck: ALL PASS\n" } else { "selfcheck: FAILURES\n" });
+        out
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0, f64::max)
+}
+
+/// Stage-level checks against `testvec.json` `stages`.
+pub fn check_stages(backend: &dyn Backend, tv: &Value) -> Result<CheckReport> {
+    let sv = tv.get("stages");
+    let mut rep = CheckReport { checks: Vec::new(), passed: true };
+    let x: Vec<f32> = sv.get("x").as_f32_vec().unwrap_or_default();
+    if x.is_empty() {
+        bail!("testvec has no stage vectors");
+    }
+
+    // embed
+    let got = backend.embed(3)?;
+    let want = sv.get("embed_tok3").as_f32_vec().unwrap();
+    rep.add("embed", max_abs_diff(&got, &want), 1e-5);
+
+    // attn at pos 0 with fresh caches
+    let mut kv = backend.new_kv()?;
+    let got = backend.attn(0, &x, &mut kv, 0)?;
+    let want = sv.get("attn_x_res").as_f32_vec().unwrap();
+    rep.add("attn.x_res", max_abs_diff(&got, &want), 5e-4);
+
+    // router
+    let (h, probs) = backend.router(0, &x)?;
+    let want_h = sv.get("router_h").as_f32_vec().unwrap();
+    let want_p = sv.get("router_probs").as_f32_vec().unwrap();
+    rep.add("router.h", max_abs_diff(&h, &want_h), 5e-4);
+    rep.add("router.probs", max_abs_diff(&probs, &want_p), 1e-4);
+
+    // expert 0 of layer 0 — via an f32 store (no quantization error)
+    let want_y = sv.get("expert0_y").as_f32_vec().unwrap();
+    let got = {
+        // the caller passes a backend built over the same weights; fetch
+        // the raw f32 weights through an ExpertHandle upload
+        let handle = upload_f32_expert(backend, 0, 0)?;
+        backend.expert(&h, &handle)?
+    };
+    rep.add("expert0.y", max_abs_diff(&got, &want_y), 2e-3);
+
+    // final logits
+    let got = backend.final_logits(&x)?;
+    let first8 = &got[..8.min(got.len())];
+    let want8 = sv.get("final_logits_first8").as_f32_vec().unwrap();
+    rep.add("final.first8", max_abs_diff(first8, &want8), 5e-4);
+    let sum: f64 = got.iter().map(|&v| v as f64).sum();
+    let want_sum = sv.get("final_logits_sum").as_f64().unwrap_or(f64::NAN);
+    rep.add("final.sum", (sum - want_sum).abs() / want_sum.abs().max(1.0), 1e-3);
+    Ok(rep)
+}
+
+/// The selfcheck needs raw f32 expert weights; they travel via the same
+/// `upload_expert` path the transfer engine uses.
+fn upload_f32_expert(
+    backend: &dyn Backend,
+    layer: usize,
+    expert: usize,
+) -> Result<crate::runtime::ExpertHandle> {
+    // Weights live inside the backend for native; for pjrt we need the
+    // original weights. The engine-level check below covers pjrt; here we
+    // reconstruct from the artifacts weights file through a thread-local.
+    WEIGHTS.with(|w| {
+        let wref = w.borrow();
+        let weights = wref.as_ref().expect("selfcheck weights not set");
+        Ok(backend.upload_expert(
+            weights.expert(layer, expert, "w1")?.to_vec(),
+            weights.expert(layer, expert, "w3")?.to_vec(),
+            weights.expert(layer, expert, "w2")?.to_vec(),
+        )?)
+    })
+}
+
+thread_local! {
+    static WEIGHTS: std::cell::RefCell<Option<Arc<crate::model::Weights>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+pub fn set_selfcheck_weights(w: Arc<crate::model::Weights>) {
+    WEIGHTS.with(|cell| *cell.borrow_mut() = Some(w));
+}
+
+/// Golden-decode check: replay the recorded greedy decode through the full
+/// engine (f32 store so quantization cannot perturb selections) and compare
+/// expert selections, argmax tokens and logit digests.
+pub fn check_decode(
+    backend: Box<dyn Backend>,
+    weights: Arc<crate::model::Weights>,
+    tv: &Value,
+) -> Result<CheckReport> {
+    let dec = tv.get("decode");
+    let steps = dec.get("steps").as_arr().unwrap_or(&[]);
+    if steps.is_empty() {
+        bail!("testvec has no decode steps");
+    }
+    let prompt: Vec<u32> = dec
+        .get("prompt")
+        .as_usize_vec()
+        .unwrap_or_default()
+        .iter()
+        .map(|&t| t as u32)
+        .collect();
+    let n_gen = dec.get("n_gen").as_usize().unwrap_or(0);
+
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32)?);
+    let mc = *backend.config();
+    let mut engine = InferenceEngine::new(
+        backend,
+        store,
+        EngineConfig {
+            cache_capacity: mc.n_experts, // full cache: no eviction noise
+            policy: PolicyKind::Lru,
+            prefetch: PrefetchConfig::default(),
+            overlap: false,
+            profile: crate::sim::hardware::physical()[0],
+            seed: 0,
+            record_trace: true,
+        },
+    );
+    let mut sampler = Sampler::new(Sampling::Greedy, 0);
+    let out = engine.generate(&prompt, n_gen, &mut sampler)?;
+    let trace = out.trace.as_ref().expect("trace recorded");
+
+    let mut rep = CheckReport { checks: Vec::new(), passed: true };
+    let mut sel_mismatches = 0usize;
+    let mut argmax_mismatches = 0usize;
+    for (i, step) in steps.iter().enumerate() {
+        let want_experts = step.get("experts").as_arr().unwrap();
+        for (l, want) in want_experts.iter().enumerate() {
+            let mut want: Vec<usize> = want.as_usize_vec().unwrap();
+            let mut got = trace.at(i, l).activated.clone();
+            want.sort_unstable();
+            got.sort_unstable();
+            if want != got {
+                sel_mismatches += 1;
+            }
+        }
+        // generated-token agreement
+        if i + 1 > prompt.len() && i < out.tokens.len() {
+            let want_tok = step.get("token").as_usize().unwrap_or(0) as u32;
+            if out.tokens[i] != want_tok {
+                argmax_mismatches += 1;
+            }
+        }
+    }
+    let n_events = steps.len() * mc.n_layers;
+    rep.add(
+        "decode.expert_selections",
+        sel_mismatches as f64 / n_events as f64,
+        0.02, // ≤2% of (token,layer) events may flip on fp disagreement
+    );
+    rep.add(
+        "decode.generated_tokens",
+        argmax_mismatches as f64 / n_gen.max(1) as f64,
+        0.25, // argmax over 1024 logits is fp-sensitive; selections matter more
+    );
+    Ok(rep)
+}
+
+/// Convenience: run both checks for a backend over shipped artifacts.
+pub fn run_all(
+    make_backend: impl Fn() -> Result<Box<dyn Backend>>,
+    artifacts: &Artifacts,
+    weights: Arc<crate::model::Weights>,
+) -> Result<CheckReport> {
+    let tv = artifacts.load_testvec()?;
+    set_selfcheck_weights(Arc::clone(&weights));
+    let be = make_backend()?;
+    let mut rep = check_stages(be.as_ref(), &tv)?;
+    drop(be);
+    let rep2 = check_decode(make_backend()?, weights, &tv)?;
+    for c in rep2.checks {
+        if c.1 > c.2 {
+            rep.passed = false;
+        }
+        rep.checks.push(c);
+    }
+    Ok(rep)
+}
+
+/// Used by tests: make sure a step through the engine with TokenEvents
+/// default-initialized works for arbitrary backends.
+pub fn smoke_step(backend: Box<dyn Backend>, weights: Arc<crate::model::Weights>) -> Result<Vec<f32>> {
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32)?);
+    let mut engine = InferenceEngine::new(backend, store, EngineConfig::baseline_lru(2));
+    let mut kv = engine.backend.new_kv()?;
+    let mut ev = TokenEvents::default();
+    engine.step(1, &mut kv, 0, &mut ev)
+}

@@ -1,0 +1,202 @@
+//! Ablation studies for the design choices DESIGN.md calls out — beyond
+//! the paper's own evaluation but directly motivated by its §6.1:
+//!
+//! * **Belady headroom** — how far every online policy sits from the
+//!   clairvoyant optimum, per capacity (how much a perfect predictor could
+//!   still win).
+//! * **Prediction sources** — speculative gating (needs live hidden
+//!   states, one-layer lead) vs the learned Markov predictor (whole-token
+//!   lead, no model access) vs the LFU frequency prior, as guess accuracy.
+//! * **Locality sensitivity** — the LRU/LFU crossover the cache explorer
+//!   surfaces, written as a figure artifact.
+//!
+//! Output: `results/ablation_*.csv` + a combined `.txt`.
+
+use super::FigCtx;
+use crate::cache::PolicyKind;
+use crate::offload::predictor;
+use crate::sim::{cachesim, speculative, tracegen};
+use crate::util::stats::Table;
+use anyhow::Result;
+
+/// Belady headroom per capacity: hit-rate gap to the offline optimum.
+pub fn belady_headroom(ctx: &FigCtx) -> Result<String> {
+    let mut tab = Table::new(&["capacity", "belady", "lru", "lfu", "lfu-aged", "max gap"]);
+    let mut csv = String::from("capacity,belady,lru,lfu,lfu_aged\n");
+    for capacity in 1..=7 {
+        let rs = cachesim::compare(
+            &ctx.trace,
+            &[PolicyKind::Belady, PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::LfuAged],
+            capacity,
+            ctx.seed,
+        );
+        let hr: Vec<f64> = rs.iter().map(|r| r.stats.hit_rate()).collect();
+        let gap = hr[0] - hr[1..].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        tab.row(&[
+            capacity.to_string(),
+            format!("{:.1}%", 100.0 * hr[0]),
+            format!("{:.1}%", 100.0 * hr[1]),
+            format!("{:.1}%", 100.0 * hr[2]),
+            format!("{:.1}%", 100.0 * hr[3]),
+            format!("{:.1}pp", 100.0 * gap),
+        ]);
+        csv.push_str(&format!(
+            "{capacity},{:.4},{:.4},{:.4},{:.4}\n",
+            hr[0], hr[1], hr[2], hr[3]
+        ));
+    }
+    ctx.write("ablation_belady.csv", &csv)?;
+    Ok(format!("== Belady headroom (offline optimum vs online policies) ==\n{}", tab.render()))
+}
+
+/// Guess-accuracy comparison of the three prediction sources.
+pub fn prediction_sources(ctx: &FigCtx) -> Result<String> {
+    // speculative gating at the paper's measured accuracy
+    let mut spec_trace = ctx.trace.clone();
+    speculative::synthesize_guesses(&mut spec_trace, 0.846, ctx.seed);
+    let spec = speculative::score(&spec_trace).pr;
+
+    // learned Markov predictor over the same trace
+    let markov = predictor::evaluate_on_trace(&ctx.trace, ctx.trace.top_k);
+
+    // frequency prior: guess the 2 most-activated experts so far per layer
+    let mut freq_pr = crate::metrics::PrecisionRecall::default();
+    let mut counts = vec![vec![0u64; ctx.trace.n_experts]; ctx.trace.n_layers];
+    for t in 0..ctx.trace.n_tokens() {
+        for l in 0..ctx.trace.n_layers {
+            let activated = &ctx.trace.at(t, l).activated;
+            if t > 0 {
+                let f32s: Vec<f32> = counts[l].iter().map(|&c| c as f32).collect();
+                let guess = crate::model::sampler::top_k(&f32s, ctx.trace.top_k);
+                freq_pr.record(&guess, activated);
+            }
+            for &e in activated {
+                counts[l][e] += 1;
+            }
+        }
+    }
+
+    let mut tab = Table::new(&["source", "precision", "recall", "lead time"]);
+    let mut csv = String::from("source,precision,recall\n");
+    for (name, pr, lead) in [
+        ("speculative gating (paper §3.2)", spec, "1 layer"),
+        ("markov predictor (§6.1 learned)", markov, "whole token"),
+        ("frequency prior (LFU's signal)", freq_pr, "whole token"),
+    ] {
+        tab.row(&[
+            name.to_string(),
+            format!("{:.1}%", 100.0 * pr.precision()),
+            format!("{:.1}%", 100.0 * pr.recall()),
+            lead.to_string(),
+        ]);
+        csv.push_str(&format!("{name},{:.4},{:.4}\n", pr.precision(), pr.recall()));
+    }
+    ctx.write("ablation_predictors.csv", &csv)?;
+    Ok(format!(
+        "== Prediction sources (guess accuracy vs lead time) ==\n{}\n\
+         Speculative gating is most accurate but earns only one layer of\n\
+         lead; the learned predictor guesses a full token ahead at lower\n\
+         accuracy — the §6.1 overlap trade-off in one table.\n",
+        tab.render()
+    ))
+}
+
+/// LRU/LFU crossover vs temporal locality (figure form of the cache
+/// explorer's sweep 2).
+pub fn locality_crossover(ctx: &FigCtx) -> Result<String> {
+    let mut tab = Table::new(&["locality", "lru", "lfu", "winner"]);
+    let mut csv = String::from("locality,lru,lfu\n");
+    for loc in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8] {
+        let cfg = tracegen::TraceGenConfig {
+            n_tokens: ctx.trace.n_tokens().max(64),
+            locality: loc,
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let tr = tracegen::generate(&cfg);
+        let rs = cachesim::compare(&tr, &[PolicyKind::Lru, PolicyKind::Lfu], 4, ctx.seed);
+        let (lru, lfu) = (rs[0].stats.hit_rate(), rs[1].stats.hit_rate());
+        tab.row(&[
+            format!("{loc:.1}"),
+            format!("{:.1}%", 100.0 * lru),
+            format!("{:.1}%", 100.0 * lfu),
+            if lfu >= lru { "lfu" } else { "lru" }.to_string(),
+        ]);
+        csv.push_str(&format!("{loc},{lru:.4},{lfu:.4}\n"));
+    }
+    ctx.write("ablation_locality.csv", &csv)?;
+    Ok(format!(
+        "== LRU/LFU crossover vs temporal locality (capacity 4) ==\n{}\n\
+         The paper's workload sits left of the crossover (locality ~0.3,\n\
+         strong imbalance), which is exactly where LFU wins.\n",
+        tab.render()
+    ))
+}
+
+pub fn run(ctx: &FigCtx) -> Result<()> {
+    let mut txt = String::new();
+    txt.push_str(&belady_headroom(ctx)?);
+    txt.push('\n');
+    txt.push_str(&prediction_sources(ctx)?);
+    txt.push('\n');
+    txt.push_str(&locality_crossover(ctx)?);
+    ctx.write("ablations.txt", &txt)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::FigCtx;
+
+    fn ctx() -> (FigCtx, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("abl-{}-{}", std::process::id(), rand_tag()));
+        (FigCtx::synthetic(&dir, 48, 5), dir)
+    }
+
+    fn rand_tag() -> u64 {
+        use std::time::{SystemTime, UNIX_EPOCH};
+        SystemTime::now().duration_since(UNIX_EPOCH).unwrap().subsec_nanos() as u64
+    }
+
+    #[test]
+    fn writes_all_artifacts() {
+        let (c, dir) = ctx();
+        run(&c).unwrap();
+        for f in ["ablations.txt", "ablation_belady.csv", "ablation_predictors.csv", "ablation_locality.csv"] {
+            assert!(dir.join(f).is_file(), "{f}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn belady_gap_nonnegative() {
+        let (c, dir) = ctx();
+        let txt = belady_headroom(&c).unwrap();
+        assert!(txt.contains("pp"));
+        let csv = std::fs::read_to_string(dir.join("ablation_belady.csv")).unwrap();
+        for line in csv.lines().skip(1) {
+            let v: Vec<f64> = line.split(',').skip(1).map(|x| x.parse().unwrap()).collect();
+            for online in &v[1..] {
+                assert!(v[0] >= online - 1e-9, "{line}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spec_gating_most_precise() {
+        let (c, dir) = ctx();
+        let _ = prediction_sources(&c).unwrap();
+        let csv = std::fs::read_to_string(dir.join("ablation_predictors.csv")).unwrap();
+        let rows: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(1).unwrap().parse().unwrap())
+            .collect();
+        // spec (row 0) beats markov (row 1) and frequency prior (row 2)
+        assert!(rows[0] > rows[1], "{rows:?}");
+        assert!(rows[0] > rows[2], "{rows:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

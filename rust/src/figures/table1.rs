@@ -1,0 +1,106 @@
+//! Table 1: model performance vs "# offloads per layer" under LRU caching.
+//!
+//! Paper columns: MMLU (%), tokens/s, peak memory (MB), for offloads
+//! ∈ {4, 5, 6} (cache capacity = 8 − offloads) on an A6000.
+//!
+//! Substitutions (DESIGN.md §3): MMLU -> semantic-transparency statement
+//! (caching cannot change outputs; the paper's MMLU drift is sampling
+//! noise), tokens/s -> replay misses × A6000 cost model at Mixtral scale,
+//! peak memory -> byte-accurate accountant (static + cache × expert).
+
+use super::FigCtx;
+use crate::cache::PolicyKind;
+use crate::sim::cachesim;
+use crate::sim::costmodel::CostModel;
+use crate::sim::hardware::{by_name, ModelScale};
+use crate::util::stats::Table;
+use anyhow::Result;
+
+pub const PAPER_ROWS: [(usize, f64, f64, f64); 3] = [
+    // (#offloads, MMLU %, tokens/s, peak MB)
+    (4, 63.16, 4.23, 11148.3),
+    (5, 61.40, 4.78, 9145.8),
+    (6, 59.65, 7.16, 7127.7),
+];
+
+pub fn run(ctx: &FigCtx) -> Result<()> {
+    let scale = ModelScale::mixtral_8x7b();
+    let cm = CostModel::new(by_name("A6000").unwrap(), scale);
+
+    let mut table = Table::new(&[
+        "#offloads", "capacity", "hit-rate", "tok/s (sim)", "peak MB (sim)",
+        "tok/s (paper)", "peak MB (paper)", "quality",
+    ]);
+    let mut csv = String::from(
+        "offloads,capacity,hit_rate,tokens_per_s_sim,peak_mb_sim,tokens_per_s_paper,peak_mb_paper\n",
+    );
+    for (offloads, _mmlu, paper_tps, paper_mb) in PAPER_ROWS {
+        let capacity = scale.n_experts - offloads;
+        let mut t = ctx.trace.clone();
+        let r = cachesim::replay(&mut t, PolicyKind::Lru, capacity, ctx.seed);
+        let tps = cm.tokens_per_s(&r.events);
+        let mb = cm.peak_memory_bytes(capacity) as f64 / (1 << 20) as f64;
+        table.row(&[
+            offloads.to_string(),
+            capacity.to_string(),
+            format!("{:.1}%", 100.0 * r.stats.hit_rate()),
+            format!("{tps:.2}"),
+            format!("{mb:.0}"),
+            format!("{paper_tps:.2}"),
+            format!("{paper_mb:.0}"),
+            "bit-identical outputs".to_string(),
+        ]);
+        csv.push_str(&format!(
+            "{offloads},{capacity},{:.4},{tps:.3},{mb:.1},{paper_tps},{paper_mb}\n",
+            r.stats.hit_rate()
+        ));
+    }
+    let mut txt = String::from(
+        "Table 1 — LRU caching vs #offloads/layer (A6000 profile, Mixtral-8x7B scale)\n\n",
+    );
+    txt.push_str(&table.render());
+    txt.push_str(
+        "\nNotes:\n\
+         * peak memory reproduces the paper's ~2 GB/offload linear slope.\n\
+         * the paper reports tokens/s INCREASING with more offloads — the\n\
+           opposite of a pure cache/bandwidth model (fewer cached experts =>\n\
+           more transfers => slower). Our simulated column shows the\n\
+           conventional monotone trend; see EXPERIMENTS.md for discussion.\n\
+         * MMLU column: expert caching is semantically transparent (asserted\n\
+           by property tests), so quality is identical across rows by\n\
+           construction; the paper's drift is decode-sampling noise.\n",
+    );
+    ctx.write("table1.txt", &txt)?;
+    ctx.write("table1.csv", &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn table1_memory_slope_linear() {
+        let dir = std::env::temp_dir().join(format!("t1-{}", std::process::id()));
+        let ctx = FigCtx::synthetic(&dir, 20, 0);
+        run(&ctx).unwrap();
+        let csv = std::fs::read_to_string(dir.join("table1.csv")).unwrap();
+        let rows: Vec<Vec<f64>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|x| x.parse().unwrap()).collect())
+            .collect();
+        assert_eq!(rows.len(), 3);
+        let mb: Vec<f64> = rows.iter().map(|r| r[4]).collect();
+        let d1 = mb[0] - mb[1];
+        let d2 = mb[1] - mb[2];
+        assert!((d1 - d2).abs() < 1.0, "slope not linear: {mb:?}");
+        // ~2 GB per offload like the paper
+        assert!((1800.0..2200.0).contains(&d1), "{d1}");
+        // hit rate decreases as capacity shrinks
+        assert!(rows[0][2] > rows[2][2]);
+        std::fs::remove_dir_all(&dir).ok();
+        let _ = PathBuf::new();
+    }
+}

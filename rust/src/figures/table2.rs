@@ -1,0 +1,130 @@
+//! Table 2: LRU vs LFU tokens/s across A100 / A6000 / L40 / RTX3090, plus
+//! cache precision/recall.
+//!
+//! Generated twice:
+//! * **fitted profiles** — per-GPU (compute, transfer) solved from the
+//!   paper's own numbers (`sim::calibrate`), reproducing Table 2's absolute
+//!   values and its LFU-wins-everywhere shape by construction;
+//! * **physical profiles** — datasheet-plausible PCIe/TFLOPs, showing what
+//!   a linear bandwidth model predicts for the same traces (the honest
+//!   counterfactual; the LFU gain tracks the miss-rate gap).
+
+use super::FigCtx;
+use crate::cache::PolicyKind;
+use crate::sim::cachesim;
+use crate::sim::calibrate::{self, PAPER_TABLE2};
+use crate::sim::costmodel::CostModel;
+use crate::sim::hardware::{physical, ModelScale};
+use crate::util::stats::Table;
+use anyhow::Result;
+
+pub fn run(ctx: &FigCtx) -> Result<()> {
+    let scale = ModelScale::mixtral_8x7b();
+    let mut t_lru = ctx.trace.clone();
+    let r_lru = cachesim::replay(&mut t_lru, PolicyKind::Lru, 4, ctx.seed);
+    let mut t_lfu = ctx.trace.clone();
+    let r_lfu = cachesim::replay(&mut t_lfu, PolicyKind::Lfu, 4, ctx.seed);
+
+    let mut txt = String::from("Table 2 — LRU vs LFU across GPUs (cache=4, Mixtral-8x7B scale)\n\n");
+
+    // --- replayed trace statistics (paper's P/R columns) ---
+    txt.push_str(&format!(
+        "replayed trace: LRU precision {:.1}% recall {:.1}%   LFU precision {:.1}% recall {:.1}%\n",
+        100.0 * r_lru.pr.precision(),
+        100.0 * r_lru.pr.recall(),
+        100.0 * r_lfu.pr.precision(),
+        100.0 * r_lfu.pr.recall(),
+    ));
+    txt.push_str("paper:          LRU 29.1% / 58.2%            LFU 29.9% / 59.8%\n\n");
+
+    // --- fitted profiles ---
+    let fits = calibrate::fit_paper_table2(&scale);
+    let m_lru = calibrate::misses_per_token_from_recall(0.582, scale.n_layers, scale.top_k);
+    let m_lfu = calibrate::misses_per_token_from_recall(0.598, scale.n_layers, scale.top_k);
+    let mut tab = Table::new(&["GPU", "LRU t/s", "LFU t/s", "speedup", "paper LRU", "paper LFU"]);
+    let mut csv = String::from("profile_set,gpu,lru_tps,lfu_tps,speedup\n");
+    for f in &fits {
+        let (gpu, p_lru, p_lfu) =
+            *PAPER_TABLE2.iter().find(|(g, _, _)| *g == f.gpu).unwrap();
+        let lru = f.predict_tps(m_lru);
+        let lfu = f.predict_tps(m_lfu);
+        tab.row(&[
+            gpu.to_string(),
+            format!("{lru:.2}"),
+            format!("{lfu:.2}"),
+            format!("{:.1}%", 100.0 * (lfu / lru - 1.0)),
+            format!("{p_lru:.2}"),
+            format!("{p_lfu:.2}"),
+        ]);
+        csv.push_str(&format!("fitted,{gpu},{lru:.3},{lfu:.3},{:.4}\n", lfu / lru - 1.0));
+    }
+    txt.push_str("fitted profiles (calibrated to the paper's measurements):\n");
+    txt.push_str(&tab.render());
+
+    // --- physical profiles over OUR replayed traces ---
+    let mut tab2 = Table::new(&["GPU", "LRU t/s", "LFU t/s", "speedup"]);
+    for p in physical() {
+        let cm = CostModel::new(p, scale);
+        let lru = cm.tokens_per_s(&r_lru.events);
+        let lfu = cm.tokens_per_s(&r_lfu.events);
+        tab2.row(&[
+            p.name.to_string(),
+            format!("{lru:.2}"),
+            format!("{lfu:.2}"),
+            format!("{:.1}%", 100.0 * (lfu / lru - 1.0)),
+        ]);
+        csv.push_str(&format!(
+            "physical,{},{lru:.3},{lfu:.3},{:.4}\n",
+            p.name,
+            lfu / lru - 1.0
+        ));
+    }
+    txt.push_str("\nphysical profiles over the replayed synthetic trace:\n");
+    txt.push_str(&tab2.render());
+    txt.push_str(
+        "\nShape checks: LFU ≥ LRU on every profile; the largest relative\n\
+         gain lands on the most bandwidth-starved profile. The paper's 84.6%\n\
+         A6000 speedup requires the fitted (physically implausible) transfer\n\
+         time — see calibration.txt and EXPERIMENTS.md.\n",
+    );
+
+    ctx.write("table2.txt", &txt)?;
+    ctx.write("table2.csv", &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fitted_rows_match_paper() {
+        let dir = std::env::temp_dir().join(format!("t2-{}", std::process::id()));
+        let ctx = FigCtx::synthetic(&dir, 24, 0);
+        run(&ctx).unwrap();
+        let csv = std::fs::read_to_string(dir.join("table2.csv")).unwrap();
+        // fitted A6000 speedup ≈ paper's 84.6%
+        let row = csv
+            .lines()
+            .find(|l| l.starts_with("fitted,A6000"))
+            .expect("a6000 row");
+        let speedup: f64 = row.split(',').nth(4).unwrap().parse().unwrap();
+        assert!((speedup - 0.846).abs() < 0.01, "{speedup}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lfu_never_slower_under_physical_model() {
+        // long enough trace for the frequency signal to dominate noise
+        let dir = std::env::temp_dir().join(format!("t2b-{}", std::process::id()));
+        let ctx = FigCtx::synthetic(&dir, 160, 3);
+        run(&ctx).unwrap();
+        let csv = std::fs::read_to_string(dir.join("table2.csv")).unwrap();
+        for l in csv.lines().filter(|l| l.starts_with("physical,")) {
+            let f: Vec<&str> = l.split(',').collect();
+            let (lru, lfu): (f64, f64) = (f[2].parse().unwrap(), f[3].parse().unwrap());
+            assert!(lfu >= lru * 0.99, "{l}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,33 @@
+//! # moe-offload
+//!
+//! Production-grade reproduction of *"In-depth Analysis on Caching and
+//! Pre-fetching in Mixture of Experts Offloading"* (Lin, He & Chen, 2025)
+//! as a three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: expert cache
+//!   (LRU/LFU/LFU-aged/oracle), offload transfer engine with a simulated
+//!   PCIe clock, speculative expert prefetcher, trace recorder, cache
+//!   simulator, HTTP server, and the figure/table regeneration harness.
+//! * **L2 (python/compile/model.py)** — MiniMixtral staged forward pass,
+//!   AOT-lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the expert FFN
+//!   and router, `interpret=True`, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: the rust binary loads the HLO
+//! artifacts via PJRT (`runtime::pjrt`) and is self-contained.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod bench_harness;
+pub mod cache;
+pub mod engine;
+pub mod figures;
+pub mod metrics;
+pub mod serve;
+pub mod offload;
+pub mod sim;
+pub mod trace;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,243 @@
+//! moe-offload CLI — leader entrypoint for the serving stack.
+//!
+//! Subcommands:
+//!   selfcheck  validate PJRT + native runtimes against the JAX goldens
+//!   generate   decode a prompt through the offloading engine
+//!   simulate   trace-driven cache-policy comparison + cost model
+//!   serve      HTTP serving front (see rust/src/serve/)
+//!   figures    regenerate every paper table/figure into --out-dir
+
+use anyhow::{bail, Result};
+use moe_offload::cache::PolicyKind;
+use moe_offload::engine::{selfcheck, EngineConfig, InferenceEngine};
+use moe_offload::model::sampler::{Sampler, Sampling};
+use moe_offload::model::tokenizer::Tokenizer;
+use moe_offload::model::Weights;
+use moe_offload::offload::prefetch::PrefetchConfig;
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+use moe_offload::runtime::{artifacts::Artifacts, native::NativeBackend, pjrt::PjrtBackend, Backend};
+use moe_offload::sim::{cachesim, costmodel::CostModel, hardware, tracegen};
+use moe_offload::trace::render;
+use moe_offload::util::cliargs::Args;
+use moe_offload::util::stats::Table;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("selfcheck") => cmd_selfcheck(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("serve") => moe_offload::serve::cmd_serve(&args),
+        Some("figures") => moe_offload::figures::cmd_figures(&args),
+        Some(other) => bail!("unknown command {other:?}; try selfcheck|generate|simulate|serve|figures"),
+        None => {
+            println!("usage: moe-offload <selfcheck|generate|simulate|serve|figures> [flags]");
+            Ok(())
+        }
+    }
+}
+
+/// Shared loading: artifacts + weights.
+struct Loaded {
+    artifacts: Artifacts,
+    weights: Arc<Weights>,
+}
+
+fn load(args: &Args) -> Result<Loaded> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let artifacts = Artifacts::load(Path::new(&dir))?;
+    let weights = Arc::new(Weights::load(&artifacts.weights_path)?);
+    weights.validate_layout()?;
+    Ok(Loaded { artifacts, weights })
+}
+
+fn make_backend(kind: &str, loaded: &Loaded) -> Result<Box<dyn Backend>> {
+    match kind {
+        "pjrt" => Ok(Box::new(PjrtBackend::new(&loaded.artifacts, &loaded.weights)?)),
+        "native" => Ok(Box::new(NativeBackend::new(Arc::clone(&loaded.weights)))),
+        other => bail!("unknown backend {other:?} (pjrt|native)"),
+    }
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let loaded = load(args)?;
+    let backends = match args.get("backend") {
+        Some(b) => vec![b.to_string()],
+        None => vec!["native".to_string(), "pjrt".to_string()],
+    };
+    let mut all_pass = true;
+    for b in backends {
+        println!("== selfcheck backend={b} ==");
+        let rep = selfcheck::run_all(
+            || make_backend(&b, &loaded),
+            &loaded.artifacts,
+            Arc::clone(&loaded.weights),
+        )?;
+        print!("{}", rep.render());
+        all_pass &= rep.passed;
+    }
+    if !all_pass {
+        bail!("selfcheck failed");
+    }
+    Ok(())
+}
+
+fn engine_from_args(args: &Args, loaded: &Loaded) -> Result<InferenceEngine> {
+    let backend = make_backend(&args.str_or("backend", "pjrt"), loaded)?;
+    let scheme = Scheme::parse(&args.str_or("quant", "int4"))
+        .ok_or_else(|| anyhow::anyhow!("bad --quant (f32|int8|int4)"))?;
+    let store = Arc::new(HostExpertStore::build(&loaded.weights, scheme)?);
+    let policy = PolicyKind::parse(&args.str_or("policy", "lru"))
+        .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+    let profile = hardware::by_name(&args.str_or("profile", "A100"))
+        .ok_or_else(|| anyhow::anyhow!("bad --profile (A100|A6000|L40|RTX3090)"))?;
+    let cfg = EngineConfig {
+        cache_capacity: args.usize_or("capacity", 4)?,
+        policy,
+        prefetch: PrefetchConfig { enabled: args.bool("spec"), k: args.usize_or("spec-k", 2)? },
+        overlap: args.bool("overlap"),
+        profile,
+        seed: args.usize_or("seed", 0)? as u64,
+        record_trace: true,
+    };
+    Ok(InferenceEngine::new(backend, store, cfg))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let loaded = load(args)?;
+    let mut engine = engine_from_args(args, &loaded)?;
+    let tk = Tokenizer::new(engine.config().vocab_size);
+    let prompt_text =
+        args.str_or("prompt", "Introduce yourself, limit your response in 50 words.");
+    let n_gen = args.usize_or("n", 32)?;
+    let prompt = tk.encode(&prompt_text);
+    let mut sampler = Sampler::new(
+        match args.str_or("sampling", "topp").as_str() {
+            "greedy" => Sampling::Greedy,
+            _ => Sampling::TopP {
+                temperature: args.f64_or("temperature", 0.9)? as f32,
+                top_p: args.f64_or("top-p", 0.9)? as f32,
+            },
+        },
+        args.usize_or("seed", 0)? as u64,
+    );
+    let out = engine.generate(&prompt, n_gen, &mut sampler)?;
+    println!("prompt tokens: {}  generated: {}", prompt.len(), out.generated.len());
+    println!("text: {:?}", tk.decode(&out.generated));
+    println!(
+        "tokens/s: wall {:.2}  sim[{}] {:.2}",
+        out.throughput.tokens_per_s_wall(),
+        engine.cfg.profile.name,
+        out.throughput.tokens_per_s_sim()
+    );
+    let cs = out.cache_stats;
+    println!(
+        "cache[{} cap={}]: hit-rate {:.1}%  hits {} misses {} evictions {}",
+        engine.cfg.policy.name(),
+        engine.cfg.cache_capacity,
+        100.0 * cs.hit_rate(),
+        cs.hits,
+        cs.misses,
+        cs.evictions
+    );
+    if let Some(trace) = &out.trace {
+        let pr = trace.cache_precision_recall();
+        println!(
+            "cache precision {:.1}%  recall {:.1}%  locality {:.1}%",
+            100.0 * pr.precision(),
+            100.0 * pr.recall(),
+            100.0 * trace.temporal_locality()
+        );
+        if engine.cfg.prefetch.enabled {
+            let spr = out.spec_pr;
+            println!(
+                "speculative precision {:.1}%  recall {:.1}%",
+                100.0 * spr.precision(),
+                100.0 * spr.recall()
+            );
+        }
+        if args.bool("show-trace") {
+            for l in layer_selection(trace.n_layers) {
+                println!("{}", render::layer_grid(trace, l));
+            }
+        }
+    }
+    println!(
+        "peak resident {:.1} MB   transferred {:.1} MB",
+        out.peak_resident_bytes as f64 / (1 << 20) as f64,
+        out.transfer_bytes as f64 / (1 << 20) as f64
+    );
+    Ok(())
+}
+
+/// The paper renders layers 1, 8, 16, 24, 32 (1-based); scale to n_layers.
+fn layer_selection(n_layers: usize) -> Vec<usize> {
+    let picks = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let mut v: Vec<usize> = picks
+        .iter()
+        .map(|p| ((n_layers - 1) as f64 * p).round() as usize)
+        .collect();
+    v.dedup();
+    v
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let tokens = args.usize_or("tokens", 64)?;
+    let capacity = args.usize_or("capacity", 4)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let scale = match args.str_or("scale", "mixtral").as_str() {
+        "mixtral" => hardware::ModelScale::mixtral_8x7b(),
+        _ => hardware::ModelScale::mini_mixtral_int4(),
+    };
+    let cfg = tracegen::TraceGenConfig {
+        n_layers: scale.n_layers,
+        n_tokens: tokens,
+        seed,
+        ..Default::default()
+    };
+    let trace = tracegen::generate(&cfg);
+    println!(
+        "synthetic trace: {} tokens × {} layers, locality {:.1}%",
+        tokens,
+        cfg.n_layers,
+        100.0 * trace.temporal_locality()
+    );
+    let policies = [
+        PolicyKind::Lru,
+        PolicyKind::Lfu,
+        PolicyKind::LfuAged,
+        PolicyKind::Fifo,
+        PolicyKind::Random,
+        PolicyKind::Belady,
+    ];
+    let results = cachesim::compare(&trace, &policies, capacity, seed);
+    let mut t = Table::new(&[
+        "policy", "hit-rate", "precision", "recall", "misses/tok", "tok/s A100", "tok/s A6000",
+    ]);
+    for r in &results {
+        let a100 = CostModel::new(hardware::by_name("A100").unwrap(), scale);
+        let a6000 = CostModel::new(hardware::by_name("A6000").unwrap(), scale);
+        t.row(&[
+            r.policy.name().to_string(),
+            format!("{:.1}%", 100.0 * r.stats.hit_rate()),
+            format!("{:.1}%", 100.0 * r.pr.precision()),
+            format!("{:.1}%", 100.0 * r.pr.recall()),
+            format!("{:.1}", r.misses_per_token()),
+            format!("{:.2}", a100.tokens_per_s(&r.events)),
+            format!("{:.2}", a6000.tokens_per_s(&r.events)),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! Metrics: cache hit accounting, the paper's precision/recall definitions,
+//! transfer-volume accounting and throughput meters.
+//!
+//! Precision/recall follow paper §4.2/§5.3 exactly: per (token, layer),
+//! compare the set of experts **cached at activation time** against the set
+//! of **activated** experts. TP = activated ∧ cached, FP = cached ∧ ¬activated,
+//! FN = activated ∧ ¬cached. For speculation (§5.4): guessed vs activated —
+//! with |guessed| = |activated| = k this forces FP == FN and therefore
+//! precision == recall (asserted by a property test).
+
+/// Confusion-matrix accumulator over (token, layer) events.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrecisionRecall {
+    pub tp: u64,
+    pub fp: u64,
+    pub fn_: u64,
+}
+
+impl PrecisionRecall {
+    /// Record one event: which experts were predicted (cached/guessed) and
+    /// which were actually activated.
+    pub fn record(&mut self, predicted: &[usize], activated: &[usize]) {
+        for &p in predicted {
+            if activated.contains(&p) {
+                self.tp += 1;
+            } else {
+                self.fp += 1;
+            }
+        }
+        for &a in activated {
+            if !predicted.contains(&a) {
+                self.fn_ += 1;
+            }
+        }
+    }
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fp) as f64
+    }
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fn_) as f64
+    }
+    pub fn merge(&mut self, other: &PrecisionRecall) {
+        self.tp += other.tp;
+        self.fp += other.fp;
+        self.fn_ += other.fn_;
+    }
+}
+
+/// Expert-cache hit/miss/eviction counters (optionally per layer).
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_wasted: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.evictions += o.evictions;
+        self.prefetch_hits += o.prefetch_hits;
+        self.prefetch_wasted += o.prefetch_wasted;
+    }
+}
+
+/// Host->device transfer accounting (bytes that crossed the simulated PCIe).
+#[derive(Clone, Debug, Default)]
+pub struct TransferStats {
+    pub transfers: u64,
+    pub bytes: u64,
+    pub dequant_ns: u64,
+    pub upload_ns: u64,
+}
+
+impl TransferStats {
+    pub fn record(&mut self, bytes: usize) {
+        self.transfers += 1;
+        self.bytes += bytes as u64;
+    }
+}
+
+/// Tokens/s meter over both wallclock and the simulated clock.
+#[derive(Clone, Debug, Default)]
+pub struct Throughput {
+    pub tokens: u64,
+    pub wall_s: f64,
+    pub sim_s: f64,
+}
+
+impl Throughput {
+    pub fn tokens_per_s_wall(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.wall_s
+    }
+    pub fn tokens_per_s_sim(&self) -> f64 {
+        if self.sim_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.sim_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pr_basic() {
+        let mut pr = PrecisionRecall::default();
+        // cache {0,1,2,3}, activated {1,4}
+        pr.record(&[0, 1, 2, 3], &[1, 4]);
+        assert_eq!(pr.tp, 1);
+        assert_eq!(pr.fp, 3);
+        assert_eq!(pr.fn_, 1);
+        assert_eq!(pr.precision(), 0.25);
+        assert_eq!(pr.recall(), 0.5);
+    }
+
+    #[test]
+    fn pr_equal_cardinality_forces_p_eq_r() {
+        // paper §5.4: |guessed| == |activated| => FP == FN => P == R
+        let mut pr = PrecisionRecall::default();
+        pr.record(&[0, 1], &[1, 5]);
+        pr.record(&[2, 3], &[2, 3]);
+        pr.record(&[4, 6], &[0, 7]);
+        assert_eq!(pr.fp, pr.fn_);
+        assert_eq!(pr.precision(), pr.recall());
+    }
+
+    #[test]
+    fn pr_empty_is_zero() {
+        let pr = PrecisionRecall::default();
+        assert_eq!(pr.precision(), 0.0);
+        assert_eq!(pr.recall(), 0.0);
+    }
+
+    #[test]
+    fn pr_merge() {
+        let mut a = PrecisionRecall::default();
+        a.record(&[0], &[0]);
+        let mut b = PrecisionRecall::default();
+        b.record(&[1], &[2]);
+        a.merge(&b);
+        assert_eq!(a.tp, 1);
+        assert_eq!(a.fp, 1);
+        assert_eq!(a.fn_, 1);
+    }
+
+    #[test]
+    fn cache_hit_rate() {
+        let mut s = CacheStats::default();
+        s.hits = 3;
+        s.misses = 1;
+        assert_eq!(s.hit_rate(), 0.75);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn throughput() {
+        let t = Throughput { tokens: 10, wall_s: 2.0, sim_s: 4.0 };
+        assert_eq!(t.tokens_per_s_wall(), 5.0);
+        assert_eq!(t.tokens_per_s_sim(), 2.5);
+    }
+}

@@ -1,0 +1,127 @@
+//! MiniMixtral hyper-parameters, mirrored from `python/compile/model.py`
+//! and cross-checked against `artifacts/manifest.json` at load time.
+
+use crate::util::json::Value;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub hidden_size: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub ffn_size: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    /// The default (shipped-artifact) configuration.
+    pub const DEFAULT: ModelConfig = ModelConfig {
+        vocab_size: 1024,
+        hidden_size: 256,
+        n_layers: 12,
+        n_heads: 8,
+        n_experts: 8,
+        top_k: 2,
+        ffn_size: 1024,
+        max_seq: 256,
+    };
+
+    /// The tiny test configuration (matches `compile.model.TINY`).
+    pub const TINY: ModelConfig = ModelConfig {
+        vocab_size: 64,
+        hidden_size: 32,
+        n_layers: 2,
+        n_heads: 4,
+        n_experts: 8,
+        top_k: 2,
+        ffn_size: 64,
+        max_seq: 16,
+    };
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden_size / self.n_heads
+    }
+
+    /// Floats in one expert (w1 + w3 + w2).
+    pub fn expert_params(&self) -> usize {
+        3 * self.hidden_size * self.ffn_size
+    }
+
+    /// fp32 bytes of one expert — the unit of offloading traffic.
+    pub fn expert_bytes_f32(&self) -> usize {
+        self.expert_params() * 4
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelConfig> {
+        let need = |k: &str| -> Result<usize> {
+            v.get(k).as_usize().ok_or_else(|| anyhow::anyhow!("config missing {k}"))
+        };
+        let cfg = ModelConfig {
+            vocab_size: need("vocab_size")?,
+            hidden_size: need("hidden_size")?,
+            n_layers: need("n_layers")?,
+            n_heads: need("n_heads")?,
+            n_experts: need("n_experts")?,
+            top_k: need("top_k")?,
+            ffn_size: need("ffn_size")?,
+            max_seq: need("max_seq")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.hidden_size % self.n_heads != 0 {
+            bail!("hidden_size {} not divisible by n_heads {}", self.hidden_size, self.n_heads);
+        }
+        if self.top_k == 0 || self.top_k > self.n_experts {
+            bail!("top_k {} out of range (E={})", self.top_k, self.n_experts);
+        }
+        if self.head_dim() % 2 != 0 {
+            bail!("head_dim {} must be even for RoPE", self.head_dim());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn default_is_valid() {
+        ModelConfig::DEFAULT.validate().unwrap();
+        ModelConfig::TINY.validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = r#"{"vocab_size":64,"hidden_size":32,"n_layers":2,"n_heads":4,
+                    "n_experts":8,"top_k":2,"ffn_size":64,"max_seq":16,
+                    "rope_theta":10000.0,"rms_eps":1e-5}"#;
+        let v = json::parse(j).unwrap();
+        let cfg = ModelConfig::from_json(&v).unwrap();
+        assert_eq!(cfg, ModelConfig::TINY);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        let mut c = ModelConfig::TINY;
+        c.top_k = 9;
+        assert!(c.validate().is_err());
+        let mut c = ModelConfig::TINY;
+        c.n_heads = 5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn expert_bytes() {
+        let c = ModelConfig::DEFAULT;
+        assert_eq!(c.expert_params(), 3 * 256 * 1024);
+        assert_eq!(c.expert_bytes_f32(), 3 * 256 * 1024 * 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model-side substrates: configuration, the MOEW weights reader, the
+//! byte-level tokenizer, and the token sampler.
+
+pub mod config;
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+pub use config::ModelConfig;
+pub use weights::Weights;

@@ -1,0 +1,97 @@
+//! Byte-level tokenizer with special tokens.
+//!
+//! The paper's workload is natural-language prompts through Mixtral's BPE
+//! tokenizer; with synthetic weights the exact segmentation is immaterial,
+//! so we use a transparent byte-level scheme: token = byte value + offset,
+//! plus BOS/EOS/PAD specials. Vocab 1024 leaves headroom (260 used).
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const UNK: u32 = 3;
+const BYTE_OFFSET: u32 = 4;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Tokenizer {
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(
+            vocab_size >= BYTE_OFFSET as usize + 256,
+            "vocab must fit 256 bytes + specials"
+        );
+        Tokenizer { vocab_size }
+    }
+
+    /// Encode text as BOS + bytes.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut toks = Vec::with_capacity(text.len() + 1);
+        toks.push(BOS);
+        toks.extend(text.bytes().map(|b| b as u32 + BYTE_OFFSET));
+        toks
+    }
+
+    /// Decode tokens back to text; specials are dropped, non-byte tokens
+    /// become U+FFFD.
+    pub fn decode(&self, toks: &[u32]) -> String {
+        let bytes: Vec<u8> = toks
+            .iter()
+            .filter(|&&t| t >= BYTE_OFFSET && t < BYTE_OFFSET + 256)
+            .map(|&t| (t - BYTE_OFFSET) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, tok: u32) -> bool {
+        tok < BYTE_OFFSET
+    }
+
+    pub fn is_eos(&self, tok: u32) -> bool {
+        tok == EOS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer::new(1024);
+        let toks = tk.encode("Introduce yourself");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(tk.decode(&toks), "Introduce yourself");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let tk = Tokenizer::new(1024);
+        let s = "héllo 😀";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let tk = Tokenizer::new(1024);
+        let mut toks = tk.encode("ab");
+        toks.push(EOS);
+        toks.push(PAD);
+        assert_eq!(tk.decode(&toks), "ab");
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let tk = Tokenizer::new(1024);
+        for t in tk.encode("\u{0}\u{7f}xyz") {
+            assert!((t as usize) < tk.vocab_size);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        Tokenizer::new(100);
+    }
+}

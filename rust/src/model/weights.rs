@@ -1,0 +1,354 @@
+//! MOEW weights reader (format written by `python/compile/weights.py`).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   b"MOEW"
+//! version u32 = 1
+//! hlen    u32
+//! header  JSON {config, tensors: [{name, shape, offset, nbytes}], data_start}
+//! data    raw f32 tensors, 64-byte aligned, offsets relative to data_start
+//! ```
+
+use crate::model::config::ModelConfig;
+use crate::util::json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// All model weights, resident in host memory ("main memory" in the paper's
+/// offloading setup). Expert tensors are *additionally* re-encoded into the
+/// quantized host store by `offload::store`; the f32 copies here back the
+/// non-offloaded layers (attention, norms, embeddings) and the native oracle.
+pub struct Weights {
+    pub config: ModelConfig,
+    data: Vec<f32>,
+    index: HashMap<String, (usize, usize, Vec<usize>)>, // name -> (start, len, shape)
+    pub tensors: Vec<TensorInfo>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let blob = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_bytes(&blob)
+    }
+
+    pub fn from_bytes(blob: &[u8]) -> Result<Weights> {
+        if blob.len() < 12 || &blob[..4] != b"MOEW" {
+            bail!("bad MOEW magic");
+        }
+        let version = u32::from_le_bytes(blob[4..8].try_into()?);
+        if version != 1 {
+            bail!("unsupported MOEW version {version}");
+        }
+        let hlen = u32::from_le_bytes(blob[8..12].try_into()?) as usize;
+        if blob.len() < 12 + hlen {
+            bail!("truncated MOEW header");
+        }
+        let header = json::parse(std::str::from_utf8(&blob[12..12 + hlen])?)
+            .map_err(|e| anyhow::anyhow!("MOEW header: {e}"))?;
+        let config = ModelConfig::from_json(header.get("config"))?;
+        let data_start = header
+            .get("data_start")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("missing data_start"))?;
+
+        let tarr = header
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("missing tensors"))?;
+        let mut tensors = Vec::with_capacity(tarr.len());
+        let mut total_floats = 0usize;
+        for t in tarr {
+            let info = TensorInfo {
+                name: t.get("name").as_str().unwrap_or_default().to_string(),
+                shape: t.get("shape").as_usize_vec().unwrap_or_default(),
+                offset: t.get("offset").as_usize().unwrap_or(0),
+                nbytes: t.get("nbytes").as_usize().unwrap_or(0),
+            };
+            if info.name.is_empty() || info.nbytes % 4 != 0 {
+                bail!("bad tensor entry {:?}", info.name);
+            }
+            let numel: usize = info.shape.iter().product();
+            if numel * 4 != info.nbytes {
+                bail!("{}: shape {:?} != nbytes {}", info.name, info.shape, info.nbytes);
+            }
+            if data_start + info.offset + info.nbytes > blob.len() {
+                bail!("{}: extends past EOF", info.name);
+            }
+            total_floats += numel;
+            tensors.push(info);
+        }
+
+        // Copy into one contiguous f32 arena, tensors back to back.
+        let mut data = Vec::with_capacity(total_floats);
+        let mut index = HashMap::with_capacity(tensors.len());
+        for info in &tensors {
+            let start = data.len();
+            let bytes = &blob[data_start + info.offset..data_start + info.offset + info.nbytes];
+            data.extend(bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())));
+            index.insert(info.name.clone(), (start, info.nbytes / 4, info.shape.clone()));
+        }
+        Ok(Weights { config, data, index, tensors })
+    }
+
+    /// Borrow a tensor by name as a flat f32 slice.
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        let (start, len, _) = self
+            .index
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no tensor named {name:?}"))?;
+        Ok(&self.data[*start..*start + *len])
+    }
+
+    pub fn shape(&self, name: &str) -> Option<&[usize]> {
+        self.index.get(name).map(|(_, _, s)| s.as_slice())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    /// Convenience accessors for the fixed layout.
+    pub fn layer(&self, l: usize, t: &str) -> Result<&[f32]> {
+        self.get(&format!("layer.{l}.{t}"))
+    }
+    pub fn expert(&self, l: usize, e: usize, t: &str) -> Result<&[f32]> {
+        self.get(&format!("layer.{l}.expert.{e}.{t}"))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Verify the tensor set matches the config (paranoia at startup).
+    pub fn validate_layout(&self) -> Result<()> {
+        let c = &self.config;
+        let expect = |name: String, shape: &[usize]| -> Result<()> {
+            match self.shape(&name) {
+                None => bail!("missing tensor {name}"),
+                Some(s) if s != shape => bail!("{name}: shape {s:?}, want {shape:?}"),
+                _ => Ok(()),
+            }
+        };
+        expect("embed.table".into(), &[c.vocab_size, c.hidden_size])?;
+        expect("final.ln".into(), &[c.hidden_size])?;
+        expect("final.lm_head".into(), &[c.hidden_size, c.vocab_size])?;
+        for l in 0..c.n_layers {
+            expect(format!("layer.{l}.ln1"), &[c.hidden_size])?;
+            expect(format!("layer.{l}.ln2"), &[c.hidden_size])?;
+            for t in ["wq", "wk", "wv", "wo"] {
+                expect(format!("layer.{l}.{t}"), &[c.hidden_size, c.hidden_size])?;
+            }
+            expect(format!("layer.{l}.gate"), &[c.hidden_size, c.n_experts])?;
+            for e in 0..c.n_experts {
+                expect(format!("layer.{l}.expert.{e}.w1"), &[c.hidden_size, c.ffn_size])?;
+                expect(format!("layer.{l}.expert.{e}.w3"), &[c.hidden_size, c.ffn_size])?;
+                expect(format!("layer.{l}.expert.{e}.w2"), &[c.ffn_size, c.hidden_size])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Canonical tensor-name list for a config, in file order.
+pub fn tensor_names(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let mut names: Vec<(String, Vec<usize>)> =
+        vec![("embed.table".into(), vec![cfg.vocab_size, cfg.hidden_size])];
+    for l in 0..cfg.n_layers {
+        for t in ["ln1", "ln2"] {
+            names.push((format!("layer.{l}.{t}"), vec![cfg.hidden_size]));
+        }
+        for t in ["wq", "wk", "wv", "wo"] {
+            names.push((format!("layer.{l}.{t}"), vec![cfg.hidden_size, cfg.hidden_size]));
+        }
+        names.push((format!("layer.{l}.gate"), vec![cfg.hidden_size, cfg.n_experts]));
+        for e in 0..cfg.n_experts {
+            names.push((format!("layer.{l}.expert.{e}.w1"), vec![cfg.hidden_size, cfg.ffn_size]));
+            names.push((format!("layer.{l}.expert.{e}.w3"), vec![cfg.hidden_size, cfg.ffn_size]));
+            names.push((format!("layer.{l}.expert.{e}.w2"), vec![cfg.ffn_size, cfg.hidden_size]));
+        }
+    }
+    names.push(("final.ln".into(), vec![cfg.hidden_size]));
+    names.push(("final.lm_head".into(), vec![cfg.hidden_size, cfg.vocab_size]));
+    names
+}
+
+/// Build synthetic `Weights` directly in memory from a fill function —
+/// used by tests, benches and examples that must run without artifacts.
+pub fn synth_weights(cfg: ModelConfig, fill: impl Fn(&str, usize) -> f32) -> Weights {
+    let names = tensor_names(&cfg);
+    let mut data = Vec::new();
+    let mut index = HashMap::new();
+    let mut tensors = Vec::new();
+    for (name, shape) in names {
+        let numel: usize = shape.iter().product();
+        let start = data.len();
+        data.extend((0..numel).map(|i| fill(&name, i)));
+        index.insert(name.clone(), (start, numel, shape.clone()));
+        tensors.push(TensorInfo { name, shape, offset: start * 4, nbytes: numel * 4 });
+    }
+    Weights { config: cfg, data, index, tensors }
+}
+
+/// Seeded random synthetic weights (rust-side analogue of
+/// `python/compile/weights.py::generate`, incl. ln weights = 1 and the
+/// gate-column imbalance shaping; not bit-identical to the python RNG).
+pub fn generate_weights(cfg: ModelConfig, seed: u64) -> Weights {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let names = tensor_names(&cfg);
+    let mut data = Vec::new();
+    let mut index = HashMap::new();
+    let mut tensors = Vec::new();
+    for (name, shape) in names {
+        let numel: usize = shape.iter().product();
+        let start = data.len();
+        if name.ends_with("ln1") || name.ends_with("ln2") || name.ends_with("final.ln") {
+            data.extend(std::iter::repeat(1.0f32).take(numel));
+        } else if name.ends_with(".gate") {
+            // imbalance shaping: per-expert column scales, skew peaking
+            // mid-network (mirrors weights.py)
+            let l: usize = name
+                .split('.')
+                .nth(1)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let depth = l as f64 / (cfg.n_layers.max(2) - 1) as f64;
+            let alpha = 0.15 + 0.55 * (std::f64::consts::PI * depth).sin();
+            let perm = rng.permutation(cfg.n_experts);
+            let mut scales: Vec<f32> = perm
+                .iter()
+                .map(|&r| (1.0 / (r as f64 + 1.0)).powf(alpha) as f32)
+                .collect();
+            let mean: f32 = scales.iter().sum::<f32>() / scales.len() as f32;
+            for s in scales.iter_mut() {
+                *s /= mean;
+            }
+            for i in 0..numel {
+                let e = i % cfg.n_experts;
+                data.push((rng.normal() * 0.02) as f32 * scales[e]);
+            }
+        } else {
+            data.extend((0..numel).map(|_| (rng.normal() * 0.02) as f32));
+        }
+        index.insert(name.clone(), (start, numel, shape.clone()));
+        tensors.push(TensorInfo { name, shape, offset: start * 4, nbytes: numel * 4 });
+    }
+    Weights { config: cfg, data, index, tensors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny MOEW blob in-memory (mirrors the python writer).
+    pub fn synth_moew(cfg: ModelConfig, fill: impl Fn(&str, usize) -> f32) -> Vec<u8> {
+        let mut names: Vec<(String, Vec<usize>)> = vec![
+            ("embed.table".into(), vec![cfg.vocab_size, cfg.hidden_size]),
+        ];
+        for l in 0..cfg.n_layers {
+            for t in ["ln1", "ln2"] {
+                names.push((format!("layer.{l}.{t}"), vec![cfg.hidden_size]));
+            }
+            for t in ["wq", "wk", "wv", "wo"] {
+                names.push((format!("layer.{l}.{t}"), vec![cfg.hidden_size, cfg.hidden_size]));
+            }
+            names.push((format!("layer.{l}.gate"), vec![cfg.hidden_size, cfg.n_experts]));
+            for e in 0..cfg.n_experts {
+                names.push((format!("layer.{l}.expert.{e}.w1"), vec![cfg.hidden_size, cfg.ffn_size]));
+                names.push((format!("layer.{l}.expert.{e}.w3"), vec![cfg.hidden_size, cfg.ffn_size]));
+                names.push((format!("layer.{l}.expert.{e}.w2"), vec![cfg.ffn_size, cfg.hidden_size]));
+            }
+        }
+        names.push(("final.ln".into(), vec![cfg.hidden_size]));
+        names.push(("final.lm_head".into(), vec![cfg.hidden_size, cfg.vocab_size]));
+
+        let align = |n: usize| n.div_ceil(64) * 64;
+        let mut tensors_json = String::from("[");
+        let mut offset = 0usize;
+        for (i, (name, shape)) in names.iter().enumerate() {
+            let numel: usize = shape.iter().product();
+            if i > 0 {
+                tensors_json.push(',');
+            }
+            tensors_json.push_str(&format!(
+                r#"{{"name":"{name}","shape":{shape:?},"offset":{offset},"nbytes":{}}}"#,
+                numel * 4
+            ));
+            offset = align(offset + numel * 4);
+        }
+        tensors_json.push(']');
+        let cfg_json = format!(
+            r#"{{"vocab_size":{},"hidden_size":{},"n_layers":{},"n_heads":{},"n_experts":{},"top_k":{},"ffn_size":{},"max_seq":{}}}"#,
+            cfg.vocab_size, cfg.hidden_size, cfg.n_layers, cfg.n_heads,
+            cfg.n_experts, cfg.top_k, cfg.ffn_size, cfg.max_seq
+        );
+        let mut header = format!(
+            r#"{{"config":{cfg_json},"tensors":{tensors_json},"data_start":0}}"#
+        );
+        let data_start = align(12 + header.len() + 32);
+        header = header.replace("\"data_start\":0", &format!("\"data_start\":{data_start}"));
+
+        let total = data_start + offset + 1024;
+        let mut blob = vec![0u8; total];
+        blob[..4].copy_from_slice(b"MOEW");
+        blob[4..8].copy_from_slice(&1u32.to_le_bytes());
+        blob[8..12].copy_from_slice(&(header.len() as u32).to_le_bytes());
+        blob[12..12 + header.len()].copy_from_slice(header.as_bytes());
+        let mut offset = 0usize;
+        for (name, shape) in &names {
+            let numel: usize = shape.iter().product();
+            for i in 0..numel {
+                let v = fill(name, i);
+                let at = data_start + offset + i * 4;
+                blob[at..at + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            offset = align(offset + numel * 4);
+        }
+        blob
+    }
+
+    #[test]
+    fn parse_and_validate_synth() {
+        let blob = synth_moew(ModelConfig::TINY, |_, i| i as f32 * 0.001);
+        let w = Weights::from_bytes(&blob).unwrap();
+        assert_eq!(w.config, ModelConfig::TINY);
+        w.validate_layout().unwrap();
+        let t = w.get("embed.table").unwrap();
+        assert_eq!(t.len(), 64 * 32);
+        assert_eq!(t[3], 0.003);
+        assert!(w.has("layer.1.expert.7.w2"));
+        assert!(!w.has("layer.2.ln1"));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(Weights::from_bytes(b"NOPE00000000").is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let blob = synth_moew(ModelConfig::TINY, |_, _| 0.0);
+        assert!(Weights::from_bytes(&blob[..200]).is_err());
+    }
+
+    #[test]
+    fn layer_and_expert_accessors() {
+        let blob = synth_moew(ModelConfig::TINY, |name, _| name.len() as f32);
+        let w = Weights::from_bytes(&blob).unwrap();
+        assert_eq!(w.layer(0, "ln1").unwrap()[0], "layer.0.ln1".len() as f32);
+        assert_eq!(
+            w.expert(1, 3, "w1").unwrap()[0],
+            "layer.1.expert.3.w1".len() as f32
+        );
+        assert!(w.layer(9, "ln1").is_err());
+    }
+}

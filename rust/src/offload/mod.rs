@@ -1,0 +1,9 @@
+//! MoE offloading: the host-side expert store (quantized "main memory"),
+//! the transfer engine that moves experts onto the (simulated) device, the
+//! speculative prefetcher (paper §3.2), and the overlap worker (§6.1).
+
+pub mod overlap;
+pub mod predictor;
+pub mod prefetch;
+pub mod store;
+pub mod transfer;

@@ -1,0 +1,184 @@
+//! Overlap worker — the paper's §6.1 "overlapping transfer with
+//! computation" direction, implemented.
+//!
+//! The dominant CPU cost of a transfer on this substrate is dequantization.
+//! A background thread performs dequantization off the critical path: the
+//! engine submits (layer, expert) requests when a speculative guess is
+//! made, keeps computing, and collects finished results at the next layer
+//! boundary. The upload half (creating the PJRT buffer) stays on the engine
+//! thread because the PJRT client is not shared across threads.
+
+use crate::offload::store::HostExpertStore;
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub struct DequantResult {
+    pub layer: usize,
+    pub expert: usize,
+    pub w1: Vec<f32>,
+    pub w3: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
+pub struct OverlapWorker {
+    tx: Option<Sender<(usize, usize)>>,
+    rx: Receiver<DequantResult>,
+    handle: Option<JoinHandle<()>>,
+    /// Requests submitted but not yet collected.
+    in_flight: HashSet<(usize, usize)>,
+    /// Results drained while waiting for a specific one.
+    ready_stash: Vec<DequantResult>,
+}
+
+impl OverlapWorker {
+    pub fn spawn(store: Arc<HostExpertStore>) -> Self {
+        let (req_tx, req_rx) = channel::<(usize, usize)>();
+        let (res_tx, res_rx) = channel::<DequantResult>();
+        let handle = std::thread::Builder::new()
+            .name("overlap-dequant".into())
+            .spawn(move || {
+                while let Ok((layer, expert)) = req_rx.recv() {
+                    let (w1, w3, w2) = store.fetch(layer, expert);
+                    if res_tx.send(DequantResult { layer, expert, w1, w3, w2 }).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn overlap worker");
+        OverlapWorker {
+            tx: Some(req_tx),
+            rx: res_rx,
+            handle: Some(handle),
+            in_flight: HashSet::new(),
+            ready_stash: Vec::new(),
+        }
+    }
+
+    /// Submit a prefetch; duplicates of in-flight requests are dropped.
+    pub fn submit(&mut self, layer: usize, expert: usize) {
+        if self.in_flight.insert((layer, expert)) {
+            if let Some(tx) = &self.tx {
+                let _ = tx.send((layer, expert));
+            }
+        }
+    }
+
+    pub fn in_flight(&self, layer: usize, expert: usize) -> bool {
+        self.in_flight.contains(&(layer, expert))
+    }
+
+    /// Non-blocking drain of finished dequantizations.
+    pub fn collect_ready(&mut self) -> Vec<DequantResult> {
+        let mut out = std::mem::take(&mut self.ready_stash);
+        loop {
+            match self.rx.try_recv() {
+                Ok(r) => {
+                    self.in_flight.remove(&(r.layer, r.expert));
+                    out.push(r);
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+
+    /// Blocking wait for one specific in-flight request (demand promotion
+    /// of a prefetch). Other results drained along the way are stashed and
+    /// returned by the next `collect_ready`.
+    pub fn wait_for(&mut self, layer: usize, expert: usize) -> Option<DequantResult> {
+        if !self.in_flight.contains(&(layer, expert)) {
+            return self
+                .ready_stash
+                .iter()
+                .position(|r| r.layer == layer && r.expert == expert)
+                .map(|i| self.ready_stash.swap_remove(i));
+        }
+        while let Ok(r) = self.rx.recv() {
+            self.in_flight.remove(&(r.layer, r.expert));
+            if r.layer == layer && r.expert == expert {
+                return Some(r);
+            }
+            self.ready_stash.push(r);
+        }
+        None
+    }
+}
+
+impl Drop for OverlapWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::synth_weights;
+    use crate::model::ModelConfig;
+    use crate::quant::Scheme;
+
+    fn store() -> Arc<HostExpertStore> {
+        let w = synth_weights(ModelConfig::TINY, |_, i| (i % 5) as f32 * 0.02);
+        Arc::new(HostExpertStore::build(&w, Scheme::Int8 { block: 16 }).unwrap())
+    }
+
+    #[test]
+    fn submit_and_wait() {
+        let mut w = OverlapWorker::spawn(store());
+        w.submit(0, 3);
+        let r = w.wait_for(0, 3).expect("result");
+        assert_eq!((r.layer, r.expert), (0, 3));
+        assert_eq!(r.w1.len(), 32 * 64);
+        assert!(!w.in_flight(0, 3));
+    }
+
+    #[test]
+    fn collect_ready_eventually_gets_all() {
+        let mut w = OverlapWorker::spawn(store());
+        w.submit(0, 1);
+        w.submit(1, 2);
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            got.extend(w.collect_ready().into_iter().map(|r| (r.layer, r.expert)));
+            std::thread::yield_now();
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn duplicate_submits_coalesce() {
+        let mut w = OverlapWorker::spawn(store());
+        w.submit(0, 0);
+        w.submit(0, 0);
+        let r1 = w.wait_for(0, 0);
+        assert!(r1.is_some());
+        // only one result total: nothing else ever arrives
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(w.collect_ready().is_empty());
+    }
+
+    #[test]
+    fn wait_for_unknown_is_none() {
+        let mut w = OverlapWorker::spawn(store());
+        assert!(w.wait_for(1, 7).is_none());
+    }
+
+    #[test]
+    fn wait_stashes_unrelated_results() {
+        let mut w = OverlapWorker::spawn(store());
+        w.submit(0, 1);
+        w.submit(0, 2);
+        // wait for the second; the first gets stashed
+        let r = w.wait_for(0, 2).unwrap();
+        assert_eq!(r.expert, 2);
+        let rest = w.collect_ready();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].expert, 1);
+    }
+}

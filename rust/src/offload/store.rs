@@ -1,0 +1,147 @@
+//! Host expert store — the paper's "experts stored in main memory".
+//!
+//! All expert tensors are re-encoded once at startup with the configured
+//! quantization scheme (paper: HQQ 2-bit group-16; here: block-wise int4 /
+//! int8 / f32, DESIGN.md §3) and held in host memory. A cache miss
+//! dequantizes (`fetch` -> f32) and uploads; the quantized byte count is
+//! what crosses the simulated PCIe bus.
+
+use crate::model::Weights;
+use crate::quant::{QTensor, Scheme};
+use anyhow::Result;
+
+pub struct ExpertEntry {
+    pub w1: QTensor,
+    pub w3: QTensor,
+    pub w2: QTensor,
+}
+
+impl ExpertEntry {
+    pub fn storage_bytes(&self) -> usize {
+        self.w1.storage_bytes() + self.w3.storage_bytes() + self.w2.storage_bytes()
+    }
+}
+
+pub struct HostExpertStore {
+    pub scheme: Scheme,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// entries[layer * n_experts + expert]
+    entries: Vec<ExpertEntry>,
+    /// Worst-case dequantization error bound across all experts.
+    pub max_error_bound: f32,
+}
+
+impl HostExpertStore {
+    /// Quantize every expert in `weights` into host storage.
+    pub fn build(weights: &Weights, scheme: Scheme) -> Result<HostExpertStore> {
+        let c = &weights.config;
+        let mut entries = Vec::with_capacity(c.n_layers * c.n_experts);
+        let mut max_err = 0.0f32;
+        for l in 0..c.n_layers {
+            for e in 0..c.n_experts {
+                let entry = ExpertEntry {
+                    w1: QTensor::quantize(weights.expert(l, e, "w1")?, scheme),
+                    w3: QTensor::quantize(weights.expert(l, e, "w3")?, scheme),
+                    w2: QTensor::quantize(weights.expert(l, e, "w2")?, scheme),
+                };
+                max_err = max_err
+                    .max(entry.w1.max_abs_error_bound())
+                    .max(entry.w3.max_abs_error_bound())
+                    .max(entry.w2.max_abs_error_bound());
+                entries.push(entry);
+            }
+        }
+        Ok(HostExpertStore {
+            scheme,
+            n_layers: c.n_layers,
+            n_experts: c.n_experts,
+            entries,
+            max_error_bound: max_err,
+        })
+    }
+
+    pub fn entry(&self, layer: usize, expert: usize) -> &ExpertEntry {
+        &self.entries[layer * self.n_experts + expert]
+    }
+
+    /// Dequantize one expert to f32 (the CPU half of a transfer).
+    pub fn fetch(&self, layer: usize, expert: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let e = self.entry(layer, expert);
+        (e.w1.dequantize(), e.w3.dequantize(), e.w2.dequantize())
+    }
+
+    /// Quantized bytes of one expert — the unit of PCIe traffic.
+    pub fn expert_transfer_bytes(&self) -> usize {
+        self.entries.first().map_or(0, |e| e.storage_bytes())
+    }
+
+    /// Total host memory held by the store.
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.storage_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::synth_weights;
+    use crate::model::{ModelConfig, Weights};
+
+    fn weights() -> Weights {
+        synth_weights(ModelConfig::TINY, |name, i| {
+            ((name.len() + i) % 13) as f32 * 0.01 - 0.06
+        })
+    }
+
+    #[test]
+    fn builds_all_experts() {
+        let w = weights();
+        let s = HostExpertStore::build(&w, Scheme::Int8 { block: 16 }).unwrap();
+        assert_eq!(s.n_layers, 2);
+        assert_eq!(s.n_experts, 8);
+        let (w1, w3, w2) = s.fetch(1, 7);
+        assert_eq!(w1.len(), 32 * 64);
+        assert_eq!(w3.len(), 32 * 64);
+        assert_eq!(w2.len(), 64 * 32);
+    }
+
+    #[test]
+    fn f32_store_roundtrips_exactly() {
+        let w = weights();
+        let s = HostExpertStore::build(&w, Scheme::F32).unwrap();
+        let (w1, _, _) = s.fetch(0, 0);
+        assert_eq!(&w1[..], w.expert(0, 0, "w1").unwrap());
+    }
+
+    #[test]
+    fn int4_within_error_bound() {
+        let w = weights();
+        let s = HostExpertStore::build(&w, Scheme::Int4 { block: 16 }).unwrap();
+        let (dq, _, _) = s.fetch(0, 3);
+        let orig = w.expert(0, 3, "w1").unwrap();
+        for (a, b) in dq.iter().zip(orig) {
+            assert!((a - b).abs() <= s.max_error_bound * 1.001);
+        }
+    }
+
+    #[test]
+    fn transfer_bytes_shrink_with_scheme() {
+        let w = weights();
+        let f32b = HostExpertStore::build(&w, Scheme::F32).unwrap().expert_transfer_bytes();
+        let i8b = HostExpertStore::build(&w, Scheme::Int8 { block: 64 })
+            .unwrap()
+            .expert_transfer_bytes();
+        let i4b = HostExpertStore::build(&w, Scheme::Int4 { block: 16 })
+            .unwrap()
+            .expert_transfer_bytes();
+        assert!(f32b > i8b && i8b > i4b);
+    }
+
+    #[test]
+    fn total_bytes_is_sum() {
+        let w = weights();
+        let s = HostExpertStore::build(&w, Scheme::Int8 { block: 64 }).unwrap();
+        assert_eq!(s.total_bytes(), 16 * s.expert_transfer_bytes());
+    }
+}

@@ -1,0 +1,260 @@
+//! Block-wise affine quantization for the host expert store.
+//!
+//! The paper stores offloaded experts HQQ-quantized (2-bit experts, group
+//! size 16; 4-bit attention, group size 64) to shrink both host memory and
+//! the PCIe transfer volume. HQQ itself is proprietary-complex; we build the
+//! standard block-wise affine scheme which preserves the two properties the
+//! evaluation depends on (DESIGN.md §3): bytes-per-expert ∝ bit-width, and
+//! dequantize-on-transfer cost.
+//!
+//! Layout per block of `block` values: `scale` f32, `zero` f32 (min), then
+//! `block` codes of `bits` each (int4 packed two per byte, low nibble first).
+
+/// Storage scheme for one tensor in the host store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    F32,
+    /// 8-bit affine, per-`block` scale/zero.
+    Int8 { block: usize },
+    /// 4-bit affine, per-`block` scale/zero (the paper's 2-bit analogue —
+    /// int4 keeps MiniMixtral's gating numerically meaningful).
+    Int4 { block: usize },
+}
+
+impl Scheme {
+    pub fn bits(&self) -> usize {
+        match self {
+            Scheme::F32 => 32,
+            Scheme::Int8 { .. } => 8,
+            Scheme::Int4 { .. } => 4,
+        }
+    }
+    pub fn block(&self) -> usize {
+        match self {
+            Scheme::F32 => usize::MAX,
+            Scheme::Int8 { block } | Scheme::Int4 { block } => *block,
+        }
+    }
+    /// Storage bytes for `n` values (codes + per-block scale/zero).
+    pub fn storage_bytes(&self, n: usize) -> usize {
+        match self {
+            Scheme::F32 => n * 4,
+            Scheme::Int8 { block } => {
+                let nblocks = n.div_ceil(*block);
+                n + nblocks * 8
+            }
+            Scheme::Int4 { block } => {
+                let nblocks = n.div_ceil(*block);
+                n.div_ceil(2) + nblocks * 8
+            }
+        }
+    }
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "f32" | "fp32" => Some(Scheme::F32),
+            "int8" => Some(Scheme::Int8 { block: 64 }),
+            "int4" => Some(Scheme::Int4 { block: 16 }),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::F32 => "f32",
+            Scheme::Int8 { .. } => "int8",
+            Scheme::Int4 { .. } => "int4",
+        }
+    }
+}
+
+/// A quantized tensor (or a plain f32 copy for `Scheme::F32`).
+#[derive(Clone, Debug)]
+pub struct QTensor {
+    pub scheme: Scheme,
+    pub len: usize,
+    codes: Vec<u8>,
+    /// (scale, zero) per block; empty for F32.
+    params: Vec<(f32, f32)>,
+    raw: Vec<f32>, // only for F32
+}
+
+impl QTensor {
+    pub fn quantize(data: &[f32], scheme: Scheme) -> QTensor {
+        match scheme {
+            Scheme::F32 => QTensor {
+                scheme,
+                len: data.len(),
+                codes: vec![],
+                params: vec![],
+                raw: data.to_vec(),
+            },
+            Scheme::Int8 { block } => Self::quantize_bits(data, scheme, block, 255),
+            Scheme::Int4 { block } => Self::quantize_bits(data, scheme, block, 15),
+        }
+    }
+
+    fn quantize_bits(data: &[f32], scheme: Scheme, block: usize, levels: u32) -> QTensor {
+        assert!(block > 0);
+        // int4 blocks must be byte-aligned so dequant can slice the packed
+        // stream per block
+        assert!(levels != 15 || block % 2 == 0, "int4 block must be even");
+        let mut params = Vec::with_capacity(data.len().div_ceil(block));
+        let mut codes_u8: Vec<u8> = Vec::with_capacity(data.len());
+        for chunk in data.chunks(block) {
+            let lo = chunk.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = chunk.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let scale = if hi > lo { (hi - lo) / levels as f32 } else { 1.0 };
+            params.push((scale, lo));
+            for &x in chunk {
+                let q = ((x - lo) / scale).round().clamp(0.0, levels as f32) as u8;
+                codes_u8.push(q);
+            }
+        }
+        let codes = if levels == 15 {
+            // pack two nibbles per byte, low nibble first
+            let mut packed = Vec::with_capacity(codes_u8.len().div_ceil(2));
+            for pair in codes_u8.chunks(2) {
+                let lo = pair[0] & 0xF;
+                let hi = if pair.len() > 1 { pair[1] & 0xF } else { 0 };
+                packed.push(lo | (hi << 4));
+            }
+            packed
+        } else {
+            codes_u8
+        };
+        QTensor { scheme, len: data.len(), codes, params, raw: vec![] }
+    }
+
+    /// Dequantize into `out` (must be `len` long). This is the real CPU work
+    /// the transfer engine performs on a cache miss.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        match self.scheme {
+            Scheme::F32 => out.copy_from_slice(&self.raw),
+            Scheme::Int8 { block } => {
+                // zip over the code slice: no per-element bounds checks,
+                // vectorizes (see EXPERIMENTS.md §Perf)
+                for (bi, chunk) in out.chunks_mut(block).enumerate() {
+                    let (scale, zero) = self.params[bi];
+                    let base = bi * block;
+                    let codes = &self.codes[base..base + chunk.len()];
+                    for (o, &c) in chunk.iter_mut().zip(codes) {
+                        *o = c as f32 * scale + zero;
+                    }
+                }
+            }
+            Scheme::Int4 { block } => {
+                // `block` is even in practice: unpack byte -> 2 outputs with
+                // no per-element branch. (Odd tails handled at the end.)
+                for (bi, chunk) in out.chunks_mut(block).enumerate() {
+                    let (scale, zero) = self.params[bi];
+                    let base = bi * block;
+                    let bytes = &self.codes[base / 2..(base + chunk.len()).div_ceil(2)];
+                    let (pairs, tail) = chunk.split_at_mut(chunk.len() & !1);
+                    for (o2, &b) in pairs.chunks_exact_mut(2).zip(bytes) {
+                        o2[0] = (b & 0xF) as f32 * scale + zero;
+                        o2[1] = (b >> 4) as f32 * scale + zero;
+                    }
+                    if let Some(t) = tail.first_mut() {
+                        *t = (bytes[bytes.len() - 1] & 0xF) as f32 * scale + zero;
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.len];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Actual storage footprint in bytes (codes + params + raw).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.params.len() * 8 + self.raw.len() * 4
+    }
+
+    /// Worst-case absolute reconstruction error: scale/2 per block max.
+    pub fn max_abs_error_bound(&self) -> f32 {
+        self.params.iter().map(|(s, _)| s / 2.0).fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.normal() * 0.02) as f32).collect()
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let d = data(100, 1);
+        let q = QTensor::quantize(&d, Scheme::F32);
+        assert_eq!(q.dequantize(), d);
+        assert_eq!(q.storage_bytes(), 400);
+    }
+
+    #[test]
+    fn int8_error_within_bound() {
+        let d = data(1024, 2);
+        let q = QTensor::quantize(&d, Scheme::Int8 { block: 64 });
+        let r = q.dequantize();
+        let bound = q.max_abs_error_bound();
+        for (a, b) in d.iter().zip(&r) {
+            assert!((a - b).abs() <= bound * 1.001, "{a} vs {b}, bound {bound}");
+        }
+    }
+
+    #[test]
+    fn int4_error_within_bound() {
+        let d = data(1000, 3); // odd-ish length exercises nibble tail
+        let q = QTensor::quantize(&d, Scheme::Int4 { block: 16 });
+        let r = q.dequantize();
+        let bound = q.max_abs_error_bound();
+        for (a, b) in d.iter().zip(&r) {
+            assert!((a - b).abs() <= bound * 1.001);
+        }
+    }
+
+    #[test]
+    fn int4_odd_length() {
+        let d = data(17, 4);
+        let q = QTensor::quantize(&d, Scheme::Int4 { block: 16 });
+        assert_eq!(q.dequantize().len(), 17);
+    }
+
+    #[test]
+    fn constant_block_is_exact() {
+        let d = vec![0.5f32; 64];
+        for scheme in [Scheme::Int8 { block: 16 }, Scheme::Int4 { block: 16 }] {
+            let q = QTensor::quantize(&d, scheme);
+            for x in q.dequantize() {
+                assert_eq!(x, 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_shrinks_with_bits() {
+        let d = data(4096, 5);
+        let f32b = QTensor::quantize(&d, Scheme::F32).storage_bytes();
+        let i8b = QTensor::quantize(&d, Scheme::Int8 { block: 64 }).storage_bytes();
+        let i4b = QTensor::quantize(&d, Scheme::Int4 { block: 16 }).storage_bytes();
+        assert!(i8b < f32b / 3, "{i8b} vs {f32b}");
+        assert!(i4b < i8b, "{i4b} vs {i8b}");
+        // predicted == actual
+        assert_eq!(i8b, Scheme::Int8 { block: 64 }.storage_bytes(4096));
+        assert_eq!(i4b, Scheme::Int4 { block: 16 }.storage_bytes(4096));
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("int4"), Some(Scheme::Int4 { block: 16 }));
+        assert_eq!(Scheme::parse("int8"), Some(Scheme::Int8 { block: 64 }));
+        assert_eq!(Scheme::parse("f32"), Some(Scheme::F32));
+        assert_eq!(Scheme::parse("bf16"), None);
+    }
+}

@@ -1,0 +1,152 @@
+//! AOT artifact loading: manifest.json + HLO-text stages + golden vectors.
+
+use crate::model::ModelConfig;
+use crate::util::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct StageMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `artifacts/` directory.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub stages: HashMap<String, StageMeta>,
+    pub weights_path: PathBuf,
+    pub testvec_path: Option<PathBuf>,
+}
+
+const REQUIRED_STAGES: [&str; 5] = ["embed", "attn", "router", "expert", "final"];
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {mpath:?} — run `make artifacts` first"))?;
+        let m = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let config = ModelConfig::from_json(m.get("config"))?;
+
+        let mut stages = HashMap::new();
+        for s in m.get("stages").as_arr().unwrap_or(&[]) {
+            let name = s.get("name").as_str().unwrap_or_default().to_string();
+            let file = dir.join(s.get("file").as_str().unwrap_or_default());
+            if !file.is_file() {
+                bail!("stage {name}: missing artifact {file:?}");
+            }
+            let parse_specs = |v: &Value| -> Vec<TensorSpec> {
+                v.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| TensorSpec {
+                        shape: t.get("shape").as_usize_vec().unwrap_or_default(),
+                        dtype: t.get("dtype").as_str().unwrap_or("float32").to_string(),
+                    })
+                    .collect()
+            };
+            stages.insert(
+                name.clone(),
+                StageMeta {
+                    name,
+                    file,
+                    inputs: parse_specs(s.get("inputs")),
+                    outputs: parse_specs(s.get("outputs")),
+                },
+            );
+        }
+        for req in REQUIRED_STAGES {
+            if !stages.contains_key(req) {
+                bail!("manifest missing required stage {req:?}");
+            }
+        }
+
+        let weights_path = dir.join(m.get("weights").as_str().unwrap_or("weights.bin"));
+        if !weights_path.is_file() {
+            bail!("missing weights file {weights_path:?}");
+        }
+        let testvec_path = m
+            .get("testvec")
+            .as_str()
+            .map(|t| dir.join(t))
+            .filter(|p| p.is_file());
+
+        Ok(Artifacts { dir: dir.to_path_buf(), config, stages, weights_path, testvec_path })
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageMeta> {
+        self.stages
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no stage {name:?}"))
+    }
+
+    pub fn load_testvec(&self) -> Result<Value> {
+        let p = self
+            .testvec_path
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no testvec in artifacts"))?;
+        let text = std::fs::read_to_string(p)?;
+        json::parse(&text).map_err(|e| anyhow::anyhow!("testvec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fake_artifacts(dir: &Path) {
+        let mk = |name: &str| {
+            let mut f = std::fs::File::create(dir.join(format!("{name}.hlo.txt"))).unwrap();
+            writeln!(f, "HloModule {name}\nENTRY main {{}}").unwrap();
+        };
+        for s in REQUIRED_STAGES {
+            mk(s);
+        }
+        std::fs::write(dir.join("weights.bin"), b"MOEW").unwrap();
+        let stages: Vec<String> = REQUIRED_STAGES
+            .iter()
+            .map(|s| {
+                format!(
+                    r#"{{"name":"{s}","file":"{s}.hlo.txt","inputs":[{{"shape":[1,32],"dtype":"float32"}}],"outputs":[{{"shape":[1,32],"dtype":"float32"}}]}}"#
+                )
+            })
+            .collect();
+        let manifest = format!(
+            r#"{{"version":1,"config":{{"vocab_size":64,"hidden_size":32,"n_layers":2,"n_heads":4,"n_experts":8,"top_k":2,"ffn_size":64,"max_seq":16}},"stages":[{}],"weights":"weights.bin","testvec":null}}"#,
+            stages.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_dir() {
+        let dir = std::env::temp_dir().join(format!("art-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_artifacts(&dir);
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.config, ModelConfig::TINY);
+        assert_eq!(a.stage("router").unwrap().inputs.len(), 1);
+        assert!(a.testvec_path.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        match Artifacts::load(Path::new("/nonexistent-artifacts")) {
+            Ok(_) => panic!("expected failure"),
+            Err(err) => assert!(format!("{err:#}").contains("make artifacts")),
+        }
+    }
+}

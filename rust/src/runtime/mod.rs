@@ -1,0 +1,82 @@
+//! Execution runtime: the PJRT-backed AOT path and the pure-rust native
+//! oracle, behind one [`Backend`] trait the engine composes per token.
+//!
+//! The PJRT path (`pjrt.rs`) is the production configuration: it loads the
+//! HLO-text artifacts produced by `python/compile/aot.py`, compiles them
+//! once on the CPU PJRT client, and executes them from the request path.
+//! The native path (`native.rs`) reimplements the exact same math in rust;
+//! it exists as a correctness cross-check (`selfcheck`), lets the full test
+//! suite run without artifacts, and serves as the compute-cost baseline.
+
+pub mod artifacts;
+pub mod native;
+pub mod pjrt;
+
+use crate::model::ModelConfig;
+use anyhow::Result;
+
+/// Expert weights made resident "on device" — the unit the expert cache
+/// holds. For the PJRT backend these are device buffers (upload happened at
+/// transfer time); for the native backend, dequantized host tensors.
+pub enum ExpertHandle {
+    Device { w1: xla::PjRtBuffer, w3: xla::PjRtBuffer, w2: xla::PjRtBuffer },
+    Host { w1: Vec<f32>, w3: Vec<f32>, w2: Vec<f32> },
+}
+
+impl ExpertHandle {
+    /// Resident f32 bytes this handle pins on the (simulated) device.
+    pub fn resident_bytes(cfg: &ModelConfig) -> usize {
+        cfg.expert_bytes_f32()
+    }
+}
+
+/// Per-sequence KV-cache state, one (k, v) pair per layer, host-resident
+/// f32 (flattened `[max_seq, n_heads, head_dim]`).
+///
+/// Host-side for both backends: PJRT stage outputs arrive as ONE tuple
+/// buffer (the c-wrapper never sets `untuple_result`), so the updated
+/// caches must be downloaded each step anyway; and the crate's
+/// `buffer_from_host_literal` does not await the async transfer, making
+/// host slices + `buffer_from_host_buffer` (which copies during the call)
+/// the only sound upload path for per-step data.
+pub struct KvState(pub Vec<(Vec<f32>, Vec<f32>)>);
+
+impl KvState {
+    pub fn zeros(cfg: &ModelConfig) -> KvState {
+        let per_layer = cfg.max_seq * cfg.hidden_size;
+        KvState(
+            (0..cfg.n_layers)
+                .map(|_| (vec![0.0; per_layer], vec![0.0; per_layer]))
+                .collect(),
+        )
+    }
+    /// f32 bytes resident for one sequence's caches.
+    pub fn bytes(cfg: &ModelConfig) -> usize {
+        2 * cfg.n_layers * cfg.max_seq * cfg.hidden_size * 4
+    }
+}
+
+/// Stage-level model execution. One impl per runtime; the engine (L3)
+/// composes stages and owns every offloading decision in between.
+pub trait Backend {
+    fn config(&self) -> &ModelConfig;
+    fn new_kv(&self) -> Result<KvState>;
+    /// Token embedding: x[1,H].
+    fn embed(&self, tok: u32) -> Result<Vec<f32>>;
+    /// Attention block at `layer`: returns post-residual hidden states and
+    /// updates `kv` at position `pos`.
+    fn attn(&self, layer: usize, x: &[f32], kv: &mut KvState, pos: usize) -> Result<Vec<f32>>;
+    /// Router at `layer`: returns (normed hidden states h, expert probs).
+    fn router(&self, layer: usize, x_res: &[f32]) -> Result<(Vec<f32>, Vec<f32>)>;
+    /// Speculative gating (paper §3.2): apply `layer`'s router to hidden
+    /// states that came out of the *previous* layer. Probs only.
+    fn spec_router(&self, layer: usize, x_res: &[f32]) -> Result<Vec<f32>>;
+    /// One expert's FFN with explicitly provided (cached) weights.
+    fn expert(&self, h: &[f32], handle: &ExpertHandle) -> Result<Vec<f32>>;
+    /// Make dequantized expert weights device-resident (the upload half of a
+    /// transfer; the dequant half lives in `offload::store`).
+    fn upload_expert(&self, w1: Vec<f32>, w3: Vec<f32>, w2: Vec<f32>) -> Result<ExpertHandle>;
+    /// Final norm + LM head: logits[1,V].
+    fn final_logits(&self, x: &[f32]) -> Result<Vec<f32>>;
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,292 @@
+//! Pure-rust reference implementation of MiniMixtral — the native oracle.
+//!
+//! Bit-for-bit architectural mirror of `python/compile/model.py` (RMSNorm,
+//! rotate-half RoPE, causal MHA over a static KV cache, SwiGLU experts,
+//! softmax gating). Used to cross-check the PJRT artifacts (`selfcheck`),
+//! to run the full engine/cache/offload stack in tests without artifacts,
+//! and as the compute-time baseline in the cost model.
+
+use super::{Backend, ExpertHandle, KvState};
+use crate::model::{ModelConfig, Weights};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+pub struct NativeBackend {
+    weights: Arc<Weights>,
+    cfg: ModelConfig,
+}
+
+impl NativeBackend {
+    pub fn new(weights: Arc<Weights>) -> Self {
+        let cfg = weights.config;
+        NativeBackend { weights, cfg }
+    }
+
+    pub fn weights(&self) -> &Weights {
+        &self.weights
+    }
+}
+
+// ---------------------------------------------------------------------------
+// linear algebra primitives (f32, row-major)
+// ---------------------------------------------------------------------------
+
+/// y[j] = sum_i x[i] * w[i, j]  — vector–matrix product, w: [n, m].
+pub fn vecmat(x: &[f32], w: &[f32], m: usize, out: &mut [f32]) {
+    let n = x.len();
+    debug_assert_eq!(w.len(), n * m);
+    debug_assert_eq!(out.len(), m);
+    out.fill(0.0);
+    // row-major traversal: stream w sequentially, accumulate into out
+    for i in 0..n {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * m..(i + 1) * m];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xi * wv;
+        }
+    }
+}
+
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for ((o, &xv), &wv) in out.iter_mut().zip(x).zip(w) {
+        *o = xv * inv * wv;
+    }
+}
+
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Rotate-half RoPE applied in place to one head vector of length `hd`.
+fn rope_inplace(v: &mut [f32], pos: usize, theta: f32) {
+    let hd = v.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let (a, b) = (v[i], v[i + half]);
+        v[i] = a * cos - b * sin;
+        v[i + half] = a * sin + b * cos;
+    }
+}
+
+/// SwiGLU expert FFN on host weights: `(silu(h@w1) * (h@w3)) @ w2`.
+pub fn expert_ffn(h: &[f32], w1: &[f32], w3: &[f32], w2: &[f32], f: usize, out: &mut [f32]) {
+    let mut a = vec![0.0f32; f];
+    let mut u = vec![0.0f32; f];
+    vecmat(h, w1, f, &mut a);
+    vecmat(h, w3, f, &mut u);
+    for (av, &uv) in a.iter_mut().zip(u.iter()) {
+        *av = silu(*av) * uv;
+    }
+    vecmat(&a, w2, out.len(), out);
+}
+
+// ---------------------------------------------------------------------------
+// Backend impl
+// ---------------------------------------------------------------------------
+
+const ROPE_THETA: f32 = 10000.0;
+const RMS_EPS: f32 = 1e-5;
+
+impl Backend for NativeBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn new_kv(&self) -> Result<KvState> {
+        Ok(KvState::zeros(&self.cfg))
+    }
+
+    fn embed(&self, tok: u32) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        if tok as usize >= c.vocab_size {
+            bail!("token {tok} out of vocab {}", c.vocab_size);
+        }
+        let table = self.weights.get("embed.table")?;
+        let h = c.hidden_size;
+        Ok(table[tok as usize * h..(tok as usize + 1) * h].to_vec())
+    }
+
+    fn attn(&self, layer: usize, x: &[f32], kv: &mut KvState, pos: usize) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let (h, nh, hd, s) = (c.hidden_size, c.n_heads, c.head_dim(), c.max_seq);
+        if pos >= s {
+            bail!("pos {pos} >= max_seq {s}");
+        }
+        let (kc, vc) = &mut kv.0[layer];
+
+        let ln1 = self.weights.layer(layer, "ln1")?;
+        let mut hn = vec![0.0f32; h];
+        rmsnorm(x, ln1, RMS_EPS, &mut hn);
+
+        let mut q = vec![0.0f32; h];
+        let mut k = vec![0.0f32; h];
+        let mut v = vec![0.0f32; h];
+        vecmat(&hn, self.weights.layer(layer, "wq")?, h, &mut q);
+        vecmat(&hn, self.weights.layer(layer, "wk")?, h, &mut k);
+        vecmat(&hn, self.weights.layer(layer, "wv")?, h, &mut v);
+        for hh in 0..nh {
+            rope_inplace(&mut q[hh * hd..(hh + 1) * hd], pos, ROPE_THETA);
+            rope_inplace(&mut k[hh * hd..(hh + 1) * hd], pos, ROPE_THETA);
+        }
+        // cache rows are [pos][head][dim] flattened as pos*h + head*hd + d
+        kc[pos * h..(pos + 1) * h].copy_from_slice(&k);
+        vc[pos * h..(pos + 1) * h].copy_from_slice(&v);
+
+        // attention per head over positions 0..=pos
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn_out = vec![0.0f32; h];
+        let mut scores = vec![0.0f32; pos + 1];
+        for hh in 0..nh {
+            let qh = &q[hh * hd..(hh + 1) * hd];
+            for (p, sc) in scores.iter_mut().enumerate() {
+                let kh = &kc[p * h + hh * hd..p * h + (hh + 1) * hd];
+                *sc = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+            }
+            softmax_inplace(&mut scores);
+            let oh = &mut attn_out[hh * hd..(hh + 1) * hd];
+            for (p, &w) in scores.iter().enumerate() {
+                let vh = &vc[p * h + hh * hd..p * h + (hh + 1) * hd];
+                for (o, &vv) in oh.iter_mut().zip(vh) {
+                    *o += w * vv;
+                }
+            }
+        }
+        let mut proj = vec![0.0f32; h];
+        vecmat(&attn_out, self.weights.layer(layer, "wo")?, h, &mut proj);
+        Ok(x.iter().zip(&proj).map(|(a, b)| a + b).collect())
+    }
+
+    fn router(&self, layer: usize, x_res: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let c = &self.cfg;
+        let mut hn = vec![0.0f32; c.hidden_size];
+        rmsnorm(x_res, self.weights.layer(layer, "ln2")?, RMS_EPS, &mut hn);
+        let mut probs = vec![0.0f32; c.n_experts];
+        vecmat(&hn, self.weights.layer(layer, "gate")?, c.n_experts, &mut probs);
+        softmax_inplace(&mut probs);
+        Ok((hn, probs))
+    }
+
+    fn spec_router(&self, layer: usize, x_res: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.router(layer, x_res)?.1)
+    }
+
+    fn expert(&self, h: &[f32], handle: &ExpertHandle) -> Result<Vec<f32>> {
+        let ExpertHandle::Host { w1, w3, w2 } = handle else {
+            bail!("native backend got a device handle");
+        };
+        let mut out = vec![0.0f32; self.cfg.hidden_size];
+        expert_ffn(h, w1, w3, w2, self.cfg.ffn_size, &mut out);
+        Ok(out)
+    }
+
+    fn upload_expert(&self, w1: Vec<f32>, w3: Vec<f32>, w2: Vec<f32>) -> Result<ExpertHandle> {
+        Ok(ExpertHandle::Host { w1, w3, w2 })
+    }
+
+    fn final_logits(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.cfg;
+        let mut hn = vec![0.0f32; c.hidden_size];
+        rmsnorm(x, self.weights.get("final.ln")?, RMS_EPS, &mut hn);
+        let mut logits = vec![0.0f32; c.vocab_size];
+        vecmat(&hn, self.weights.get("final.lm_head")?, c.vocab_size, &mut logits);
+        Ok(logits)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecmat_identity() {
+        let x = [1.0, 2.0, 3.0];
+        #[rustfmt::skip]
+        let w = [1.0, 0.0, 0.0,
+                 0.0, 1.0, 0.0,
+                 0.0, 0.0, 1.0];
+        let mut out = [0.0; 3];
+        vecmat(&x, &w, 3, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn vecmat_known() {
+        // x[1,2] @ w[2,2] = [1*1+2*3, 1*2+2*4] = [7, 10]
+        let x = [1.0, 2.0];
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let mut out = [0.0; 2];
+        vecmat(&x, &w, 2, &mut out);
+        assert_eq!(out, [7.0, 10.0]);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = [3.0f32, 4.0];
+        let w = [1.0f32, 1.0];
+        let mut out = [0.0f32; 2];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut xs = [1.0f32, 2.0, 3.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let mut v = [0.1f32, 0.2, 0.3, 0.4];
+        let orig = v;
+        rope_inplace(&mut v, 0, 10000.0);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut v = [0.5f32, -0.3, 0.8, 0.1];
+        let n0: f32 = v.iter().map(|x| x * x).sum();
+        rope_inplace(&mut v, 17, 10000.0);
+        let n1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn expert_ffn_zero_input_zero_output() {
+        let h = vec![0.0f32; 4];
+        let w = vec![0.5f32; 4 * 8];
+        let w2 = vec![0.5f32; 8 * 4];
+        let mut out = vec![1.0f32; 4];
+        expert_ffn(&h, &w, &w, &w2, 8, &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+}

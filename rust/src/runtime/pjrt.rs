@@ -1,0 +1,219 @@
+//! PJRT-backed runtime: loads the HLO-text artifacts, compiles them once,
+//! and executes them on the request path. This is the production backend.
+//!
+//! Buffer discipline (the offloading semantics live here):
+//!   * **Static weights** (embeddings, attention, norms, gates, LM head)
+//!     are staged as DEVICE BUFFERS once at startup and every stage runs
+//!     via `execute_b` — in the paper's terms these are the always-resident
+//!     "shared attention layers". (Perf: re-uploading them per call cost
+//!     ~1.3 MB/layer/token on the CPU plugin; see EXPERIMENTS.md §Perf.)
+//!   * **Expert weights** are NOT held here. They live quantized in the
+//!     host store (`offload::store`); a transfer dequantizes and uploads
+//!     them as device buffers (`upload_expert` -> [`ExpertHandle::Device`]),
+//!     so cache hits reuse resident buffers with no host->device traffic —
+//!     the exact mechanism the paper's GPU cache implements over PCIe.
+//!   * **KV caches** round-trip via host f32 slices per layer step: stage
+//!     outputs arrive as ONE tuple buffer (PJRT `untuple_result` is off in
+//!     the c-wrapper), so the k/v updates must be downloaded anyway; they
+//!     are re-uploaded with `buffer_from_host_buffer`, which copies during
+//!     the call — the crate's `buffer_from_host_literal` does NOT await the
+//!     async transfer and racing it segfaults (found the hard way; see
+//!     EXPERIMENTS.md §Perf).
+
+use super::{artifacts::Artifacts, Backend, ExpertHandle, KvState};
+use crate::model::{ModelConfig, Weights};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+struct LayerBufs {
+    ln1: PjRtBuffer,
+    wq: PjRtBuffer,
+    wk: PjRtBuffer,
+    wv: PjRtBuffer,
+    wo: PjRtBuffer,
+    ln2: PjRtBuffer,
+    gate: PjRtBuffer,
+}
+
+pub struct PjrtBackend {
+    cfg: ModelConfig,
+    client: PjRtClient,
+    exes: HashMap<&'static str, PjRtLoadedExecutable>,
+    embed_table: PjRtBuffer,
+    layers: Vec<LayerBufs>,
+    final_ln: PjRtBuffer,
+    lm_head: PjRtBuffer,
+}
+
+impl PjrtBackend {
+    /// Compile all stages and stage the static weights on-device.
+    pub fn new(artifacts: &Artifacts, weights: &Weights) -> Result<PjrtBackend> {
+        if weights.config != artifacts.config {
+            bail!(
+                "weights config {:?} != manifest config {:?}",
+                weights.config,
+                artifacts.config
+            );
+        }
+        let cfg = artifacts.config;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let mut exes = HashMap::new();
+        for name in ["embed", "attn", "router", "expert", "final"] {
+            let meta = artifacts.stage(name)?;
+            let path = meta
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {:?}", meta.file))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text for stage {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling stage {name}"))?;
+            exes.insert(name, exe);
+        }
+
+        let (h, v, e) = (cfg.hidden_size, cfg.vocab_size, cfg.n_experts);
+        let buf2 = |data: &[f32], d0: usize, d1: usize| -> Result<PjRtBuffer> {
+            Ok(client.buffer_from_host_buffer(data, &[d0, d1], None)?)
+        };
+        let buf1 = |data: &[f32]| -> Result<PjRtBuffer> {
+            Ok(client.buffer_from_host_buffer(data, &[data.len()], None)?)
+        };
+        let embed_table = buf2(weights.get("embed.table")?, v, h)?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            layers.push(LayerBufs {
+                ln1: buf1(weights.layer(l, "ln1")?)?,
+                wq: buf2(weights.layer(l, "wq")?, h, h)?,
+                wk: buf2(weights.layer(l, "wk")?, h, h)?,
+                wv: buf2(weights.layer(l, "wv")?, h, h)?,
+                wo: buf2(weights.layer(l, "wo")?, h, h)?,
+                ln2: buf1(weights.layer(l, "ln2")?)?,
+                gate: buf2(weights.layer(l, "gate")?, h, e)?,
+            });
+        }
+        let final_ln = buf1(weights.get("final.ln")?)?;
+        let lm_head = buf2(weights.get("final.lm_head")?, h, v)?;
+
+        Ok(PjrtBackend { cfg, client, exes, embed_table, layers, final_ln, lm_head })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    fn exe(&self, name: &str) -> &PjRtLoadedExecutable {
+        &self.exes[name]
+    }
+
+    /// Run a stage on device buffers and decompose the tuple result.
+    fn run_b(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe(name)
+            .execute_b::<&PjRtBuffer>(args)
+            .with_context(|| format!("executing stage {name}"))?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    fn x_buf(&self, x: &[f32]) -> Result<PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer(x, &[1, self.cfg.hidden_size], None)?)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn new_kv(&self) -> Result<KvState> {
+        Ok(KvState::zeros(&self.cfg))
+    }
+
+    fn embed(&self, tok: u32) -> Result<Vec<f32>> {
+        if tok as usize >= self.cfg.vocab_size {
+            bail!("token {tok} out of vocab");
+        }
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&[tok as i32], &[1], None)?;
+        let outs = self.run_b("embed", &[&tok_buf, &self.embed_table])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    fn attn(&self, layer: usize, x: &[f32], kv: &mut KvState, pos: usize) -> Result<Vec<f32>> {
+        if pos >= self.cfg.max_seq {
+            bail!("pos {pos} >= max_seq {}", self.cfg.max_seq);
+        }
+        let (s, nh, hd) = (self.cfg.max_seq, self.cfg.n_heads, self.cfg.head_dim());
+        let lw = &self.layers[layer];
+        let x_buf = self.x_buf(x)?;
+        // scalar i32: rank-0 buffer (buffer_from_host_buffer copies during
+        // the call — buffer_from_host_literal would race the async upload)
+        let pos_buf = self.client.buffer_from_host_buffer(&[pos as i32], &[], None)?;
+        let (kc, vc) = &kv.0[layer];
+        let kc_buf = self.client.buffer_from_host_buffer(kc, &[s, nh, hd], None)?;
+        let vc_buf = self.client.buffer_from_host_buffer(vc, &[s, nh, hd], None)?;
+        let mut outs = self.run_b(
+            "attn",
+            &[&x_buf, &lw.ln1, &lw.wq, &lw.wk, &lw.wv, &lw.wo, &kc_buf, &vc_buf, &pos_buf],
+        )?;
+        if outs.len() != 3 {
+            bail!("attn returned {} outputs", outs.len());
+        }
+        let vc_new = outs.pop().unwrap().to_vec::<f32>()?;
+        let kc_new = outs.pop().unwrap().to_vec::<f32>()?;
+        let x_res = outs.pop().unwrap().to_vec::<f32>()?;
+        kv.0[layer] = (kc_new, vc_new);
+        Ok(x_res)
+    }
+
+    fn router(&self, layer: usize, x_res: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let lw = &self.layers[layer];
+        let x_buf = self.x_buf(x_res)?;
+        let outs = self.run_b("router", &[&x_buf, &lw.ln2, &lw.gate])?;
+        if outs.len() != 2 {
+            bail!("router returned {} outputs", outs.len());
+        }
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+
+    fn spec_router(&self, layer: usize, x_res: &[f32]) -> Result<Vec<f32>> {
+        Ok(self.router(layer, x_res)?.1)
+    }
+
+    fn expert(&self, h: &[f32], handle: &ExpertHandle) -> Result<Vec<f32>> {
+        let ExpertHandle::Device { w1, w3, w2 } = handle else {
+            bail!("pjrt backend got a host handle");
+        };
+        // x is uploaded per call (tiny); the weight buffers are the cached
+        // device-resident experts — a hit costs no host->device transfer.
+        let x_buf = self.x_buf(h)?;
+        let outs = self.run_b("expert", &[&x_buf, w1, w3, w2])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    fn upload_expert(&self, w1: Vec<f32>, w3: Vec<f32>, w2: Vec<f32>) -> Result<ExpertHandle> {
+        let (h, f) = (self.cfg.hidden_size, self.cfg.ffn_size);
+        Ok(ExpertHandle::Device {
+            w1: self.client.buffer_from_host_buffer(&w1, &[h, f], None)?,
+            w3: self.client.buffer_from_host_buffer(&w3, &[h, f], None)?,
+            w2: self.client.buffer_from_host_buffer(&w2, &[f, h], None)?,
+        })
+    }
+
+    fn final_logits(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let x_buf = self.x_buf(x)?;
+        let outs = self.run_b("final", &[&x_buf, &self.final_ln, &self.lm_head])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

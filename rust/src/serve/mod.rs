@@ -1,0 +1,358 @@
+//! HTTP serving front: request queue + single engine worker.
+//!
+//! Architecture (vLLM-router-like, scaled to the paper's batch-size-1
+//! setting): a thread pool accepts connections and parses requests; decode
+//! work is funneled through an mpsc queue to ONE engine worker that owns
+//! the (non-`Send`) PJRT backend and the expert cache — so the cache state
+//! and its hit statistics are shared across requests, exactly like the
+//! paper's persistent GPU cache across a conversation.
+//!
+//! API:
+//!   POST /generate   {"prompt": str, "n_tokens": int, "temperature"?: f,
+//!                     "top_p"?: f, "greedy"?: bool}
+//!   GET  /metrics    cache + throughput counters (JSON)
+//!   GET  /healthz
+
+pub mod http;
+
+use crate::model::sampler::{Sampler, Sampling};
+use crate::model::tokenizer::Tokenizer;
+use crate::util::cliargs::Args;
+use crate::util::json::{self, Value};
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+pub struct GenRequest {
+    pub prompt: String,
+    pub n_tokens: usize,
+    pub sampling: Sampling,
+    pub resp: Sender<Result<GenResponse, String>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub text: String,
+    pub n_prompt: usize,
+    pub n_generated: usize,
+    pub wall_s: f64,
+    pub sim_tokens_per_s: f64,
+    pub cache_hit_rate: f64,
+}
+
+/// Serve-level metrics, shared between workers and /metrics.
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub queue_depth: AtomicU64,
+}
+
+impl ServerMetrics {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("requests", Value::from(self.requests.load(Ordering::Relaxed) as f64)),
+            ("errors", Value::from(self.errors.load(Ordering::Relaxed) as f64)),
+            (
+                "tokens_generated",
+                Value::from(self.tokens_generated.load(Ordering::Relaxed) as f64),
+            ),
+            ("queue_depth", Value::from(self.queue_depth.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Parse the /generate request body.
+pub fn parse_gen_request(body: &[u8]) -> Result<(String, usize, Sampling), String> {
+    let v = json::parse(std::str::from_utf8(body).map_err(|e| e.to_string())?)
+        .map_err(|e| e.to_string())?;
+    let prompt = v
+        .get("prompt")
+        .as_str()
+        .ok_or("missing 'prompt'")?
+        .to_string();
+    let n = v.get("n_tokens").as_usize().unwrap_or(32);
+    if n == 0 || n > 4096 {
+        return Err(format!("n_tokens {n} out of range"));
+    }
+    let sampling = if v.get("greedy").as_bool() == Some(true) {
+        Sampling::Greedy
+    } else {
+        Sampling::TopP {
+            temperature: v.get("temperature").as_f64().unwrap_or(0.9) as f32,
+            top_p: v.get("top_p").as_f64().unwrap_or(0.9) as f32,
+        }
+    };
+    Ok((prompt, n, sampling))
+}
+
+pub fn gen_response_json(r: &GenResponse) -> String {
+    json::to_string(&Value::obj(vec![
+        ("text", Value::from(r.text.clone())),
+        ("n_prompt", Value::from(r.n_prompt)),
+        ("n_generated", Value::from(r.n_generated)),
+        ("wall_s", Value::from(r.wall_s)),
+        ("sim_tokens_per_s", Value::from(r.sim_tokens_per_s)),
+        ("cache_hit_rate", Value::from(r.cache_hit_rate)),
+    ]))
+}
+
+/// Run the server until `shutdown` flips (or forever). Engine construction
+/// is deferred to the worker thread because the PJRT backend is not `Send`.
+pub fn serve<F>(
+    listener: TcpListener,
+    make_engine: F,
+    n_http_workers: usize,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()>
+where
+    F: FnOnce() -> Result<crate::engine::InferenceEngine> + Send + 'static,
+{
+    let metrics = Arc::new(ServerMetrics::default());
+    let (queue_tx, queue_rx) = channel::<GenRequest>();
+
+    // engine worker: owns the engine, serializes decodes (paper batch=1)
+    let worker_metrics = Arc::clone(&metrics);
+    let engine_worker = std::thread::Builder::new()
+        .name("engine-worker".into())
+        .spawn(move || {
+            let mut engine = match make_engine() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("engine init failed: {e:#}");
+                    return;
+                }
+            };
+            let tk = Tokenizer::new(engine.config().vocab_size);
+            let mut req_counter = 0u64;
+            while let Ok(req) = queue_rx.recv() {
+                worker_metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                req_counter += 1;
+                let prompt_toks = tk.encode(&req.prompt);
+                let mut sampler = Sampler::new(req.sampling, req_counter);
+                let max = engine.config().max_seq;
+                let result = if prompt_toks.len() + req.n_tokens > max {
+                    Err(format!(
+                        "prompt {} + n_tokens {} exceeds max_seq {max}",
+                        prompt_toks.len(),
+                        req.n_tokens
+                    ))
+                } else {
+                    engine
+                        .generate(&prompt_toks, req.n_tokens, &mut sampler)
+                        .map(|out| {
+                            worker_metrics
+                                .tokens_generated
+                                .fetch_add(out.generated.len() as u64, Ordering::Relaxed);
+                            GenResponse {
+                                text: tk.decode(&out.generated),
+                                n_prompt: prompt_toks.len(),
+                                n_generated: out.generated.len(),
+                                wall_s: out.throughput.wall_s,
+                                sim_tokens_per_s: out.throughput.tokens_per_s_sim(),
+                                cache_hit_rate: out.cache_stats.hit_rate(),
+                            }
+                        })
+                        .map_err(|e| format!("{e:#}"))
+                };
+                let _ = req.resp.send(result);
+            }
+        })?;
+
+    let pool = ThreadPool::new(n_http_workers);
+    let queue_tx = Arc::new(Mutex::new(queue_tx));
+    listener.set_nonblocking(true)?;
+    println!("serving on {}", listener.local_addr()?);
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                let metrics = Arc::clone(&metrics);
+                let queue_tx = Arc::clone(&queue_tx);
+                pool.execute(move || {
+                    handle_conn(&mut stream, &metrics, &queue_tx);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("accept error: {e}");
+                break;
+            }
+        }
+    }
+    drop(pool);
+    drop(queue_tx);
+    let _ = engine_worker.join();
+    Ok(())
+}
+
+fn handle_conn(
+    stream: &mut std::net::TcpStream,
+    metrics: &ServerMetrics,
+    queue_tx: &Mutex<Sender<GenRequest>>,
+) {
+    let req = match http::read_request(stream) {
+        Ok(r) => r,
+        Err(_) => {
+            let _ = http::write_response(stream, 400, "text/plain", b"bad request");
+            return;
+        }
+    };
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = http::write_response(stream, 200, "text/plain", b"ok");
+        }
+        ("GET", "/metrics") => {
+            let body = json::to_string(&metrics.to_json());
+            let _ = http::write_response(stream, 200, "application/json", body.as_bytes());
+        }
+        ("POST", "/generate") => match parse_gen_request(&req.body) {
+            Ok((prompt, n, sampling)) => {
+                let (tx, rx) = channel();
+                metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                let sent = queue_tx
+                    .lock()
+                    .unwrap()
+                    .send(GenRequest { prompt, n_tokens: n, sampling, resp: tx })
+                    .is_ok();
+                if !sent {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    let _ = http::write_response(stream, 503, "text/plain", b"engine down");
+                    return;
+                }
+                match rx.recv() {
+                    Ok(Ok(resp)) => {
+                        let body = gen_response_json(&resp);
+                        let _ =
+                            http::write_response(stream, 200, "application/json", body.as_bytes());
+                    }
+                    Ok(Err(msg)) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let body = json::to_string(&Value::obj(vec![(
+                            "error",
+                            Value::from(msg),
+                        )]));
+                        let _ =
+                            http::write_response(stream, 400, "application/json", body.as_bytes());
+                    }
+                    Err(_) => {
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = http::write_response(stream, 500, "text/plain", b"worker died");
+                    }
+                }
+            }
+            Err(msg) => {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let body =
+                    json::to_string(&Value::obj(vec![("error", Value::from(msg))]));
+                let _ = http::write_response(stream, 400, "application/json", body.as_bytes());
+            }
+        },
+        _ => {
+            let _ = http::write_response(stream, 404, "text/plain", b"not found");
+        }
+    }
+}
+
+/// `moe-offload serve` entrypoint.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::offload::store::HostExpertStore;
+    use crate::runtime::artifacts::Artifacts;
+
+    let port = args.usize_or("port", 7080)?;
+    let dir = args.str_or("artifacts", "artifacts");
+    let backend_kind = args.str_or("backend", "pjrt");
+    let policy = crate::cache::PolicyKind::parse(&args.str_or("policy", "lfu"))
+        .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+    let capacity = args.usize_or("capacity", 4)?;
+    let quant = crate::quant::Scheme::parse(&args.str_or("quant", "int4"))
+        .ok_or_else(|| anyhow::anyhow!("bad --quant"))?;
+    let spec = args.bool("spec");
+    let overlap = args.bool("overlap");
+    let profile = crate::sim::hardware::by_name(&args.str_or("profile", "A100"))
+        .ok_or_else(|| anyhow::anyhow!("bad --profile"))?;
+
+    let listener = TcpListener::bind(("0.0.0.0", port as u16))?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    serve(
+        listener,
+        move || {
+            let artifacts = Artifacts::load(std::path::Path::new(&dir))?;
+            let weights = Arc::new(crate::model::Weights::load(&artifacts.weights_path)?);
+            let backend: Box<dyn crate::runtime::Backend> = match backend_kind.as_str() {
+                "native" => Box::new(crate::runtime::native::NativeBackend::new(Arc::clone(&weights))),
+                _ => Box::new(crate::runtime::pjrt::PjrtBackend::new(&artifacts, &weights)?),
+            };
+            let store = Arc::new(HostExpertStore::build(&weights, quant)?);
+            Ok(crate::engine::InferenceEngine::new(
+                backend,
+                store,
+                crate::engine::EngineConfig {
+                    cache_capacity: capacity,
+                    policy,
+                    prefetch: crate::offload::prefetch::PrefetchConfig { enabled: spec, k: 2 },
+                    overlap,
+                    profile,
+                    seed: 0,
+                    record_trace: false,
+                },
+            ))
+        },
+        args.usize_or("http-workers", 4)?,
+        shutdown,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_gen_request_ok() {
+        let (p, n, s) =
+            parse_gen_request(br#"{"prompt":"hi","n_tokens":8,"greedy":true}"#).unwrap();
+        assert_eq!(p, "hi");
+        assert_eq!(n, 8);
+        assert_eq!(s, Sampling::Greedy);
+    }
+
+    #[test]
+    fn parse_gen_request_defaults() {
+        let (_, n, s) = parse_gen_request(br#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(n, 32);
+        assert!(matches!(s, Sampling::TopP { .. }));
+    }
+
+    #[test]
+    fn parse_gen_request_rejects() {
+        assert!(parse_gen_request(b"{}").is_err());
+        assert!(parse_gen_request(b"not json").is_err());
+        assert!(parse_gen_request(br#"{"prompt":"x","n_tokens":0}"#).is_err());
+    }
+
+    #[test]
+    fn response_json_shape() {
+        let r = GenResponse {
+            text: "abc".into(),
+            n_prompt: 4,
+            n_generated: 3,
+            wall_s: 0.5,
+            sim_tokens_per_s: 12.25,
+            cache_hit_rate: 0.75,
+        };
+        let v = json::parse(&gen_response_json(&r)).unwrap();
+        assert_eq!(v.get("text").as_str(), Some("abc"));
+        assert_eq!(v.get("n_generated").as_usize(), Some(3));
+        assert_eq!(v.get("cache_hit_rate").as_f64(), Some(0.75));
+    }
+}

@@ -1,0 +1,241 @@
+//! Trace-driven cache simulator: replay an activation trace under any
+//! policy/capacity and measure exactly what the paper measures — hit rate,
+//! precision/recall of the cached set, per-token miss counts (which the
+//! cost model turns into tokens/s), and evictions.
+//!
+//! The replay *writes the cache snapshots back into the trace*
+//! (`cached_before`), so a replayed trace renders directly as the paper's
+//! Figures 1–6 / 8–12.
+
+use crate::cache::{belady::Belady, LayerCache, Policy, PolicyKind};
+use crate::metrics::{CacheStats, PrecisionRecall};
+use crate::sim::costmodel::TokenEvents;
+use crate::trace::Trace;
+
+#[derive(Clone, Debug)]
+pub struct ReplayResult {
+    pub policy: PolicyKind,
+    pub capacity: usize,
+    pub stats: CacheStats,
+    pub pr: PrecisionRecall,
+    /// Per-token events for the cost model.
+    pub events: Vec<TokenEvents>,
+}
+
+impl ReplayResult {
+    pub fn misses_per_token(&self) -> f64 {
+        if self.events.is_empty() {
+            return 0.0;
+        }
+        self.events.iter().map(|e| e.misses as f64).sum::<f64>() / self.events.len() as f64
+    }
+}
+
+/// Replay `trace` under `policy` with per-layer `capacity`, mutating the
+/// trace's `cached_before` snapshots to reflect this policy's behavior.
+pub fn replay(trace: &mut Trace, policy: PolicyKind, capacity: usize, seed: u64) -> ReplayResult {
+    if policy == PolicyKind::Belady {
+        return replay_belady(trace, capacity);
+    }
+    let n_layers = trace.n_layers;
+    let mut caches: Vec<LayerCache<()>> = (0..n_layers)
+        .map(|l| LayerCache::new(capacity, policy.build(seed.wrapping_add(l as u64), None)))
+        .collect();
+
+    let mut pr = PrecisionRecall::default();
+    let mut events = Vec::with_capacity(trace.n_tokens());
+
+    for t in 0..trace.n_tokens() {
+        let mut ev = TokenEvents::default();
+        for (l, cache) in caches.iter_mut().enumerate() {
+            let activated = trace.at(t, l).activated.clone();
+            ev.activations += activated.len();
+            let snapshot = cache.resident();
+            pr.record(&snapshot, &activated);
+            trace.at_mut(t, l).cached_before = snapshot;
+
+            for &e in &activated {
+                if cache.access(e).is_none() {
+                    ev.misses += 1;
+                    cache.insert(e, ());
+                }
+            }
+        }
+        events.push(ev);
+    }
+
+    let mut stats = CacheStats::default();
+    for c in &caches {
+        stats.merge(&c.stats);
+    }
+    ReplayResult { policy, capacity, stats, pr, events }
+}
+
+/// Clairvoyant (Belady MIN) replay — the offline optimum. Kept separate
+/// from the online path because the policy needs explicit per-token cursor
+/// advancement over the future trace.
+fn replay_belady(trace: &mut Trace, capacity: usize) -> ReplayResult {
+    let n_layers = trace.n_layers;
+    let mut policies: Vec<Belady> = (0..n_layers)
+        .map(|l| Belady::new(&trace.layer_activations(l)))
+        .collect();
+    let mut resident: Vec<Vec<usize>> = vec![Vec::new(); n_layers];
+    let mut stats = CacheStats::default();
+    let mut pr = PrecisionRecall::default();
+    let mut events = Vec::with_capacity(trace.n_tokens());
+
+    for t in 0..trace.n_tokens() {
+        let mut ev = TokenEvents::default();
+        for l in 0..n_layers {
+            policies[l].advance_token(t as u64);
+            let activated = trace.at(t, l).activated.clone();
+            ev.activations += activated.len();
+            pr.record(&resident[l], &activated);
+            trace.at_mut(t, l).cached_before = resident[l].clone();
+
+            for &e in &activated {
+                if resident[l].contains(&e) {
+                    stats.hits += 1;
+                } else {
+                    stats.misses += 1;
+                    ev.misses += 1;
+                    if resident[l].len() >= capacity {
+                        let victim = policies[l].victim(&resident[l], 0);
+                        resident[l].retain(|&r| r != victim);
+                        stats.evictions += 1;
+                    }
+                    resident[l].push(e);
+                }
+            }
+        }
+        events.push(ev);
+    }
+    ReplayResult { policy: PolicyKind::Belady, capacity, stats, pr, events }
+}
+
+/// Replay across a set of policies (fresh trace copies), for comparisons.
+pub fn compare(
+    trace: &Trace,
+    policies: &[PolicyKind],
+    capacity: usize,
+    seed: u64,
+) -> Vec<ReplayResult> {
+    policies
+        .iter()
+        .map(|&p| {
+            let mut t = trace.clone();
+            replay(&mut t, p, capacity, seed)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::tracegen::{self, TraceGenConfig};
+
+    fn mk_trace(tokens: usize, seed: u64) -> Trace {
+        tracegen::generate(&TraceGenConfig { n_tokens: tokens, n_layers: 4, seed, ..Default::default() })
+    }
+
+    #[test]
+    fn replay_fills_snapshots() {
+        let mut t = mk_trace(30, 1);
+        replay(&mut t, PolicyKind::Lru, 4, 0);
+        // snapshots never exceed capacity and grow monotonically per layer
+        for tok in 0..30 {
+            for l in 0..4 {
+                assert!(t.at(tok, l).cached_before.len() <= 4);
+                if tok > 0 {
+                    assert!(
+                        t.at(tok, l).cached_before.len()
+                            >= t.at(tok - 1, l).cached_before.len().min(4)
+                    );
+                }
+            }
+        }
+        // by token 30 at least one layer has filled its cache
+        assert!((0..4).any(|l| t.at(29, l).cached_before.len() == 4));
+    }
+
+    #[test]
+    fn full_cache_never_misses_after_warmup() {
+        let mut t = mk_trace(50, 2);
+        let r = replay(&mut t, PolicyKind::Lru, 8, 0); // all 8 experts fit
+        // at most one miss per (layer, expert) = 4*8 total
+        assert!(r.stats.misses <= 32, "misses {}", r.stats.misses);
+        assert_eq!(r.stats.evictions, 0);
+    }
+
+    #[test]
+    fn recall_is_twice_precision_at_cap4_k2() {
+        // |cached|=4, |activated|=2 per event => P = tp/4N, R = tp/2N
+        let mut t = mk_trace(200, 3);
+        let r = replay(&mut t, PolicyKind::Lru, 4, 0);
+        let ratio = r.pr.recall() / r.pr.precision();
+        assert!((ratio - 2.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn belady_beats_online_policies() {
+        let t = mk_trace(300, 4);
+        let cap = 3;
+        let results = compare(
+            &t,
+            &[PolicyKind::Belady, PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Random],
+            cap,
+            7,
+        );
+        let hr: Vec<f64> = results.iter().map(|r| r.stats.hit_rate()).collect();
+        // Belady (index 0) must dominate every online policy
+        for i in 1..hr.len() {
+            assert!(
+                hr[0] >= hr[i] - 1e-9,
+                "belady {} < {} ({:?})",
+                hr[0],
+                hr[i],
+                results[i].policy
+            );
+        }
+    }
+
+    #[test]
+    fn belady_capacity_respected() {
+        let mut t = mk_trace(80, 8);
+        replay(&mut t, PolicyKind::Belady, 3, 0);
+        for tok in 0..80 {
+            for l in 0..4 {
+                assert!(t.at(tok, l).cached_before.len() <= 3);
+            }
+        }
+    }
+
+    #[test]
+    fn events_sum_matches_stats() {
+        let mut t = mk_trace(60, 5);
+        let r = replay(&mut t, PolicyKind::Lfu, 2, 0);
+        let ev_misses: u64 = r.events.iter().map(|e| e.misses as u64).sum();
+        assert_eq!(ev_misses, r.stats.misses);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let t = mk_trace(40, 6);
+        let a = compare(&t, &[PolicyKind::Random], 3, 42);
+        let b = compare(&t, &[PolicyKind::Random], 3, 42);
+        assert_eq!(a[0].stats.hits, b[0].stats.hits);
+    }
+
+    #[test]
+    fn larger_capacity_never_hurts_lru() {
+        // LRU is a stack algorithm: hit rate monotone in capacity
+        let t = mk_trace(150, 9);
+        let mut prev = -1.0;
+        for cap in 1..=8 {
+            let r = compare(&t, &[PolicyKind::Lru], cap, 0);
+            let hr = r[0].stats.hit_rate();
+            assert!(hr >= prev - 1e-9, "cap {cap}: {hr} < {prev}");
+            prev = hr;
+        }
+    }
+}

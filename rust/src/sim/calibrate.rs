@@ -1,0 +1,141 @@
+//! Calibration: solve effective (bandwidth, compute) per GPU from the
+//! paper's own Table 2 measurements.
+//!
+//! Model: `1/tps = C + M·T` where `C` is per-token compute time, `T` is
+//! per-miss transfer time, and `M` is misses/token (from replaying the
+//! trace under the policy). Two measurements per GPU — LRU and LFU
+//! tokens/s — give two equations in two unknowns:
+//!
+//!   T = (1/tps_lru − 1/tps_lfu) / (M_lru − M_lfu)
+//!   C = 1/tps_lru − M_lru·T
+//!
+//! This both *reproduces the paper's absolute Table 2 numbers by
+//! construction* and exposes an internal-consistency finding: the paper's
+//! 84.6 % A6000 speedup from a 1.6-point recall gain implies an effective
+//! bandwidth far below PCIe — i.e., hit-rate alone cannot explain the
+//! speedup under a linear transfer model (see EXPERIMENTS.md).
+
+use crate::sim::hardware::{HwProfile, ModelScale};
+
+/// Paper Table 2, tokens/s.
+pub const PAPER_TABLE2: [(&str, f64, f64); 4] = [
+    // (gpu, LRU t/s, LFU t/s)
+    ("A100", 3.33, 3.64),
+    ("A6000", 2.34, 4.32),
+    ("L40", 4.17, 4.65),
+    ("RTX3090", 3.07, 3.09),
+];
+
+/// Paper Table 2, cache precision/recall (%), shared across GPUs.
+pub const PAPER_PR: [(f64, f64); 2] = [(29.1, 58.2), (29.9, 59.8)]; // LRU, LFU
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fit {
+    pub gpu: &'static str,
+    /// Per-token compute seconds.
+    pub compute_s: f64,
+    /// Per-miss transfer seconds.
+    pub transfer_s: f64,
+    /// Effective bandwidth implied by `transfer_s` for `expert_bytes`.
+    pub implied_bw_bps: f64,
+    /// Whether the fit is physically plausible (positive C/T, bandwidth in
+    /// a sane PCIe range).
+    pub plausible: bool,
+}
+
+/// Fit one GPU given the two measurements and the miss rates/token.
+pub fn fit(
+    gpu: &'static str,
+    tps_lru: f64,
+    tps_lfu: f64,
+    misses_lru: f64,
+    misses_lfu: f64,
+    scale: &ModelScale,
+) -> Fit {
+    let dt = 1.0 / tps_lru - 1.0 / tps_lfu;
+    let dm = misses_lru - misses_lfu;
+    let transfer_s = if dm.abs() < 1e-12 { f64::INFINITY } else { dt / dm };
+    let compute_s = 1.0 / tps_lru - misses_lru * transfer_s;
+    let implied_bw_bps = scale.expert_bytes as f64 / transfer_s.max(1e-12);
+    let plausible = transfer_s > 0.0
+        && compute_s > 0.0
+        && (1.0e9..64.0e9).contains(&implied_bw_bps);
+    Fit { gpu, compute_s, transfer_s, implied_bw_bps, plausible }
+}
+
+impl Fit {
+    /// Predicted tokens/s for a policy with `misses` per token.
+    pub fn predict_tps(&self, misses: f64) -> f64 {
+        1.0 / (self.compute_s + misses * self.transfer_s)
+    }
+
+    /// Turn the fit into an HwProfile usable by the cost model.
+    pub fn to_profile(&self, scale: &ModelScale) -> HwProfile {
+        HwProfile {
+            name: self.gpu,
+            pcie_bps: self.implied_bw_bps,
+            transfer_latency_s: 0.0,
+            flops: (scale.dense_flops_per_token()
+                + scale.n_layers as f64 * scale.top_k as f64 * scale.expert_flops())
+                / self.compute_s.max(1e-12),
+        }
+    }
+}
+
+/// Misses/token implied by the paper's recall figures: every activated
+/// expert that is not cached is one miss; activations/token = L·k.
+pub fn misses_per_token_from_recall(recall: f64, n_layers: usize, top_k: usize) -> f64 {
+    (1.0 - recall) * (n_layers * top_k) as f64
+}
+
+/// Fit all four GPUs from the paper's published numbers.
+pub fn fit_paper_table2(scale: &ModelScale) -> Vec<Fit> {
+    let m_lru = misses_per_token_from_recall(PAPER_PR[0].1 / 100.0, scale.n_layers, scale.top_k);
+    let m_lfu = misses_per_token_from_recall(PAPER_PR[1].1 / 100.0, scale.n_layers, scale.top_k);
+    PAPER_TABLE2
+        .iter()
+        .map(|&(gpu, lru, lfu)| fit(gpu, lru, lfu, m_lru, m_lfu, scale))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_reproduces_inputs_exactly() {
+        let scale = ModelScale::mixtral_8x7b();
+        for f in fit_paper_table2(&scale) {
+            let m_lru = misses_per_token_from_recall(0.582, 32, 2);
+            let m_lfu = misses_per_token_from_recall(0.598, 32, 2);
+            let (_, lru, lfu) = *PAPER_TABLE2.iter().find(|(g, _, _)| *g == f.gpu).unwrap();
+            assert!((f.predict_tps(m_lru) - lru).abs() < 1e-9, "{}", f.gpu);
+            assert!((f.predict_tps(m_lfu) - lfu).abs() < 1e-9, "{}", f.gpu);
+        }
+    }
+
+    #[test]
+    fn misses_from_recall() {
+        // recall 0.582 at 32 layers * 2 -> 26.75 misses/token
+        let m = misses_per_token_from_recall(0.582, 32, 2);
+        assert!((m - 26.752).abs() < 1e-3);
+    }
+
+    #[test]
+    fn a6000_fit_is_physically_implausible() {
+        // The reproduction finding: the paper's A6000 speedup implies an
+        // effective bandwidth far below any PCIe generation.
+        let scale = ModelScale::mixtral_8x7b();
+        let fits = fit_paper_table2(&scale);
+        let a6000 = fits.iter().find(|f| f.gpu == "A6000").unwrap();
+        assert!(!a6000.plausible, "bw {:.2} GB/s", a6000.implied_bw_bps / 1e9);
+        assert!(a6000.implied_bw_bps < 1.0e9);
+    }
+
+    #[test]
+    fn predict_monotone_in_misses() {
+        let scale = ModelScale::mixtral_8x7b();
+        let f = fit("X", 3.0, 4.0, 27.0, 26.0, &scale);
+        assert!(f.predict_tps(10.0) > f.predict_tps(20.0));
+    }
+}

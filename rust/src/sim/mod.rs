@@ -1,0 +1,12 @@
+//! Simulation layer: synthetic trace generation, trace-driven cache
+//! replay, the hardware cost model, speculative-loading analysis and the
+//! Table-2 calibration — everything needed to regenerate the paper's
+//! evaluation on hardware we do not have (DESIGN.md §3).
+
+pub mod cachesim;
+pub mod calibrate;
+pub mod costmodel;
+pub mod hardware;
+pub mod speculative;
+pub mod sweep;
+pub mod tracegen;

@@ -1,0 +1,124 @@
+//! Speculative expert-loading simulation (paper §3.2 / §5.4).
+//!
+//! Two sources of speculative guesses:
+//! * **live** — the engine records actual next-layer-gate-on-current-hidden
+//!   guesses into the trace (`spec_guess`); this module just scores them.
+//! * **synthetic** — for trace-generator workloads there are no hidden
+//!   states, so guesses are synthesized with a target accuracy `q`: each
+//!   activated expert is guessed correctly with probability `q`, otherwise
+//!   replaced by a distinct wrong expert. The paper measures q ≈ 0.846.
+//!
+//! Also computes the §6.1 bandwidth consequences: every wrong guess means
+//! one extra expert transferred (the wrong one) *and* the right one still
+//! missing — total traffic strictly increases with any mistake.
+
+use crate::metrics::PrecisionRecall;
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+/// Fill `spec_guess` for layers 1.. with synthetic guesses of accuracy `q`.
+pub fn synthesize_guesses(trace: &mut Trace, q: f64, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let n_experts = trace.n_experts;
+    for t in 0..trace.n_tokens() {
+        for l in 1..trace.n_layers {
+            let activated = trace.at(t, l).activated.clone();
+            let mut guess: Vec<usize> = Vec::with_capacity(activated.len());
+            for &e in &activated {
+                if rng.f64() < q {
+                    guess.push(e);
+                } else {
+                    // wrong guess: any expert not activated and not guessed
+                    let mut cand = rng.below(n_experts);
+                    while activated.contains(&cand) || guess.contains(&cand) {
+                        cand = rng.below(n_experts);
+                    }
+                    guess.push(cand);
+                }
+            }
+            trace.at_mut(t, l).spec_guess = Some(guess);
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpecReport {
+    pub pr: PrecisionRecall,
+    /// Extra experts transferred due to wrong guesses (the §6.1 cost).
+    pub extra_transfers: u64,
+    /// Transfers fully avoided (correct guesses issued a layer early).
+    pub hidden_transfers: u64,
+}
+
+/// Score the speculative guesses recorded in a trace.
+pub fn score(trace: &Trace) -> SpecReport {
+    let pr = trace.spec_precision_recall();
+    SpecReport {
+        pr,
+        extra_transfers: pr.fp,
+        hidden_transfers: pr.tp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::tracegen::{self, TraceGenConfig};
+
+    fn mk(tokens: usize) -> Trace {
+        tracegen::generate(&TraceGenConfig { n_tokens: tokens, n_layers: 6, seed: 3, ..Default::default() })
+    }
+
+    #[test]
+    fn perfect_guessing_is_perfect() {
+        let mut t = mk(40);
+        synthesize_guesses(&mut t, 1.0, 0);
+        let rep = score(&t);
+        assert_eq!(rep.pr.precision(), 1.0);
+        assert_eq!(rep.pr.recall(), 1.0);
+        assert_eq!(rep.extra_transfers, 0);
+    }
+
+    #[test]
+    fn precision_equals_recall_always() {
+        // paper §5.4's structural identity: |guess| == |activated| => P == R
+        for q in [0.0, 0.3, 0.846, 0.95] {
+            let mut t = mk(60);
+            synthesize_guesses(&mut t, q, 1);
+            let rep = score(&t);
+            assert_eq!(rep.pr.fp, rep.pr.fn_, "q={q}");
+            assert!((rep.pr.precision() - rep.pr.recall()).abs() < 1e-12, "q={q}");
+        }
+    }
+
+    #[test]
+    fn accuracy_tracks_q() {
+        let mut t = mk(400);
+        synthesize_guesses(&mut t, 0.846, 2);
+        let p = score(&t).pr.precision();
+        assert!((p - 0.846).abs() < 0.03, "precision {p}");
+    }
+
+    #[test]
+    fn layer_zero_never_guessed() {
+        let mut t = mk(10);
+        synthesize_guesses(&mut t, 0.9, 3);
+        for tok in 0..10 {
+            assert!(t.at(tok, 0).spec_guess.is_none());
+            assert!(t.at(tok, 1).spec_guess.is_some());
+        }
+    }
+
+    #[test]
+    fn guesses_are_distinct_experts() {
+        let mut t = mk(50);
+        synthesize_guesses(&mut t, 0.5, 4);
+        for tok in 0..50 {
+            for l in 1..6 {
+                let g = t.at(tok, l).spec_guess.as_ref().unwrap();
+                assert_eq!(g.len(), 2);
+                assert_ne!(g[0], g[1]);
+            }
+        }
+    }
+}

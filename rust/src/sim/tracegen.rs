@@ -1,0 +1,192 @@
+//! Synthetic expert-activation trace generator.
+//!
+//! Calibrated to the two phenomena the paper measures on Mixtral-8x7B:
+//!
+//! * **Temporal locality** (§3.1, via Jiang et al. 2024): P(a token reuses
+//!   the previous token's expert) ≈ 0.3 vs 0.125 for uniform top-2-of-8.
+//! * **Expert imbalance** (§5.2): per-layer activation distributions are
+//!   Zipf-skewed, most strongly in the *middle* layers; some experts are
+//!   almost never activated.
+//!
+//! Per layer the generator is a Markov process: each of the previous
+//! token's experts is kept with probability `locality`; remaining top-k
+//! slots are filled without replacement from a per-layer Zipf stationary
+//! distribution whose exponent follows a sine bump over depth.
+
+use crate::trace::Trace;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TraceGenConfig {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub n_tokens: usize,
+    /// P(an expert activated at t-1 stays activated at t). Paper ≈ 0.3.
+    pub locality: f64,
+    /// Zipf exponent at the network edges / the mid-network peak.
+    pub skew_edge: f64,
+    pub skew_mid: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceGenConfig {
+    fn default() -> Self {
+        TraceGenConfig {
+            n_layers: 32,
+            n_experts: 8,
+            top_k: 2,
+            n_tokens: 64,
+            locality: 0.3,
+            skew_edge: 0.4,
+            skew_mid: 1.1,
+            seed: 0,
+        }
+    }
+}
+
+impl TraceGenConfig {
+    /// Mixtral-shaped defaults (paper testbed). The Markov keep-probability
+    /// is set below the *measured* repeat-probability target because the
+    /// skewed stationary refill re-picks hot experts: keep=0.12 lands the
+    /// measured temporal locality at the paper's ≈30% (asserted in tests).
+    pub fn mixtral(n_tokens: usize, seed: u64) -> Self {
+        TraceGenConfig { n_tokens, seed, locality: 0.12, ..Default::default() }
+    }
+    pub fn mini(n_tokens: usize, seed: u64) -> Self {
+        TraceGenConfig { n_layers: 12, n_tokens, seed, ..Default::default() }
+    }
+}
+
+/// Per-layer Zipf exponent: sine bump peaking mid-network (§5.2).
+fn layer_skew(cfg: &TraceGenConfig, layer: usize) -> f64 {
+    let depth = layer as f64 / (cfg.n_layers.max(2) - 1) as f64;
+    cfg.skew_edge + (cfg.skew_mid - cfg.skew_edge) * (std::f64::consts::PI * depth).sin()
+}
+
+pub fn generate(cfg: &TraceGenConfig) -> Trace {
+    let mut rng = Rng::new(cfg.seed);
+    let mut trace = Trace::new(cfg.n_layers, cfg.n_experts, cfg.top_k);
+
+    // per-layer stationary weights over a per-layer random expert ranking
+    let stationary: Vec<Vec<f64>> = (0..cfg.n_layers)
+        .map(|l| {
+            let zipf = Rng::zipf_weights(cfg.n_experts, layer_skew(cfg, l));
+            let perm = rng.permutation(cfg.n_experts);
+            let mut w = vec![0.0; cfg.n_experts];
+            for (rank, &e) in perm.iter().enumerate() {
+                w[e] = zipf[rank];
+            }
+            w
+        })
+        .collect();
+
+    let mut prev: Vec<Vec<usize>> = vec![Vec::new(); cfg.n_layers];
+    for t in 0..cfg.n_tokens {
+        trace.push_token(t as u32);
+        for l in 0..cfg.n_layers {
+            let mut selected: Vec<usize> = Vec::with_capacity(cfg.top_k);
+            // keep previous experts with prob locality
+            for &e in &prev[l] {
+                if selected.len() < cfg.top_k && rng.f64() < cfg.locality {
+                    selected.push(e);
+                }
+            }
+            // fill remaining slots from the stationary distribution
+            while selected.len() < cfg.top_k {
+                let mut w = stationary[l].clone();
+                for &e in &selected {
+                    w[e] = 0.0;
+                }
+                selected.push(rng.categorical(&w));
+            }
+            selected.sort_unstable();
+            // gating weights: random split that sums to 1 (rendering only)
+            let split = 0.5 + 0.4 * rng.f64();
+            let mut weights = vec![split as f32];
+            let rest = (1.0 - split) / (cfg.top_k - 1).max(1) as f64;
+            for _ in 1..cfg.top_k {
+                weights.push(rest as f32);
+            }
+            let rec = trace.at_mut(t, l);
+            rec.activated = selected.clone();
+            rec.weights = weights;
+            prev[l] = selected;
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_validity() {
+        let cfg = TraceGenConfig { n_tokens: 20, ..Default::default() };
+        let t = generate(&cfg);
+        assert_eq!(t.n_tokens(), 20);
+        for tok in 0..20 {
+            for l in 0..cfg.n_layers {
+                let a = &t.at(tok, l).activated;
+                assert_eq!(a.len(), 2);
+                assert_ne!(a[0], a[1]);
+                assert!(a.iter().all(|&e| e < 8));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TraceGenConfig { n_tokens: 10, seed: 9, ..Default::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        for t in 0..10 {
+            for l in 0..cfg.n_layers {
+                assert_eq!(a.at(t, l).activated, b.at(t, l).activated);
+            }
+        }
+    }
+
+    #[test]
+    fn locality_calibration() {
+        // with locality 0.3, measured repeat-prob should be well above the
+        // uniform 0.125 baseline and in the paper's "sometimes near 30%" zone
+        let cfg = TraceGenConfig { n_tokens: 400, locality: 0.3, ..Default::default() };
+        let t = generate(&cfg);
+        let loc = t.temporal_locality();
+        assert!((0.25..0.55).contains(&loc), "locality {loc}");
+    }
+
+    #[test]
+    fn zero_locality_approaches_stationary_sampling() {
+        let cfg = TraceGenConfig { n_tokens: 400, locality: 0.0, skew_edge: 0.0, skew_mid: 0.0, ..Default::default() };
+        let t = generate(&cfg);
+        // uniform top-2-of-8 -> repeat prob 2/8 = 0.25 per slot
+        let loc = t.temporal_locality();
+        assert!((0.18..0.32).contains(&loc), "locality {loc}");
+    }
+
+    #[test]
+    fn mid_layers_more_skewed() {
+        let cfg = TraceGenConfig { n_tokens: 600, ..Default::default() };
+        let t = generate(&cfg);
+        let mid = t.layer_imbalance(cfg.n_layers / 2);
+        let edge = t.layer_imbalance(0);
+        assert!(mid > edge, "mid {mid} vs edge {edge}");
+    }
+}
+
+#[cfg(test)]
+mod mixtral_calibration_tests {
+    use super::*;
+
+    #[test]
+    fn mixtral_preset_lands_paper_locality() {
+        let t = generate(&TraceGenConfig::mixtral(400, 0));
+        let loc = t.temporal_locality();
+        // paper (via Jiang et al.): above the 0.125 uniform baseline,
+        // "sometimes near 30%"
+        assert!((0.22..0.42).contains(&loc), "measured locality {loc}");
+    }
+}

@@ -1,0 +1,77 @@
+//! CSV export of traces (for external plotting of the paper's figures).
+
+use super::Trace;
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// One row per (token, layer, expert) with activation/cache/spec flags.
+pub fn trace_csv(trace: &Trace) -> String {
+    let mut out = String::from("token,layer,expert,activated,weight,cached,spec_guessed\n");
+    for t in 0..trace.n_tokens() {
+        for l in 0..trace.n_layers {
+            let rec = trace.at(t, l);
+            for e in 0..trace.n_experts {
+                let act_pos = rec.activated.iter().position(|&a| a == e);
+                let weight = act_pos.map(|i| rec.weights.get(i).copied().unwrap_or(0.0));
+                out.push_str(&format!(
+                    "{t},{l},{e},{},{},{},{}\n",
+                    act_pos.is_some() as u8,
+                    weight.map_or(String::from(""), |w| format!("{w:.4}")),
+                    rec.cached_before.contains(&e) as u8,
+                    rec.spec_guess.as_ref().is_some_and(|g| g.contains(&e)) as u8,
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Per-layer histogram CSV (paper Fig 7).
+pub fn histogram_csv(trace: &Trace) -> String {
+    let mut out = String::from("layer,expert,count\n");
+    for l in 0..trace.n_layers {
+        for (e, c) in trace.layer_histogram(l).iter().enumerate() {
+            out.push_str(&format!("{l},{e},{c}\n"));
+        }
+    }
+    out
+}
+
+pub fn write_file(path: &Path, content: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(content.as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Trace;
+
+    #[test]
+    fn csv_has_all_cells() {
+        let mut t = Trace::new(2, 4, 2);
+        t.push_token(0);
+        t.push_token(1);
+        t.at_mut(0, 0).activated = vec![1, 2];
+        t.at_mut(0, 0).weights = vec![0.7, 0.3];
+        let csv = trace_csv(&t);
+        // header + 2 tokens * 2 layers * 4 experts
+        assert_eq!(csv.lines().count(), 1 + 16);
+        assert!(csv.contains("0,0,1,1,0.7000,0,0"));
+    }
+
+    #[test]
+    fn histogram_csv_shape() {
+        let mut t = Trace::new(3, 2, 1);
+        t.push_token(0);
+        t.at_mut(0, 2).activated = vec![1];
+        let csv = histogram_csv(&t);
+        assert_eq!(csv.lines().count(), 1 + 6);
+        assert!(csv.ends_with("2,1,1\n"));
+    }
+}

@@ -1,0 +1,202 @@
+//! Tracing system — the paper's §3.1 contribution: record the entire
+//! activation + caching history "at any layer, for any token, in any
+//! prompt", then render and analyze it (Figures 1–14).
+
+pub mod export;
+pub mod render;
+
+use crate::metrics::PrecisionRecall;
+
+/// Everything observed at one (token, layer) step.
+#[derive(Clone, Debug, Default)]
+pub struct LayerTokenRecord {
+    /// Experts selected by the router (top-k), with their renormalized
+    /// gating weights (drives the blue depth in the paper's figures).
+    pub activated: Vec<usize>,
+    pub weights: Vec<f32>,
+    /// Cache residents at the moment the lookups happened (the gray
+    /// squares in the paper's figures).
+    pub cached_before: Vec<usize>,
+    /// Speculative guess made for this layer from the previous layer's
+    /// hidden states (None at layer 0 — impossible to guess, paper §5.4).
+    pub spec_guess: Option<Vec<usize>>,
+}
+
+/// Full decode history: `records[token][layer]`.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub records: Vec<Vec<LayerTokenRecord>>,
+    /// Token ids, parallel to `records` (for labeling figures).
+    pub tokens: Vec<u32>,
+}
+
+impl Trace {
+    pub fn new(n_layers: usize, n_experts: usize, top_k: usize) -> Self {
+        Trace { n_layers, n_experts, top_k, records: Vec::new(), tokens: Vec::new() }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Begin a new token's records (one per layer, filled by the engine).
+    pub fn push_token(&mut self, tok: u32) {
+        self.tokens.push(tok);
+        self.records
+            .push((0..self.n_layers).map(|_| LayerTokenRecord::default()).collect());
+    }
+
+    pub fn at_mut(&mut self, token: usize, layer: usize) -> &mut LayerTokenRecord {
+        &mut self.records[token][layer]
+    }
+    pub fn at(&self, token: usize, layer: usize) -> &LayerTokenRecord {
+        &self.records[token][layer]
+    }
+
+    /// Per-layer activation sequences (token -> activated experts), the
+    /// input format for trace replay and Belady.
+    pub fn layer_activations(&self, layer: usize) -> Vec<Vec<usize>> {
+        self.records.iter().map(|t| t[layer].activated.clone()).collect()
+    }
+
+    /// Cache precision/recall over the whole trace (paper §4.2).
+    pub fn cache_precision_recall(&self) -> PrecisionRecall {
+        let mut pr = PrecisionRecall::default();
+        for tok in &self.records {
+            for rec in tok {
+                pr.record(&rec.cached_before, &rec.activated);
+            }
+        }
+        pr
+    }
+
+    /// Speculative precision/recall (paper §5.4) — layer 0 is excluded
+    /// exactly as the paper does ("not possible to guess for the first
+    /// layer").
+    pub fn spec_precision_recall(&self) -> PrecisionRecall {
+        let mut pr = PrecisionRecall::default();
+        for tok in &self.records {
+            for rec in tok {
+                if let Some(guess) = &rec.spec_guess {
+                    pr.record(guess, &rec.activated);
+                }
+            }
+        }
+        pr
+    }
+
+    /// Histogram of expert activations at `layer` (paper Figure 7).
+    pub fn layer_histogram(&self, layer: usize) -> Vec<u64> {
+        let mut h = vec![0u64; self.n_experts];
+        for tok in &self.records {
+            for &e in &tok[layer].activated {
+                h[e] += 1;
+            }
+        }
+        h
+    }
+
+    /// Temporal locality: P(expert activated for token t was also activated
+    /// for token t-1), the Mixtral-paper statistic (§3.1); random = k/E.
+    pub fn temporal_locality(&self) -> f64 {
+        let mut same = 0u64;
+        let mut total = 0u64;
+        for t in 1..self.records.len() {
+            for l in 0..self.n_layers {
+                let prev = &self.records[t - 1][l].activated;
+                for &e in &self.records[t][l].activated {
+                    total += 1;
+                    if prev.contains(&e) {
+                        same += 1;
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        same as f64 / total as f64
+    }
+
+    /// Coefficient of variation of the per-expert activation counts at a
+    /// layer — the imbalance measure behind paper §5.2.
+    pub fn layer_imbalance(&self, layer: usize) -> f64 {
+        let h = self.layer_histogram(layer);
+        let n = h.len() as f64;
+        let mean = h.iter().sum::<u64>() as f64 / n;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = h.iter().map(|&c| (c as f64 - mean).powi(2)).sum::<f64>() / n;
+        var.sqrt() / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let mut t = Trace::new(2, 4, 2);
+        // token 0: layer0 {0,1} cached {0,2}; layer1 {2,3} cached {2,3}
+        t.push_token(10);
+        t.at_mut(0, 0).activated = vec![0, 1];
+        t.at_mut(0, 0).weights = vec![0.6, 0.4];
+        t.at_mut(0, 0).cached_before = vec![0, 2];
+        t.at_mut(0, 1).activated = vec![2, 3];
+        t.at_mut(0, 1).cached_before = vec![2, 3];
+        // token 1: layer0 {0,1} again; layer1 {0,1}, spec guess {0,2}
+        t.push_token(11);
+        t.at_mut(1, 0).activated = vec![0, 1];
+        t.at_mut(1, 0).cached_before = vec![0, 1];
+        t.at_mut(1, 1).activated = vec![0, 1];
+        t.at_mut(1, 1).cached_before = vec![2, 3];
+        t.at_mut(1, 1).spec_guess = Some(vec![0, 2]);
+        t
+    }
+
+    #[test]
+    fn cache_pr() {
+        let t = sample_trace();
+        let pr = t.cache_precision_recall();
+        // events: (c{0,2},a{0,1}): tp1 fp1 fn1; (c{2,3},a{2,3}): tp2;
+        // (c{0,1},a{0,1}): tp2; (c{2,3},a{0,1}): fp2 fn2
+        assert_eq!(pr.tp, 5);
+        assert_eq!(pr.fp, 3);
+        assert_eq!(pr.fn_, 3);
+    }
+
+    #[test]
+    fn spec_pr_excludes_unguessed() {
+        let t = sample_trace();
+        let pr = t.spec_precision_recall();
+        assert_eq!(pr.tp, 1); // guessed {0,2}, activated {0,1}
+        assert_eq!(pr.fp, 1);
+        assert_eq!(pr.fn_, 1);
+        assert_eq!(pr.precision(), pr.recall());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let t = sample_trace();
+        assert_eq!(t.layer_histogram(0), vec![2, 2, 0, 0]);
+        assert_eq!(t.layer_histogram(1), vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn locality() {
+        let t = sample_trace();
+        // token1 layer0 {0,1} both repeat; layer1 {0,1} neither repeats
+        assert_eq!(t.temporal_locality(), 0.5);
+    }
+
+    #[test]
+    fn imbalance_zero_when_uniform() {
+        let t = sample_trace();
+        assert_eq!(t.layer_imbalance(1), 0.0);
+        assert!(t.layer_imbalance(0) > 0.0);
+    }
+}

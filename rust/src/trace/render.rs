@@ -1,0 +1,125 @@
+//! ASCII renderers for the paper's trace figures.
+//!
+//! Figures 1–6 & 8–12 (activation × cache grid, one layer): rows are
+//! experts, columns are decoded tokens:
+//!
+//! ```text
+//!   '#'  activated & cached   (hit)
+//!   '*'  activated, not cached (miss — must transfer)
+//!   'o'  cached, not activated (miscached)
+//!   '.'  neither
+//! ```
+//!
+//! Figures 13–14 (speculative loading, one token): rows are layers,
+//! columns are experts: 'P' true positive (guessed & activated), 'F' false
+//! positive, 'N' false negative, '.' neither. Layer 0 renders 'n' for its
+//! unguessable activations (marked red-but-excluded in the paper).
+
+use super::Trace;
+
+/// Render one layer's activation/cache history grid.
+pub fn layer_grid(trace: &Trace, layer: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "layer {layer}: rows=experts 0..{}, cols=tokens 0..{} ('#' hit, '*' miss, 'o' miscached)\n",
+        trace.n_experts - 1,
+        trace.n_tokens().saturating_sub(1)
+    ));
+    for e in 0..trace.n_experts {
+        out.push_str(&format!("e{e} |"));
+        for t in 0..trace.n_tokens() {
+            let rec = trace.at(t, layer);
+            let act = rec.activated.contains(&e);
+            let cached = rec.cached_before.contains(&e);
+            out.push(match (act, cached) {
+                (true, true) => '#',
+                (true, false) => '*',
+                (false, true) => 'o',
+                (false, false) => '.',
+            });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render the speculative-loading grid for one token (paper Fig 13/14).
+pub fn spec_grid(trace: &Trace, token: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "token {token}: rows=layers, cols=experts ('P' TP, 'F' FP, 'N' FN, 'n' layer-0 unguessable)\n"
+    ));
+    for l in 0..trace.n_layers {
+        out.push_str(&format!("L{l:02} |"));
+        let rec = trace.at(token, l);
+        for e in 0..trace.n_experts {
+            let act = rec.activated.contains(&e);
+            let guessed = rec.spec_guess.as_ref().is_some_and(|g| g.contains(&e));
+            out.push(match (rec.spec_guess.is_some(), act, guessed) {
+                (true, true, true) => 'P',
+                (true, false, true) => 'F',
+                (true, true, false) => 'N',
+                (false, true, _) => 'n',
+                _ => '.',
+            });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a per-layer activation histogram (paper Fig 7), one bar row per
+/// expert, scaled to `width` characters.
+pub fn layer_histogram(trace: &Trace, layer: usize, width: usize) -> String {
+    let h = trace.layer_histogram(layer);
+    let max = h.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = format!("layer {layer} activation histogram (imbalance cv={:.2})\n", trace.layer_imbalance(layer));
+    for (e, &c) in h.iter().enumerate() {
+        let bar = "=".repeat((c as usize * width) / max as usize);
+        out.push_str(&format!("e{e} |{bar:<width$}| {c}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Trace;
+
+    fn t() -> Trace {
+        let mut t = Trace::new(2, 3, 1);
+        t.push_token(5);
+        t.at_mut(0, 0).activated = vec![0];
+        t.at_mut(0, 0).cached_before = vec![0, 1];
+        t.at_mut(0, 1).activated = vec![2];
+        t.at_mut(0, 1).spec_guess = Some(vec![1]);
+        t
+    }
+
+    #[test]
+    fn grid_symbols() {
+        let g = layer_grid(&t(), 0);
+        let lines: Vec<&str> = g.lines().collect();
+        assert!(lines[1].ends_with('#')); // e0 activated+cached
+        assert!(lines[2].ends_with('o')); // e1 cached only
+        assert!(lines[3].ends_with('.')); // e2 neither
+    }
+
+    #[test]
+    fn spec_symbols() {
+        let g = spec_grid(&t(), 0);
+        let lines: Vec<&str> = g.lines().collect();
+        // layer0 has no guess -> activated renders 'n'
+        assert!(lines[1].contains('n'));
+        // layer1: guessed e1 (F), activated e2 (N)
+        assert!(lines[2].contains('F'));
+        assert!(lines[2].contains('N'));
+    }
+
+    #[test]
+    fn histogram_renders_counts() {
+        let g = layer_histogram(&t(), 0, 10);
+        assert!(g.contains("e0"));
+        assert!(g.lines().count() >= 4);
+    }
+}

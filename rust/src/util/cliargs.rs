@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Flags that never take a value (so `--spec foo` keeps `foo` positional).
+const BOOL_FLAGS: [&str; 8] =
+    ["spec", "overlap", "show-trace", "live", "synthetic", "greedy", "help", "verbose"];
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if !BOOL_FLAGS.contains(&stripped)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    out.flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(stripped.to_string(), String::from("true"));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key}: expected integer, got {v:?}"),
+            },
+        }
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key}: expected number, got {v:?}"),
+            },
+        }
+    }
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true" | "1" | "yes")) || (self.has(key) && self.get(key) == Some("true"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = args(&["gen", "--n", "32", "--policy=lfu", "--spec", "extra"]);
+        assert_eq!(a.positional, vec!["gen", "extra"]);
+        assert_eq!(a.usize_or("n", 0).unwrap(), 32);
+        assert_eq!(a.str_or("policy", "lru"), "lfu");
+        assert!(a.bool("spec"));
+        assert!(!a.bool("overlap"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.usize_or("cap", 4).unwrap(), 4);
+        assert_eq!(a.f64_or("x", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = args(&["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! From-scratch substrates the coordinator is built on.
+//!
+//! The offline build environment provides no crates beyond `xla` and
+//! `anyhow`, so the usual ecosystem pieces are implemented here:
+//! deterministic PRNG ([`rng`]), JSON ([`json`]), a thread pool
+//! ([`threadpool`]), a mini property-testing framework ([`quickcheck`]),
+//! summary statistics ([`stats`]) and the simulated clock ([`simclock`]).
+
+pub mod cliargs;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod simclock;
+pub mod stats;
+pub mod threadpool;

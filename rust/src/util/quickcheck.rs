@@ -1,0 +1,171 @@
+//! Mini property-testing framework (no external crates available offline).
+//!
+//! Usage:
+//! ```ignore
+//! use crate::util::quickcheck::{forall, Gen};
+//! forall(100, |g: &mut Gen| {
+//!     let xs = g.vec_f32(0..=64, -1.0..=1.0);
+//!     let cap = g.usize(1..=8);
+//!     // ... return Ok(()) or Err(description)
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the runner retries with progressively smaller size hints
+//! (a pragmatic shrink: generators consult `g.size` so re-running with a
+//! smaller budget tends to produce smaller counterexamples) and reports
+//! the failing seed so the case is exactly reproducible.
+
+use super::rng::Rng;
+use std::ops::RangeInclusive;
+
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0,1]; generators scale their output size by it.
+    pub size: f64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size, seed }
+    }
+
+    pub fn usize(&mut self, r: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*r.start(), *r.end());
+        let span = hi - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).min(span);
+        lo + if scaled == 0 { 0 } else { self.rng.below(scaled + 1) }
+    }
+
+    pub fn i64(&mut self, r: RangeInclusive<i64>) -> i64 {
+        let (lo, hi) = (*r.start(), *r.end());
+        lo + self.rng.below((hi - lo + 1) as usize) as i64
+    }
+
+    pub fn f32(&mut self, r: RangeInclusive<f32>) -> f32 {
+        let (lo, hi) = (*r.start(), *r.end());
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn f64(&mut self, r: RangeInclusive<f64>) -> f64 {
+        let (lo, hi) = (*r.start(), *r.end());
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: RangeInclusive<usize>, vals: RangeInclusive<f32>) -> Vec<f32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.f32(vals.clone())).collect()
+    }
+
+    pub fn vec_usize(&mut self, len: RangeInclusive<usize>, vals: RangeInclusive<usize>) -> Vec<usize> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.usize(vals.clone())).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `n` random cases. Panics with the seed + message of the
+/// smallest failing case found.
+pub fn forall<F>(n: usize, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    forall_seeded(0xC0FFEE, n, prop)
+}
+
+pub fn forall_seeded<F>(base_seed: u64, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut meta = Rng::new(base_seed);
+    for case in 0..n {
+        let seed = meta.next_u64();
+        // grow the size budget over the run: small cases first
+        let size = ((case + 1) as f64 / n as f64).min(1.0);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // "shrink": retry same seed with smaller size hints
+            let mut best = (size, msg);
+            let mut s = size / 2.0;
+            while s > 0.01 {
+                let mut g = Gen::new(seed, s);
+                match prop(&mut g) {
+                    Err(m) => {
+                        best = (s, m);
+                        s /= 2.0;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}, size {:.3}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(200, |g| {
+            let a = g.i64(-100..=100);
+            let b = g.i64(-100..=100);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(200, |g| {
+            let v = g.vec_f32(0..=32, -1.0..=1.0);
+            if v.len() < 30 {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_len = 0;
+        forall(100, |g| {
+            max_len = max_len.max(g.vec_f32(0..=64, 0.0..=1.0).len());
+            Ok(())
+        });
+        assert!(max_len > 32, "size budget never grew: {max_len}");
+    }
+
+    #[test]
+    fn usize_respects_bounds() {
+        forall(300, |g| {
+            let x = g.usize(3..=9);
+            if (3..=9).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+}

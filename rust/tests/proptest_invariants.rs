@@ -1,0 +1,250 @@
+//! Property-based tests (via the in-repo quickcheck substrate) on the
+//! system's core invariants.
+
+use moe_offload::cache::{LayerCache, PolicyKind};
+use moe_offload::metrics::PrecisionRecall;
+use moe_offload::model::sampler::top_k;
+use moe_offload::quant::{QTensor, Scheme};
+use moe_offload::sim::{cachesim, tracegen};
+use moe_offload::util::json::{self, Value};
+use moe_offload::util::quickcheck::{forall, Gen};
+
+#[test]
+fn prop_cache_capacity_never_exceeded() {
+    forall(150, |g: &mut Gen| {
+        let cap = g.usize(1..=8);
+        let kind = *g.choose(&PolicyKind::all_online());
+        let seed = g.usize(0..=1000) as u64;
+        let mut cache: LayerCache<usize> = LayerCache::new(cap, kind.build(seed, None));
+        let accesses = g.vec_usize(1..=300, 0..=15);
+        for e in accesses {
+            if cache.access(e).is_none() {
+                cache.insert(e, e);
+            }
+            if cache.len() > cap {
+                return Err(format!("{}: {} residents > cap {cap}", kind.name(), cache.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_residency_matches_contains() {
+    forall(100, |g: &mut Gen| {
+        let cap = g.usize(1..=6);
+        let kind = *g.choose(&PolicyKind::all_online());
+        let mut cache: LayerCache<()> = LayerCache::new(cap, kind.build(1, None));
+        for e in g.vec_usize(1..=200, 0..=9) {
+            if cache.access(e).is_none() {
+                cache.insert(e, ());
+            }
+            // the just-accessed expert must be resident
+            if !cache.contains(e) {
+                return Err(format!("{e} not resident right after access"));
+            }
+            let resident = cache.resident();
+            if resident.len() != resident.iter().collect::<std::collections::HashSet<_>>().len() {
+                return Err("duplicate residents".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lru_hit_rate_monotone_in_capacity() {
+    // LRU is a stack algorithm: inclusion property => monotone hit rate
+    forall(40, |g: &mut Gen| {
+        let tokens = g.usize(20..=120);
+        let seed = g.usize(0..=10_000) as u64;
+        let trace = tracegen::generate(&tracegen::TraceGenConfig {
+            n_layers: 4,
+            n_tokens: tokens.max(20),
+            seed,
+            ..Default::default()
+        });
+        let mut prev = -1.0f64;
+        for cap in 1..=8 {
+            let r = cachesim::compare(&trace, &[PolicyKind::Lru], cap, 0);
+            let hr = r[0].stats.hit_rate();
+            if hr < prev - 1e-9 {
+                return Err(format!("cap {cap}: hit rate {hr} < {prev}"));
+            }
+            prev = hr;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_belady_dominates_all_online_policies() {
+    forall(30, |g: &mut Gen| {
+        let seed = g.usize(0..=10_000) as u64;
+        let cap = g.usize(2..=6);
+        let trace = tracegen::generate(&tracegen::TraceGenConfig {
+            n_layers: 3,
+            n_tokens: 80,
+            seed,
+            locality: g.f64(0.0..=0.8),
+            ..Default::default()
+        });
+        let results = cachesim::compare(
+            &trace,
+            &[PolicyKind::Belady, PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Fifo],
+            cap,
+            seed,
+        );
+        let b = results[0].stats.hit_rate();
+        for r in &results[1..] {
+            if r.stats.hit_rate() > b + 1e-9 {
+                return Err(format!(
+                    "{:?} ({}) beat belady ({b}) at cap {cap} seed {seed}",
+                    r.policy,
+                    r.stats.hit_rate()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_precision_recall_identity_for_equal_cardinality() {
+    // paper §5.4: |predicted| == |activated| per event => FP == FN
+    forall(200, |g: &mut Gen| {
+        let mut pr = PrecisionRecall::default();
+        for _ in 0..g.usize(1..=50) {
+            let k = g.usize(1..=4);
+            let mut pred = Vec::new();
+            let mut act = Vec::new();
+            while pred.len() < k {
+                let e = g.usize(0..=9);
+                if !pred.contains(&e) {
+                    pred.push(e);
+                }
+            }
+            while act.len() < k {
+                let e = g.usize(0..=9);
+                if !act.contains(&e) {
+                    act.push(e);
+                }
+            }
+            pr.record(&pred, &act);
+        }
+        if pr.fp != pr.fn_ {
+            return Err(format!("FP {} != FN {}", pr.fp, pr.fn_));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip_within_bound() {
+    forall(120, |g: &mut Gen| {
+        let data = g.vec_f32(1..=512, -2.0..=2.0);
+        if data.is_empty() {
+            return Ok(());
+        }
+        let scheme = *g.choose(&[
+            Scheme::Int8 { block: 16 },
+            Scheme::Int8 { block: 64 },
+            Scheme::Int4 { block: 16 },
+            Scheme::Int4 { block: 32 },
+        ]);
+        let q = QTensor::quantize(&data, scheme);
+        let r = q.dequantize();
+        let bound = q.max_abs_error_bound() * 1.001;
+        for (i, (a, b)) in data.iter().zip(&r).enumerate() {
+            if (a - b).abs() > bound {
+                return Err(format!(
+                    "{:?}[{i}]: {a} vs {b} exceeds bound {bound}",
+                    scheme
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(g: &mut Gen, depth: usize) -> Value {
+        match if depth == 0 { g.usize(0..=3) } else { g.usize(0..=5) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.f64(-1e6..=1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = g.usize(0..=12);
+                Value::Str((0..n).map(|_| *g.choose(&['a', 'é', '"', '\\', '\n', '😀', 'z'])).collect())
+            }
+            4 => Value::Arr((0..g.usize(0..=4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Value::Obj(
+                (0..g.usize(0..=4))
+                    .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(300, |g: &mut Gen| {
+        let v = gen_value(g, 3);
+        let s = json::to_string(&v);
+        match json::parse(&s) {
+            Ok(v2) if v2 == v => Ok(()),
+            Ok(v2) => Err(format!("roundtrip changed value: {v:?} -> {v2:?} via {s}")),
+            Err(e) => Err(format!("reparse failed: {e} on {s}")),
+        }
+    });
+}
+
+#[test]
+fn prop_topk_is_sorted_prefix() {
+    forall(200, |g: &mut Gen| {
+        let xs = g.vec_f32(1..=64, -10.0..=10.0);
+        if xs.is_empty() {
+            return Ok(());
+        }
+        let k = g.usize(1..=xs.len().min(8));
+        let idx = top_k(&xs, k);
+        if idx.len() != k {
+            return Err("wrong k".into());
+        }
+        // every selected >= every non-selected
+        let min_sel = idx.iter().map(|&i| xs[i]).fold(f32::INFINITY, f32::min);
+        for (i, &x) in xs.iter().enumerate() {
+            if !idx.contains(&i) && x > min_sel {
+                return Err(format!("unselected xs[{i}]={x} > min selected {min_sel}"));
+            }
+        }
+        // descending order
+        for w in idx.windows(2) {
+            if xs[w[0]] < xs[w[1]] {
+                return Err("not descending".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_hit_miss_conservation() {
+    // hits + misses == total activations, for every policy
+    forall(40, |g: &mut Gen| {
+        let seed = g.usize(0..=9999) as u64;
+        let trace = tracegen::generate(&tracegen::TraceGenConfig {
+            n_layers: 3,
+            n_tokens: 50,
+            seed,
+            ..Default::default()
+        });
+        let total = (50 * 3 * 2) as u64;
+        for kind in [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Belady] {
+            let r = cachesim::compare(&trace, &[kind], g.usize(1..=8), seed);
+            let s = &r[0].stats;
+            if s.hits + s.misses != total {
+                return Err(format!("{:?}: {} + {} != {total}", kind, s.hits, s.misses));
+            }
+        }
+        Ok(())
+    });
+}
