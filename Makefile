@@ -1,0 +1,24 @@
+.PHONY: artifacts build test pytest bench figures clean
+
+# AOT-lower the MiniMixtral stages to HLO text + weights + goldens.
+# Needs jax installed; everything else in the repo runs without it.
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+pytest:
+	cd python && python3 -m pytest tests -q
+
+bench:
+	cargo bench
+
+figures:
+	cargo run --release -- figures --out-dir results
+
+clean:
+	rm -rf target results

@@ -1,0 +1,94 @@
+//! Bench: the concurrent serve scheduler — N sessions interleaved
+//! round-robin over one engine with a shared expert cache, versus the same
+//! work decoded sequentially. Measures scheduler overhead and reports the
+//! shared-cache amortization (misses/token falls as sessions share
+//! transfers).
+
+use moe_offload::bench_harness::Bencher;
+use moe_offload::cache::PolicyKind;
+use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::model::sampler::Sampling;
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::ModelConfig;
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+use moe_offload::runtime::native::NativeBackend;
+use moe_offload::serve::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
+use moe_offload::serve::{GenRequest, ServerMetrics};
+use std::sync::mpsc::{channel, sync_channel};
+use std::sync::{Arc, Mutex};
+
+/// Byte-tokenizer-compatible small config (vocab ≥ 260).
+fn cfg() -> ModelConfig {
+    ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY }
+}
+
+fn main() {
+    let weights = Arc::new(generate_weights(cfg(), 42));
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 }).unwrap());
+    let n_tokens = 12usize;
+    let mut b = Bencher::new(2, 10);
+    let mut amortization: Vec<(usize, f64)> = Vec::new();
+
+    for n_sessions in [1usize, 2, 4, 8] {
+        let weights = Arc::clone(&weights);
+        let store = Arc::clone(&store);
+        let mut last_miss_rate = 0.0;
+        b.bench_units(
+            &format!("serve/{n_sessions}-sessions/{n_tokens}tok"),
+            Some(((n_sessions * n_tokens) as f64, "tok")),
+            &mut || {
+                let engine = InferenceEngine::new(
+                    Box::new(NativeBackend::new(Arc::clone(&weights))),
+                    Arc::clone(&store),
+                    EngineConfig::serving(4, PolicyKind::Lfu, true),
+                );
+                let (tx, rx) = sync_channel::<GenRequest>(n_sessions);
+                let mut resp_rxs = Vec::with_capacity(n_sessions);
+                for i in 0..n_sessions {
+                    let (resp_tx, resp_rx) = channel();
+                    tx.send(GenRequest {
+                        prompt: format!("bench prompt {i}"),
+                        n_tokens,
+                        sampling: Sampling::Greedy,
+                        resp: resp_tx,
+                    })
+                    .unwrap();
+                    resp_rxs.push(resp_rx);
+                }
+                drop(tx);
+                let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+                run_scheduler(
+                    engine,
+                    rx,
+                    SchedulerConfig { max_sessions: n_sessions },
+                    Arc::new(ServerMetrics::default()),
+                    Arc::clone(&snapshot),
+                );
+                let mut total_tokens = 0u64;
+                for resp_rx in resp_rxs {
+                    let r = resp_rx.recv().unwrap().expect("generation ok");
+                    assert_eq!(r.n_generated, n_tokens);
+                    total_tokens += (r.n_prompt + r.n_generated) as u64;
+                }
+                let snap = snapshot.lock().unwrap();
+                last_miss_rate = snap.cache.misses as f64 / total_tokens as f64;
+                total_tokens
+            },
+        );
+        amortization.push((n_sessions, last_miss_rate));
+    }
+
+    println!("{}", b.render());
+    println!("shared-cache amortization (misses per stepped token):");
+    for (n, mr) in &amortization {
+        println!("  {n} sessions: {mr:.3}");
+    }
+    let solo = amortization[0].1;
+    let most = amortization.last().unwrap().1;
+    println!(
+        "  -> {:.1}% of solo miss traffic at {} sessions",
+        100.0 * most / solo.max(1e-12),
+        amortization.last().unwrap().0
+    );
+}

@@ -1,17 +1,21 @@
-//! Quickstart: load the AOT artifacts, build the offloading engine, and
-//! decode one prompt — the minimal tour of the public API.
+//! Quickstart: build the offloading engine and decode one prompt — the
+//! minimal tour of the public API. Runs from a clean checkout (falls back
+//! to seeded synthetic weights + the native backend when `artifacts/` has
+//! not been built).
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!     make artifacts && cargo run --release --example quickstart -- --backend pjrt
 //!
 //! Flags: --backend native|pjrt  --policy lru|lfu|lfu-aged  --capacity N
-//!        --quant f32|int8|int4  --spec  --n N
+//!        --quant f32|int8|int4  --spec  --n N  --synthetic
 
 use anyhow::Result;
 use moe_offload::cache::PolicyKind;
 use moe_offload::engine::{EngineConfig, InferenceEngine};
 use moe_offload::model::sampler::{Sampler, Sampling};
 use moe_offload::model::tokenizer::Tokenizer;
-use moe_offload::model::Weights;
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::{ModelConfig, Weights};
 use moe_offload::offload::prefetch::PrefetchConfig;
 use moe_offload::offload::store::HostExpertStore;
 use moe_offload::quant::Scheme;
@@ -24,9 +28,23 @@ use std::sync::Arc;
 fn main() -> Result<()> {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())?;
 
-    // 1. artifacts + weights (produced once by `make artifacts`)
-    let artifacts = Artifacts::load(Path::new(&args.str_or("artifacts", "artifacts")))?;
-    let weights = Arc::new(Weights::load(&artifacts.weights_path)?);
+    // 1. weights: AOT artifacts when available (produced by `make
+    //    artifacts`), otherwise seeded synthetic MiniMixtral weights
+    let artifacts = if args.bool("synthetic") {
+        None
+    } else {
+        match Artifacts::load(Path::new(&args.str_or("artifacts", "artifacts"))) {
+            Ok(a) => Some(a),
+            Err(e) => {
+                println!("note: {e} — falling back to synthetic weights + native backend");
+                None
+            }
+        }
+    };
+    let weights = match &artifacts {
+        Some(a) => Arc::new(Weights::load(&a.weights_path)?),
+        None => Arc::new(generate_weights(ModelConfig::DEFAULT, 42)),
+    };
     println!(
         "model: {} layers × {} experts (top-{}), {:.1} M params",
         weights.config.n_layers,
@@ -36,9 +54,9 @@ fn main() -> Result<()> {
     );
 
     // 2. backend: PJRT executes the HLO artifacts; native is the rust oracle
-    let backend: Box<dyn Backend> = match args.str_or("backend", "pjrt").as_str() {
-        "native" => Box::new(NativeBackend::new(Arc::clone(&weights))),
-        _ => Box::new(PjrtBackend::new(&artifacts, &weights)?),
+    let backend: Box<dyn Backend> = match (&artifacts, args.str_or("backend", "pjrt").as_str()) {
+        (Some(a), "pjrt") => Box::new(PjrtBackend::new(a, &weights)?),
+        _ => Box::new(NativeBackend::new(Arc::clone(&weights))),
     };
 
     // 3. the offloading pieces: quantized host store + engine w/ cache policy

@@ -1,27 +1,34 @@
-//! End-to-end serving driver (DESIGN.md §5 "E2E driver"): start the HTTP
-//! server on a real model backend, fire a batch of concurrent client
-//! requests, and report latency percentiles + aggregate throughput — the
-//! serving-paper validation workload.
+//! End-to-end concurrent serving driver (DESIGN.md §6): start the HTTP
+//! server, fire concurrent client requests, and report latency percentiles,
+//! aggregate throughput, and the shared-cache /metrics breakdown — the
+//! serving validation workload for the session scheduler.
 //!
-//!     cargo run --release --example serve_load -- --requests 8 --n 12
+//! Runs from a clean checkout (no artifacts needed): by default the server
+//! decodes seeded synthetic MiniMixtral weights over the native backend.
 //!
-//! Flags: --backend native|pjrt (default native for speed)
-//!        --requests N  --concurrency C  --n tokens-per-request
+//!     cargo run --release --example serve_load -- --requests 8 --concurrency 4
+//!
+//! Flags: --requests N       total requests              (default 8)
+//!        --concurrency C    concurrent client threads   (default 4)
+//!        --n T              tokens per request          (default 12)
+//!        --max-sessions S   scheduler concurrency       (default = C)
+//!        --artifacts DIR    use real artifacts instead of synthetic weights
+//!        --backend pjrt     with --artifacts: the AOT PJRT backend
 
 use anyhow::Result;
 use moe_offload::cache::PolicyKind;
 use moe_offload::engine::{EngineConfig, InferenceEngine};
-use moe_offload::offload::prefetch::PrefetchConfig;
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::{ModelConfig, Weights};
 use moe_offload::offload::store::HostExpertStore;
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::{artifacts::Artifacts, native::NativeBackend, pjrt::PjrtBackend, Backend};
-use moe_offload::serve;
-use moe_offload::sim::hardware;
+use moe_offload::serve::http::{client_get as http_get, client_post as http_post};
+use moe_offload::serve::{self, ServeConfig};
 use moe_offload::util::cliargs::Args;
 use moe_offload::util::json;
 use moe_offload::util::stats::Summary;
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -34,31 +41,14 @@ const PROMPTS: [&str; 4] = [
     "Summarize the benefits of LFU over LRU for expert caching.",
 ];
 
-fn http_post(addr: std::net::SocketAddr, path: &str, body: &str) -> Result<(u16, String)> {
-    let mut s = TcpStream::connect(addr)?;
-    let req = format!(
-        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    );
-    s.write_all(req.as_bytes())?;
-    let mut resp = String::new();
-    s.read_to_string(&mut resp)?;
-    let status: u16 = resp
-        .split_whitespace()
-        .nth(1)
-        .and_then(|c| c.parse().ok())
-        .unwrap_or(0);
-    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
-    Ok((status, body))
-}
-
 fn main() -> Result<()> {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())?;
     let n_requests = args.usize_or("requests", 8)?;
-    let concurrency = args.usize_or("concurrency", 4)?;
+    let concurrency = args.usize_or("concurrency", 4)?.max(1);
     let n_tokens = args.usize_or("n", 12)?;
+    let max_sessions = args.usize_or("max-sessions", concurrency)?;
     let backend_kind = args.str_or("backend", "native");
-    let artifacts_dir = args.str_or("artifacts", "artifacts");
+    let artifacts_dir = args.get("artifacts").map(|s| s.to_string());
 
     // start the server on an ephemeral port
     let listener = TcpListener::bind("127.0.0.1:0")?;
@@ -67,43 +57,39 @@ fn main() -> Result<()> {
     let sd = Arc::clone(&shutdown);
     let server = std::thread::spawn(move || {
         let make = move || -> Result<InferenceEngine> {
-            let artifacts = Artifacts::load(Path::new(&artifacts_dir))?;
-            let weights = Arc::new(moe_offload::model::Weights::load(&artifacts.weights_path)?);
-            let backend: Box<dyn Backend> = match backend_kind.as_str() {
-                "pjrt" => Box::new(PjrtBackend::new(&artifacts, &weights)?),
+            let (weights, artifacts) = match &artifacts_dir {
+                Some(dir) => {
+                    let a = Artifacts::load(Path::new(dir))?;
+                    let w = Arc::new(Weights::load(&a.weights_path)?);
+                    (w, Some(a))
+                }
+                None => (Arc::new(generate_weights(ModelConfig::DEFAULT, 42)), None),
+            };
+            let backend: Box<dyn Backend> = match (&artifacts, backend_kind.as_str()) {
+                (Some(a), "pjrt") => Box::new(PjrtBackend::new(a, &weights)?),
                 _ => Box::new(NativeBackend::new(Arc::clone(&weights))),
             };
             let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 })?);
             Ok(InferenceEngine::new(
                 backend,
                 store,
-                EngineConfig {
-                    cache_capacity: 4,
-                    policy: PolicyKind::Lfu,
-                    prefetch: PrefetchConfig { enabled: true, k: 2 },
-                    overlap: false,
-                    profile: hardware::by_name("A100").unwrap(),
-                    seed: 0,
-                    record_trace: false,
-                },
+                EngineConfig::serving(4, PolicyKind::Lfu, true),
             ))
         };
-        let _ = serve::serve(listener, make, 4, sd);
+        let cfg = ServeConfig { http_workers: concurrency.max(4), max_sessions, queue_depth: 64 };
+        let _ = serve::serve(listener, make, cfg, sd);
     });
 
     // wait for health
     loop {
-        if let Ok(mut s) = TcpStream::connect(addr) {
-            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
-            let mut b = String::new();
-            let _ = s.read_to_string(&mut b);
-            if b.contains("200") {
-                break;
-            }
+        if let Ok((200, _)) = http_get(addr, "/healthz") {
+            break;
         }
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
-    println!("server up on {addr}; firing {n_requests} requests ({concurrency} concurrent) ...");
+    println!(
+        "server up on {addr}; firing {n_requests} requests ({concurrency} concurrent clients, {max_sessions} scheduler sessions) ..."
+    );
 
     // client load
     let t0 = Instant::now();
@@ -126,6 +112,7 @@ fn main() -> Result<()> {
                         latencies.lock().unwrap().add(t.elapsed().as_secs_f64());
                         let v = json::parse(&resp_body).expect("json response");
                         assert_eq!(v.get("n_generated").as_usize(), Some(n_tokens));
+                        assert!(v.get("session_id").as_usize().unwrap_or(0) > 0);
                     }
                     other => {
                         eprintln!("request failed: {other:?}");
@@ -140,14 +127,8 @@ fn main() -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    // metrics endpoint
-    let (_, metrics_body) = {
-        let mut s = TcpStream::connect(addr)?;
-        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n")?;
-        let mut b = String::new();
-        s.read_to_string(&mut b)?;
-        (200u16, b.split("\r\n\r\n").nth(1).unwrap_or("").to_string())
-    };
+    let (_, metrics_body) = http_get(addr, "/metrics")?;
+    let m = json::parse(&metrics_body).map_err(|e| anyhow::anyhow!("metrics json: {e}"))?;
 
     let lat = latencies.lock().unwrap();
     println!("\n== serve_load results ==");
@@ -163,10 +144,40 @@ fn main() -> Result<()> {
         lat.n() as f64 / wall,
         (lat.n() * n_tokens) as f64 / wall
     );
-    println!("server metrics: {metrics_body}");
+
+    let cache = m.get("shared_cache");
+    println!(
+        "\nshared cache [{} cap={}]: {:.1}% hit rate ({} hits / {} misses), {} prefetch hits ({} paid by another session)",
+        cache.get("policy").as_str().unwrap_or("?"),
+        cache.get("capacity_per_layer").as_usize().unwrap_or(0),
+        100.0 * cache.get("hit_rate").as_f64().unwrap_or(0.0),
+        cache.get("hits").as_usize().unwrap_or(0),
+        cache.get("misses").as_usize().unwrap_or(0),
+        cache.get("prefetch_hits").as_usize().unwrap_or(0),
+        cache.get("cross_session_prefetch_hits").as_usize().unwrap_or(0),
+    );
+    println!(
+        "completed sessions: {}   per-session share of the one shared cache:",
+        m.get("completed_sessions").as_usize().unwrap_or(0)
+    );
+    for s in m.get("sessions").as_arr().unwrap_or(&[]) {
+        println!(
+            "  session {:>3} [{}]: {} tokens, hit rate {:.1}%, spec P {:.1}% / R {:.1}%",
+            s.get("id").as_usize().unwrap_or(0),
+            s.get("state").as_str().unwrap_or("?"),
+            s.get("tokens").as_usize().unwrap_or(0),
+            100.0 * s.get("hit_rate").as_f64().unwrap_or(0.0),
+            100.0 * s.get("spec_precision").as_f64().unwrap_or(0.0),
+            100.0 * s.get("spec_recall").as_f64().unwrap_or(0.0),
+        );
+    }
 
     shutdown.store(true, Ordering::Relaxed);
     let _ = server.join();
     assert_eq!(errors.load(Ordering::Relaxed), 0, "requests failed");
+    assert!(
+        m.get("completed_sessions").as_usize().unwrap_or(0) >= n_requests.min(4),
+        "expected at least 4 completed sessions sharing the cache"
+    );
     Ok(())
 }

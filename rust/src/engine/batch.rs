@@ -41,7 +41,9 @@ impl Session {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         anyhow::ensure!(
             prompt.len() + target_new <= engine.config().max_seq,
-            "sequence too long"
+            "prompt {} + n_tokens {target_new} exceeds max_seq {}",
+            prompt.len(),
+            engine.config().max_seq
         );
         Ok(Session {
             id,
@@ -59,6 +61,44 @@ impl Session {
     pub fn generated(&self) -> &[u32] {
         &self.tokens[self.n_prompt..]
     }
+
+    /// True when the next `step_once` will feed a *generated* token (the
+    /// prompt phase is over) — the serve layer's tokens-generated meter.
+    pub fn next_token_is_generated(&self) -> bool {
+        self.pos >= self.n_prompt
+    }
+
+    /// Advance this session by exactly one token on `engine` (feed the next
+    /// prompt or sampled token, step, sample the following token). Sets and
+    /// returns `done` when the target length is reached. This is the single
+    /// token-feeding discipline shared by offline lockstep decoding and the
+    /// online serve scheduler.
+    ///
+    /// Failure-atomic: on an engine error, no token is appended and `pos`
+    /// does not advance, so `generated()` reflects only processed tokens
+    /// and a retry feeds the same token again.
+    pub fn step_once(
+        &mut self,
+        engine: &mut InferenceEngine,
+        ev: &mut TokenEvents,
+    ) -> Result<bool> {
+        debug_assert!(!self.done, "step_once on a finished session");
+        let (tok, is_generated) = if self.pos < self.n_prompt {
+            (self.tokens[self.pos], false)
+        } else {
+            (self.next_tok.expect("sampled token"), true)
+        };
+        let logits = engine.step_session(self.id, tok, &mut self.kv, self.pos, ev)?;
+        if is_generated {
+            self.tokens.push(tok);
+        }
+        self.next_tok = Some(self.sampler.sample(&logits) as u32);
+        self.pos += 1;
+        if self.pos >= self.n_prompt + self.target_new {
+            self.done = true;
+        }
+        Ok(self.done)
+    }
 }
 
 /// Decode all sessions to completion in round-robin token-lockstep.
@@ -75,22 +115,10 @@ pub fn decode_lockstep(
             if s.done {
                 continue;
             }
-            let tok = if s.pos < s.n_prompt {
-                s.tokens[s.pos]
-            } else {
-                let t = s.next_tok.expect("sampled token");
-                s.tokens.push(t);
-                t
-            };
             let mut ev = TokenEvents::default();
-            let logits = engine.step(tok, &mut s.kv, s.pos, &mut ev)?;
+            s.step_once(engine, &mut ev)?;
             all_events.push(ev);
-            s.next_tok = Some(s.sampler.sample(&logits) as u32);
-            s.pos += 1;
             progressed = true;
-            if s.pos >= s.n_prompt + s.target_new {
-                s.done = true;
-            }
         }
         if !progressed {
             break;
@@ -200,6 +228,33 @@ mod tests {
             shared_per_token <= indep_per_token + 1e-9,
             "shared {shared_per_token} vs independent {indep_per_token}"
         );
+    }
+
+    #[test]
+    fn lockstep_attributes_traffic_per_session() {
+        let mut eng = engine(4);
+        let mut sessions: Vec<Session> = (1..=3u64)
+            .map(|i| {
+                Session::new(i, &eng, &[i as u32, 2, 8], 5, Sampler::new(Sampling::Greedy, i))
+                    .unwrap()
+            })
+            .collect();
+        decode_lockstep(&mut eng, &mut sessions).unwrap();
+        let total = eng.cache_stats();
+        let mut hits = 0;
+        let mut misses = 0;
+        let mut tokens = 0;
+        for i in 1..=3u64 {
+            let t = eng.session_tally(i);
+            assert_eq!(t.tokens, 8, "session {i} stepped {} tokens", t.tokens);
+            hits += t.hits;
+            misses += t.misses;
+            tokens += t.tokens;
+        }
+        // per-session tallies partition the shared cache's totals exactly
+        assert_eq!(hits, total.hits);
+        assert_eq!(misses, total.misses);
+        assert_eq!(tokens, 24);
     }
 
     #[test]

@@ -22,10 +22,10 @@ pub mod batch;
 pub mod selfcheck;
 
 use crate::cache::{ExpertCache, PolicyKind};
-use crate::metrics::{PrecisionRecall, Throughput};
+use crate::metrics::{PrecisionRecall, SessionTally, Throughput};
 use crate::model::sampler::{top_k, Sampler};
 use crate::offload::overlap::OverlapWorker;
-use crate::offload::prefetch::PrefetchConfig;
+use crate::offload::prefetch::{PendingPrefetch, PrefetchConfig, TaggedGuess};
 use crate::offload::store::HostExpertStore;
 use crate::offload::transfer::TransferEngine;
 use crate::runtime::{Backend, ExpertHandle, KvState};
@@ -34,8 +34,14 @@ use crate::sim::hardware::{HwProfile, ModelScale};
 use crate::trace::Trace;
 use crate::util::simclock::SimClock;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Session id used by the single-sequence [`InferenceEngine::generate`] /
+/// [`InferenceEngine::step`] paths; the concurrent serve scheduler assigns
+/// its own ids starting from 1.
+pub const SOLO_SESSION: u64 = 0;
 
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
@@ -64,6 +70,26 @@ impl EngineConfig {
             record_trace: true,
         }
     }
+
+    /// Preset for the concurrent serve path: requested policy + capacity,
+    /// optional speculation, no trace recording (traces grow with every
+    /// token ever decoded, which a long-lived server must not do).
+    pub fn serving(capacity: usize, policy: PolicyKind, prefetch: bool) -> Self {
+        EngineConfig {
+            cache_capacity: capacity,
+            policy,
+            prefetch: PrefetchConfig { enabled: prefetch, k: 2 },
+            record_trace: false,
+            ..EngineConfig::baseline_lru(capacity)
+        }
+    }
+}
+
+impl Default for EngineConfig {
+    /// The paper's baseline operating point (LRU, 4-of-8 experts cached).
+    fn default() -> Self {
+        EngineConfig::baseline_lru(4)
+    }
 }
 
 /// Outcome of one `generate` call.
@@ -87,11 +113,18 @@ pub struct InferenceEngine {
     transfer: TransferEngine,
     overlap: Option<OverlapWorker>,
     clock: SimClock,
-    /// Simulated completion time of in-flight prefetches per (layer,expert).
-    pending_prefetch: Vec<(usize, usize, f64)>,
+    /// In-flight prefetch transfers on the simulated bus, tagged with the
+    /// issuing session so cross-session hits are attributable.
+    pending_prefetch: Vec<PendingPrefetch>,
     spec_pr: PrecisionRecall,
-    /// Pending speculative guess for the next layer: (layer, experts).
-    spec_guess: Option<(usize, Vec<usize>)>,
+    /// Per-session accounting (cache traffic + speculation quality); keyed
+    /// by the session id passed to [`InferenceEngine::step_session`].
+    session_stats: HashMap<u64, SessionTally>,
+    /// Demand lookups that were satisfied by an expert a *different*
+    /// session prefetched — the shared-cache amortization counter.
+    cross_session_prefetch_hits: u64,
+    /// Pending speculative guess for the next layer, session-tagged.
+    spec_guess: Option<TaggedGuess>,
     trace: Option<Trace>,
     /// Per-layer compute seconds (dense) and per-expert seconds, derived
     /// from the profile and the artifact's true dimensions.
@@ -135,6 +168,8 @@ impl InferenceEngine {
             clock: SimClock::new(),
             pending_prefetch: Vec::new(),
             spec_pr: PrecisionRecall::default(),
+            session_stats: HashMap::new(),
+            cross_session_prefetch_hits: 0,
             spec_guess: None,
             trace,
             dense_s_per_layer,
@@ -152,9 +187,26 @@ impl InferenceEngine {
         self.cfg.profile.transfer_time(self.store.expert_transfer_bytes())
     }
 
+    /// Forget any in-flight prefetch record for `(layer, expert)`. Called
+    /// when the cached product of a prefetch disappears (eviction) or is
+    /// superseded (demand transfer, re-prefetch), so stale records can
+    /// neither accumulate in a long-lived server nor credit a later,
+    /// unrelated access as a prefetch hit.
+    fn drop_pending_prefetch(&mut self, layer: usize, expert: usize) {
+        self.pending_prefetch
+            .retain(|p| !(p.layer == layer && p.expert == expert));
+    }
+
     /// Ensure `e` is resident in layer `l`'s cache; returns whether it was a
-    /// hit and updates the sim clock for any stall.
-    fn ensure_resident(&mut self, l: usize, e: usize, ev: &mut TokenEvents) -> Result<bool> {
+    /// hit and updates the sim clock for any stall. `session` attributes the
+    /// lookup (and any cross-session prefetch credit) under concurrency.
+    fn ensure_resident(
+        &mut self,
+        session: u64,
+        l: usize,
+        e: usize,
+        ev: &mut TokenEvents,
+    ) -> Result<bool> {
         // already resident?
         if self.cache.layers[l].access(e).is_some() {
             // if it arrived via an in-flight prefetch, we may still need to
@@ -162,20 +214,28 @@ impl InferenceEngine {
             if let Some(i) = self
                 .pending_prefetch
                 .iter()
-                .position(|&(pl, pe, _)| pl == l && pe == e)
+                .position(|p| p.layer == l && p.expert == e)
             {
-                let (_, _, done_at) = self.pending_prefetch.swap_remove(i);
+                let pending = self.pending_prefetch.swap_remove(i);
                 let now = self.clock.now();
-                if done_at > now {
-                    self.clock.advance(done_at - now);
+                if pending.done_at > now {
+                    self.clock.advance(pending.done_at - now);
                 } else {
                     ev.hidden_transfers += 1;
                 }
                 self.cache.layers[l].stats.prefetch_hits += 1;
+                if pending.session != session {
+                    // another session's speculation paid for this transfer:
+                    // the shared cache amortized it across sessions
+                    self.cross_session_prefetch_hits += 1;
+                }
             }
             return Ok(true);
         }
-        // miss: demand transfer, fully on the critical path
+        // miss: demand transfer, fully on the critical path. Any pending
+        // prefetch record for this expert is stale (its product was
+        // evicted before use) — the demand transfer supersedes it.
+        self.drop_pending_prefetch(l, e);
         ev.misses += 1;
         let handle = if let Some(w) = &mut self.overlap {
             // an in-flight overlap prefetch may already have dequantized it
@@ -192,12 +252,20 @@ impl InferenceEngine {
         let now = self.clock.now();
         let done = self.transfer.schedule_bus(now, self.transfer_s());
         self.clock.advance(done - now);
-        self.cache.layers[l].insert(e, handle);
+        if let Some((victim, _)) = self.cache.layers[l].insert(e, handle) {
+            self.drop_pending_prefetch(l, victim);
+        }
         Ok(false)
     }
 
-    /// Issue speculative prefetches for `next_layer`.
-    fn prefetch(&mut self, next_layer: usize, guesses: &[usize], ev: &mut TokenEvents) -> Result<()> {
+    /// Issue speculative prefetches for `next_layer` on behalf of `session`.
+    fn prefetch(
+        &mut self,
+        session: u64,
+        next_layer: usize,
+        guesses: &[usize],
+        ev: &mut TokenEvents,
+    ) -> Result<()> {
         for &e in guesses {
             if self.cache.layers[next_layer].peek(e).is_some() {
                 continue; // already resident: free
@@ -206,7 +274,14 @@ impl InferenceEngine {
             // awaited — compute continues (overlap)
             let now = self.clock.now();
             let done = self.transfer.schedule_bus(now, self.transfer_s());
-            self.pending_prefetch.push((next_layer, e, done));
+            // a re-prefetch supersedes any stale record for this expert
+            self.drop_pending_prefetch(next_layer, e);
+            self.pending_prefetch.push(PendingPrefetch {
+                session,
+                layer: next_layer,
+                expert: e,
+                done_at: done,
+            });
             let handle = if let Some(w) = &mut self.overlap {
                 w.submit(next_layer, e);
                 None // uploaded lazily when collected or demanded
@@ -215,8 +290,9 @@ impl InferenceEngine {
                 Some(h)
             };
             if let Some(h) = handle {
-                let evicted = self.cache.layers[next_layer].insert(e, h);
-                drop(evicted);
+                if let Some((victim, _)) = self.cache.layers[next_layer].insert(e, h) {
+                    self.drop_pending_prefetch(next_layer, victim);
+                }
             }
             ev.wasted_prefetches += 1; // provisional; settled below
         }
@@ -225,23 +301,86 @@ impl InferenceEngine {
 
     /// Collect overlap-worker results and upload them into the cache.
     fn collect_overlap(&mut self) -> Result<()> {
-        if let Some(w) = &mut self.overlap {
-            for r in w.collect_ready() {
-                let handle = self.backend.upload_expert(r.w1, r.w3, r.w2)?;
-                self.cache.layers[r.layer].insert(r.expert, handle);
+        let ready = match &mut self.overlap {
+            Some(w) => w.collect_ready(),
+            None => return Ok(()),
+        };
+        for r in ready {
+            let handle = self.backend.upload_expert(r.w1, r.w3, r.w2)?;
+            if let Some((victim, _)) = self.cache.layers[r.layer].insert(r.expert, handle) {
+                self.drop_pending_prefetch(r.layer, victim);
             }
         }
         Ok(())
     }
 
-    /// Run one token through the model; returns logits.
+    /// Run one token through the model; returns logits. Single-sequence
+    /// convenience over [`InferenceEngine::step_session`] (session
+    /// [`SOLO_SESSION`]).
     pub fn step(&mut self, tok: u32, kv: &mut KvState, pos: usize, ev: &mut TokenEvents) -> Result<Vec<f32>> {
-        let mc = *self.backend.config();
+        self.step_session(SOLO_SESSION, tok, kv, pos, ev)
+    }
+
+    /// Run one token of `session` through the model; returns logits.
+    ///
+    /// Concurrent serving interleaves sessions token-by-token on one engine
+    /// (DESIGN.md §6). Each call is self-contained with respect to
+    /// speculation — a guess issued at layer *l* settles at layer *l+1* of
+    /// the same call — but the expert cache, the simulated bus, and any
+    /// still-pending prefetch transfers are shared across sessions, which is
+    /// exactly the paper's persistent-cache semantics under contention.
+    /// Cache traffic and speculation quality are attributed to `session` in
+    /// [`InferenceEngine::session_stats`].
+    pub fn step_session(
+        &mut self,
+        session: u64,
+        tok: u32,
+        kv: &mut KvState,
+        pos: usize,
+        ev: &mut TokenEvents,
+    ) -> Result<Vec<f32>> {
         if let Some(t) = &mut self.trace {
             t.push_token(tok);
         }
         let token_idx = self.trace.as_ref().map_or(0, |t| t.n_tokens() - 1);
 
+        // baselines for per-session attribution (settled below even when a
+        // layer errors mid-token, so the per-session partition of the
+        // shared cache's totals stays exact across failures)
+        let stats0 = self.cache.total_stats();
+        let spec0 = self.spec_pr;
+        let wasted0 = ev.wasted_prefetches;
+
+        let result = self.step_layers(session, tok, kv, pos, ev, token_idx);
+
+        // attribute this token's shared-cache traffic to the session
+        let stats1 = self.cache.total_stats();
+        let spec1 = self.spec_pr;
+        let tally = self.session_stats.entry(session).or_default();
+        tally.tokens += 1;
+        tally.hits += stats1.hits.saturating_sub(stats0.hits);
+        tally.misses += stats1.misses.saturating_sub(stats0.misses);
+        tally.wasted_prefetches +=
+            ev.wasted_prefetches.saturating_sub(wasted0) as u64;
+        tally.spec_pr.merge(&PrecisionRecall {
+            tp: spec1.tp.saturating_sub(spec0.tp),
+            fp: spec1.fp.saturating_sub(spec0.fp),
+            fn_: spec1.fn_.saturating_sub(spec0.fn_),
+        });
+        result
+    }
+
+    /// The fallible per-layer body of [`InferenceEngine::step_session`].
+    fn step_layers(
+        &mut self,
+        session: u64,
+        tok: u32,
+        kv: &mut KvState,
+        pos: usize,
+        ev: &mut TokenEvents,
+        token_idx: usize,
+    ) -> Result<Vec<f32>> {
+        let mc = *self.backend.config();
         let mut x = self.backend.embed(tok)?;
         for l in 0..mc.n_layers {
             self.collect_overlap()?;
@@ -251,15 +390,18 @@ impl InferenceEngine {
             let selected = top_k(&probs, mc.top_k);
             ev.activations += selected.len();
 
-            // settle last layer's speculative guess against the truth
-            if let Some((gl, guess)) = self.spec_guess.take() {
-                if gl == l {
-                    self.spec_pr.record(&guess, &selected);
+            // settle last layer's speculative guess against the truth.
+            // The session/layer guard also quietly discards a guess left
+            // behind by a step that errored mid-token — the scheduler keeps
+            // the engine alive across per-session failures.
+            if let Some(g) = self.spec_guess.take() {
+                if g.layer == l && g.session == session {
+                    self.spec_pr.record(&g.experts, &selected);
                     if let Some(t) = &mut self.trace {
-                        t.at_mut(token_idx, l).spec_guess = Some(guess.clone());
+                        t.at_mut(token_idx, l).spec_guess = Some(g.experts.clone());
                     }
                     // correct guesses were not wasted
-                    let correct = guess.iter().filter(|g| selected.contains(g)).count();
+                    let correct = g.experts.iter().filter(|e| selected.contains(e)).count();
                     ev.wasted_prefetches = ev.wasted_prefetches.saturating_sub(correct);
                 }
             }
@@ -284,14 +426,14 @@ impl InferenceEngine {
             if self.cfg.prefetch.enabled && l + 1 < mc.n_layers {
                 let spec_probs = self.backend.spec_router(l + 1, &x_res)?;
                 let guesses = top_k(&spec_probs, self.cfg.prefetch.k);
-                self.prefetch(l + 1, &guesses, ev)?;
-                self.spec_guess = Some((l + 1, guesses));
+                self.prefetch(session, l + 1, &guesses, ev)?;
+                self.spec_guess = Some(TaggedGuess { session, layer: l + 1, experts: guesses });
             }
 
             // expert compute with cache/transfer
             let mut y = vec![0.0f32; mc.hidden_size];
             for (j, &e) in selected.iter().enumerate() {
-                self.ensure_resident(l, e, ev)?;
+                self.ensure_resident(session, l, e, ev)?;
                 let handle = self.cache.layers[l].peek(e).expect("just inserted");
                 let out = self.backend.expert(&h, handle)?;
                 let w = gate_w[j];
@@ -304,8 +446,7 @@ impl InferenceEngine {
                 *xv = rv + yv;
             }
         }
-        let logits = self.backend.final_logits(&x)?;
-        Ok(logits)
+        self.backend.final_logits(&x)
     }
 
     /// Decode: teacher-force `prompt`, then sample `n_gen` tokens.
@@ -362,6 +503,25 @@ impl InferenceEngine {
 
     pub fn cache_stats(&self) -> crate::metrics::CacheStats {
         self.cache.total_stats()
+    }
+    /// Per-session attribution of the shared cache's traffic and of
+    /// speculation quality (keyed by the id given to `step_session`).
+    pub fn session_stats(&self) -> &HashMap<u64, SessionTally> {
+        &self.session_stats
+    }
+    /// Copy of one session's tally (zeros if the session never stepped).
+    pub fn session_tally(&self, session: u64) -> SessionTally {
+        self.session_stats.get(&session).copied().unwrap_or_default()
+    }
+    /// Remove and return one session's tally (called when a serve session
+    /// completes, so the map does not grow with request count).
+    pub fn take_session_tally(&mut self, session: u64) -> SessionTally {
+        self.session_stats.remove(&session).unwrap_or_default()
+    }
+    /// Demand lookups satisfied by another session's prefetch — how much
+    /// the shared cache amortized speculative transfers across sessions.
+    pub fn cross_session_prefetch_hits(&self) -> u64 {
+        self.cross_session_prefetch_hits
     }
     pub fn spec_precision_recall(&self) -> PrecisionRecall {
         self.spec_pr

@@ -4,7 +4,11 @@
 //!   selfcheck  validate PJRT + native runtimes against the JAX goldens
 //!   generate   decode a prompt through the offloading engine
 //!   simulate   trace-driven cache-policy comparison + cost model
-//!   serve      HTTP serving front (see rust/src/serve/)
+//!   serve      concurrent HTTP serving front (see rust/src/serve/):
+//!              --max-sessions N  sessions interleaved on the engine worker
+//!              --queue-depth N   bounded admission queue (503 beyond it)
+//!              --synthetic       seeded synthetic weights + native backend,
+//!                                so serving works from a clean checkout
 //!   figures    regenerate every paper table/figure into --out-dir
 
 use anyhow::{bail, Result};

@@ -79,6 +79,33 @@ impl CacheStats {
     }
 }
 
+/// Per-decode-session accounting under concurrent serving: each session's
+/// share of the *shared* expert cache's traffic, plus its own speculative
+/// precision/recall. Maintained by the engine per tagged session id.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionTally {
+    /// Tokens this session has stepped through the engine.
+    pub tokens: u64,
+    /// Cache hits/misses attributed to this session's lookups.
+    pub hits: u64,
+    pub misses: u64,
+    /// Speculative-prefetch guesses issued by this session, scored against
+    /// its own activations (paper §5.4 semantics, per session).
+    pub spec_pr: PrecisionRecall,
+    /// Speculative transfers this session issued that were never used.
+    pub wasted_prefetches: u64,
+}
+
+impl SessionTally {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
 /// Host->device transfer accounting (bytes that crossed the simulated PCIe).
 #[derive(Clone, Debug, Default)]
 pub struct TransferStats {

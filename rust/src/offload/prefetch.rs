@@ -20,6 +20,33 @@ pub struct PrefetchConfig {
     pub k: usize,
 }
 
+/// A speculative guess tagged with the decode session that issued it.
+///
+/// Under concurrent serving, tokens from different sessions interleave on
+/// one engine; the tag keeps each guess scored against the activations of
+/// the session that produced the hidden states, so speculative
+/// precision/recall stays meaningful per session (and in aggregate).
+#[derive(Clone, Debug)]
+pub struct TaggedGuess {
+    pub session: u64,
+    /// Layer the guess is *for* (the issuing layer + 1).
+    pub layer: usize,
+    pub experts: Vec<usize>,
+}
+
+/// An in-flight prefetch transfer on the simulated bus, tagged with the
+/// session that issued it. When a *different* session's demand lookup lands
+/// on the prefetched expert, that is a cross-session prefetch hit — the
+/// shared-cache amortization effect the serve layer reports.
+#[derive(Clone, Copy, Debug)]
+pub struct PendingPrefetch {
+    pub session: u64,
+    pub layer: usize,
+    pub expert: usize,
+    /// Simulated completion time on the bus.
+    pub done_at: f64,
+}
+
 impl Default for PrefetchConfig {
     fn default() -> Self {
         PrefetchConfig { enabled: false, k: 2 }

@@ -2,8 +2,9 @@
 //!
 //! A transfer has two real halves (dequantize on CPU, upload into a PJRT
 //! buffer) plus a simulated half: the time the same bytes would take over
-//! the profile's PCIe link, charged by the caller to the [`SimClock`] via
-//! the returned [`TransferReceipt`]. A serialized bus model lives here too:
+//! the profile's PCIe link, charged by the caller to the
+//! [`SimClock`](crate::util::simclock::SimClock) via the returned
+//! [`TransferReceipt`]. A serialized bus model lives here too:
 //! concurrent transfers (prefetch + demand) queue behind each other, which
 //! is exactly the §6.1 "competes for bandwidth" effect.
 

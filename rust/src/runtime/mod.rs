@@ -11,6 +11,18 @@
 pub mod artifacts;
 pub mod native;
 pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_stub;
+
+// The `xla` crate needs the XLA C library and a network to fetch it; the
+// default (offline) build substitutes `xla_stub`, which has the same API
+// surface but fails at PJRT-client construction. Enabling `--features pjrt`
+// switches to the real crate (which must be added to Cargo.toml manually in
+// an online environment — see DESIGN.md §6).
+#[cfg(not(feature = "pjrt"))]
+pub(crate) use xla_stub as xla;
+#[cfg(feature = "pjrt")]
+pub(crate) use ::xla;
 
 use crate::model::ModelConfig;
 use anyhow::Result;

@@ -20,11 +20,11 @@
 //!     async transfer and racing it segfaults (found the hard way; see
 //!     EXPERIMENTS.md §Perf).
 
+use super::xla::{self, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 use super::{artifacts::Artifacts, Backend, ExpertHandle, KvState};
 use crate::model::{ModelConfig, Weights};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 struct LayerBufs {
     ln1: PjRtBuffer,

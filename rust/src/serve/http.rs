@@ -73,6 +73,45 @@ pub fn write_response(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// minimal blocking client (Connection: close framing), shared by the load
+// example and the serve integration tests so the two cannot drift apart
+// ---------------------------------------------------------------------------
+
+/// Send a raw HTTP/1.1 request and read the full response; returns
+/// `(status, body)`. Status 0 when the status line is unparseable.
+pub fn client_request(addr: std::net::SocketAddr, raw: &str) -> std::io::Result<(u16, String)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(raw.as_bytes())?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp)?;
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or(0);
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, body))
+}
+
+pub fn client_get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    client_request(addr, &format!("GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n"))
+}
+
+pub fn client_post(
+    addr: std::net::SocketAddr,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, String)> {
+    client_request(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +136,23 @@ mod tests {
         c.read_to_string(&mut resp).unwrap();
         assert!(resp.starts_with("HTTP/1.1 200 OK"));
         assert!(resp.ends_with("{\"ok\":true}"));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn client_helpers_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = read_request(&mut s).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.body, b"{\"n\":2}");
+            write_response(&mut s, 503, "text/plain", b"busy").unwrap();
+        });
+        let (status, body) = client_post(addr, "/generate", "{\"n\":2}").unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, "busy");
         server.join().unwrap();
     }
 

@@ -1,36 +1,52 @@
-//! HTTP serving front: request queue + single engine worker.
+//! HTTP serving front: bounded request queue + session scheduler over one
+//! engine worker.
 //!
-//! Architecture (vLLM-router-like, scaled to the paper's batch-size-1
-//! setting): a thread pool accepts connections and parses requests; decode
-//! work is funneled through an mpsc queue to ONE engine worker that owns
-//! the (non-`Send`) PJRT backend and the expert cache — so the cache state
-//! and its hit statistics are shared across requests, exactly like the
-//! paper's persistent GPU cache across a conversation.
+//! Architecture (DESIGN.md §6): a thread pool accepts connections and
+//! parses requests; decode work is funneled through a BOUNDED mpsc queue to
+//! ONE engine worker that owns the (non-`Send`) backend and the shared
+//! expert cache. The worker runs the [`scheduler`]: up to `max_sessions`
+//! decode sessions are interleaved round-robin, one token each per round,
+//! all hitting the same per-layer expert cache — the paper's persistent
+//! cache, contended (and amortized) across sessions. When the queue is
+//! full, `/generate` answers 503 immediately (backpressure) instead of
+//! buffering unboundedly.
 //!
 //! API:
 //!   POST /generate   {"prompt": str, "n_tokens": int, "temperature"?: f,
 //!                     "top_p"?: f, "greedy"?: bool}
-//!   GET  /metrics    cache + throughput counters (JSON)
+//!                    -> text + per-session cache/speculation stats
+//!   GET  /metrics    aggregate + per-session counters over the ONE shared
+//!                    expert cache (JSON)
 //!   GET  /healthz
 
 pub mod http;
+pub mod scheduler;
 
-use crate::model::sampler::{Sampler, Sampling};
-use crate::model::tokenizer::Tokenizer;
+use crate::model::sampler::Sampling;
 use crate::util::cliargs::Args;
 use crate::util::json::{self, Value};
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
+use self::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 
 pub struct GenRequest {
     pub prompt: String,
     pub n_tokens: usize,
     pub sampling: Sampling,
-    pub resp: Sender<Result<GenResponse, String>>,
+    pub resp: Sender<Result<GenResponse, GenError>>,
+}
+
+/// A failed generation, classified for the HTTP layer: 400-class statuses
+/// are the client's fault (validation), 500-class the server's (engine
+/// failure mid-decode).
+#[derive(Clone, Debug)]
+pub struct GenError {
+    pub status: u16,
+    pub message: String,
 }
 
 #[derive(Clone, Debug)]
@@ -39,31 +55,118 @@ pub struct GenResponse {
     pub n_prompt: usize,
     pub n_generated: usize,
     pub wall_s: f64,
+    /// Tokens/s on the simulated clock over this session's lifetime —
+    /// includes contention from concurrently decoded sessions.
     pub sim_tokens_per_s: f64,
+    /// This session's share of the shared cache's traffic.
     pub cache_hit_rate: f64,
+    pub session_id: u64,
+    pub session_hits: u64,
+    pub session_misses: u64,
+    /// Speculative-prefetch quality for this session's own guesses.
+    pub spec_precision: f64,
+    pub spec_recall: f64,
 }
 
-/// Serve-level metrics, shared between workers and /metrics.
+/// Serve-layer knobs (queue + concurrency; the engine has its own config).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Threads accepting/parsing HTTP connections. Each in-flight
+    /// `/generate` pins one worker until its decode completes, so the
+    /// server always provisions at least `max_sessions + 2` workers —
+    /// otherwise the scheduler could never reach its session concurrency
+    /// and `/metrics`/`/healthz` would queue behind blocked decodes.
+    pub http_workers: usize,
+    /// Decode sessions interleaved concurrently on the engine worker.
+    pub max_sessions: usize,
+    /// Bounded request-queue depth; beyond it, `/generate` answers 503.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { http_workers: 4, max_sessions: 8, queue_depth: 64 }
+    }
+}
+
+/// Serve-level counters, shared between HTTP workers and `/metrics`.
 #[derive(Default)]
 pub struct ServerMetrics {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
+    pub rejected_backpressure: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub queue_depth: AtomicU64,
 }
 
-impl ServerMetrics {
-    pub fn to_json(&self) -> Value {
-        Value::obj(vec![
-            ("requests", Value::from(self.requests.load(Ordering::Relaxed) as f64)),
-            ("errors", Value::from(self.errors.load(Ordering::Relaxed) as f64)),
-            (
-                "tokens_generated",
-                Value::from(self.tokens_generated.load(Ordering::Relaxed) as f64),
-            ),
-            ("queue_depth", Value::from(self.queue_depth.load(Ordering::Relaxed) as f64)),
-        ])
-    }
+/// Render `/metrics`: serve counters + the scheduler's latest snapshot.
+/// The `shared_cache` object is singular by design — all sessions run over
+/// ONE expert cache; `sessions[*]` partitions its traffic.
+pub fn metrics_json(metrics: &ServerMetrics, snap: &ServeSnapshot) -> Value {
+    let sessions: Vec<Value> = snap
+        .sessions
+        .iter()
+        .map(|s| {
+            Value::obj(vec![
+                ("id", Value::from(s.id as f64)),
+                ("state", Value::from(s.state)),
+                ("n_prompt", Value::from(s.n_prompt)),
+                ("generated", Value::from(s.generated)),
+                ("target", Value::from(s.target)),
+                ("tokens", Value::from(s.tally.tokens as f64)),
+                ("hits", Value::from(s.tally.hits as f64)),
+                ("misses", Value::from(s.tally.misses as f64)),
+                ("hit_rate", Value::from(s.tally.hit_rate())),
+                ("spec_precision", Value::from(s.tally.spec_pr.precision())),
+                ("spec_recall", Value::from(s.tally.spec_pr.recall())),
+                ("wasted_prefetches", Value::from(s.tally.wasted_prefetches as f64)),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("requests", Value::from(metrics.requests.load(Ordering::Relaxed) as f64)),
+        ("errors", Value::from(metrics.errors.load(Ordering::Relaxed) as f64)),
+        (
+            "rejected_backpressure",
+            Value::from(metrics.rejected_backpressure.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "tokens_generated",
+            Value::from(metrics.tokens_generated.load(Ordering::Relaxed) as f64),
+        ),
+        ("queue_depth", Value::from(metrics.queue_depth.load(Ordering::Relaxed) as f64)),
+        ("active_sessions", Value::from(snap.active_sessions)),
+        ("completed_sessions", Value::from(snap.completed_sessions as f64)),
+        ("failed_sessions", Value::from(snap.failed_sessions as f64)),
+        (
+            "shared_cache",
+            Value::obj(vec![
+                ("policy", Value::from(snap.policy.clone())),
+                ("capacity_per_layer", Value::from(snap.capacity_per_layer)),
+                ("n_layers", Value::from(snap.n_layers)),
+                ("hits", Value::from(snap.cache.hits as f64)),
+                ("misses", Value::from(snap.cache.misses as f64)),
+                ("evictions", Value::from(snap.cache.evictions as f64)),
+                ("hit_rate", Value::from(snap.cache.hit_rate())),
+                ("prefetch_hits", Value::from(snap.cache.prefetch_hits as f64)),
+                (
+                    "cross_session_prefetch_hits",
+                    Value::from(snap.cross_session_prefetch_hits as f64),
+                ),
+            ]),
+        ),
+        (
+            "speculation",
+            Value::obj(vec![
+                ("tp", Value::from(snap.spec.tp as f64)),
+                ("fp", Value::from(snap.spec.fp as f64)),
+                ("fn", Value::from(snap.spec.fn_ as f64)),
+                ("precision", Value::from(snap.spec.precision())),
+                ("recall", Value::from(snap.spec.recall())),
+            ]),
+        ),
+        ("sessions", Value::Arr(sessions)),
+    ])
 }
 
 /// Parse the /generate request body.
@@ -98,6 +201,11 @@ pub fn gen_response_json(r: &GenResponse) -> String {
         ("wall_s", Value::from(r.wall_s)),
         ("sim_tokens_per_s", Value::from(r.sim_tokens_per_s)),
         ("cache_hit_rate", Value::from(r.cache_hit_rate)),
+        ("session_id", Value::from(r.session_id as f64)),
+        ("session_hits", Value::from(r.session_hits as f64)),
+        ("session_misses", Value::from(r.session_misses as f64)),
+        ("spec_precision", Value::from(r.spec_precision)),
+        ("spec_recall", Value::from(r.spec_recall)),
     ]))
 }
 
@@ -106,67 +214,49 @@ pub fn gen_response_json(r: &GenResponse) -> String {
 pub fn serve<F>(
     listener: TcpListener,
     make_engine: F,
-    n_http_workers: usize,
+    cfg: ServeConfig,
     shutdown: Arc<AtomicBool>,
 ) -> Result<()>
 where
     F: FnOnce() -> Result<crate::engine::InferenceEngine> + Send + 'static,
 {
     let metrics = Arc::new(ServerMetrics::default());
-    let (queue_tx, queue_rx) = channel::<GenRequest>();
+    let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+    let (queue_tx, queue_rx) = sync_channel::<GenRequest>(cfg.queue_depth.max(1));
 
-    // engine worker: owns the engine, serializes decodes (paper batch=1)
+    // engine worker: owns the engine and runs the session scheduler
     let worker_metrics = Arc::clone(&metrics);
+    let worker_snapshot = Arc::clone(&snapshot);
+    let max_sessions = cfg.max_sessions;
     let engine_worker = std::thread::Builder::new()
         .name("engine-worker".into())
         .spawn(move || {
-            let mut engine = match make_engine() {
+            let engine = match make_engine() {
                 Ok(e) => e,
                 Err(e) => {
                     eprintln!("engine init failed: {e:#}");
                     return;
                 }
             };
-            let tk = Tokenizer::new(engine.config().vocab_size);
-            let mut req_counter = 0u64;
-            while let Ok(req) = queue_rx.recv() {
-                worker_metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                req_counter += 1;
-                let prompt_toks = tk.encode(&req.prompt);
-                let mut sampler = Sampler::new(req.sampling, req_counter);
-                let max = engine.config().max_seq;
-                let result = if prompt_toks.len() + req.n_tokens > max {
-                    Err(format!(
-                        "prompt {} + n_tokens {} exceeds max_seq {max}",
-                        prompt_toks.len(),
-                        req.n_tokens
-                    ))
-                } else {
-                    engine
-                        .generate(&prompt_toks, req.n_tokens, &mut sampler)
-                        .map(|out| {
-                            worker_metrics
-                                .tokens_generated
-                                .fetch_add(out.generated.len() as u64, Ordering::Relaxed);
-                            GenResponse {
-                                text: tk.decode(&out.generated),
-                                n_prompt: prompt_toks.len(),
-                                n_generated: out.generated.len(),
-                                wall_s: out.throughput.wall_s,
-                                sim_tokens_per_s: out.throughput.tokens_per_s_sim(),
-                                cache_hit_rate: out.cache_stats.hit_rate(),
-                            }
-                        })
-                        .map_err(|e| format!("{e:#}"))
-                };
-                let _ = req.resp.send(result);
-            }
+            run_scheduler(
+                engine,
+                queue_rx,
+                SchedulerConfig { max_sessions },
+                worker_metrics,
+                worker_snapshot,
+            );
         })?;
 
-    let pool = ThreadPool::new(n_http_workers);
-    let queue_tx = Arc::new(Mutex::new(queue_tx));
+    // see ServeConfig::http_workers: one blocked worker per in-flight
+    // decode, plus headroom for /metrics and /healthz under load
+    let pool = ThreadPool::new(cfg.http_workers.max(cfg.max_sessions + 2));
     listener.set_nonblocking(true)?;
-    println!("serving on {}", listener.local_addr()?);
+    println!(
+        "serving on {} (max {} concurrent sessions, queue depth {})",
+        listener.local_addr()?,
+        cfg.max_sessions,
+        cfg.queue_depth
+    );
     loop {
         if shutdown.load(Ordering::Relaxed) {
             break;
@@ -175,9 +265,10 @@ where
             Ok((mut stream, _)) => {
                 stream.set_nonblocking(false).ok();
                 let metrics = Arc::clone(&metrics);
-                let queue_tx = Arc::clone(&queue_tx);
+                let snapshot = Arc::clone(&snapshot);
+                let queue_tx = queue_tx.clone();
                 pool.execute(move || {
-                    handle_conn(&mut stream, &metrics, &queue_tx);
+                    handle_conn(&mut stream, &metrics, &snapshot, &queue_tx);
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -189,8 +280,8 @@ where
             }
         }
     }
-    drop(pool);
-    drop(queue_tx);
+    drop(pool); // joins HTTP workers, dropping their queue_tx clones
+    drop(queue_tx); // closes the queue; the scheduler drains and exits
     let _ = engine_worker.join();
     Ok(())
 }
@@ -198,7 +289,8 @@ where
 fn handle_conn(
     stream: &mut std::net::TcpStream,
     metrics: &ServerMetrics,
-    queue_tx: &Mutex<Sender<GenRequest>>,
+    snapshot: &Mutex<ServeSnapshot>,
+    queue_tx: &SyncSender<GenRequest>,
 ) {
     let req = match http::read_request(stream) {
         Ok(r) => r,
@@ -213,22 +305,35 @@ fn handle_conn(
             let _ = http::write_response(stream, 200, "text/plain", b"ok");
         }
         ("GET", "/metrics") => {
-            let body = json::to_string(&metrics.to_json());
+            let snap = snapshot.lock().unwrap().clone();
+            let body = json::to_string(&metrics_json(metrics, &snap));
             let _ = http::write_response(stream, 200, "application/json", body.as_bytes());
         }
         ("POST", "/generate") => match parse_gen_request(&req.body) {
             Ok((prompt, n, sampling)) => {
                 let (tx, rx) = channel();
+                // increment BEFORE send so the scheduler's decrement can
+                // never observe the gauge at zero for an enqueued request
                 metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-                let sent = queue_tx
-                    .lock()
-                    .unwrap()
-                    .send(GenRequest { prompt, n_tokens: n, sampling, resp: tx })
-                    .is_ok();
-                if !sent {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                    let _ = http::write_response(stream, 503, "text/plain", b"engine down");
-                    return;
+                match queue_tx.try_send(GenRequest { prompt, n_tokens: n, sampling, resp: tx }) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                        metrics.rejected_backpressure.fetch_add(1, Ordering::Relaxed);
+                        let _ = http::write_response(
+                            stream,
+                            503,
+                            "text/plain",
+                            b"queue full (backpressure); retry later",
+                        );
+                        return;
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                        metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        let _ = http::write_response(stream, 503, "text/plain", b"engine down");
+                        return;
+                    }
                 }
                 match rx.recv() {
                     Ok(Ok(resp)) => {
@@ -236,14 +341,18 @@ fn handle_conn(
                         let _ =
                             http::write_response(stream, 200, "application/json", body.as_bytes());
                     }
-                    Ok(Err(msg)) => {
+                    Ok(Err(ge)) => {
                         metrics.errors.fetch_add(1, Ordering::Relaxed);
                         let body = json::to_string(&Value::obj(vec![(
                             "error",
-                            Value::from(msg),
+                            Value::from(ge.message),
                         )]));
-                        let _ =
-                            http::write_response(stream, 400, "application/json", body.as_bytes());
+                        let _ = http::write_response(
+                            stream,
+                            ge.status,
+                            "application/json",
+                            body.as_bytes(),
+                        );
                     }
                     Err(_) => {
                         metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -265,6 +374,10 @@ fn handle_conn(
 }
 
 /// `moe-offload serve` entrypoint.
+///
+/// `--synthetic` serves seeded synthetic weights over the native backend so
+/// the whole serve stack runs from a clean checkout (no artifacts, no
+/// PJRT); without it, artifacts are loaded as in production.
 pub fn cmd_serve(args: &Args) -> Result<()> {
     use crate::offload::store::HostExpertStore;
     use crate::runtime::artifacts::Artifacts;
@@ -279,36 +392,46 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --quant"))?;
     let spec = args.bool("spec");
     let overlap = args.bool("overlap");
+    let synthetic = args.bool("synthetic");
+    let seed = args.usize_or("seed", 0)? as u64;
     let profile = crate::sim::hardware::by_name(&args.str_or("profile", "A100"))
         .ok_or_else(|| anyhow::anyhow!("bad --profile"))?;
+    let serve_cfg = ServeConfig {
+        http_workers: args.usize_or("http-workers", 4)?,
+        max_sessions: args.usize_or("max-sessions", 8)?,
+        queue_depth: args.usize_or("queue-depth", 64)?,
+    };
 
     let listener = TcpListener::bind(("0.0.0.0", port as u16))?;
     let shutdown = Arc::new(AtomicBool::new(false));
     serve(
         listener,
         move || {
-            let artifacts = Artifacts::load(std::path::Path::new(&dir))?;
-            let weights = Arc::new(crate::model::Weights::load(&artifacts.weights_path)?);
-            let backend: Box<dyn crate::runtime::Backend> = match backend_kind.as_str() {
-                "native" => Box::new(crate::runtime::native::NativeBackend::new(Arc::clone(&weights))),
-                _ => Box::new(crate::runtime::pjrt::PjrtBackend::new(&artifacts, &weights)?),
+            let (weights, artifacts) = if synthetic {
+                let w = Arc::new(crate::model::weights::generate_weights(
+                    crate::model::ModelConfig::DEFAULT,
+                    seed,
+                ));
+                (w, None)
+            } else {
+                let a = Artifacts::load(std::path::Path::new(&dir))?;
+                let w = Arc::new(crate::model::Weights::load(&a.weights_path)?);
+                (w, Some(a))
+            };
+            let backend: Box<dyn crate::runtime::Backend> = match &artifacts {
+                Some(a) if backend_kind != "native" => {
+                    Box::new(crate::runtime::pjrt::PjrtBackend::new(a, &weights)?)
+                }
+                _ => Box::new(crate::runtime::native::NativeBackend::new(Arc::clone(&weights))),
             };
             let store = Arc::new(HostExpertStore::build(&weights, quant)?);
-            Ok(crate::engine::InferenceEngine::new(
-                backend,
-                store,
-                crate::engine::EngineConfig {
-                    cache_capacity: capacity,
-                    policy,
-                    prefetch: crate::offload::prefetch::PrefetchConfig { enabled: spec, k: 2 },
-                    overlap,
-                    profile,
-                    seed: 0,
-                    record_trace: false,
-                },
-            ))
+            let mut cfg = crate::engine::EngineConfig::serving(capacity, policy, spec);
+            cfg.overlap = overlap;
+            cfg.profile = profile;
+            cfg.seed = seed;
+            Ok(crate::engine::InferenceEngine::new(backend, store, cfg))
         },
-        args.usize_or("http-workers", 4)?,
+        serve_cfg,
         shutdown,
     )
 }
@@ -316,6 +439,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::{CacheStats, PrecisionRecall, SessionTally};
+    use super::scheduler::SessionView;
 
     #[test]
     fn parse_gen_request_ok() {
@@ -349,10 +474,65 @@ mod tests {
             wall_s: 0.5,
             sim_tokens_per_s: 12.25,
             cache_hit_rate: 0.75,
+            session_id: 9,
+            session_hits: 30,
+            session_misses: 10,
+            spec_precision: 0.5,
+            spec_recall: 0.5,
         };
         let v = json::parse(&gen_response_json(&r)).unwrap();
         assert_eq!(v.get("text").as_str(), Some("abc"));
         assert_eq!(v.get("n_generated").as_usize(), Some(3));
         assert_eq!(v.get("cache_hit_rate").as_f64(), Some(0.75));
+        assert_eq!(v.get("session_id").as_usize(), Some(9));
+        assert_eq!(v.get("session_hits").as_usize(), Some(30));
+        assert_eq!(v.get("spec_precision").as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn metrics_json_reports_single_shared_cache_with_sessions() {
+        let metrics = ServerMetrics::default();
+        metrics.requests.store(7, Ordering::Relaxed);
+        let mut snap = ServeSnapshot {
+            policy: "lfu".into(),
+            capacity_per_layer: 4,
+            n_layers: 12,
+            active_sessions: 2,
+            completed_sessions: 5,
+            failed_sessions: 1,
+            cache: CacheStats { hits: 90, misses: 10, ..Default::default() },
+            spec: PrecisionRecall { tp: 8, fp: 2, fn_: 2 },
+            cross_session_prefetch_hits: 3,
+            sessions: Vec::new(),
+        };
+        for id in 1..=2u64 {
+            snap.sessions.push(SessionView {
+                id,
+                state: "active",
+                n_prompt: 5,
+                generated: 3,
+                target: 8,
+                tally: SessionTally { tokens: 8, hits: 45, misses: 5, ..Default::default() },
+            });
+        }
+        let v = metrics_json(&metrics, &snap);
+        assert_eq!(v.get("requests").as_usize(), Some(7));
+        assert_eq!(v.get("failed_sessions").as_usize(), Some(1));
+        let cache = v.get("shared_cache");
+        assert_eq!(cache.get("policy").as_str(), Some("lfu"));
+        assert_eq!(cache.get("hits").as_usize(), Some(90));
+        assert_eq!(cache.get("cross_session_prefetch_hits").as_usize(), Some(3));
+        let sessions = v.get("sessions").as_arr().unwrap();
+        assert_eq!(sessions.len(), 2);
+        assert_eq!(sessions[0].get("hits").as_usize(), Some(45));
+        // per-session traffic partitions the single shared cache's totals
+        let part: usize = sessions
+            .iter()
+            .map(|s| s.get("hits").as_usize().unwrap() + s.get("misses").as_usize().unwrap())
+            .sum();
+        assert_eq!(
+            part,
+            cache.get("hits").as_usize().unwrap() + cache.get("misses").as_usize().unwrap()
+        );
     }
 }

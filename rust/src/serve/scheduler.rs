@@ -1,0 +1,441 @@
+//! Session scheduler: multiplex N concurrent decode sessions over the ONE
+//! engine worker that owns the (non-`Send`) backend and the shared expert
+//! cache.
+//!
+//! Scheduling discipline (DESIGN.md §6): round-robin token interleaving.
+//! Each scheduler round steps every active session by exactly one token
+//! (via [`Session::step_once`], the same feeding discipline offline
+//! lockstep decoding uses), so no session can starve another,
+//! time-to-first-token is bounded by one round, and consecutive tokens of
+//! different sessions share the per-layer expert cache — a transfer paid
+//! by one session is a hit for every other session that activates the same
+//! expert while it stays resident (the paper's persistent-cache semantics,
+//! now contended across sessions).
+//!
+//! Admission is demand-driven: new requests are drained from the bounded
+//! queue between rounds, up to `max_sessions` in flight; beyond that they
+//! wait in the queue (whose bound is the HTTP 503 backpressure limit).
+//! Per-session accounting comes from the engine's session tallies
+//! ([`crate::metrics::SessionTally`]) and is published after every round in
+//! a [`ServeSnapshot`] the `/metrics` endpoint renders without touching the
+//! engine thread.
+
+use crate::engine::batch::Session;
+use crate::engine::InferenceEngine;
+use crate::metrics::{CacheStats, PrecisionRecall, SessionTally};
+use crate::model::sampler::Sampler;
+use crate::model::tokenizer::Tokenizer;
+use crate::serve::{GenError, GenRequest, GenResponse, ServerMetrics};
+use crate::sim::costmodel::TokenEvents;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// How many finished sessions `/metrics` keeps visible after completion.
+const RECENT_SESSIONS: usize = 32;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// Maximum sessions decoded concurrently (further requests queue).
+    pub max_sessions: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_sessions: 8 }
+    }
+}
+
+/// One session's row in the `/metrics` report.
+#[derive(Clone, Debug)]
+pub struct SessionView {
+    pub id: u64,
+    /// "active" while decoding, then "done" (responded) or "failed"
+    /// (engine error mid-decode).
+    pub state: &'static str,
+    pub n_prompt: usize,
+    pub generated: usize,
+    pub target: usize,
+    pub tally: SessionTally,
+}
+
+/// Aggregate + per-session view the scheduler publishes after every round.
+/// There is exactly ONE shared expert cache behind all sessions; `cache`
+/// reports its totals and `sessions[*].tally` partitions them.
+#[derive(Clone, Debug, Default)]
+pub struct ServeSnapshot {
+    pub policy: String,
+    pub capacity_per_layer: usize,
+    pub n_layers: usize,
+    pub active_sessions: usize,
+    pub completed_sessions: u64,
+    /// Sessions that died on an engine error mid-decode (not counted as
+    /// completed; their clients got HTTP 500).
+    pub failed_sessions: u64,
+    pub cache: CacheStats,
+    pub spec: PrecisionRecall,
+    pub cross_session_prefetch_hits: u64,
+    pub sessions: Vec<SessionView>,
+}
+
+struct ActiveSession {
+    inner: Session,
+    started: Instant,
+    /// Simulated clock reading at admission; the span until completion
+    /// covers every interleaved token, so per-session sim tokens/s reflects
+    /// contention — the serving metric, not the solo-decode one.
+    sim_start: f64,
+    resp: Sender<Result<GenResponse, GenError>>,
+}
+
+/// Run the scheduler until the request channel closes and no sessions
+/// remain. Owns the engine for its entire lifetime.
+pub fn run_scheduler(
+    mut engine: InferenceEngine,
+    rx: Receiver<GenRequest>,
+    cfg: SchedulerConfig,
+    metrics: Arc<ServerMetrics>,
+    snapshot: Arc<Mutex<ServeSnapshot>>,
+) {
+    let tk = Tokenizer::new(engine.config().vocab_size);
+    let max_sessions = cfg.max_sessions.max(1);
+    let mut active: Vec<ActiveSession> = Vec::new();
+    let mut recent: VecDeque<SessionView> = VecDeque::new();
+    let mut completed: u64 = 0;
+    let mut failed_sessions: u64 = 0;
+    let mut next_id: u64 = 1;
+
+    {
+        let mut snap = snapshot.lock().unwrap();
+        snap.policy = engine.cfg.policy.name().to_string();
+        snap.capacity_per_layer = engine.cfg.cache_capacity;
+        snap.n_layers = engine.config().n_layers;
+    }
+
+    'outer: loop {
+        // --- admission: block when idle, drain opportunistically when busy
+        while active.len() < max_sessions {
+            let req = if active.is_empty() {
+                match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break 'outer, // all senders gone, nothing active
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(r) => r,
+                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                }
+            };
+            // saturating decrement: the gauge must never wrap if a producer
+            // raced its increment
+            let _ = metrics
+                .queue_depth
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+            // admission failures answer on the response channel; the HTTP
+            // layer counts them in metrics.errors when it relays the Err
+            if let Some(sess) = admit(&engine, &tk, next_id, req) {
+                active.push(sess);
+                next_id += 1;
+            }
+        }
+
+        // --- one round-robin pass: every active session advances one token
+        let mut finished: Vec<ActiveSession> = Vec::new();
+        let mut i = 0;
+        while i < active.len() {
+            let s = &mut active[i];
+            let was_generated = s.inner.next_token_is_generated();
+            let mut ev = TokenEvents::default();
+            let failed = match s.inner.step_once(&mut engine, &mut ev) {
+                Ok(_done) => {
+                    if was_generated {
+                        metrics.tokens_generated.fetch_add(1, Ordering::Relaxed);
+                    }
+                    false
+                }
+                Err(e) => {
+                    // engine-side failure: 500, counted by the HTTP layer
+                    let _ = s.resp.send(Err(GenError {
+                        status: 500,
+                        message: format!("{e:#}"),
+                    }));
+                    true
+                }
+            };
+            if failed || s.inner.done {
+                finished.push(active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+
+        for s in finished {
+            let tally = engine.take_session_tally(s.inner.id);
+            let generated = s.inner.generated().len();
+            let succeeded = s.inner.done;
+            if succeeded {
+                let sim_span = engine.sim_now() - s.sim_start;
+                let resp = GenResponse {
+                    text: tk.decode(s.inner.generated()),
+                    n_prompt: s.inner.n_prompt,
+                    n_generated: generated,
+                    wall_s: s.started.elapsed().as_secs_f64(),
+                    sim_tokens_per_s: if sim_span > 0.0 {
+                        (s.inner.n_prompt + generated) as f64 / sim_span
+                    } else {
+                        0.0
+                    },
+                    cache_hit_rate: tally.hit_rate(),
+                    session_id: s.inner.id,
+                    session_hits: tally.hits,
+                    session_misses: tally.misses,
+                    spec_precision: tally.spec_pr.precision(),
+                    spec_recall: tally.spec_pr.recall(),
+                };
+                let _ = s.resp.send(Ok(resp));
+                completed += 1;
+            } else {
+                failed_sessions += 1;
+            }
+            recent.push_back(SessionView {
+                id: s.inner.id,
+                state: if succeeded { "done" } else { "failed" },
+                n_prompt: s.inner.n_prompt,
+                generated,
+                target: s.inner.target_new,
+                tally,
+            });
+            while recent.len() > RECENT_SESSIONS {
+                recent.pop_front();
+            }
+        }
+
+        publish(&engine, &active, &recent, completed, failed_sessions, &snapshot);
+    }
+
+    publish(&engine, &active, &recent, completed, failed_sessions, &snapshot);
+}
+
+/// Validate and set up one request as an active session. On failure the
+/// error is sent on the response channel and `None` returned: length
+/// violations are the client's fault (400), anything else in session
+/// construction is the server's (500).
+fn admit(
+    engine: &InferenceEngine,
+    tk: &Tokenizer,
+    id: u64,
+    req: GenRequest,
+) -> Option<ActiveSession> {
+    let prompt = tk.encode(&req.prompt);
+    let max = engine.config().max_seq;
+    if prompt.len() + req.n_tokens > max {
+        let _ = req.resp.send(Err(GenError {
+            status: 400,
+            message: format!(
+                "prompt {} + n_tokens {} exceeds max_seq {max}",
+                prompt.len(),
+                req.n_tokens
+            ),
+        }));
+        return None;
+    }
+    let sampler = Sampler::new(req.sampling, id);
+    let inner = match Session::new(id, engine, &prompt, req.n_tokens, sampler) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = req.resp.send(Err(GenError { status: 500, message: format!("{e:#}") }));
+            return None;
+        }
+    };
+    Some(ActiveSession {
+        inner,
+        started: Instant::now(),
+        sim_start: engine.sim_now(),
+        resp: req.resp,
+    })
+}
+
+fn publish(
+    engine: &InferenceEngine,
+    active: &[ActiveSession],
+    recent: &VecDeque<SessionView>,
+    completed: u64,
+    failed_sessions: u64,
+    snapshot: &Arc<Mutex<ServeSnapshot>>,
+) {
+    let mut views: Vec<SessionView> = active
+        .iter()
+        .map(|s| SessionView {
+            id: s.inner.id,
+            state: "active",
+            n_prompt: s.inner.n_prompt,
+            generated: s.inner.generated().len(),
+            target: s.inner.target_new,
+            tally: engine.session_tally(s.inner.id),
+        })
+        .collect();
+    views.extend(recent.iter().cloned());
+    let mut snap = snapshot.lock().unwrap();
+    snap.active_sessions = active.len();
+    snap.completed_sessions = completed;
+    snap.failed_sessions = failed_sessions;
+    snap.cache = engine.cache_stats();
+    snap.spec = engine.spec_precision_recall();
+    snap.cross_session_prefetch_hits = engine.cross_session_prefetch_hits();
+    snap.sessions = views;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::PolicyKind;
+    use crate::engine::EngineConfig;
+    use crate::model::sampler::Sampling;
+    use crate::model::weights::generate_weights;
+    use crate::model::ModelConfig;
+    use crate::offload::store::HostExpertStore;
+    use crate::quant::Scheme;
+    use crate::runtime::native::NativeBackend;
+    use std::sync::mpsc::{channel, sync_channel};
+
+    /// Byte-tokenizer-compatible tiny config (vocab must hold 256 bytes +
+    /// specials; TINY's vocab of 64 is for raw-token tests only).
+    pub(crate) fn serve_test_config() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 320,
+            max_seq: 96,
+            ..ModelConfig::TINY
+        }
+    }
+
+    pub(crate) fn test_engine(spec: bool) -> InferenceEngine {
+        let weights = Arc::new(generate_weights(serve_test_config(), 42));
+        let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
+        let cfg = EngineConfig::serving(4, PolicyKind::Lfu, spec);
+        InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn request(
+        prompt: &str,
+        n: usize,
+    ) -> (GenRequest, std::sync::mpsc::Receiver<Result<GenResponse, GenError>>) {
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                prompt: prompt.to_string(),
+                n_tokens: n,
+                sampling: Sampling::Greedy,
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn scheduler_completes_concurrent_sessions() {
+        let engine = test_engine(true);
+        let (tx, rx) = sync_channel::<GenRequest>(16);
+        let metrics = Arc::new(ServerMetrics::default());
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+
+        let mut resp_rxs = Vec::new();
+        for i in 0..5 {
+            let (req, resp_rx) = request(&format!("prompt number {i}"), 6);
+            tx.send(req).unwrap();
+            metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+            resp_rxs.push(resp_rx);
+        }
+        drop(tx);
+        run_scheduler(
+            engine,
+            rx,
+            SchedulerConfig { max_sessions: 4 },
+            Arc::clone(&metrics),
+            Arc::clone(&snapshot),
+        );
+
+        let mut ids = Vec::new();
+        for rx in resp_rxs {
+            let resp = rx.recv().unwrap().expect("generation ok");
+            assert_eq!(resp.n_generated, 6);
+            assert!(!ids.contains(&resp.session_id), "duplicate session id");
+            ids.push(resp.session_id);
+        }
+        let snap = snapshot.lock().unwrap();
+        assert_eq!(snap.completed_sessions, 5);
+        assert_eq!(snap.failed_sessions, 0);
+        assert_eq!(snap.active_sessions, 0);
+        // the recent ring keeps every finished session visible
+        assert_eq!(snap.sessions.len(), 5);
+        assert!(snap.sessions.iter().all(|s| s.state == "done"));
+        // one shared cache served them all
+        let part: u64 = snap.sessions.iter().map(|s| s.tally.hits + s.tally.misses).sum();
+        assert_eq!(part, snap.cache.hits + snap.cache.misses);
+        assert_eq!(metrics.tokens_generated.load(Ordering::Relaxed), 5 * 6);
+    }
+
+    #[test]
+    fn scheduler_rejects_overlong_requests_and_continues() {
+        let engine = test_engine(false);
+        let (tx, rx) = sync_channel::<GenRequest>(8);
+        let metrics = Arc::new(ServerMetrics::default());
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+
+        let (bad, bad_rx) = request("way too long", 4096);
+        let (good, good_rx) = request("ok", 3);
+        tx.send(bad).unwrap();
+        tx.send(good).unwrap();
+        drop(tx);
+        run_scheduler(engine, rx, SchedulerConfig::default(), metrics, snapshot);
+
+        let err = bad_rx.recv().unwrap().unwrap_err();
+        assert_eq!(err.status, 400, "length violations are the client's fault");
+        assert!(err.message.contains("max_seq"));
+        assert_eq!(good_rx.recv().unwrap().unwrap().n_generated, 3);
+    }
+
+    #[test]
+    fn interleaved_outputs_match_solo_decode() {
+        // scheduling must be semantically transparent: a session decoded
+        // alongside three others yields the same tokens as decoding alone
+        let solo_out = {
+            let mut engine = test_engine(false);
+            let tk = Tokenizer::new(engine.config().vocab_size);
+            let prompt = tk.encode("determinism check");
+            // scheduler seeds the sampler with the session id; solo run is
+            // admitted first, so it gets id 1
+            let mut sampler = Sampler::new(Sampling::Greedy, 1);
+            let out = engine.generate(&prompt, 5, &mut sampler).unwrap();
+            out.generated
+        };
+
+        let engine = test_engine(false);
+        let (tx, rx) = sync_channel::<GenRequest>(8);
+        let (probe, probe_rx) = request("determinism check", 5);
+        tx.send(probe).unwrap();
+        let mut others = Vec::new();
+        for i in 0..3 {
+            let (req, orx) = request(&format!("background load {i}"), 5);
+            tx.send(req).unwrap();
+            others.push(orx);
+        }
+        drop(tx);
+        run_scheduler(
+            engine,
+            rx,
+            SchedulerConfig { max_sessions: 4 },
+            Arc::new(ServerMetrics::default()),
+            Arc::new(Mutex::new(ServeSnapshot::default())),
+        );
+
+        let tk = Tokenizer::new(serve_test_config().vocab_size);
+        let resp = probe_rx.recv().unwrap().unwrap();
+        assert_eq!(resp.text, tk.decode(&solo_out), "shared cache changed outputs");
+        for orx in others {
+            assert!(orx.recv().unwrap().is_ok());
+        }
+    }
+}

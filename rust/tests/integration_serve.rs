@@ -1,0 +1,212 @@
+//! Serve-layer integration tests: real TCP listener on an ephemeral port,
+//! concurrent `POST /generate` clients, and `/metrics` assertions.
+//!
+//! The key property under test is the ISSUE's acceptance criterion: N ≥ 4
+//! concurrent sessions decode over ONE shared expert cache (the `/metrics`
+//! `shared_cache` object is singular and the per-session counters partition
+//! its totals), and a bounded queue applies backpressure with HTTP 503.
+
+use moe_offload::cache::PolicyKind;
+use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::ModelConfig;
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+use moe_offload::runtime::native::NativeBackend;
+use moe_offload::serve::http::{client_get as http_get, client_post as http_post};
+use moe_offload::serve::{self, ServeConfig};
+use moe_offload::util::json;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+
+/// Vocab must hold 256 bytes + specials for the byte tokenizer; the rest
+/// stays TINY-sized so debug-mode tests are fast.
+fn serve_config() -> ModelConfig {
+    ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY }
+}
+
+fn make_engine(spec: bool) -> anyhow::Result<InferenceEngine> {
+    let weights = Arc::new(generate_weights(serve_config(), 42));
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32)?);
+    Ok(InferenceEngine::new(
+        Box::new(NativeBackend::new(weights)),
+        store,
+        EngineConfig::serving(4, PolicyKind::Lfu, spec),
+    ))
+}
+
+struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    fn start(cfg: ServeConfig, spec: bool) -> Server {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
+        let handle = std::thread::spawn(move || {
+            serve::serve(listener, move || make_engine(spec), cfg, sd).unwrap();
+        });
+        let server = Server { addr, shutdown, handle: Some(handle) };
+        server.wait_healthy();
+        server
+    }
+
+    fn wait_healthy(&self) {
+        for _ in 0..200 {
+            if let Ok((200, _)) = http_get(self.addr, "/healthz") {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        panic!("server never became healthy");
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[test]
+fn concurrent_sessions_share_one_cache() {
+    let n_clients = 6usize;
+    let n_tokens = 6usize;
+    let server = Server::start(
+        ServeConfig { http_workers: n_clients, max_sessions: 4, queue_depth: 16 },
+        true,
+    );
+
+    // fire all clients at once so ≥4 sessions overlap on the scheduler
+    let barrier = Arc::new(Barrier::new(n_clients));
+    let addr = server.addr;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let body = format!(
+                    r#"{{"prompt":"concurrent prompt {i}","n_tokens":{n_tokens},"greedy":true}}"#
+                );
+                http_post(addr, "/generate", &body).unwrap()
+            })
+        })
+        .collect();
+
+    let mut session_ids = Vec::new();
+    for h in handles {
+        let (status, body) = h.join().unwrap();
+        assert_eq!(status, 200, "body: {body}");
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("n_generated").as_usize(), Some(n_tokens));
+        assert!(v.get("session_hits").as_usize().is_some());
+        let id = v.get("session_id").as_usize().unwrap();
+        assert!((1..=n_clients).contains(&id), "session id {id}");
+        assert!(!session_ids.contains(&id), "duplicate session id {id}");
+        session_ids.push(id);
+    }
+
+    let (status, body) = http_get(addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    let m = json::parse(&body).unwrap();
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(n_clients));
+    assert_eq!(m.get("active_sessions").as_usize(), Some(0));
+    assert_eq!(
+        m.get("tokens_generated").as_usize(),
+        Some(n_clients * n_tokens)
+    );
+
+    // exactly one shared cache, multi-session counters partition it
+    let cache = m.get("shared_cache");
+    assert_eq!(cache.get("policy").as_str(), Some("lfu"));
+    assert_eq!(cache.get("capacity_per_layer").as_usize(), Some(4));
+    let total = cache.get("hits").as_usize().unwrap() + cache.get("misses").as_usize().unwrap();
+    let sessions = m.get("sessions").as_arr().unwrap();
+    assert_eq!(sessions.len(), n_clients, "all sessions visible in /metrics");
+    let part: usize = sessions
+        .iter()
+        .map(|s| s.get("hits").as_usize().unwrap() + s.get("misses").as_usize().unwrap())
+        .sum();
+    assert_eq!(part, total, "per-session counters must partition the shared cache");
+    for s in sessions {
+        assert_eq!(s.get("state").as_str(), Some("done"));
+        assert_eq!(s.get("tokens").as_usize(), Some(n_tokens + 1 + "concurrent prompt 0".len()));
+    }
+
+    // speculation ran and its per-guess cardinality identity held (§5.4)
+    let spec = m.get("speculation");
+    assert!(spec.get("tp").as_usize().unwrap() + spec.get("fp").as_usize().unwrap() > 0);
+    assert_eq!(spec.get("fp").as_usize(), spec.get("fn").as_usize());
+}
+
+#[test]
+fn bounded_queue_applies_backpressure() {
+    // one decode slot + one queue slot: concurrent clients beyond the two
+    // must be rejected with 503 while the first request decodes
+    let server = Server::start(
+        ServeConfig { http_workers: 8, max_sessions: 1, queue_depth: 1 },
+        false,
+    );
+    let n_clients = 8usize;
+    let barrier = Arc::new(Barrier::new(n_clients));
+    let addr = server.addr;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let body =
+                    format!(r#"{{"prompt":"load {i}","n_tokens":64,"greedy":true}}"#);
+                http_post(addr, "/generate", &body).unwrap()
+            })
+        })
+        .collect();
+
+    let mut ok = 0;
+    let mut rejected = 0;
+    for h in handles {
+        match h.join().unwrap() {
+            (200, _) => ok += 1,
+            (503, body) => {
+                assert!(body.contains("queue full"), "{body}");
+                rejected += 1;
+            }
+            (status, body) => panic!("unexpected {status}: {body}"),
+        }
+    }
+    assert_eq!(ok + rejected, n_clients);
+    assert!(ok >= 1, "at least the first request must be served");
+    assert!(rejected >= 1, "queue bound must reject overload");
+
+    let (_, body) = http_get(addr, "/metrics").unwrap();
+    let m = json::parse(&body).unwrap();
+    assert_eq!(m.get("rejected_backpressure").as_usize(), Some(rejected));
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(ok));
+}
+
+#[test]
+fn invalid_requests_are_rejected_cleanly() {
+    let server = Server::start(ServeConfig::default(), false);
+    let (status, body) = http_post(server.addr, "/generate", r#"{"n_tokens":4}"#).unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("prompt"));
+    // overlong request passes parsing but fails admission
+    let (status, body) = http_post(
+        server.addr,
+        "/generate",
+        r#"{"prompt":"x","n_tokens":4000,"greedy":true}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("max_seq"), "{body}");
+    let (status, _) = http_get(server.addr, "/nope").unwrap();
+    assert_eq!(status, 404);
+}

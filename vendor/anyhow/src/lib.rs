@@ -1,0 +1,241 @@
+//! Minimal offline subset of the `anyhow` error-handling API.
+//!
+//! The build environment for this repository has no crates.io access, so the
+//! pieces of `anyhow` the codebase actually uses are vendored here:
+//!
+//! * [`Error`] — an opaque error holding a human-readable cause chain;
+//! * [`Result<T>`](Result) — `Result<T, Error>`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — error construction macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, prepending a message to the chain.
+//!
+//! Semantics intentionally mirror the real crate where the codebase depends
+//! on them: `{}` displays the outermost message, `{:#}` displays the whole
+//! chain separated by `": "`, and `?` converts any `std::error::Error`.
+//! Downcasting and backtraces are not implemented (nothing here uses them).
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`, the crate-wide error-carrying result.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error with a message chain, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` produces).
+    pub fn new(msg: String) -> Error {
+        Error { chain: vec![msg] }
+    }
+
+    /// Construct from a displayable value.
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error::new(msg.to_string())
+    }
+
+    /// Prepend a context message (what `.context(..)` produces).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    fn from_std(err: &(dyn std::error::Error + 'static)) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut cur = err.source();
+        while let Some(src) = cur {
+            chain.push(src.to_string());
+            cur = src.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first — matches anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes the blanket `From` below coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::from_std(&err)
+    }
+}
+
+mod private {
+    /// Sealed conversion used by [`super::Context`] so the trait can be
+    /// implemented for both `Result<T, E: std::error::Error>` and
+    /// `Result<T, anyhow::Error>` without overlap.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::from_std(&self)
+        }
+    }
+}
+
+/// Attach context to errors, as in the real `anyhow`.
+pub trait Context<T>: Sized {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(context.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (captures like `format!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::new(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::new(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(format!("{e}"), "file missing");
+    }
+
+    #[test]
+    fn context_prepends_and_alternate_shows_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let e = Err::<(), Error>(anyhow!("inner {}", 7))
+            .context("outer")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        let e = None::<u32>.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x {x} too large");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x 12 too large");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading weights").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("loading weights"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("file missing"));
+    }
+}
