@@ -1,4 +1,4 @@
-.PHONY: artifacts build test pytest bench figures clean
+.PHONY: artifacts build test pytest bench perf figures clean
 
 # AOT-lower the MiniMixtral stages to HLO text + weights + goldens.
 # Needs jax installed; everything else in the repo runs without it.
@@ -16,6 +16,11 @@ pytest:
 
 bench:
 	cargo bench
+
+# Transfer-pipeline perf gate: demand-miss stall sync vs pipelined + pool
+# reuse rate; writes BENCH_transfer_pipeline.json in the repo root.
+perf:
+	cargo bench --bench transfer_pipeline
 
 figures:
 	cargo run --release -- figures --out-dir results

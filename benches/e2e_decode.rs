@@ -23,7 +23,7 @@ fn bench_config(
     make_backend: &dyn Fn() -> Box<dyn Backend>,
     policy: PolicyKind,
     spec: bool,
-    overlap: bool,
+    transfer_workers: usize,
     n_tokens: usize,
 ) {
     let store =
@@ -36,7 +36,7 @@ fn bench_config(
                 cache_capacity: 4,
                 policy,
                 prefetch: PrefetchConfig { enabled: spec, k: 2 },
-                overlap,
+                transfer_workers,
                 profile: hardware::by_name("A6000").unwrap(),
                 seed: 0,
                 record_trace: false,
@@ -58,14 +58,15 @@ fn main() {
         let w = Arc::clone(&weights);
         move || -> Box<dyn Backend> { Box::new(NativeBackend::new(Arc::clone(&w))) }
     };
-    for (name, policy, spec, overlap) in [
-        ("e2e/native/lru", PolicyKind::Lru, false, false),
-        ("e2e/native/lfu", PolicyKind::Lfu, false, false),
-        ("e2e/native/lfu-aged", PolicyKind::LfuAged, false, false),
-        ("e2e/native/lru+spec", PolicyKind::Lru, true, false),
-        ("e2e/native/lru+spec+overlap", PolicyKind::Lru, true, true),
+    for (name, policy, spec, workers) in [
+        ("e2e/native/lru", PolicyKind::Lru, false, 0),
+        ("e2e/native/lfu", PolicyKind::Lfu, false, 0),
+        ("e2e/native/lfu-aged", PolicyKind::LfuAged, false, 0),
+        ("e2e/native/lru+spec", PolicyKind::Lru, true, 0),
+        ("e2e/native/lru+spec+pipeline1", PolicyKind::Lru, true, 1),
+        ("e2e/native/lru+spec+pipeline4", PolicyKind::Lru, true, 4),
     ] {
-        bench_config(&mut b, name, &weights, &native, policy, spec, overlap, 16);
+        bench_config(&mut b, name, &weights, &native, policy, spec, workers, 16);
     }
 
     // PJRT path (opt-in: needs artifacts/)
@@ -81,8 +82,8 @@ fn main() {
                 Box::new(PjrtBackend::new(&artifacts, &aw).unwrap())
             }
         };
-        bench_config(&mut b, "e2e/pjrt/lfu", &aw, &make, PolicyKind::Lfu, false, false, 12);
-        bench_config(&mut b, "e2e/pjrt/lru+spec", &aw, &make, PolicyKind::Lru, true, false, 12);
+        bench_config(&mut b, "e2e/pjrt/lfu", &aw, &make, PolicyKind::Lfu, false, 0, 12);
+        bench_config(&mut b, "e2e/pjrt/lru+spec", &aw, &make, PolicyKind::Lru, true, 0, 12);
     }
 
     println!("{}", b.render());

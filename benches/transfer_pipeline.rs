@@ -1,0 +1,289 @@
+//! Bench: demand-miss stall time and decode tokens/s for the synchronous
+//! transfer path vs the 1-worker and N-worker async pipelines, plus the
+//! steady-state buffer-pool reuse rate (the zero-allocation criterion).
+//! Writes a `BENCH_transfer_pipeline.json` artifact (see EXPERIMENTS.md).
+//!
+//!     cargo bench --bench transfer_pipeline [-- --smoke]
+//!
+//! Part 1 replays a decode-shaped access pattern directly against the
+//! transfer layer with an oracle prefetcher (next step's experts are known),
+//! so the measured quantity is pure transfer-pipeline mechanics: how much
+//! demand-miss stall survives when dequantization can overlap the compute
+//! between layers. Part 2 runs the full engine end-to-end.
+
+use moe_offload::cache::PolicyKind;
+use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::model::sampler::{Sampler, Sampling};
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::ModelConfig;
+use moe_offload::offload::pipeline::{BufferPool, TransferPipeline};
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+use moe_offload::runtime::native::{expert_ffn_into, NativeBackend};
+use moe_offload::util::json::{self, Value};
+use moe_offload::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_WORKERS: usize = 4;
+
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 256,
+        hidden_size: 192,
+        n_layers: 4,
+        n_heads: 6,
+        n_experts: 8,
+        top_k: 2,
+        ffn_size: 768,
+        max_seq: 160,
+    }
+}
+
+/// Per-step demanded experts: `top_k` distinct experts per layer, with the
+/// mild temporal locality real gate traffic shows.
+fn demand_schedule(cfg: &ModelConfig, steps: usize, seed: u64) -> Vec<Vec<(usize, usize)>> {
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|_| {
+            let mut step = Vec::new();
+            for l in 0..cfg.n_layers {
+                let first = rng.below(cfg.n_experts);
+                let mut second = rng.below(cfg.n_experts);
+                while second == first {
+                    second = rng.below(cfg.n_experts);
+                }
+                step.push((l, first));
+                step.push((l, second));
+            }
+            step
+        })
+        .collect()
+}
+
+/// Fixed per-step compute (the work transfers are supposed to hide behind).
+struct ComputeLoad {
+    h: Vec<f32>,
+    w1: Vec<f32>,
+    w3: Vec<f32>,
+    w2: Vec<f32>,
+    a: Vec<f32>,
+    u: Vec<f32>,
+    out: Vec<f32>,
+    ffn: usize,
+    iters: usize,
+}
+
+impl ComputeLoad {
+    fn new(store: &HostExpertStore, cfg: &ModelConfig, iters: usize) -> ComputeLoad {
+        let (w1, w3, w2) = store.fetch(0, 0);
+        ComputeLoad {
+            h: (0..cfg.hidden_size).map(|i| (i as f32 * 0.37).sin()).collect(),
+            w1,
+            w3,
+            w2,
+            a: Vec::new(),
+            u: Vec::new(),
+            out: vec![0.0; cfg.hidden_size],
+            ffn: cfg.ffn_size,
+            iters,
+        }
+    }
+
+    fn run(&mut self) {
+        for _ in 0..self.iters {
+            expert_ffn_into(
+                &self.h, &self.w1, &self.w3, &self.w2, self.ffn, &mut self.a, &mut self.u,
+                &mut self.out,
+            );
+        }
+        std::hint::black_box(&self.out);
+    }
+}
+
+/// Synchronous baseline: every demanded expert dequantizes on the critical
+/// path. Returns (total stall seconds, fetches performed).
+fn run_sync(
+    store: &Arc<HostExpertStore>,
+    pool: &Arc<BufferPool>,
+    schedule: &[Vec<(usize, usize)>],
+    compute: &mut ComputeLoad,
+) -> (f64, u64) {
+    let mut stall = 0.0;
+    let mut fetches = 0u64;
+    for step in schedule {
+        compute.run();
+        for &(l, e) in step {
+            let t0 = Instant::now();
+            let (w1, w3, w2) = store.fetch_pooled(pool, l, e);
+            stall += t0.elapsed().as_secs_f64();
+            fetches += 1;
+            pool.release(w1);
+            pool.release(w3);
+            pool.release(w2);
+        }
+    }
+    (stall, fetches)
+}
+
+/// Pipelined run with an oracle prefetcher: while computing step *s*, the
+/// workers dequantize step *s+1*'s experts; each demand then joins its
+/// prefetch. Returns (total stall seconds, completed transfers).
+fn run_pipelined(
+    store: &Arc<HostExpertStore>,
+    pool: &Arc<BufferPool>,
+    schedule: &[Vec<(usize, usize)>],
+    compute: &mut ComputeLoad,
+    workers: usize,
+) -> (f64, u64) {
+    let mut pipe = TransferPipeline::spawn(Arc::clone(store), Arc::clone(pool), workers);
+    let mut stall = 0.0;
+    for (i, step) in schedule.iter().enumerate() {
+        if let Some(next) = schedule.get(i + 1) {
+            for &(l, e) in next {
+                pipe.submit_prefetch(l, e);
+            }
+        }
+        compute.run();
+        for &(l, e) in step {
+            let t0 = Instant::now();
+            pipe.submit_demand(l, e);
+            let r = pipe.wait_for(l, e).expect("pipeline result");
+            stall += t0.elapsed().as_secs_f64();
+            pool.release(r.w1);
+            pool.release(r.w3);
+            pool.release(r.w2);
+        }
+        // results that belong to later steps stay stashed inside the
+        // pipeline and are consumed by their own wait_for
+    }
+    let completed = pipe.stats().completed;
+    (stall, completed)
+}
+
+/// End-to-end decode tokens/s through the full engine.
+fn run_engine(workers: usize, n_tokens: usize) -> (f64, moe_offload::metrics::PipelineStats) {
+    let cfg = bench_config();
+    let weights = Arc::new(generate_weights(cfg, 42));
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 }).unwrap());
+    let mut ecfg = EngineConfig::serving(4, PolicyKind::Lru, true);
+    ecfg.transfer_workers = workers;
+    let mut engine = InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, ecfg);
+    let mut sampler = Sampler::new(Sampling::Greedy, 0);
+    let t0 = Instant::now();
+    let out = engine.generate(&[1, 7, 42], n_tokens, &mut sampler).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(out.generated.len(), n_tokens);
+    ((out.tokens.len() as f64) / wall, engine.pipeline_stats())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (steps, compute_iters, gen_tokens) = if smoke { (12, 2, 16) } else { (60, 6, 140) };
+
+    let cfg = bench_config();
+    let weights = generate_weights(cfg, 42);
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 }).unwrap());
+    let schedule = demand_schedule(&cfg, steps, 7);
+    let mut compute = ComputeLoad::new(&store, &cfg, compute_iters);
+
+    // --- part 1: demand-miss stall, transfer layer only ------------------
+    // warmup pass populates the pool so the measured passes are steady-state
+    let pool = BufferPool::new();
+    let _ = run_sync(&store, &pool, &schedule[..steps.min(4)], &mut compute);
+    let (sync_stall, sync_fetches) = run_sync(&store, &pool, &schedule, &mut compute);
+    let (one_stall, one_completed) =
+        run_pipelined(&store, &pool, &schedule, &mut compute, 1);
+    let (n_stall, n_completed) =
+        run_pipelined(&store, &pool, &schedule, &mut compute, N_WORKERS);
+    let pool_reuse = pool.reuse_rate();
+
+    let speedup_1 = sync_stall / one_stall.max(1e-12);
+    let speedup_n = sync_stall / n_stall.max(1e-12);
+    println!("== transfer_pipeline: demand-miss stall ({steps} steps, int4) ==");
+    println!("sync:                {:>9.3} ms  ({sync_fetches} fetches)", sync_stall * 1e3);
+    println!(
+        "pipeline 1 worker:   {:>9.3} ms  ({one_completed} transfers, {speedup_1:.2}x)",
+        one_stall * 1e3
+    );
+    println!(
+        "pipeline {N_WORKERS} workers:  {:>9.3} ms  ({n_completed} transfers, {speedup_n:.2}x)",
+        n_stall * 1e3
+    );
+    println!("pool reuse rate:     {:>9.1}%", pool_reuse * 100.0);
+
+    // --- part 2: end-to-end decode ---------------------------------------
+    let (tps_sync, _) = run_engine(0, gen_tokens);
+    let (tps_one, _) = run_engine(1, gen_tokens);
+    let (tps_n, pipe_stats) = run_engine(N_WORKERS, gen_tokens);
+    let engine_pool_reuse = pipe_stats.pool_reuse_rate();
+    println!("== transfer_pipeline: end-to-end decode ({gen_tokens} tokens) ==");
+    println!("tokens/s  sync {tps_sync:.1}   1-worker {tps_one:.1}   {N_WORKERS}-worker {tps_n:.1}");
+    println!(
+        "engine pool reuse {:.1}%  joins {}  cancelled {}  peak in-flight {}",
+        engine_pool_reuse * 100.0,
+        pipe_stats.demand_joined_prefetch,
+        pipe_stats.cancelled_prefetches,
+        pipe_stats.peak_in_flight
+    );
+
+    let artifact = Value::obj(vec![
+        ("bench", Value::from("transfer_pipeline")),
+        ("smoke", Value::from(smoke)),
+        ("scheme", Value::from("int4")),
+        ("steps", Value::from(steps)),
+        ("workers", Value::from(N_WORKERS)),
+        (
+            "demand_stall",
+            Value::obj(vec![
+                ("sync_s", Value::from(sync_stall)),
+                ("one_worker_s", Value::from(one_stall)),
+                ("n_worker_s", Value::from(n_stall)),
+                ("speedup_one_worker", Value::from(speedup_1)),
+                ("speedup_n_worker", Value::from(speedup_n)),
+            ]),
+        ),
+        (
+            "tokens_per_s",
+            Value::obj(vec![
+                ("sync", Value::from(tps_sync)),
+                ("one_worker", Value::from(tps_one)),
+                ("n_worker", Value::from(tps_n)),
+            ]),
+        ),
+        (
+            "pool",
+            Value::obj(vec![
+                ("transfer_layer_reuse_rate", Value::from(pool_reuse)),
+                ("engine_reuse_rate", Value::from(engine_pool_reuse)),
+                ("engine_allocs", Value::from(pipe_stats.pool_allocs as f64)),
+                ("engine_reuses", Value::from(pipe_stats.pool_reuses as f64)),
+            ]),
+        ),
+        (
+            "pipeline_counters",
+            Value::obj(vec![
+                ("demand_joined_prefetch", Value::from(pipe_stats.demand_joined_prefetch as f64)),
+                ("cancelled_prefetches", Value::from(pipe_stats.cancelled_prefetches as f64)),
+                ("peak_in_flight", Value::from(pipe_stats.peak_in_flight as f64)),
+                ("completed", Value::from(pipe_stats.completed as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_transfer_pipeline.json", json::to_string(&artifact))
+        .expect("write BENCH_transfer_pipeline.json");
+    println!("wrote BENCH_transfer_pipeline.json");
+
+    // smoke assertions keep CI honest without depending on machine speed
+    assert!(pool_reuse > 0.9, "transfer-layer pool reuse {pool_reuse} below 0.9");
+    assert!(sync_fetches > 0 && n_completed > 0);
+    // the full run IS the perf gate: the N-worker pipeline must cut
+    // demand-miss stall >= 2x vs the synchronous path (ISSUE acceptance
+    // bar; not enforced in --smoke where timings are too small to trust)
+    if !smoke {
+        assert!(
+            speedup_n >= 2.0,
+            "perf gate: {N_WORKERS}-worker stall speedup {speedup_n:.2}x < 2x vs sync"
+        );
+    }
+}

@@ -45,7 +45,7 @@ fn main() -> Result<()> {
             cache_capacity: 4,
             policy: PolicyKind::Lru,
             prefetch: PrefetchConfig { enabled: true, k: 2 },
-            overlap: false,
+            transfer_workers: 0,
             profile: hardware::by_name("A6000").unwrap(),
             seed: 0,
             record_trace: true,

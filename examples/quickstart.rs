@@ -75,7 +75,7 @@ fn main() -> Result<()> {
             cache_capacity: args.usize_or("capacity", 4)?,
             policy: PolicyKind::parse(&args.str_or("policy", "lfu")).unwrap(),
             prefetch: PrefetchConfig { enabled: args.bool("spec"), k: 2 },
-            overlap: false,
+            transfer_workers: 0,
             profile: hardware::by_name("A100").unwrap(),
             seed: 0,
             record_trace: true,

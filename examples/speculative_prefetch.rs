@@ -1,5 +1,5 @@
 //! Speculative expert pre-fetching demo (paper §3.2 / §5.4): run the live
-//! engine with speculation off vs on (vs on+overlap), print the paper's
+//! engine with speculation off vs on (vs on + transfer pipeline), print
 //! metrics and render the Figure-13/14-style per-token grids from the
 //! live trace.
 //!
@@ -27,7 +27,7 @@ fn run_once(
     weights: &Arc<Weights>,
     backend_kind: &str,
     spec: bool,
-    overlap: bool,
+    transfer_workers: usize,
     n: usize,
 ) -> Result<(GenerationOutput, f64)> {
     let backend: Box<dyn Backend> = match backend_kind {
@@ -42,7 +42,7 @@ fn run_once(
             cache_capacity: 4,
             policy: PolicyKind::Lru,
             prefetch: PrefetchConfig { enabled: spec, k: 2 },
-            overlap,
+            transfer_workers,
             profile: hardware::by_name("A6000").unwrap(),
             seed: 0,
             record_trace: true,
@@ -67,12 +67,12 @@ fn main() -> Result<()> {
         "config", "sim tok/s (A6000)", "hit-rate", "transferred MB", "spec P", "spec R",
     ]);
     let mut spec_trace = None;
-    for (name, spec, overlap) in [
-        ("baseline (no spec)", false, false),
-        ("speculative", true, false),
-        ("speculative+overlap", true, true),
+    for (name, spec, workers) in [
+        ("baseline (no spec)", false, 0),
+        ("speculative", true, 0),
+        ("speculative+pipeline", true, 2),
     ] {
-        let (out, _) = run_once(&artifacts, &weights, &backend_kind, spec, overlap, n)?;
+        let (out, _) = run_once(&artifacts, &weights, &backend_kind, spec, workers, n)?;
         table.row(&[
             name.to_string(),
             format!("{:.2}", out.throughput.tokens_per_s_sim()),
@@ -81,7 +81,7 @@ fn main() -> Result<()> {
             if spec { format!("{:.1}%", 100.0 * out.spec_pr.precision()) } else { "-".into() },
             if spec { format!("{:.1}%", 100.0 * out.spec_pr.recall()) } else { "-".into() },
         ]);
-        if spec && !overlap {
+        if spec && workers == 0 {
             spec_trace = out.trace;
         }
     }

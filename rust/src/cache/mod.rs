@@ -105,12 +105,22 @@ pub struct LayerCache<V> {
     policy: Box<dyn Policy>,
     tick: u64,
     pub stats: CacheStats,
+    /// Reused backing for the resident list handed to `Policy::victim`, so
+    /// a steady-state eviction performs no allocation.
+    victim_scratch: Vec<Expert>,
 }
 
 impl<V> LayerCache<V> {
     pub fn new(capacity: usize, policy: Box<dyn Policy>) -> Self {
         assert!(capacity > 0, "cache capacity must be > 0");
-        LayerCache { capacity, entries: Vec::with_capacity(capacity), policy, tick: 0, stats: CacheStats::default() }
+        LayerCache {
+            capacity,
+            entries: Vec::with_capacity(capacity),
+            policy,
+            tick: 0,
+            stats: CacheStats::default(),
+            victim_scratch: Vec::with_capacity(capacity),
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -163,10 +173,11 @@ impl<V> LayerCache<V> {
         }
         let mut evicted = None;
         if self.entries.len() >= self.capacity {
-            let resident = self.resident();
-            let victim = self.policy.victim(&resident, tick);
+            self.victim_scratch.clear();
+            self.victim_scratch.extend(self.entries.iter().map(|(k, _)| *k));
+            let victim = self.policy.victim(&self.victim_scratch, tick);
             assert!(
-                resident.contains(&victim),
+                self.victim_scratch.contains(&victim),
                 "policy {} returned non-resident victim {victim}",
                 self.policy.name()
             );

@@ -10,7 +10,9 @@
 //!      evicting per the configured policy (LRU/LFU/…),
 //!   5. optionally guess layer l+1's experts by applying its gate to this
 //!      layer's hidden states (speculative prefetch, §3.2) and transfer
-//!      them early — synchronously or via the overlap worker (§6.1),
+//!      them early — synchronously or via the multi-worker transfer
+//!      pipeline (§6.1), where demand misses preempt (or join) speculative
+//!      jobs and stale queued guesses are cancelled,
 //!   6. combine expert outputs with renormalized gate weights + residual.
 //!
 //! Wallclock is measured; simulated device time is charged to a [`SimClock`]
@@ -22,9 +24,9 @@ pub mod batch;
 pub mod selfcheck;
 
 use crate::cache::{ExpertCache, PolicyKind};
-use crate::metrics::{PrecisionRecall, SessionTally, Throughput};
+use crate::metrics::{PipelineStats, PrecisionRecall, SessionTally, Throughput};
 use crate::model::sampler::{top_k, Sampler};
-use crate::offload::overlap::OverlapWorker;
+use crate::offload::pipeline::{BufferPool, TransferPipeline};
 use crate::offload::prefetch::{PendingPrefetch, PrefetchConfig, TaggedGuess};
 use crate::offload::store::HostExpertStore;
 use crate::offload::transfer::TransferEngine;
@@ -49,8 +51,11 @@ pub struct EngineConfig {
     pub cache_capacity: usize,
     pub policy: PolicyKind,
     pub prefetch: PrefetchConfig,
-    /// Run prefetch dequantization on the overlap worker thread.
-    pub overlap: bool,
+    /// Dequant workers in the async transfer pipeline. `0` runs every
+    /// transfer synchronously on the engine thread; `>= 1` overlaps
+    /// dequantization with compute (demand misses preempt or join
+    /// speculative jobs — see `offload::pipeline`).
+    pub transfer_workers: usize,
     /// Hardware profile for the simulated clock.
     pub profile: HwProfile,
     pub seed: u64,
@@ -64,11 +69,21 @@ impl EngineConfig {
             cache_capacity: capacity,
             policy: PolicyKind::Lru,
             prefetch: PrefetchConfig::default(),
-            overlap: false,
+            transfer_workers: 0,
             profile: crate::sim::hardware::physical()[0],
             seed: 0,
             record_trace: true,
         }
+    }
+
+    /// Resolve the transfer-worker count from CLI flags — the one mapping
+    /// shared by every subcommand: `--transfer-workers N`, with the legacy
+    /// `--overlap` boolean meaning one worker.
+    pub fn transfer_workers_from(args: &crate::util::cliargs::Args) -> Result<usize> {
+        Ok(match args.usize_or("transfer-workers", 0)? {
+            0 if args.bool("overlap") => 1,
+            n => n,
+        })
     }
 
     /// Preset for the concurrent serve path: requested policy + capacity,
@@ -111,7 +126,10 @@ pub struct InferenceEngine {
     pub cfg: EngineConfig,
     cache: ExpertCache<ExpertHandle>,
     transfer: TransferEngine,
-    overlap: Option<OverlapWorker>,
+    pipeline: Option<TransferPipeline>,
+    /// Shared f32 buffer pool behind every dequantization (sync and
+    /// pipelined); evicted `ExpertHandle::Host` buffers recycle here.
+    pool: Arc<BufferPool>,
     clock: SimClock,
     /// In-flight prefetch transfers on the simulated bus, tagged with the
     /// issuing session so cross-session hits are attributable.
@@ -155,7 +173,10 @@ impl InferenceEngine {
             cfg.profile.compute_time(scale.dense_flops_per_token()) / mc.n_layers as f64;
         let expert_s = cfg.profile.compute_time(scale.expert_flops());
         let cache = ExpertCache::new(mc.n_layers, cfg.cache_capacity, cfg.policy, cfg.seed);
-        let overlap = (cfg.overlap).then(|| OverlapWorker::spawn(Arc::clone(&store)));
+        let pool = BufferPool::new();
+        let pipeline = (cfg.transfer_workers > 0).then(|| {
+            TransferPipeline::spawn(Arc::clone(&store), Arc::clone(&pool), cfg.transfer_workers)
+        });
         let trace = cfg
             .record_trace
             .then(|| Trace::new(mc.n_layers, mc.n_experts, mc.top_k));
@@ -163,8 +184,9 @@ impl InferenceEngine {
             backend,
             cfg,
             cache,
-            transfer: TransferEngine::new(Arc::clone(&store)),
-            overlap,
+            transfer: TransferEngine::new(Arc::clone(&store), Arc::clone(&pool)),
+            pipeline,
+            pool,
             clock: SimClock::new(),
             pending_prefetch: Vec::new(),
             spec_pr: PrecisionRecall::default(),
@@ -217,45 +239,120 @@ impl InferenceEngine {
                 .position(|p| p.layer == l && p.expert == e)
             {
                 let pending = self.pending_prefetch.swap_remove(i);
-                let now = self.clock.now();
-                if pending.done_at > now {
-                    self.clock.advance(pending.done_at - now);
-                } else {
-                    ev.hidden_transfers += 1;
-                }
-                self.cache.layers[l].stats.prefetch_hits += 1;
-                if pending.session != session {
-                    // another session's speculation paid for this transfer:
-                    // the shared cache amortized it across sessions
-                    self.cross_session_prefetch_hits += 1;
-                }
+                self.credit_prefetch(session, l, pending, ev);
             }
             return Ok(true);
         }
-        // miss: demand transfer, fully on the critical path. Any pending
-        // prefetch record for this expert is stale (its product was
-        // evicted before use) — the demand transfer supersedes it.
-        self.drop_pending_prefetch(l, e);
+        // miss: demand transfer on the critical path. The pending prefetch
+        // record for this expert (if any) is consumed here: when the demand
+        // JOINS that still-in-flight prefetch, its simulated bus slot was
+        // already reserved at issue time and only the residual is charged;
+        // otherwise the record is stale (its product was evicted before
+        // use) and the demand transfer supersedes it.
         ev.misses += 1;
-        let handle = if let Some(w) = &mut self.overlap {
-            // an in-flight overlap prefetch may already have dequantized it
-            if let Some(r) = w.wait_for(l, e) {
-                self.backend.upload_expert(r.w1, r.w3, r.w2)?
-            } else {
-                let (h, _) = self.transfer.fetch(self.backend.as_ref(), l, e)?;
-                h
+        let pending = self
+            .pending_prefetch
+            .iter()
+            .position(|p| p.layer == l && p.expert == e)
+            .map(|i| self.pending_prefetch.swap_remove(i));
+        let mut joined = false;
+        let handle = if let Some(p) = &mut self.pipeline {
+            // joins an in-flight prefetch of the same expert (no second
+            // fetch) or enqueues at demand priority, ahead of every
+            // speculative job
+            joined = p.submit_demand(l, e);
+            match p.wait_for(l, e) {
+                Some(r) => {
+                    let t0 = Instant::now();
+                    let h = self.backend.upload_expert(r.w1, r.w3, r.w2)?;
+                    self.transfer.record_upload_ns(t0.elapsed().as_nanos() as u64);
+                    if !joined {
+                        // fresh demand: its bus reservation happens below;
+                        // a joined prefetch recorded its bytes at issue
+                        self.transfer.record_scheduled();
+                    }
+                    h
+                }
+                // every worker died: degrade to the synchronous path
+                None => {
+                    if joined {
+                        // the joined prefetch recorded these bytes at issue
+                        // and fetch() will record them again — cancel the
+                        // issue-time record so volume stays exact even here
+                        self.transfer.stats.transfers =
+                            self.transfer.stats.transfers.saturating_sub(1);
+                        self.transfer.stats.bytes = self
+                            .transfer
+                            .stats
+                            .bytes
+                            .saturating_sub(self.store.expert_transfer_bytes() as u64);
+                    }
+                    self.transfer.fetch(self.backend.as_ref(), l, e)?.0
+                }
             }
         } else {
-            let (h, _) = self.transfer.fetch(self.backend.as_ref(), l, e)?;
-            h
+            self.transfer.fetch(self.backend.as_ref(), l, e)?.0
         };
-        let now = self.clock.now();
-        let done = self.transfer.schedule_bus(now, self.transfer_s());
-        self.clock.advance(done - now);
-        if let Some((victim, _)) = self.cache.layers[l].insert(e, handle) {
-            self.drop_pending_prefetch(l, victim);
+        match pending {
+            // joined prefetch: the bus already carries this transfer — wait
+            // out the residual, no second reservation (no double charge).
+            // The prefetch DID satisfy this demand, so it earns the same
+            // credit as when the worker finishes first (otherwise the
+            // prefetch-hit counters would vary with worker timing).
+            Some(p) if joined => self.credit_prefetch(session, l, p, ev),
+            // fresh (or superseding) demand transfer: full bus reservation
+            _ => {
+                let now = self.clock.now();
+                let done = self.transfer.schedule_bus(now, self.transfer_s());
+                self.clock.advance(done - now);
+            }
+        }
+        if let Some((victim, evicted)) = self.cache.layers[l].insert(e, handle) {
+            self.handle_eviction(l, victim, evicted);
         }
         Ok(false)
+    }
+
+    /// Credit one consumed prefetch record — the ONE accounting used both
+    /// when the prefetched expert is already resident and when a demand
+    /// joins it still in flight, so the counters cannot drift with worker
+    /// timing: residual simulated-bus wait (or a fully hidden transfer),
+    /// a prefetch hit, and cross-session attribution.
+    fn credit_prefetch(
+        &mut self,
+        session: u64,
+        l: usize,
+        pending: PendingPrefetch,
+        ev: &mut TokenEvents,
+    ) {
+        let now = self.clock.now();
+        if pending.done_at > now {
+            self.clock.advance(pending.done_at - now);
+        } else {
+            ev.hidden_transfers += 1;
+        }
+        self.cache.layers[l].stats.prefetch_hits += 1;
+        if pending.session != session {
+            // another session's speculation paid for this transfer: the
+            // shared cache amortized it across sessions
+            self.cross_session_prefetch_hits += 1;
+        }
+    }
+
+    /// Bookkeeping when `victim` leaves layer `l`'s cache: stale prefetch
+    /// records die and host-resident buffers recycle into the pool. (No
+    /// pipeline cancellation here: a queued prefetch can only exist for a
+    /// NON-resident expert — `prefetch` peeks first and every delivery
+    /// untracks before inserting — so an eviction victim structurally
+    /// cannot have one; queued-prefetch cancellation happens at guess
+    /// supersession instead.)
+    fn handle_eviction(&mut self, l: usize, victim: usize, evicted: ExpertHandle) {
+        self.drop_pending_prefetch(l, victim);
+        if let ExpertHandle::Host { w1, w3, w2 } = evicted {
+            self.pool.release(w1);
+            self.pool.release(w3);
+            self.pool.release(w2);
+        }
     }
 
     /// Issue speculative prefetches for `next_layer` on behalf of `session`.
@@ -266,9 +363,21 @@ impl InferenceEngine {
         guesses: &[usize],
         ev: &mut TokenEvents,
     ) -> Result<()> {
+        // a fresh guess round supersedes stale queued guesses for this
+        // layer: cancel them before a worker wastes a slot
+        let superseded = match &mut self.pipeline {
+            Some(p) => p.cancel_superseded(next_layer, guesses),
+            None => Vec::new(),
+        };
+        for e in superseded {
+            self.drop_pending_prefetch(next_layer, e);
+        }
         for &e in guesses {
             if self.cache.layers[next_layer].peek(e).is_some() {
                 continue; // already resident: free
+            }
+            if self.pipeline.as_ref().is_some_and(|p| p.in_flight(next_layer, e)) {
+                continue; // already being fetched: joining is free too
             }
             // transfer early; simulated completion is bus-serialized but NOT
             // awaited — compute continues (overlap)
@@ -282,16 +391,18 @@ impl InferenceEngine {
                 expert: e,
                 done_at: done,
             });
-            let handle = if let Some(w) = &mut self.overlap {
-                w.submit(next_layer, e);
-                None // uploaded lazily when collected or demanded
-            } else {
-                let (h, _) = self.transfer.fetch(self.backend.as_ref(), next_layer, e)?;
-                Some(h)
-            };
-            if let Some(h) = handle {
-                if let Some((victim, _)) = self.cache.layers[next_layer].insert(e, h) {
-                    self.drop_pending_prefetch(next_layer, victim);
+            match &mut self.pipeline {
+                Some(p) => {
+                    p.submit_prefetch(next_layer, e); // uploaded when collected or demanded
+                    // bytes are accounted at reservation time (parity with
+                    // the sync branch, whose fetch() records them)
+                    self.transfer.record_scheduled();
+                }
+                None => {
+                    let (h, _) = self.transfer.fetch(self.backend.as_ref(), next_layer, e)?;
+                    if let Some((victim, evicted)) = self.cache.layers[next_layer].insert(e, h) {
+                        self.handle_eviction(next_layer, victim, evicted);
+                    }
                 }
             }
             ev.wasted_prefetches += 1; // provisional; settled below
@@ -299,16 +410,19 @@ impl InferenceEngine {
         Ok(())
     }
 
-    /// Collect overlap-worker results and upload them into the cache.
-    fn collect_overlap(&mut self) -> Result<()> {
-        let ready = match &mut self.overlap {
-            Some(w) => w.collect_ready(),
+    /// Collect finished pipeline transfers and upload them into the cache.
+    fn collect_transfers(&mut self) -> Result<()> {
+        let ready = match &mut self.pipeline {
+            Some(p) => p.collect_ready(),
             None => return Ok(()),
         };
         for r in ready {
+            let t0 = Instant::now();
             let handle = self.backend.upload_expert(r.w1, r.w3, r.w2)?;
-            if let Some((victim, _)) = self.cache.layers[r.layer].insert(r.expert, handle) {
-                self.drop_pending_prefetch(r.layer, victim);
+            // bytes were recorded when the prefetch reserved the bus
+            self.transfer.record_upload_ns(t0.elapsed().as_nanos() as u64);
+            if let Some((victim, evicted)) = self.cache.layers[r.layer].insert(r.expert, handle) {
+                self.handle_eviction(r.layer, victim, evicted);
             }
         }
         Ok(())
@@ -383,7 +497,7 @@ impl InferenceEngine {
         let mc = *self.backend.config();
         let mut x = self.backend.embed(tok)?;
         for l in 0..mc.n_layers {
-            self.collect_overlap()?;
+            self.collect_transfers()?;
             let x_res = self.backend.attn(l, &x, kv, pos)?;
             self.clock.advance(self.dense_s_per_layer);
             let (h, probs) = self.backend.router(l, &x_res)?;
@@ -525,6 +639,18 @@ impl InferenceEngine {
     }
     pub fn spec_precision_recall(&self) -> PrecisionRecall {
         self.spec_pr
+    }
+    /// Transfer-pipeline queue counters plus buffer-pool accounting
+    /// (`workers == 0` on the synchronous path — the pool still applies).
+    pub fn pipeline_stats(&self) -> PipelineStats {
+        match &self.pipeline {
+            Some(p) => p.stats(),
+            None => PipelineStats {
+                pool_allocs: self.pool.allocs(),
+                pool_reuses: self.pool.reuses(),
+                ..PipelineStats::default()
+            },
+        }
     }
     pub fn take_trace(&mut self) -> Option<Trace> {
         self.trace.take()

@@ -160,7 +160,7 @@ pub fn check_decode(
             cache_capacity: mc.n_experts, // full cache: no eviction noise
             policy: PolicyKind::Lru,
             prefetch: PrefetchConfig::default(),
-            overlap: false,
+            transfer_workers: 0,
             profile: crate::sim::hardware::physical()[0],
             seed: 0,
             record_trace: true,

@@ -5,10 +5,12 @@
 //!   generate   decode a prompt through the offloading engine
 //!   simulate   trace-driven cache-policy comparison + cost model
 //!   serve      concurrent HTTP serving front (see rust/src/serve/):
-//!              --max-sessions N  sessions interleaved on the engine worker
-//!              --queue-depth N   bounded admission queue (503 beyond it)
-//!              --synthetic       seeded synthetic weights + native backend,
-//!                                so serving works from a clean checkout
+//!              --max-sessions N      sessions interleaved on the engine worker
+//!              --queue-depth N       bounded admission queue (503 beyond it)
+//!              --transfer-workers N  async dequant pipeline workers (0 = sync;
+//!                                    legacy --overlap = 1)
+//!              --synthetic           seeded synthetic weights + native backend,
+//!                                    so serving works from a clean checkout
 //!   figures    regenerate every paper table/figure into --out-dir
 
 use anyhow::{bail, Result};
@@ -110,7 +112,7 @@ fn engine_from_args(args: &Args, loaded: &Loaded) -> Result<InferenceEngine> {
         cache_capacity: args.usize_or("capacity", 4)?,
         policy,
         prefetch: PrefetchConfig { enabled: args.bool("spec"), k: args.usize_or("spec-k", 2)? },
-        overlap: args.bool("overlap"),
+        transfer_workers: EngineConfig::transfer_workers_from(args)?,
         profile,
         seed: args.usize_or("seed", 0)? as u64,
         record_trace: true,

@@ -106,6 +106,45 @@ impl SessionTally {
     }
 }
 
+/// Transfer-pipeline counters (`offload::pipeline`): queue behaviour of the
+/// multi-worker dequant pipeline plus the shared buffer pool's allocation
+/// accounting. `workers == 0` means the engine ran the synchronous path
+/// (the pool counters still apply — the sync path draws from the same pool).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineStats {
+    pub workers: u64,
+    /// Jobs enqueued at demand priority (misses with nothing to join).
+    pub submitted_demand: u64,
+    /// Jobs enqueued at prefetch priority.
+    pub submitted_prefetch: u64,
+    /// Results delivered back to the engine.
+    pub completed: u64,
+    /// Demand misses that joined an in-flight prefetch of the same expert
+    /// instead of double-fetching.
+    pub demand_joined_prefetch: u64,
+    /// Queued prefetches cancelled before a worker started them (guess
+    /// superseded or target evicted).
+    pub cancelled_prefetches: u64,
+    /// High-water mark of jobs submitted-but-uncollected.
+    pub peak_in_flight: u64,
+    /// Buffer-pool acquires served by a fresh allocation.
+    pub pool_allocs: u64,
+    /// Buffer-pool acquires served by recycling.
+    pub pool_reuses: u64,
+}
+
+impl PipelineStats {
+    /// Fraction of buffer acquires served without allocating (the
+    /// steady-state zero-allocation criterion; 0.0 if the pool was unused).
+    pub fn pool_reuse_rate(&self) -> f64 {
+        let total = self.pool_allocs + self.pool_reuses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.pool_reuses as f64 / total as f64
+    }
+}
+
 /// Host->device transfer accounting (bytes that crossed the simulated PCIe).
 #[derive(Clone, Debug, Default)]
 pub struct TransferStats {

@@ -1,8 +1,10 @@
 //! MoE offloading: the host-side expert store (quantized "main memory"),
 //! the transfer engine that moves experts onto the (simulated) device, the
-//! speculative prefetcher (paper §3.2), and the overlap worker (§6.1).
+//! speculative prefetcher (paper §3.2), and the multi-worker transfer
+//! pipeline that overlaps dequantization with compute (§6.1) without
+//! letting speculation compete with demand misses for workers.
 
-pub mod overlap;
+pub mod pipeline;
 pub mod predictor;
 pub mod prefetch;
 pub mod store;

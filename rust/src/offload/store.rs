@@ -7,6 +7,7 @@
 //! what crosses the simulated PCIe bus.
 
 use crate::model::Weights;
+use crate::offload::pipeline::BufferPool;
 use crate::quant::{QTensor, Scheme};
 use anyhow::Result;
 
@@ -65,10 +66,50 @@ impl HostExpertStore {
         &self.entries[layer * self.n_experts + expert]
     }
 
-    /// Dequantize one expert to f32 (the CPU half of a transfer).
+    /// Dequantize one expert to f32 (the CPU half of a transfer),
+    /// allocating fresh buffers. Prefer [`HostExpertStore::fetch_into`] with
+    /// pooled buffers on the hot path.
     pub fn fetch(&self, layer: usize, expert: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let e = self.entry(layer, expert);
         (e.w1.dequantize(), e.w3.dequantize(), e.w2.dequantize())
+    }
+
+    /// Dequantize one expert into buffers acquired from `pool` — the
+    /// allocation-free transfer path shared by the synchronous engine, the
+    /// pipeline workers, and the benches. The returned buffers go back to
+    /// the pool via `release` (or via the cache's eviction path once they
+    /// become an `ExpertHandle::Host`).
+    pub fn fetch_pooled(
+        &self,
+        pool: &BufferPool,
+        layer: usize,
+        expert: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let e = self.entry(layer, expert);
+        let mut w1 = pool.acquire(e.w1.len);
+        let mut w3 = pool.acquire(e.w3.len);
+        let mut w2 = pool.acquire(e.w2.len);
+        // exact-length pooled buffers make fetch_into's resize a no-op
+        self.fetch_into(layer, expert, &mut w1, &mut w3, &mut w2);
+        (w1, w3, w2)
+    }
+
+    /// Dequantize one expert into caller-provided buffers (resized to fit;
+    /// a no-op after warmup when the buffers come from a
+    /// [`BufferPool`]). This is the resize-tolerant variant of
+    /// [`HostExpertStore::fetch_pooled`].
+    pub fn fetch_into(
+        &self,
+        layer: usize,
+        expert: usize,
+        w1: &mut Vec<f32>,
+        w3: &mut Vec<f32>,
+        w2: &mut Vec<f32>,
+    ) {
+        let e = self.entry(layer, expert);
+        e.w1.dequantize_resize(w1);
+        e.w3.dequantize_resize(w3);
+        e.w2.dequantize_resize(w2);
     }
 
     /// Quantized bytes of one expert — the unit of PCIe traffic.
@@ -104,6 +145,19 @@ mod tests {
         assert_eq!(w1.len(), 32 * 64);
         assert_eq!(w3.len(), 32 * 64);
         assert_eq!(w2.len(), 64 * 32);
+    }
+
+    #[test]
+    fn fetch_into_matches_fetch() {
+        let w = weights();
+        let s = HostExpertStore::build(&w, Scheme::Int4 { block: 16 }).unwrap();
+        let (a1, a3, a2) = s.fetch(1, 2);
+        // deliberately mis-sized buffers: fetch_into resizes
+        let (mut b1, mut b3, mut b2) = (Vec::new(), vec![0.0f32; 7], vec![1.0f32; 9999]);
+        s.fetch_into(1, 2, &mut b1, &mut b3, &mut b2);
+        assert_eq!(a1, b1);
+        assert_eq!(a3, b3);
+        assert_eq!(a2, b2);
     }
 
     #[test]

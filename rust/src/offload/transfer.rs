@@ -9,6 +9,7 @@
 //! is exactly the §6.1 "competes for bandwidth" effect.
 
 use crate::metrics::TransferStats;
+use crate::offload::pipeline::BufferPool;
 use crate::offload::store::HostExpertStore;
 use crate::runtime::{Backend, ExpertHandle};
 use anyhow::Result;
@@ -26,16 +27,20 @@ pub struct TransferReceipt {
 pub struct TransferEngine {
     pub store: Arc<HostExpertStore>,
     pub stats: TransferStats,
+    /// Shared f32 buffer pool: dequant targets come from here and return
+    /// here when the cache evicts the resulting `ExpertHandle::Host`.
+    pool: Arc<BufferPool>,
     /// Simulated time at which the PCIe bus becomes free.
     bus_free_at: f64,
 }
 
 impl TransferEngine {
-    pub fn new(store: Arc<HostExpertStore>) -> Self {
-        TransferEngine { store, stats: TransferStats::default(), bus_free_at: 0.0 }
+    pub fn new(store: Arc<HostExpertStore>, pool: Arc<BufferPool>) -> Self {
+        TransferEngine { store, stats: TransferStats::default(), pool, bus_free_at: 0.0 }
     }
 
-    /// Perform the real transfer work (dequant + upload).
+    /// Perform the real transfer work (dequant into pooled buffers +
+    /// upload).
     pub fn fetch(
         &mut self,
         backend: &dyn Backend,
@@ -43,7 +48,7 @@ impl TransferEngine {
         expert: usize,
     ) -> Result<(ExpertHandle, TransferReceipt)> {
         let t0 = Instant::now();
-        let (w1, w3, w2) = self.store.fetch(layer, expert);
+        let (w1, w3, w2) = self.store.fetch_pooled(&self.pool, layer, expert);
         let dequant_ns = t0.elapsed().as_nanos() as u64;
 
         let t1 = Instant::now();
@@ -55,6 +60,23 @@ impl TransferEngine {
         self.stats.dequant_ns += dequant_ns;
         self.stats.upload_ns += upload_ns;
         Ok((handle, TransferReceipt { bytes, dequant_ns, upload_ns }))
+    }
+
+    /// Account one expert's bytes at simulated-bus reservation time. Byte
+    /// accounting is tied to bus reservations, not dequant completions, so
+    /// sync and pipelined runs report identical transfer volume: a
+    /// pipelined prefetch records here at issue (even if its queued job is
+    /// later cancelled — the bus reservation stands), and a demand that
+    /// *joins* it records nothing further.
+    pub fn record_scheduled(&mut self) {
+        let bytes = self.store.expert_transfer_bytes();
+        self.stats.record(bytes);
+    }
+
+    /// Account the engine-thread upload half of a pipeline-delivered
+    /// transfer (bytes were recorded at reservation time).
+    pub fn record_upload_ns(&mut self, upload_ns: u64) {
+        self.stats.upload_ns += upload_ns;
     }
 
     /// Reserve the simulated bus for a transfer of `dur` seconds starting
@@ -81,7 +103,7 @@ mod tests {
     fn engine() -> (TransferEngine, NativeBackend) {
         let w = Arc::new(synth_weights(ModelConfig::TINY, |_, i| (i % 7) as f32 * 0.01));
         let store = Arc::new(HostExpertStore::build(&w, Scheme::Int8 { block: 16 }).unwrap());
-        (TransferEngine::new(store), NativeBackend::new(w))
+        (TransferEngine::new(store, BufferPool::new()), NativeBackend::new(w))
     }
 
     #[test]
@@ -92,6 +114,25 @@ mod tests {
         assert_eq!(receipt.bytes, te.store.expert_transfer_bytes());
         assert_eq!(te.stats.transfers, 1);
         assert_eq!(te.stats.bytes, receipt.bytes as u64);
+    }
+
+    #[test]
+    fn pooled_fetch_recycles_released_buffers() {
+        let w = Arc::new(synth_weights(ModelConfig::TINY, |_, i| (i % 7) as f32 * 0.01));
+        let store = Arc::new(HostExpertStore::build(&w, Scheme::Int8 { block: 16 }).unwrap());
+        let pool = BufferPool::new();
+        let mut te = TransferEngine::new(store, Arc::clone(&pool));
+        let be = NativeBackend::new(w);
+        let (h, _) = te.fetch(&be, 0, 0).unwrap();
+        assert_eq!(pool.allocs(), 3);
+        // recycle the handle's buffers the way the cache-eviction path does
+        let ExpertHandle::Host { w1, w3, w2 } = h else { panic!("native handle") };
+        pool.release(w1);
+        pool.release(w3);
+        pool.release(w2);
+        let _ = te.fetch(&be, 0, 1).unwrap();
+        assert_eq!(pool.allocs(), 3, "steady state must not allocate");
+        assert_eq!(pool.reuses(), 3);
     }
 
     #[test]

@@ -168,6 +168,14 @@ impl QTensor {
         out
     }
 
+    /// Dequantize into a reusable buffer, resizing it to `len` first. With
+    /// a recycled buffer of the right capacity the resize is free, so the
+    /// steady-state transfer path performs no allocation.
+    pub fn dequantize_resize(&self, out: &mut Vec<f32>) {
+        out.resize(self.len, 0.0);
+        self.dequantize_into(out);
+    }
+
     /// Actual storage footprint in bytes (codes + params + raw).
     pub fn storage_bytes(&self) -> usize {
         self.codes.len() + self.params.len() * 8 + self.raw.len() * 4
@@ -224,6 +232,18 @@ mod tests {
         let d = data(17, 4);
         let q = QTensor::quantize(&d, Scheme::Int4 { block: 16 });
         assert_eq!(q.dequantize().len(), 17);
+    }
+
+    #[test]
+    fn dequantize_resize_matches_and_reuses_capacity() {
+        let d = data(128, 6);
+        let q = QTensor::quantize(&d, Scheme::Int8 { block: 16 });
+        let mut buf = vec![9.0f32; 7];
+        q.dequantize_resize(&mut buf);
+        assert_eq!(buf, q.dequantize());
+        let cap = buf.capacity();
+        q.dequantize_resize(&mut buf);
+        assert_eq!(buf.capacity(), cap, "same-size refill must not grow");
     }
 
     #[test]

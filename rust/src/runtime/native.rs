@@ -9,17 +9,55 @@
 use super::{Backend, ExpertHandle, KvState};
 use crate::model::{ModelConfig, Weights};
 use anyhow::{bail, Result};
+use std::cell::RefCell;
 use std::sync::Arc;
+
+/// Reusable intermediates for the per-token hot path. `attn`, `spec_router`
+/// and `expert` run once per (token, layer[, expert]) and used to allocate
+/// every temporary; the scratch keeps them alive across calls so the only
+/// steady-state allocations left are the owned return values the
+/// [`Backend`] trait requires. Behind a `RefCell` because the trait takes
+/// `&self` and exactly one engine thread drives a backend.
+struct Scratch {
+    hn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    scores: Vec<f32>,
+    proj: Vec<f32>,
+    ffn_a: Vec<f32>,
+    ffn_u: Vec<f32>,
+}
+
+impl Scratch {
+    fn new(cfg: &ModelConfig) -> Scratch {
+        let h = cfg.hidden_size;
+        Scratch {
+            hn: vec![0.0; h],
+            q: vec![0.0; h],
+            k: vec![0.0; h],
+            v: vec![0.0; h],
+            attn_out: vec![0.0; h],
+            scores: Vec::with_capacity(cfg.max_seq),
+            proj: vec![0.0; h],
+            ffn_a: vec![0.0; cfg.ffn_size],
+            ffn_u: vec![0.0; cfg.ffn_size],
+        }
+    }
+}
 
 pub struct NativeBackend {
     weights: Arc<Weights>,
     cfg: ModelConfig,
+    scratch: RefCell<Scratch>,
 }
 
 impl NativeBackend {
     pub fn new(weights: Arc<Weights>) -> Self {
         let cfg = weights.config;
-        NativeBackend { weights, cfg }
+        let scratch = RefCell::new(Scratch::new(&cfg));
+        NativeBackend { weights, cfg, scratch }
     }
 
     pub fn weights(&self) -> &Weights {
@@ -32,6 +70,12 @@ impl NativeBackend {
 // ---------------------------------------------------------------------------
 
 /// y[j] = sum_i x[i] * w[i, j]  — vector–matrix product, w: [n, m].
+///
+/// The inner loop is unrolled 4-wide with `chunks_exact` so the
+/// accumulations auto-vectorize; per-element results are bit-identical to
+/// the naive loop because each `out[j]` still receives exactly one
+/// `xi * w[i][j]` per row, in row order (asserted by
+/// `vecmat_unrolled_matches_naive`).
 pub fn vecmat(x: &[f32], w: &[f32], m: usize, out: &mut [f32]) {
     let n = x.len();
     debug_assert_eq!(w.len(), n * m);
@@ -44,7 +88,15 @@ pub fn vecmat(x: &[f32], w: &[f32], m: usize, out: &mut [f32]) {
             continue;
         }
         let row = &w[i * m..(i + 1) * m];
-        for (o, &wv) in out.iter_mut().zip(row) {
+        let mut oc = out.chunks_exact_mut(4);
+        let mut rc = row.chunks_exact(4);
+        for (o4, r4) in oc.by_ref().zip(rc.by_ref()) {
+            o4[0] += xi * r4[0];
+            o4[1] += xi * r4[1];
+            o4[2] += xi * r4[2];
+            o4[3] += xi * r4[3];
+        }
+        for (o, &wv) in oc.into_remainder().iter_mut().zip(rc.remainder()) {
             *o += xi * wv;
         }
     }
@@ -88,16 +140,35 @@ fn rope_inplace(v: &mut [f32], pos: usize, theta: f32) {
     }
 }
 
-/// SwiGLU expert FFN on host weights: `(silu(h@w1) * (h@w3)) @ w2`.
-pub fn expert_ffn(h: &[f32], w1: &[f32], w3: &[f32], w2: &[f32], f: usize, out: &mut [f32]) {
-    let mut a = vec![0.0f32; f];
-    let mut u = vec![0.0f32; f];
-    vecmat(h, w1, f, &mut a);
-    vecmat(h, w3, f, &mut u);
+/// SwiGLU expert FFN on host weights: `(silu(h@w1) * (h@w3)) @ w2`, writing
+/// through caller-provided intermediates (resized to `f`; allocation-free
+/// when recycled across calls).
+#[allow(clippy::too_many_arguments)]
+pub fn expert_ffn_into(
+    h: &[f32],
+    w1: &[f32],
+    w3: &[f32],
+    w2: &[f32],
+    f: usize,
+    a: &mut Vec<f32>,
+    u: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    a.resize(f, 0.0);
+    u.resize(f, 0.0);
+    vecmat(h, w1, f, a);
+    vecmat(h, w3, f, u);
     for (av, &uv) in a.iter_mut().zip(u.iter()) {
         *av = silu(*av) * uv;
     }
-    vecmat(&a, w2, out.len(), out);
+    vecmat(a, w2, out.len(), out);
+}
+
+/// SwiGLU expert FFN allocating its own intermediates (tests/benches).
+pub fn expert_ffn(h: &[f32], w1: &[f32], w3: &[f32], w2: &[f32], f: usize, out: &mut [f32]) {
+    let mut a = vec![0.0f32; f];
+    let mut u = vec![0.0f32; f];
+    expert_ffn_into(h, w1, w3, w2, f, &mut a, &mut u, out);
 }
 
 // ---------------------------------------------------------------------------
@@ -133,36 +204,34 @@ impl Backend for NativeBackend {
             bail!("pos {pos} >= max_seq {s}");
         }
         let (kc, vc) = &mut kv.0[layer];
+        let mut scratch = self.scratch.borrow_mut();
+        let Scratch { hn, q, k, v, attn_out, scores, proj, .. } = &mut *scratch;
 
         let ln1 = self.weights.layer(layer, "ln1")?;
-        let mut hn = vec![0.0f32; h];
-        rmsnorm(x, ln1, RMS_EPS, &mut hn);
+        rmsnorm(x, ln1, RMS_EPS, hn);
 
-        let mut q = vec![0.0f32; h];
-        let mut k = vec![0.0f32; h];
-        let mut v = vec![0.0f32; h];
-        vecmat(&hn, self.weights.layer(layer, "wq")?, h, &mut q);
-        vecmat(&hn, self.weights.layer(layer, "wk")?, h, &mut k);
-        vecmat(&hn, self.weights.layer(layer, "wv")?, h, &mut v);
+        vecmat(hn, self.weights.layer(layer, "wq")?, h, q);
+        vecmat(hn, self.weights.layer(layer, "wk")?, h, k);
+        vecmat(hn, self.weights.layer(layer, "wv")?, h, v);
         for hh in 0..nh {
             rope_inplace(&mut q[hh * hd..(hh + 1) * hd], pos, ROPE_THETA);
             rope_inplace(&mut k[hh * hd..(hh + 1) * hd], pos, ROPE_THETA);
         }
         // cache rows are [pos][head][dim] flattened as pos*h + head*hd + d
-        kc[pos * h..(pos + 1) * h].copy_from_slice(&k);
-        vc[pos * h..(pos + 1) * h].copy_from_slice(&v);
+        kc[pos * h..(pos + 1) * h].copy_from_slice(k);
+        vc[pos * h..(pos + 1) * h].copy_from_slice(v);
 
         // attention per head over positions 0..=pos
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut attn_out = vec![0.0f32; h];
-        let mut scores = vec![0.0f32; pos + 1];
+        attn_out.fill(0.0);
+        scores.resize(pos + 1, 0.0);
         for hh in 0..nh {
             let qh = &q[hh * hd..(hh + 1) * hd];
             for (p, sc) in scores.iter_mut().enumerate() {
                 let kh = &kc[p * h + hh * hd..p * h + (hh + 1) * hd];
                 *sc = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
             }
-            softmax_inplace(&mut scores);
+            softmax_inplace(scores);
             let oh = &mut attn_out[hh * hd..(hh + 1) * hd];
             for (p, &w) in scores.iter().enumerate() {
                 let vh = &vc[p * h + hh * hd..p * h + (hh + 1) * hd];
@@ -171,9 +240,8 @@ impl Backend for NativeBackend {
                 }
             }
         }
-        let mut proj = vec![0.0f32; h];
-        vecmat(&attn_out, self.weights.layer(layer, "wo")?, h, &mut proj);
-        Ok(x.iter().zip(&proj).map(|(a, b)| a + b).collect())
+        vecmat(attn_out, self.weights.layer(layer, "wo")?, h, proj);
+        Ok(x.iter().zip(proj.iter()).map(|(a, b)| a + b).collect())
     }
 
     fn router(&self, layer: usize, x_res: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
@@ -187,7 +255,16 @@ impl Backend for NativeBackend {
     }
 
     fn spec_router(&self, layer: usize, x_res: &[f32]) -> Result<Vec<f32>> {
-        Ok(self.router(layer, x_res)?.1)
+        // same math as `router`, but the normed hidden states land in
+        // scratch (only the probs are returned, so only they allocate)
+        let c = &self.cfg;
+        let mut scratch = self.scratch.borrow_mut();
+        let Scratch { hn, .. } = &mut *scratch;
+        rmsnorm(x_res, self.weights.layer(layer, "ln2")?, RMS_EPS, hn);
+        let mut probs = vec![0.0f32; c.n_experts];
+        vecmat(hn, self.weights.layer(layer, "gate")?, c.n_experts, &mut probs);
+        softmax_inplace(&mut probs);
+        Ok(probs)
     }
 
     fn expert(&self, h: &[f32], handle: &ExpertHandle) -> Result<Vec<f32>> {
@@ -195,7 +272,9 @@ impl Backend for NativeBackend {
             bail!("native backend got a device handle");
         };
         let mut out = vec![0.0f32; self.cfg.hidden_size];
-        expert_ffn(h, w1, w3, w2, self.cfg.ffn_size, &mut out);
+        let mut scratch = self.scratch.borrow_mut();
+        let Scratch { ffn_a, ffn_u, .. } = &mut *scratch;
+        expert_ffn_into(h, w1, w3, w2, self.cfg.ffn_size, ffn_a, ffn_u, &mut out);
         Ok(out)
     }
 
@@ -241,6 +320,60 @@ mod tests {
         let mut out = [0.0; 2];
         vecmat(&x, &w, 2, &mut out);
         assert_eq!(out, [7.0, 10.0]);
+    }
+
+    #[test]
+    fn vecmat_unrolled_matches_naive() {
+        fn naive(x: &[f32], w: &[f32], m: usize, out: &mut [f32]) {
+            out.fill(0.0);
+            for i in 0..x.len() {
+                let xi = x[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in 0..m {
+                    out[j] += xi * w[i * m + j];
+                }
+            }
+        }
+        // ragged shapes around the 4-wide unroll boundary, with zeros in x
+        for &(n, m) in
+            &[(1usize, 1usize), (3, 5), (4, 4), (5, 7), (7, 9), (8, 3), (6, 13), (2, 17)]
+        {
+            let x: Vec<f32> = (0..n)
+                .map(|i| if i % 3 == 2 { 0.0 } else { (i as f32 * 0.7).sin() })
+                .collect();
+            let w: Vec<f32> = (0..n * m).map(|i| (i as f32 * 0.13).cos()).collect();
+            let mut unrolled = vec![0.0f32; m];
+            let mut reference = vec![0.0f32; m];
+            vecmat(&x, &w, m, &mut unrolled);
+            naive(&x, &w, m, &mut reference);
+            assert_eq!(unrolled, reference, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        use crate::model::weights::generate_weights;
+        let w = Arc::new(generate_weights(ModelConfig::TINY, 3));
+        let be1 = NativeBackend::new(Arc::clone(&w));
+        let be2 = NativeBackend::new(w);
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.3).sin()).collect();
+        // be1 dirties its scratch with unrelated calls first; a fresh
+        // backend must still produce identical results
+        let mut kv_dirty = be1.new_kv().unwrap();
+        let _ = be1.attn(1, &x, &mut kv_dirty, 0).unwrap();
+        let _ = be1.spec_router(1, &x).unwrap();
+        let mut kv1 = be1.new_kv().unwrap();
+        let mut kv2 = be2.new_kv().unwrap();
+        let a = be1.attn(0, &x, &mut kv1, 0).unwrap();
+        let b = be2.attn(0, &x, &mut kv2, 0).unwrap();
+        assert_eq!(a, b, "dirty scratch changed attention output");
+        assert_eq!(
+            be1.spec_router(1, &a).unwrap(),
+            be2.router(1, &b).unwrap().1,
+            "spec_router diverged from router probs"
+        );
     }
 
     #[test]

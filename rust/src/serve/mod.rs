@@ -156,6 +156,27 @@ pub fn metrics_json(metrics: &ServerMetrics, snap: &ServeSnapshot) -> Value {
             ]),
         ),
         (
+            "transfer_pipeline",
+            Value::obj(vec![
+                ("workers", Value::from(snap.pipeline.workers as f64)),
+                ("submitted_demand", Value::from(snap.pipeline.submitted_demand as f64)),
+                ("submitted_prefetch", Value::from(snap.pipeline.submitted_prefetch as f64)),
+                ("completed", Value::from(snap.pipeline.completed as f64)),
+                (
+                    "demand_joined_prefetch",
+                    Value::from(snap.pipeline.demand_joined_prefetch as f64),
+                ),
+                (
+                    "cancelled_prefetches",
+                    Value::from(snap.pipeline.cancelled_prefetches as f64),
+                ),
+                ("peak_in_flight", Value::from(snap.pipeline.peak_in_flight as f64)),
+                ("pool_allocs", Value::from(snap.pipeline.pool_allocs as f64)),
+                ("pool_reuses", Value::from(snap.pipeline.pool_reuses as f64)),
+                ("pool_reuse_rate", Value::from(snap.pipeline.pool_reuse_rate())),
+            ]),
+        ),
+        (
             "speculation",
             Value::obj(vec![
                 ("tp", Value::from(snap.spec.tp as f64)),
@@ -223,10 +244,15 @@ where
     let metrics = Arc::new(ServerMetrics::default());
     let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
     let (queue_tx, queue_rx) = sync_channel::<GenRequest>(cfg.queue_depth.max(1));
+    // liveness for /healthz: flips false when the engine worker exits
+    // (init failure or retirement) so orchestrators stop routing traffic
+    // to a server that can only answer 503
+    let engine_up = Arc::new(AtomicBool::new(true));
 
     // engine worker: owns the engine and runs the session scheduler
     let worker_metrics = Arc::clone(&metrics);
     let worker_snapshot = Arc::clone(&snapshot);
+    let worker_up = Arc::clone(&engine_up);
     let max_sessions = cfg.max_sessions;
     let engine_worker = std::thread::Builder::new()
         .name("engine-worker".into())
@@ -234,6 +260,7 @@ where
             let engine = match make_engine() {
                 Ok(e) => e,
                 Err(e) => {
+                    worker_up.store(false, Ordering::Relaxed);
                     eprintln!("engine init failed: {e:#}");
                     return;
                 }
@@ -245,6 +272,7 @@ where
                 worker_metrics,
                 worker_snapshot,
             );
+            worker_up.store(false, Ordering::Relaxed);
         })?;
 
     // see ServeConfig::http_workers: one blocked worker per in-flight
@@ -266,9 +294,10 @@ where
                 stream.set_nonblocking(false).ok();
                 let metrics = Arc::clone(&metrics);
                 let snapshot = Arc::clone(&snapshot);
+                let engine_up = Arc::clone(&engine_up);
                 let queue_tx = queue_tx.clone();
                 pool.execute(move || {
-                    handle_conn(&mut stream, &metrics, &snapshot, &queue_tx);
+                    handle_conn(&mut stream, &metrics, &snapshot, &engine_up, &queue_tx);
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -290,6 +319,7 @@ fn handle_conn(
     stream: &mut std::net::TcpStream,
     metrics: &ServerMetrics,
     snapshot: &Mutex<ServeSnapshot>,
+    engine_up: &AtomicBool,
     queue_tx: &SyncSender<GenRequest>,
 ) {
     let req = match http::read_request(stream) {
@@ -302,7 +332,11 @@ fn handle_conn(
     metrics.requests.fetch_add(1, Ordering::Relaxed);
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
-            let _ = http::write_response(stream, 200, "text/plain", b"ok");
+            if engine_up.load(Ordering::Relaxed) {
+                let _ = http::write_response(stream, 200, "text/plain", b"ok");
+            } else {
+                let _ = http::write_response(stream, 503, "text/plain", b"engine down");
+            }
         }
         ("GET", "/metrics") => {
             let snap = snapshot.lock().unwrap().clone();
@@ -391,7 +425,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let quant = crate::quant::Scheme::parse(&args.str_or("quant", "int4"))
         .ok_or_else(|| anyhow::anyhow!("bad --quant"))?;
     let spec = args.bool("spec");
-    let overlap = args.bool("overlap");
+    let transfer_workers = crate::engine::EngineConfig::transfer_workers_from(args)?;
     let synthetic = args.bool("synthetic");
     let seed = args.usize_or("seed", 0)? as u64;
     let profile = crate::sim::hardware::by_name(&args.str_or("profile", "A100"))
@@ -426,7 +460,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             };
             let store = Arc::new(HostExpertStore::build(&weights, quant)?);
             let mut cfg = crate::engine::EngineConfig::serving(capacity, policy, spec);
-            cfg.overlap = overlap;
+            cfg.transfer_workers = transfer_workers;
             cfg.profile = profile;
             cfg.seed = seed;
             Ok(crate::engine::InferenceEngine::new(backend, store, cfg))
@@ -439,7 +473,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::{CacheStats, PrecisionRecall, SessionTally};
+    use crate::metrics::{CacheStats, PipelineStats, PrecisionRecall, SessionTally};
     use super::scheduler::SessionView;
 
     #[test]
@@ -503,6 +537,14 @@ mod tests {
             cache: CacheStats { hits: 90, misses: 10, ..Default::default() },
             spec: PrecisionRecall { tp: 8, fp: 2, fn_: 2 },
             cross_session_prefetch_hits: 3,
+            pipeline: PipelineStats {
+                workers: 2,
+                demand_joined_prefetch: 4,
+                cancelled_prefetches: 1,
+                pool_allocs: 10,
+                pool_reuses: 90,
+                ..Default::default()
+            },
             sessions: Vec::new(),
         };
         for id in 1..=2u64 {
@@ -522,6 +564,11 @@ mod tests {
         assert_eq!(cache.get("policy").as_str(), Some("lfu"));
         assert_eq!(cache.get("hits").as_usize(), Some(90));
         assert_eq!(cache.get("cross_session_prefetch_hits").as_usize(), Some(3));
+        let pipe = v.get("transfer_pipeline");
+        assert_eq!(pipe.get("workers").as_usize(), Some(2));
+        assert_eq!(pipe.get("demand_joined_prefetch").as_usize(), Some(4));
+        assert_eq!(pipe.get("cancelled_prefetches").as_usize(), Some(1));
+        assert_eq!(pipe.get("pool_reuse_rate").as_f64(), Some(0.9));
         let sessions = v.get("sessions").as_arr().unwrap();
         assert_eq!(sessions.len(), 2);
         assert_eq!(sessions[0].get("hits").as_usize(), Some(45));

@@ -22,7 +22,7 @@
 
 use crate::engine::batch::Session;
 use crate::engine::InferenceEngine;
-use crate::metrics::{CacheStats, PrecisionRecall, SessionTally};
+use crate::metrics::{CacheStats, PipelineStats, PrecisionRecall, SessionTally};
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::Tokenizer;
 use crate::serve::{GenError, GenRequest, GenResponse, ServerMetrics};
@@ -77,6 +77,9 @@ pub struct ServeSnapshot {
     pub cache: CacheStats,
     pub spec: PrecisionRecall,
     pub cross_session_prefetch_hits: u64,
+    /// Transfer-pipeline queue + buffer-pool counters (workers == 0 when
+    /// the engine runs transfers synchronously).
+    pub pipeline: PipelineStats,
     pub sessions: Vec<SessionView>,
 }
 
@@ -284,6 +287,7 @@ fn publish(
     snap.cache = engine.cache_stats();
     snap.spec = engine.spec_precision_recall();
     snap.cross_session_prefetch_hits = engine.cross_session_prefetch_hits();
+    snap.pipeline = engine.pipeline_stats();
     snap.sessions = views;
 }
 
@@ -311,9 +315,14 @@ mod tests {
     }
 
     pub(crate) fn test_engine(spec: bool) -> InferenceEngine {
+        test_engine_workers(spec, 0)
+    }
+
+    pub(crate) fn test_engine_workers(spec: bool, transfer_workers: usize) -> InferenceEngine {
         let weights = Arc::new(generate_weights(serve_test_config(), 42));
         let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
-        let cfg = EngineConfig::serving(4, PolicyKind::Lfu, spec);
+        let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, spec);
+        cfg.transfer_workers = transfer_workers;
         InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg)
     }
 
@@ -375,6 +384,43 @@ mod tests {
         let part: u64 = snap.sessions.iter().map(|s| s.tally.hits + s.tally.misses).sum();
         assert_eq!(part, snap.cache.hits + snap.cache.misses);
         assert_eq!(metrics.tokens_generated.load(Ordering::Relaxed), 5 * 6);
+    }
+
+    #[test]
+    fn scheduler_with_pipeline_matches_sync_outputs() {
+        // the async transfer pipeline must be invisible in the responses:
+        // same requests, same texts, with the pipeline counters live
+        let run = |workers: usize| {
+            let engine = test_engine_workers(true, workers);
+            let (tx, rx) = sync_channel::<GenRequest>(8);
+            let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+            let mut resp_rxs = Vec::new();
+            for i in 0..3 {
+                let (req, resp_rx) = request(&format!("pipeline probe {i}"), 5);
+                tx.send(req).unwrap();
+                resp_rxs.push(resp_rx);
+            }
+            drop(tx);
+            run_scheduler(
+                engine,
+                rx,
+                SchedulerConfig { max_sessions: 3 },
+                Arc::new(ServerMetrics::default()),
+                Arc::clone(&snapshot),
+            );
+            let texts: Vec<String> = resp_rxs
+                .into_iter()
+                .map(|r| r.recv().unwrap().expect("generation ok").text)
+                .collect();
+            let snap = snapshot.lock().unwrap();
+            (texts, snap.pipeline)
+        };
+        let (sync_texts, sync_pipe) = run(0);
+        let (pipe_texts, pipe) = run(2);
+        assert_eq!(sync_texts, pipe_texts, "pipeline changed outputs");
+        assert_eq!(sync_pipe.workers, 0);
+        assert_eq!(pipe.workers, 2);
+        assert!(pipe.completed > 0, "pipeline never delivered a transfer");
     }
 
     #[test]

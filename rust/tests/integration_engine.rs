@@ -25,7 +25,7 @@ fn run(
     capacity: usize,
     scheme: Scheme,
     spec: bool,
-    overlap: bool,
+    transfer_workers: usize,
     seed: u64,
 ) -> GenerationOutput {
     let weights = Arc::new(generate_weights(CFG, 42));
@@ -37,7 +37,7 @@ fn run(
             cache_capacity: capacity,
             policy,
             prefetch: PrefetchConfig { enabled: spec, k: 2 },
-            overlap,
+            transfer_workers,
             profile: hardware::by_name("A6000").unwrap(),
             seed,
             record_trace: true,
@@ -49,10 +49,10 @@ fn run(
 
 #[test]
 fn semantic_transparency_across_policies() {
-    let baseline = run(PolicyKind::Lru, 8, Scheme::F32, false, false, 0);
+    let baseline = run(PolicyKind::Lru, 8, Scheme::F32, false, 0, 0);
     for policy in [PolicyKind::Lfu, PolicyKind::LfuAged, PolicyKind::Fifo, PolicyKind::Random] {
         for capacity in [1, 2, 4, 8] {
-            let out = run(policy, capacity, Scheme::F32, false, false, 0);
+            let out = run(policy, capacity, Scheme::F32, false, 0, 0);
             assert_eq!(
                 out.tokens, baseline.tokens,
                 "{:?} cap={capacity} changed generated tokens",
@@ -64,17 +64,17 @@ fn semantic_transparency_across_policies() {
 
 #[test]
 fn semantic_transparency_with_speculation_and_overlap() {
-    let baseline = run(PolicyKind::Lru, 4, Scheme::F32, false, false, 0);
-    let spec = run(PolicyKind::Lru, 4, Scheme::F32, true, false, 0);
-    let spec_overlap = run(PolicyKind::Lru, 4, Scheme::F32, true, true, 0);
+    let baseline = run(PolicyKind::Lru, 4, Scheme::F32, false, 0, 0);
+    let spec = run(PolicyKind::Lru, 4, Scheme::F32, true, 0, 0);
+    let spec_overlap = run(PolicyKind::Lru, 4, Scheme::F32, true, 2, 0);
     assert_eq!(baseline.tokens, spec.tokens, "speculation changed outputs");
     assert_eq!(baseline.tokens, spec_overlap.tokens, "overlap changed outputs");
 }
 
 #[test]
 fn generation_deterministic_per_seed() {
-    let a = run(PolicyKind::Lfu, 4, Scheme::Int8 { block: 16 }, true, false, 7);
-    let b = run(PolicyKind::Lfu, 4, Scheme::Int8 { block: 16 }, true, false, 7);
+    let a = run(PolicyKind::Lfu, 4, Scheme::Int8 { block: 16 }, true, 0, 7);
+    let b = run(PolicyKind::Lfu, 4, Scheme::Int8 { block: 16 }, true, 0, 7);
     assert_eq!(a.tokens, b.tokens);
     assert_eq!(a.cache_stats.hits, b.cache_stats.hits);
     assert_eq!(a.transfer_bytes, b.transfer_bytes);
@@ -82,8 +82,8 @@ fn generation_deterministic_per_seed() {
 
 #[test]
 fn smaller_cache_transfers_more() {
-    let big = run(PolicyKind::Lru, 8, Scheme::Int4 { block: 16 }, false, false, 0);
-    let small = run(PolicyKind::Lru, 2, Scheme::Int4 { block: 16 }, false, false, 0);
+    let big = run(PolicyKind::Lru, 8, Scheme::Int4 { block: 16 }, false, 0, 0);
+    let small = run(PolicyKind::Lru, 2, Scheme::Int4 { block: 16 }, false, 0, 0);
     assert!(small.transfer_bytes > big.transfer_bytes);
     assert!(small.cache_stats.hit_rate() < big.cache_stats.hit_rate() + 1e-9);
     // peak resident memory shrinks with the cache
@@ -92,7 +92,7 @@ fn smaller_cache_transfers_more() {
 
 #[test]
 fn full_cache_hits_after_first_touch() {
-    let out = run(PolicyKind::Lru, CFG.n_experts, Scheme::F32, false, false, 0);
+    let out = run(PolicyKind::Lru, CFG.n_experts, Scheme::F32, false, 0, 0);
     // every expert missed at most once per layer
     assert!(out.cache_stats.misses <= (CFG.n_layers * CFG.n_experts) as u64);
     assert_eq!(out.cache_stats.evictions, 0);
@@ -100,7 +100,7 @@ fn full_cache_hits_after_first_touch() {
 
 #[test]
 fn speculative_precision_equals_recall() {
-    let out = run(PolicyKind::Lru, 4, Scheme::F32, true, false, 0);
+    let out = run(PolicyKind::Lru, 4, Scheme::F32, true, 0, 0);
     let pr = out.spec_pr;
     assert!(pr.tp + pr.fp > 0, "no speculation happened");
     assert_eq!(pr.fp, pr.fn_, "paper §5.4 identity violated");
@@ -109,7 +109,7 @@ fn speculative_precision_equals_recall() {
 
 #[test]
 fn trace_records_every_token_layer() {
-    let out = run(PolicyKind::Lfu, 4, Scheme::F32, true, false, 0);
+    let out = run(PolicyKind::Lfu, 4, Scheme::F32, true, 0, 0);
     let t = out.trace.expect("trace");
     assert_eq!(t.n_tokens(), 11); // 3 prompt + 8 generated
     for tok in 0..t.n_tokens() {
@@ -143,7 +143,7 @@ fn sim_clock_slower_on_worse_bandwidth() {
                 cache_capacity: 2,
                 policy: PolicyKind::Lru,
                 prefetch: PrefetchConfig::default(),
-                overlap: false,
+                transfer_workers: 0,
                 profile: hardware::by_name(profile).unwrap(),
                 seed: 0,
                 record_trace: false,
@@ -162,7 +162,7 @@ fn quantized_decode_stays_coherent() {
     // int8/int4 perturb logits but the engine must still run to completion
     // with valid expert selections and normalized weights.
     for scheme in [Scheme::Int8 { block: 16 }, Scheme::Int4 { block: 16 }] {
-        let out = run(PolicyKind::Lfu, 4, scheme, false, false, 0);
+        let out = run(PolicyKind::Lfu, 4, scheme, false, 0, 0);
         assert_eq!(out.generated.len(), 8);
         let t = out.trace.unwrap();
         for tok in 0..t.n_tokens() {

@@ -88,7 +88,7 @@ fn pjrt_engine_decode_with_quantized_store() {
             cache_capacity: 4,
             policy: PolicyKind::Lfu,
             prefetch: PrefetchConfig { enabled: true, k: 2 },
-            overlap: false,
+            transfer_workers: 0,
             profile: hardware::by_name("A100").unwrap(),
             seed: 0,
             record_trace: true,

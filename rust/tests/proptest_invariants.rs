@@ -2,12 +2,18 @@
 //! system's core invariants.
 
 use moe_offload::cache::{LayerCache, PolicyKind};
+use moe_offload::engine::{EngineConfig, InferenceEngine};
 use moe_offload::metrics::PrecisionRecall;
-use moe_offload::model::sampler::top_k;
+use moe_offload::model::sampler::{top_k, Sampler, Sampling};
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::ModelConfig;
+use moe_offload::offload::store::HostExpertStore;
 use moe_offload::quant::{QTensor, Scheme};
+use moe_offload::runtime::native::NativeBackend;
 use moe_offload::sim::{cachesim, tracegen};
 use moe_offload::util::json::{self, Value};
 use moe_offload::util::quickcheck::{forall, Gen};
+use std::sync::Arc;
 
 #[test]
 fn prop_cache_capacity_never_exceeded() {
@@ -102,6 +108,61 @@ fn prop_belady_dominates_all_online_policies() {
                     "{:?} ({}) beat belady ({b}) at cap {cap} seed {seed}",
                     r.policy,
                     r.stats.hit_rate()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_decode_bit_identical_to_sync() {
+    // cache transparency must survive concurrency: across policies ×
+    // quantization schemes × prefetch on/off, the async transfer pipeline
+    // (any worker count) produces bit-identical decodes to the synchronous
+    // fetch path — same tokens, same per-token logits.
+    forall(10, |g: &mut Gen| {
+        let seed = g.usize(0..=999) as u64;
+        let scheme = *g.choose(&[
+            Scheme::F32,
+            Scheme::Int8 { block: 16 },
+            Scheme::Int4 { block: 16 },
+        ]);
+        let policy = *g.choose(&PolicyKind::all_online());
+        let prefetch = g.bool();
+        let capacity = g.usize(2..=6);
+        let run = |workers: usize| {
+            let weights = Arc::new(generate_weights(ModelConfig::TINY, seed));
+            let store = Arc::new(HostExpertStore::build(&weights, scheme).unwrap());
+            let mut cfg = EngineConfig::serving(capacity, policy, prefetch);
+            cfg.seed = seed;
+            cfg.transfer_workers = workers;
+            let mut engine =
+                InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg);
+            let mut sampler = Sampler::new(Sampling::Greedy, seed);
+            let out = engine.generate(&[1, 5, 9], 7, &mut sampler).unwrap();
+            // decode outputs + the exact logits of one extra step
+            let mut kv = moe_offload::runtime::KvState::zeros(engine.config());
+            let mut ev = moe_offload::sim::costmodel::TokenEvents::default();
+            let logits = engine.step(out.tokens[0], &mut kv, 0, &mut ev).unwrap();
+            (out.tokens, logits)
+        };
+        let (sync_tokens, sync_logits) = run(0);
+        for workers in [1usize, 3] {
+            let (tokens, logits) = run(workers);
+            if tokens != sync_tokens {
+                return Err(format!(
+                    "{}/{}/prefetch={prefetch}/cap={capacity}/workers={workers}: \
+                     tokens diverged from sync path",
+                    policy.name(),
+                    scheme.name()
+                ));
+            }
+            if logits != sync_logits {
+                return Err(format!(
+                    "{}/{}/workers={workers}: logits not bit-identical",
+                    policy.name(),
+                    scheme.name()
                 ));
             }
         }
