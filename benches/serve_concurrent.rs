@@ -1,12 +1,18 @@
-//! Bench: the concurrent serve scheduler — N sessions interleaved
+//! Bench: the completion-routed serve scheduler — N sessions interleaved
 //! round-robin over one engine with a shared expert cache, versus the same
-//! work decoded sequentially. Measures scheduler overhead and reports the
+//! work decoded sequentially. Measures scheduler overhead, reports the
 //! shared-cache amortization (misses/token falls as sessions share
-//! transfers).
+//! transfers), and exercises the admission-control path (bounded queue
+//! rejections + queue-timeout sheds), writing a
+//! `BENCH_serve_concurrent.json` artifact with rejected/shed counts and
+//! the queue-wait p99.
+//!
+//!     cargo bench --bench serve_concurrent [-- --smoke]
 
 use moe_offload::bench_harness::Bencher;
 use moe_offload::cache::PolicyKind;
 use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::metrics::ServeMetrics;
 use moe_offload::model::sampler::Sampling;
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
@@ -14,22 +20,56 @@ use moe_offload::offload::store::HostExpertStore;
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::native::NativeBackend;
 use moe_offload::serve::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
-use moe_offload::serve::{GenRequest, ServerMetrics};
-use std::sync::mpsc::{channel, sync_channel};
+use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, ReplyTo};
+use moe_offload::util::json::{self, Value};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Byte-tokenizer-compatible small config (vocab ≥ 260).
 fn cfg() -> ModelConfig {
     ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY }
 }
 
+fn make_engine(
+    weights: &Arc<moe_offload::model::Weights>,
+    store: &Arc<HostExpertStore>,
+) -> InferenceEngine {
+    InferenceEngine::new(
+        Box::new(NativeBackend::new(Arc::clone(weights))),
+        Arc::clone(store),
+        EngineConfig::serving(4, PolicyKind::Lfu, true),
+    )
+}
+
+fn push_request(
+    queue: &AdmissionQueue,
+    prompt: String,
+    n_tokens: usize,
+    enqueued: Instant,
+) -> Option<Receiver<GenResult>> {
+    let (tx, rx) = channel();
+    let req = GenRequest {
+        prompt,
+        n_tokens,
+        sampling: Sampling::Greedy,
+        reply: ReplyTo::Channel(tx),
+        enqueued,
+    };
+    queue.try_push(req).ok().map(|_| rx)
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let weights = Arc::new(generate_weights(cfg(), 42));
     let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 }).unwrap());
-    let n_tokens = 12usize;
-    let mut b = Bencher::new(2, 10);
-    let mut amortization: Vec<(usize, f64)> = Vec::new();
+    let n_tokens = if smoke { 6usize } else { 12 };
+    let (warmup, iters) = if smoke { (1, 3) } else { (2, 10) };
+    let mut b = Bencher::new(warmup, iters);
+    let mut amortization: Vec<(usize, f64, f64)> = Vec::new();
 
+    // --- session scaling: shared-cache amortization vs session count
     for n_sessions in [1usize, 2, 4, 8] {
         let weights = Arc::clone(&weights);
         let store = Arc::clone(&store);
@@ -38,31 +78,30 @@ fn main() {
             &format!("serve/{n_sessions}-sessions/{n_tokens}tok"),
             Some(((n_sessions * n_tokens) as f64, "tok")),
             &mut || {
-                let engine = InferenceEngine::new(
-                    Box::new(NativeBackend::new(Arc::clone(&weights))),
-                    Arc::clone(&store),
-                    EngineConfig::serving(4, PolicyKind::Lfu, true),
-                );
-                let (tx, rx) = sync_channel::<GenRequest>(n_sessions);
+                let engine = make_engine(&weights, &store);
+                let metrics = Arc::new(ServeMetrics::default());
+                let queue = AdmissionQueue::new(n_sessions, Arc::clone(&metrics));
+                let (completions, _completion_rx) = channel();
                 let mut resp_rxs = Vec::with_capacity(n_sessions);
                 for i in 0..n_sessions {
-                    let (resp_tx, resp_rx) = channel();
-                    tx.send(GenRequest {
-                        prompt: format!("bench prompt {i}"),
-                        n_tokens,
-                        sampling: Sampling::Greedy,
-                        resp: resp_tx,
-                    })
-                    .unwrap();
-                    resp_rxs.push(resp_rx);
+                    resp_rxs.push(
+                        push_request(
+                            &queue,
+                            format!("bench prompt {i}"),
+                            n_tokens,
+                            Instant::now(),
+                        )
+                        .expect("queue sized for the burst"),
+                    );
                 }
-                drop(tx);
+                queue.close();
                 let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
                 run_scheduler(
                     engine,
-                    rx,
-                    SchedulerConfig { max_sessions: n_sessions },
-                    Arc::new(ServerMetrics::default()),
+                    queue,
+                    completions,
+                    SchedulerConfig { max_sessions: n_sessions, queue_timeout: None },
+                    metrics,
                     Arc::clone(&snapshot),
                 );
                 let mut total_tokens = 0u64;
@@ -76,19 +115,131 @@ fn main() {
                 total_tokens
             },
         );
-        amortization.push((n_sessions, last_miss_rate));
+        let rate = b.results.last().and_then(|r| r.per_second()).unwrap_or(0.0);
+        amortization.push((n_sessions, rate, last_miss_rate));
     }
+
+    // --- overload: bounded-queue rejections + queue-timeout sheds.
+    // Offered load exceeds the queue depth (rejections at push) and part
+    // of the accepted burst is backdated past the queue timeout (sheds at
+    // dequeue); served + shed must equal accepted exactly.
+    let offered = if smoke { 10usize } else { 24 };
+    let queue_depth = 4usize;
+    let backdate = Instant::now().checked_sub(Duration::from_secs(300));
+    let metrics = Arc::new(ServeMetrics::default());
+    let queue = AdmissionQueue::new(queue_depth, Arc::clone(&metrics));
+    let (completions, _completion_rx) = channel();
+    let mut accepted_rxs: Vec<(Receiver<GenResult>, bool)> = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..offered {
+        // the first two requests are stale (when the clock allows
+        // backdating): they land in the queue and must be shed, not decoded
+        let (enqueued, stale) = match (i < 2, backdate) {
+            (true, Some(t)) => (t, true),
+            _ => (Instant::now(), false),
+        };
+        match push_request(&queue, format!("overload {i}"), 4, enqueued) {
+            Some(rx) => accepted_rxs.push((rx, stale)),
+            None => rejected += 1,
+        }
+    }
+    queue.close();
+    let engine = make_engine(&weights, &store);
+    let overload_t0 = Instant::now();
+    run_scheduler(
+        engine,
+        queue,
+        completions,
+        SchedulerConfig {
+            max_sessions: 2,
+            queue_timeout: Some(Duration::from_secs(60)),
+        },
+        Arc::clone(&metrics),
+        Arc::new(Mutex::new(ServeSnapshot::default())),
+    );
+    let overload_wall_s = overload_t0.elapsed().as_secs_f64();
+    let accepted = accepted_rxs.len() as u64;
+    let mut served = 0u64;
+    let mut shed = 0u64;
+    for (rx, stale) in accepted_rxs {
+        match rx.recv().expect("accepted requests are answered") {
+            Ok(r) => {
+                assert!(!stale, "stale request decoded instead of shed");
+                assert_eq!(r.n_generated, 4);
+                served += 1;
+            }
+            Err(ge) => {
+                assert!(stale, "fresh request refused: {}", ge.message);
+                assert_eq!(ge.status, 503);
+                shed += 1;
+            }
+        }
+    }
+    let queue_wait_p99_ns = metrics.queue_wait.percentile_ns(0.99);
+    let queue_wait_p50_ns = metrics.queue_wait.percentile_ns(0.50);
 
     println!("{}", b.render());
     println!("shared-cache amortization (misses per stepped token):");
-    for (n, mr) in &amortization {
+    for (n, _, mr) in &amortization {
         println!("  {n} sessions: {mr:.3}");
     }
-    let solo = amortization[0].1;
-    let most = amortization.last().unwrap().1;
+    let solo = amortization[0].2;
+    let most = amortization.last().unwrap().2;
     println!(
         "  -> {:.1}% of solo miss traffic at {} sessions",
         100.0 * most / solo.max(1e-12),
         amortization.last().unwrap().0
     );
+    println!(
+        "overload: offered {offered}, accepted {accepted}, rejected {rejected}, \
+         served {served}, shed {shed}, queue-wait p99 {:.1} µs",
+        queue_wait_p99_ns as f64 / 1e3
+    );
+
+    // --- artifact
+    let sessions_json: Vec<Value> = amortization
+        .iter()
+        .map(|(n, rate, mr)| {
+            Value::obj(vec![
+                ("sessions", Value::from(*n)),
+                ("tokens_per_s", Value::from(*rate)),
+                ("misses_per_token", Value::from(*mr)),
+            ])
+        })
+        .collect();
+    let artifact = Value::obj(vec![
+        ("bench", Value::from("serve_concurrent")),
+        ("smoke", Value::from(smoke)),
+        ("n_tokens", Value::from(n_tokens)),
+        ("scaling", Value::Arr(sessions_json)),
+        (
+            "overload",
+            Value::obj(vec![
+                ("offered", Value::from(offered)),
+                ("queue_depth", Value::from(queue_depth)),
+                ("accepted", Value::from(accepted as f64)),
+                ("rejected", Value::from(rejected as f64)),
+                ("served", Value::from(served as f64)),
+                ("shed", Value::from(shed as f64)),
+                ("shed_total_metric", Value::from(metrics.shed_total.load(Ordering::Relaxed) as f64)),
+                ("queue_wait_p50_ns", Value::from(queue_wait_p50_ns as f64)),
+                ("queue_wait_p99_ns", Value::from(queue_wait_p99_ns as f64)),
+                ("wall_s", Value::from(overload_wall_s)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_serve_concurrent.json", json::to_string(&artifact))
+        .expect("write BENCH_serve_concurrent.json");
+    println!("wrote BENCH_serve_concurrent.json");
+
+    // structural assertions keep CI honest without depending on machine
+    // speed
+    assert_eq!(accepted + rejected, offered as u64, "every offered request accounted");
+    assert_eq!(served + shed, accepted, "accepted requests either served or shed");
+    assert!(rejected > 0, "offered load must overflow the bounded queue");
+    if backdate.is_some() {
+        assert!(shed > 0, "backdated requests must be shed");
+        assert_eq!(metrics.shed_total.load(Ordering::Relaxed), shed);
+    }
+    assert!(queue_wait_p99_ns >= queue_wait_p50_ns);
 }

@@ -76,7 +76,11 @@ fn main() -> Result<()> {
                 EngineConfig::serving(4, PolicyKind::Lfu, true),
             ))
         };
-        let cfg = ServeConfig { http_workers: concurrency.max(4), max_sessions, queue_depth: 64 };
+        let cfg = ServeConfig {
+            http_workers: concurrency.max(4),
+            max_sessions,
+            ..ServeConfig::default()
+        };
         let _ = serve::serve(listener, make, cfg, sd);
     });
 
@@ -155,6 +159,14 @@ fn main() -> Result<()> {
         cache.get("misses").as_usize().unwrap_or(0),
         cache.get("prefetch_hits").as_usize().unwrap_or(0),
         cache.get("cross_session_prefetch_hits").as_usize().unwrap_or(0),
+    );
+    println!(
+        "admission: rejected {} (backpressure {} / inflight cap {}), shed {}, queue-wait p99 {:.1} µs",
+        m.get("rejected_total").as_usize().unwrap_or(0),
+        m.get("rejected_backpressure").as_usize().unwrap_or(0),
+        m.get("rejected_inflight").as_usize().unwrap_or(0),
+        m.get("shed_total").as_usize().unwrap_or(0),
+        m.get("queue_wait_ns").get("p99").as_f64().unwrap_or(0.0) / 1e3,
     );
     println!(
         "completed sessions: {}   per-session share of the one shared cache:",

@@ -138,6 +138,10 @@ pub struct InferenceEngine {
     /// Per-session accounting (cache traffic + speculation quality); keyed
     /// by the session id passed to [`InferenceEngine::step_session`].
     session_stats: HashMap<u64, SessionTally>,
+    /// Total `step_session` invocations over this engine's lifetime — the
+    /// serve layer's proof that admission-control decisions (rejects,
+    /// sheds) never consume engine work.
+    steps: u64,
     /// Demand lookups that were satisfied by an expert a *different*
     /// session prefetched — the shared-cache amortization counter.
     cross_session_prefetch_hits: u64,
@@ -191,6 +195,7 @@ impl InferenceEngine {
             pending_prefetch: Vec::new(),
             spec_pr: PrecisionRecall::default(),
             session_stats: HashMap::new(),
+            steps: 0,
             cross_session_prefetch_hits: 0,
             spec_guess: None,
             trace,
@@ -453,6 +458,7 @@ impl InferenceEngine {
         pos: usize,
         ev: &mut TokenEvents,
     ) -> Result<Vec<f32>> {
+        self.steps += 1;
         if let Some(t) = &mut self.trace {
             t.push_token(tok);
         }
@@ -636,6 +642,12 @@ impl InferenceEngine {
     /// the shared cache amortized speculative transfers across sessions.
     pub fn cross_session_prefetch_hits(&self) -> u64 {
         self.cross_session_prefetch_hits
+    }
+    /// Total tokens ever stepped through this engine (all sessions,
+    /// prompt + generated). Requests shed or rejected by the serve layer's
+    /// admission control contribute nothing here.
+    pub fn total_steps(&self) -> u64 {
+        self.steps
     }
     pub fn spec_precision_recall(&self) -> PrecisionRecall {
         self.spec_pr

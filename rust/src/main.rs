@@ -4,13 +4,21 @@
 //!   selfcheck  validate PJRT + native runtimes against the JAX goldens
 //!   generate   decode a prompt through the offloading engine
 //!   simulate   trace-driven cache-policy comparison + cost model
-//!   serve      concurrent HTTP serving front (see rust/src/serve/):
-//!              --max-sessions N      sessions interleaved on the engine worker
-//!              --queue-depth N       bounded admission queue (503 beyond it)
-//!              --transfer-workers N  async dequant pipeline workers (0 = sync;
-//!                                    legacy --overlap = 1)
-//!              --synthetic           seeded synthetic weights + native backend,
-//!                                    so serving works from a clean checkout
+//!   serve      completion-routed concurrent HTTP serving front (see
+//!              rust/src/serve/): workers parse + admission-check only,
+//!              responders write finished generations back
+//!              --max-sessions N            sessions interleaved on the engine worker
+//!              --queue-depth N             bounded admission queue (503 beyond it)
+//!              --queue-timeout-ms N        shed queued requests older than N ms
+//!                                          with 503 + Retry-After (0 = never)
+//!              --max-inflight-sessions N   cap on accepted-but-unfinished
+//!                                          requests (503 beyond it)
+//!              --responders N              response-writer threads
+//!              --http-workers N            parse/admission threads
+//!              --transfer-workers N        async dequant pipeline workers
+//!                                          (0 = sync; legacy --overlap = 1)
+//!              --synthetic                 seeded synthetic weights + native
+//!                                          backend, works from a clean checkout
 //!   figures    regenerate every paper table/figure into --out-dir
 
 use anyhow::{bail, Result};

@@ -8,6 +8,8 @@
 //! with |guessed| = |activated| = k this forces FP == FN and therefore
 //! precision == recall (asserted by a property test).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 /// Confusion-matrix accumulator over (token, layer) events.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PrecisionRecall {
@@ -145,6 +147,93 @@ impl PipelineStats {
     }
 }
 
+/// Lock-free log₂-bucketed latency histogram over nanosecond samples.
+///
+/// 64 power-of-two buckets cover the full `u64` range; `percentile_ns`
+/// returns the inclusive upper bound of the bucket the target rank lands
+/// in, so the reported quantile is within 2× of the true value — plenty
+/// for the serve layer's queue-wait p50/p99 gauges, with `record_ns` a
+/// single relaxed fetch_add on the hot admission path.
+pub struct LatencyHisto {
+    buckets: [AtomicU64; 64],
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        LatencyHisto { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatencyHisto {
+    pub fn record_ns(&self, ns: u64) {
+        let idx = 63 - (ns | 1).leading_zeros() as usize;
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate `q`-quantile in ns (upper bound of the rank's bucket);
+    /// 0 when no samples were recorded.
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// Serve-layer counters and gauges, shared between the HTTP workers, the
+/// admission queue, the scheduler, and the responder set (see DESIGN.md
+/// §6). Counters are monotone; `queue_depth` and `inflight_sessions` are
+/// gauges:
+///
+/// * `queue_depth` — requests waiting in the bounded admission queue.
+///   Maintained under the queue's own lock, so it is exact and can never
+///   exceed the configured `--queue-depth`.
+/// * `inflight_sessions` — accepted-but-unfinished requests (queued +
+///   decoding + waiting on a responder write). Bounded by
+///   `--max-inflight-sessions` via a reserve-slot CAS at admission.
+#[derive(Default)]
+pub struct ServeMetrics {
+    pub requests: AtomicU64,
+    /// Client/server failures relayed to clients (4xx/5xx), excluding the
+    /// admission-control 503s counted by the reject/shed counters below.
+    pub errors: AtomicU64,
+    /// `/generate` 503s: bounded admission queue full.
+    pub rejected_backpressure: AtomicU64,
+    /// `/generate` 503s: in-flight session cap reached.
+    pub rejected_inflight: AtomicU64,
+    /// Queued requests shed at dequeue because they waited longer than
+    /// `--queue-timeout-ms` (503 + Retry-After, no engine steps consumed).
+    pub shed_total: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub queue_depth: AtomicU64,
+    pub inflight_sessions: AtomicU64,
+    /// Admission-queue wait, recorded at dequeue (admitted or shed).
+    pub queue_wait: LatencyHisto,
+}
+
+impl ServeMetrics {
+    /// All admission rejections (queue full + in-flight cap); sheds are
+    /// tracked separately because those requests were accepted first.
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_backpressure.load(Ordering::Relaxed)
+            + self.rejected_inflight.load(Ordering::Relaxed)
+    }
+}
+
 /// Host->device transfer accounting (bytes that crossed the simulated PCIe).
 #[derive(Clone, Debug, Default)]
 pub struct TransferStats {
@@ -244,5 +333,52 @@ mod tests {
         let t = Throughput { tokens: 10, wall_s: 2.0, sim_s: 4.0 };
         assert_eq!(t.tokens_per_s_wall(), 5.0);
         assert_eq!(t.tokens_per_s_sim(), 2.5);
+    }
+
+    #[test]
+    fn histo_empty_is_zero() {
+        let h = LatencyHisto::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile_ns(0.5), 0);
+        assert_eq!(h.percentile_ns(0.99), 0);
+    }
+
+    #[test]
+    fn histo_percentiles_bound_samples() {
+        let h = LatencyHisto::default();
+        // 90 fast samples (~1µs), 10 slow (~1ms)
+        for _ in 0..90 {
+            h.record_ns(1_000);
+        }
+        for _ in 0..10 {
+            h.record_ns(1_000_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile_ns(0.5);
+        let p99 = h.percentile_ns(0.99);
+        // upper-bucket-bound semantics: within 2x above the true value,
+        // never below it
+        assert!((1_000..=2_048).contains(&p50), "p50 {p50}");
+        assert!((1_000_000..=2_097_152).contains(&p99), "p99 {p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn histo_extremes() {
+        let h = LatencyHisto::default();
+        h.record_ns(0);
+        h.record_ns(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile_ns(0.25), 1); // bucket 0 upper bound
+        assert_eq!(h.percentile_ns(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn serve_metrics_rejected_total_sums() {
+        let m = ServeMetrics::default();
+        m.rejected_backpressure.store(3, Ordering::Relaxed);
+        m.rejected_inflight.store(2, Ordering::Relaxed);
+        m.shed_total.store(9, Ordering::Relaxed);
+        assert_eq!(m.rejected_total(), 5, "sheds are not rejections");
     }
 }

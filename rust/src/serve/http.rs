@@ -3,8 +3,48 @@
 
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Hard cap on reading ONE request (request line + headers + body),
+/// checked between reads. Combined with a per-socket read timeout (set by
+/// the serve accept path) this bounds how long a slow or stalled client
+/// can hold the reading thread — without either, a drip-feeding client
+/// could pin an HTTP worker indefinitely.
+const READ_DEADLINE: Duration = Duration::from_secs(30);
+
+/// More headers than any sane client sends; a slowloris favourite.
+const MAX_HEADERS: usize = 100;
+
+/// Per-line byte cap (request line / header line).
+const MAX_LINE_BYTES: usize = 8 << 10;
+
+/// `read_line` with the deadline enforced *inside* the line: a drip-fed
+/// line with no terminator must not pin the reading thread (std's
+/// `read_line` loops until newline or EOF, unbounded in both time and
+/// memory). Byte-at-a-time off the `BufReader` — the buffer makes that one
+/// memcpy per byte, one syscall per buffer fill.
+fn read_line_bounded(reader: &mut BufReader<TcpStream>, start: Instant) -> Result<String> {
+    let mut buf = Vec::new();
+    loop {
+        if start.elapsed() > READ_DEADLINE {
+            bail!("request read deadline exceeded");
+        }
+        if buf.len() >= MAX_LINE_BYTES {
+            bail!("header line too long");
+        }
+        let mut byte = [0u8; 1];
+        if reader.read(&mut byte)? == 0 {
+            break; // EOF
+        }
+        buf.push(byte[0]);
+        if byte[0] == b'\n' {
+            break;
+        }
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
 
 #[derive(Debug)]
 pub struct Request {
@@ -15,9 +55,9 @@ pub struct Request {
 }
 
 pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let start = Instant::now();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+    let line = read_line_bounded(&mut reader, start)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or_default().to_string();
     let path = parts.next().unwrap_or_default().to_string();
@@ -25,16 +65,25 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
         bail!("malformed request line {line:?}");
     }
     let mut headers = HashMap::new();
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+    // count LINES, not parsed headers: colon-less garbage lines must not
+    // bypass the cap
+    let mut terminated = false;
+    for _ in 0..MAX_HEADERS {
+        if start.elapsed() > READ_DEADLINE {
+            bail!("request read deadline exceeded");
+        }
+        let h = read_line_bounded(&mut reader, start)?;
         let h = h.trim_end();
         if h.is_empty() {
+            terminated = true;
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
             headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
         }
+    }
+    if !terminated {
+        bail!("too many header lines");
     }
     let len: usize = headers
         .get("content-length")
@@ -44,7 +93,17 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
         bail!("body too large: {len}");
     }
     let mut body = vec![0u8; len];
-    reader.read_exact(&mut body)?;
+    let mut filled = 0;
+    while filled < len {
+        if start.elapsed() > READ_DEADLINE {
+            bail!("request read deadline exceeded");
+        }
+        let n = reader.read(&mut body[filled..])?;
+        if n == 0 {
+            bail!("connection closed mid-body ({filled}/{len} bytes)");
+        }
+        filled += n;
+    }
     Ok(Request { method, path, headers, body })
 }
 
@@ -52,6 +111,18 @@ pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    write_response_with_headers(stream, status, content_type, &[], body)
+}
+
+/// Like [`write_response`] with extra response headers (e.g. `Retry-After`
+/// on admission-control 503s).
+pub fn write_response_with_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
     body: &[u8],
 ) -> Result<()> {
     let reason = match status {
@@ -63,10 +134,17 @@ pub fn write_response(
         503 => "Service Unavailable",
         _ => "Unknown",
     };
-    let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
@@ -78,13 +156,21 @@ pub fn write_response(
 // example and the serve integration tests so the two cannot drift apart
 // ---------------------------------------------------------------------------
 
-/// Send a raw HTTP/1.1 request and read the full response; returns
-/// `(status, body)`. Status 0 when the status line is unparseable.
-pub fn client_request(addr: std::net::SocketAddr, raw: &str) -> std::io::Result<(u16, String)> {
+/// Send a raw HTTP/1.1 request and return the entire response text (status
+/// line + headers + body) — for tests that assert on headers like
+/// `Retry-After`.
+pub fn client_request_text(addr: std::net::SocketAddr, raw: &str) -> std::io::Result<String> {
     let mut s = TcpStream::connect(addr)?;
     s.write_all(raw.as_bytes())?;
     let mut resp = String::new();
     s.read_to_string(&mut resp)?;
+    Ok(resp)
+}
+
+/// Send a raw HTTP/1.1 request and read the full response; returns
+/// `(status, body)`. Status 0 when the status line is unparseable.
+pub fn client_request(addr: std::net::SocketAddr, raw: &str) -> std::io::Result<(u16, String)> {
+    let resp = client_request_text(addr, raw)?;
     let status: u16 = resp
         .split_whitespace()
         .nth(1)
@@ -103,12 +189,23 @@ pub fn client_post(
     path: &str,
     body: &str,
 ) -> std::io::Result<(u16, String)> {
-    client_request(
-        addr,
-        &format!(
-            "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        ),
+    client_request(addr, &post_raw(path, body))
+}
+
+/// `client_post` variant returning the raw response text (headers
+/// included).
+pub fn client_post_text(
+    addr: std::net::SocketAddr,
+    path: &str,
+    body: &str,
+) -> std::io::Result<String> {
+    client_request_text(addr, &post_raw(path, body))
+}
+
+fn post_raw(path: &str, body: &str) -> String {
+    format!(
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
     )
 }
 
@@ -153,6 +250,29 @@ mod tests {
         let (status, body) = client_post(addr, "/generate", "{\"n\":2}").unwrap();
         assert_eq!(status, 503);
         assert_eq!(body, "busy");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn extra_headers_are_written() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = read_request(&mut s).unwrap();
+            write_response_with_headers(
+                &mut s,
+                503,
+                "text/plain",
+                &[("Retry-After", "1".to_string())],
+                b"busy",
+            )
+            .unwrap();
+        });
+        let raw = client_post_text(addr, "/generate", "{}").unwrap();
+        assert!(raw.starts_with("HTTP/1.1 503"), "{raw}");
+        assert!(raw.contains("\r\nRetry-After: 1\r\n"), "{raw}");
+        assert!(raw.ends_with("busy"), "{raw}");
         server.join().unwrap();
     }
 

@@ -1,22 +1,34 @@
-//! HTTP serving front: bounded request queue + session scheduler over one
-//! engine worker.
+//! HTTP serving front: completion-routed request flow with real admission
+//! control over one engine worker.
 //!
-//! Architecture (DESIGN.md §6): a thread pool accepts connections and
-//! parses requests; decode work is funneled through a BOUNDED mpsc queue to
-//! ONE engine worker that owns the (non-`Send`) backend and the shared
-//! expert cache. The worker runs the [`scheduler`]: up to `max_sessions`
-//! decode sessions are interleaved round-robin, one token each per round,
-//! all hitting the same per-layer expert cache — the paper's persistent
-//! cache, contended (and amortized) across sessions. When the queue is
-//! full, `/generate` answers 503 immediately (backpressure) instead of
-//! buffering unboundedly.
+//! Architecture (DESIGN.md §6): HTTP workers only parse, admission-check,
+//! and enqueue — they never block on a decode. An accepted `/generate`
+//! carries its client socket through the bounded [`AdmissionQueue`] into
+//! the scheduler ([`scheduler`]), which interleaves up to `max_sessions`
+//! decode sessions round-robin on the ONE engine worker that owns the
+//! (non-`Send`) backend and the shared expert cache. Finished generations
+//! are posted to a completion channel and a small responder set writes the
+//! HTTP responses, so a worker is freed the moment a request is admitted
+//! and `queue_depth` is the true bound on buffered work.
+//!
+//! Admission control, in the order a request meets it:
+//!   1. in-flight session cap (`--max-inflight-sessions`): accepted but
+//!      unfinished requests (queued + decoding + awaiting a responder
+//!      write) are bounded; beyond the cap `/generate` answers 503 +
+//!      `Retry-After` immediately;
+//!   2. bounded queue (`--queue-depth`): when full, 503 + `Retry-After`
+//!      (backpressure, not buffering);
+//!   3. queue-age shed (`--queue-timeout-ms`): a request that waited past
+//!      its deadline is shed with 503 + `Retry-After` at dequeue, before
+//!      it consumes a single engine step.
 //!
 //! API:
 //!   POST /generate   {"prompt": str, "n_tokens": int, "temperature"?: f,
 //!                     "top_p"?: f, "greedy"?: bool}
 //!                    -> text + per-session cache/speculation stats
-//!   GET  /metrics    aggregate + per-session counters over the ONE shared
-//!                    expert cache (JSON)
+//!   GET  /metrics    serve counters (rejected/shed/queue-wait percentiles)
+//!                    + aggregate and per-session counters over the ONE
+//!                    shared expert cache (JSON)
 //!   GET  /healthz
 
 pub mod http;
@@ -28,25 +40,80 @@ use crate::util::json::{self, Value};
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 use self::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
-use std::net::TcpListener;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub use crate::metrics::ServeMetrics;
+
+/// Per-syscall socket timeout on client connections (SO_RCVTIMEO /
+/// SO_SNDTIMEO). A completely stalled peer unblocks within this.
+/// Drip-feeding peers are bounded separately: reads by the absolute
+/// per-request deadline inside [`http::read_request`], writes by response
+/// bodies being far smaller than the kernel send buffer (a `write_all`
+/// lands in the buffer without waiting on the client's read rate).
+const CLIENT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// `Retry-After` seconds advertised on admission-control 503s.
+pub const RETRY_AFTER_S: u64 = 1;
+
+/// Result of one generation, as delivered to the reply path.
+pub type GenResult = std::result::Result<GenResponse, GenError>;
+
+/// Where a finished (or refused) generation is delivered.
+pub enum ReplyTo {
+    /// In-process channel — tests, benches, offline drivers. Delivered
+    /// inline by the scheduler (a channel send cannot block).
+    Channel(Sender<GenResult>),
+    /// Completion-routed: the client socket rides through the scheduler
+    /// and a responder thread writes the HTTP response.
+    Socket(TcpStream),
+}
+
+impl ReplyTo {
+    /// Deliver `result`: inline for channels, via the completion channel
+    /// (and thus a responder thread) for sockets — the scheduler must
+    /// never write to a client socket itself.
+    pub fn deliver(self, result: GenResult, completions: &Sender<Completion>) {
+        match self {
+            ReplyTo::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplyTo::Socket(stream) => {
+                let _ = completions.send(Completion { stream, result });
+            }
+        }
+    }
+}
+
+/// A finished generation routed back to its client socket.
+pub struct Completion {
+    pub stream: TcpStream,
+    pub result: GenResult,
+}
 
 pub struct GenRequest {
     pub prompt: String,
     pub n_tokens: usize,
     pub sampling: Sampling,
-    pub resp: Sender<Result<GenResponse, GenError>>,
+    pub reply: ReplyTo,
+    /// When the request entered the admission queue; queue-age shedding
+    /// and the queue-wait percentiles both measure from here.
+    pub enqueued: Instant,
 }
 
 /// A failed generation, classified for the HTTP layer: 400-class statuses
 /// are the client's fault (validation), 500-class the server's (engine
-/// failure mid-decode).
+/// failure mid-decode), 503 is admission control (shed / engine down).
 #[derive(Clone, Debug)]
 pub struct GenError {
     pub status: u16,
     pub message: String,
+    /// `Retry-After` seconds to advertise (admission-control 503s).
+    pub retry_after: Option<u64>,
 }
 
 #[derive(Clone, Debug)]
@@ -71,38 +138,169 @@ pub struct GenResponse {
 /// Serve-layer knobs (queue + concurrency; the engine has its own config).
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
-    /// Threads accepting/parsing HTTP connections. Each in-flight
-    /// `/generate` pins one worker until its decode completes, so the
-    /// server always provisions at least `max_sessions + 2` workers —
-    /// otherwise the scheduler could never reach its session concurrency
-    /// and `/metrics`/`/healthz` would queue behind blocked decodes.
+    /// Threads parsing HTTP requests and running admission checks. Workers
+    /// never block on decodes (completion routing), so this needs no
+    /// relation to `max_sessions` — it only sizes parse throughput.
     pub http_workers: usize,
     /// Decode sessions interleaved concurrently on the engine worker.
     pub max_sessions: usize,
-    /// Bounded request-queue depth; beyond it, `/generate` answers 503.
+    /// Bounded admission-queue depth; beyond it, `/generate` answers 503.
     pub queue_depth: usize,
+    /// Responder threads writing completed responses to client sockets.
+    pub responders: usize,
+    /// Shed queued requests older than this with 503 + `Retry-After`
+    /// instead of a stale decode (0 = never shed).
+    pub queue_timeout_ms: u64,
+    /// Cap on accepted-but-unfinished requests (queued + decoding +
+    /// awaiting a responder write); beyond it, `/generate` answers 503.
+    /// Distinct from `queue_depth`, which bounds only the waiting queue.
+    pub max_inflight_sessions: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { http_workers: 4, max_sessions: 8, queue_depth: 64 }
+        ServeConfig {
+            http_workers: 4,
+            max_sessions: 8,
+            queue_depth: 64,
+            responders: 2,
+            queue_timeout_ms: 0,
+            max_inflight_sessions: 128,
+        }
     }
 }
 
-/// Serve-level counters, shared between HTTP workers and `/metrics`.
-#[derive(Default)]
-pub struct ServerMetrics {
-    pub requests: AtomicU64,
-    pub errors: AtomicU64,
-    pub rejected_backpressure: AtomicU64,
-    pub tokens_generated: AtomicU64,
-    pub queue_depth: AtomicU64,
+// ---------------------------------------------------------------------------
+// bounded admission queue
+// ---------------------------------------------------------------------------
+
+/// Outcome of a rejected [`AdmissionQueue::try_push`]; the request is
+/// handed back so the caller can answer its client.
+pub enum PushRejected {
+    /// The queue is at `depth`; 503 backpressure.
+    Full(GenRequest),
+    /// The queue was closed (engine down / shutdown).
+    Closed(GenRequest),
 }
+
+/// Outcome of an [`AdmissionQueue::pop`].
+pub enum Popped {
+    Req(GenRequest),
+    /// Nothing queued (non-blocking pop only).
+    Empty,
+    /// Closed AND drained — no request will ever arrive again.
+    Closed,
+}
+
+/// The bounded admission queue between HTTP workers and the scheduler.
+///
+/// Unlike a `sync_channel`, the queue is inspectable: the scheduler sheds
+/// aged requests ([`AdmissionQueue::take_aged`]) every round without
+/// admitting them, and the `queue_depth` gauge is maintained under the
+/// queue lock so it is exact — it can never exceed `depth`.
+pub struct AdmissionQueue {
+    state: Mutex<QueueState>,
+    available: Condvar,
+    depth: usize,
+    metrics: Arc<ServeMetrics>,
+}
+
+struct QueueState {
+    q: VecDeque<GenRequest>,
+    closed: bool,
+}
+
+impl AdmissionQueue {
+    pub fn new(depth: usize, metrics: Arc<ServeMetrics>) -> Arc<AdmissionQueue> {
+        Arc::new(AdmissionQueue {
+            state: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+            depth: depth.max(1),
+            metrics,
+        })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit `req` unless the queue is full or closed.
+    pub fn try_push(&self, req: GenRequest) -> std::result::Result<(), PushRejected> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushRejected::Closed(req));
+        }
+        if st.q.len() >= self.depth {
+            return Err(PushRejected::Full(req));
+        }
+        st.q.push_back(req);
+        self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    /// Pop the oldest request. With `block`, waits until a request arrives
+    /// or the queue closes; otherwise returns [`Popped::Empty`] right away.
+    pub fn pop(&self, block: bool) -> Popped {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.q.pop_front() {
+                self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+                return Popped::Req(r);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            if !block {
+                return Popped::Empty;
+            }
+            st = self.available.wait(st).unwrap();
+        }
+    }
+
+    /// Remove and return every queued request older than `max_age`,
+    /// preserving arrival order — the scheduler's shed sweep.
+    pub fn take_aged(&self, max_age: Duration) -> Vec<GenRequest> {
+        let mut st = self.state.lock().unwrap();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < st.q.len() {
+            if st.q[i].enqueued.elapsed() > max_age {
+                out.push(st.q.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        if !out.is_empty() {
+            self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Close the queue: pending requests can still be popped, new pushes
+    /// are refused, and blocked pops wake.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// /metrics rendering
+// ---------------------------------------------------------------------------
 
 /// Render `/metrics`: serve counters + the scheduler's latest snapshot.
 /// The `shared_cache` object is singular by design — all sessions run over
 /// ONE expert cache; `sessions[*]` partitions its traffic.
-pub fn metrics_json(metrics: &ServerMetrics, snap: &ServeSnapshot) -> Value {
+pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
     let sessions: Vec<Value> = snap
         .sessions
         .iter()
@@ -126,15 +324,33 @@ pub fn metrics_json(metrics: &ServerMetrics, snap: &ServeSnapshot) -> Value {
     Value::obj(vec![
         ("requests", Value::from(metrics.requests.load(Ordering::Relaxed) as f64)),
         ("errors", Value::from(metrics.errors.load(Ordering::Relaxed) as f64)),
+        ("rejected_total", Value::from(metrics.rejected_total() as f64)),
         (
             "rejected_backpressure",
             Value::from(metrics.rejected_backpressure.load(Ordering::Relaxed) as f64),
         ),
         (
+            "rejected_inflight",
+            Value::from(metrics.rejected_inflight.load(Ordering::Relaxed) as f64),
+        ),
+        ("shed_total", Value::from(metrics.shed_total.load(Ordering::Relaxed) as f64)),
+        (
             "tokens_generated",
             Value::from(metrics.tokens_generated.load(Ordering::Relaxed) as f64),
         ),
         ("queue_depth", Value::from(metrics.queue_depth.load(Ordering::Relaxed) as f64)),
+        (
+            "inflight_sessions",
+            Value::from(metrics.inflight_sessions.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "queue_wait_ns",
+            Value::obj(vec![
+                ("count", Value::from(metrics.queue_wait.count() as f64)),
+                ("p50", Value::from(metrics.queue_wait.percentile_ns(0.50) as f64)),
+                ("p99", Value::from(metrics.queue_wait.percentile_ns(0.99) as f64)),
+            ]),
+        ),
         ("active_sessions", Value::from(snap.active_sessions)),
         ("completed_sessions", Value::from(snap.completed_sessions as f64)),
         ("failed_sessions", Value::from(snap.failed_sessions as f64)),
@@ -191,7 +407,7 @@ pub fn metrics_json(metrics: &ServerMetrics, snap: &ServeSnapshot) -> Value {
 }
 
 /// Parse the /generate request body.
-pub fn parse_gen_request(body: &[u8]) -> Result<(String, usize, Sampling), String> {
+pub fn parse_gen_request(body: &[u8]) -> std::result::Result<(String, usize, Sampling), String> {
     let v = json::parse(std::str::from_utf8(body).map_err(|e| e.to_string())?)
         .map_err(|e| e.to_string())?;
     let prompt = v
@@ -230,6 +446,116 @@ pub fn gen_response_json(r: &GenResponse) -> String {
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// responders: write completed responses to client sockets
+// ---------------------------------------------------------------------------
+
+fn spawn_responders(
+    n: usize,
+    rx: Receiver<Completion>,
+    metrics: Arc<ServeMetrics>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let rx = Arc::new(Mutex::new(rx));
+    (0..n.max(1))
+        .map(|i| {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name(format!("responder-{i}"))
+                .spawn(move || loop {
+                    let c = match rx.lock().unwrap().recv() {
+                        Ok(c) => c,
+                        Err(_) => break, // scheduler gone and channel drained
+                    };
+                    respond(c, &metrics);
+                })
+                .expect("spawn responder")
+        })
+        .collect()
+}
+
+/// Write one completion to its client socket and release its in-flight
+/// slot. Write failures (client gone, write timeout) are swallowed — the
+/// decode already happened; there is nobody left to tell.
+fn respond(c: Completion, metrics: &ServeMetrics) {
+    let mut stream = c.stream;
+    match c.result {
+        Ok(resp) => {
+            let body = gen_response_json(&resp);
+            let _ = http::write_response(&mut stream, 200, "application/json", body.as_bytes());
+        }
+        Err(ge) => {
+            // admission-control 503s are counted by their own counters
+            // (shed_total / rejected_*), not as errors
+            if ge.status != 503 {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            let body = json::to_string(&Value::obj(vec![(
+                "error",
+                Value::from(ge.message),
+            )]));
+            let extra: Vec<(&str, String)> = ge
+                .retry_after
+                .map(|s| ("Retry-After", s.to_string()))
+                .into_iter()
+                .collect();
+            let _ = http::write_response_with_headers(
+                &mut stream,
+                ge.status,
+                "application/json",
+                &extra,
+                body.as_bytes(),
+            );
+        }
+    }
+    release_inflight(metrics);
+}
+
+/// Release the in-flight slot reserved at admission (saturating: the
+/// gauge must never wrap).
+fn release_inflight(metrics: &ServeMetrics) {
+    let _ = metrics
+        .inflight_sessions
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+}
+
+/// Engine-worker exit guard. Runs on every exit path — clean scheduler
+/// return, engine-init failure, or a panic unwinding out of the scheduler
+/// — and (idempotently) closes the admission queue, flips `/healthz` to
+/// down, and answers every still-queued request with 503 so no client is
+/// left hanging on a dead engine. The refused requests are counted in
+/// `errors` (they are server-side failures, unlike the admission-control
+/// 503s with their own counters), keeping the per-request accounting
+/// exhaustive even on the panic path.
+struct WorkerGuard {
+    queue: Arc<AdmissionQueue>,
+    completions: Sender<Completion>,
+    up: Arc<AtomicBool>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        self.up.store(false, Ordering::Relaxed);
+        self.queue.close();
+        while let Popped::Req(r) = self.queue.pop(false) {
+            self.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            r.reply.deliver(
+                Err(GenError {
+                    status: 503,
+                    message: "engine down".into(),
+                    retry_after: None,
+                }),
+                &self.completions,
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------------
+
 /// Run the server until `shutdown` flips (or forever). Engine construction
 /// is deferred to the worker thread because the PJRT backend is not `Send`.
 pub fn serve<F>(
@@ -241,63 +567,84 @@ pub fn serve<F>(
 where
     F: FnOnce() -> Result<crate::engine::InferenceEngine> + Send + 'static,
 {
-    let metrics = Arc::new(ServerMetrics::default());
+    let metrics = Arc::new(ServeMetrics::default());
     let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
-    let (queue_tx, queue_rx) = sync_channel::<GenRequest>(cfg.queue_depth.max(1));
+    let queue = AdmissionQueue::new(cfg.queue_depth, Arc::clone(&metrics));
+    let (completion_tx, completion_rx) = channel::<Completion>();
     // liveness for /healthz: flips false when the engine worker exits
     // (init failure or retirement) so orchestrators stop routing traffic
     // to a server that can only answer 503
     let engine_up = Arc::new(AtomicBool::new(true));
 
-    // engine worker: owns the engine and runs the session scheduler
+    // engine worker: owns the engine, runs the session scheduler, posts
+    // completions; its senders are the ONLY completion senders, so
+    // responders exit exactly when the worker does (after every
+    // completion drained). The WorkerGuard runs on EVERY exit — clean
+    // return, init failure, or panic inside the scheduler — closing the
+    // queue and refusing whatever is still in it, so clients can never be
+    // left hanging on a dead engine.
     let worker_metrics = Arc::clone(&metrics);
     let worker_snapshot = Arc::clone(&snapshot);
-    let worker_up = Arc::clone(&engine_up);
-    let max_sessions = cfg.max_sessions;
+    let worker_queue = Arc::clone(&queue);
+    let sched_cfg = SchedulerConfig {
+        max_sessions: cfg.max_sessions,
+        queue_timeout: (cfg.queue_timeout_ms > 0)
+            .then(|| Duration::from_millis(cfg.queue_timeout_ms)),
+    };
+    let guard = WorkerGuard {
+        queue: Arc::clone(&queue),
+        completions: completion_tx.clone(),
+        up: Arc::clone(&engine_up),
+        metrics: Arc::clone(&metrics),
+    };
     let engine_worker = std::thread::Builder::new()
         .name("engine-worker".into())
         .spawn(move || {
+            let _guard = guard;
             let engine = match make_engine() {
                 Ok(e) => e,
                 Err(e) => {
-                    worker_up.store(false, Ordering::Relaxed);
                     eprintln!("engine init failed: {e:#}");
-                    return;
+                    return; // guard refuses queued + future requests
                 }
             };
-            run_scheduler(
+            let _ = run_scheduler(
                 engine,
-                queue_rx,
-                SchedulerConfig { max_sessions },
+                worker_queue,
+                completion_tx,
+                sched_cfg,
                 worker_metrics,
                 worker_snapshot,
             );
-            worker_up.store(false, Ordering::Relaxed);
         })?;
 
-    // see ServeConfig::http_workers: one blocked worker per in-flight
-    // decode, plus headroom for /metrics and /healthz under load
-    let pool = ThreadPool::new(cfg.http_workers.max(cfg.max_sessions + 2));
+    let responders = spawn_responders(cfg.responders, completion_rx, Arc::clone(&metrics));
+
+    // workers never hold a connection across a decode, so the pool is
+    // sized for parse throughput only
+    let pool = ThreadPool::new(cfg.http_workers.max(1));
+    let max_inflight = cfg.max_inflight_sessions.max(1);
     listener.set_nonblocking(true)?;
     println!(
-        "serving on {} (max {} concurrent sessions, queue depth {})",
+        "serving on {} (max {} concurrent sessions, queue depth {}, inflight cap {})",
         listener.local_addr()?,
         cfg.max_sessions,
-        cfg.queue_depth
+        cfg.queue_depth,
+        cfg.max_inflight_sessions
     );
     loop {
         if shutdown.load(Ordering::Relaxed) {
             break;
         }
         match listener.accept() {
-            Ok((mut stream, _)) => {
+            Ok((stream, _)) => {
                 stream.set_nonblocking(false).ok();
                 let metrics = Arc::clone(&metrics);
                 let snapshot = Arc::clone(&snapshot);
                 let engine_up = Arc::clone(&engine_up);
-                let queue_tx = queue_tx.clone();
+                let queue = Arc::clone(&queue);
                 pool.execute(move || {
-                    handle_conn(&mut stream, &metrics, &snapshot, &engine_up, &queue_tx);
+                    handle_conn(stream, &metrics, &snapshot, &engine_up, &queue, max_inflight);
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -309,23 +656,29 @@ where
             }
         }
     }
-    drop(pool); // joins HTTP workers, dropping their queue_tx clones
-    drop(queue_tx); // closes the queue; the scheduler drains and exits
-    let _ = engine_worker.join();
+    drop(pool); // joins HTTP workers: no more pushes
+    queue.close(); // scheduler drains the remaining queue and exits
+    let _ = engine_worker.join(); // drops the completion sender
+    for r in responders {
+        let _ = r.join(); // responders drained every completion
+    }
     Ok(())
 }
 
 fn handle_conn(
-    stream: &mut std::net::TcpStream,
-    metrics: &ServerMetrics,
+    mut stream: TcpStream,
+    metrics: &ServeMetrics,
     snapshot: &Mutex<ServeSnapshot>,
     engine_up: &AtomicBool,
-    queue_tx: &SyncSender<GenRequest>,
+    queue: &AdmissionQueue,
+    max_inflight: usize,
 ) {
-    let req = match http::read_request(stream) {
+    let _ = stream.set_read_timeout(Some(CLIENT_IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CLIENT_IO_TIMEOUT));
+    let req = match http::read_request(&mut stream) {
         Ok(r) => r,
         Err(_) => {
-            let _ = http::write_response(stream, 400, "text/plain", b"bad request");
+            let _ = http::write_response(&mut stream, 400, "text/plain", b"bad request");
             return;
         }
     };
@@ -333,76 +686,93 @@ fn handle_conn(
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             if engine_up.load(Ordering::Relaxed) {
-                let _ = http::write_response(stream, 200, "text/plain", b"ok");
+                let _ = http::write_response(&mut stream, 200, "text/plain", b"ok");
             } else {
-                let _ = http::write_response(stream, 503, "text/plain", b"engine down");
+                let _ = http::write_response(&mut stream, 503, "text/plain", b"engine down");
             }
         }
         ("GET", "/metrics") => {
             let snap = snapshot.lock().unwrap().clone();
             let body = json::to_string(&metrics_json(metrics, &snap));
-            let _ = http::write_response(stream, 200, "application/json", body.as_bytes());
+            let _ = http::write_response(&mut stream, 200, "application/json", body.as_bytes());
         }
         ("POST", "/generate") => match parse_gen_request(&req.body) {
             Ok((prompt, n, sampling)) => {
-                let (tx, rx) = channel();
-                // increment BEFORE send so the scheduler's decrement can
-                // never observe the gauge at zero for an enqueued request
-                metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-                match queue_tx.try_send(GenRequest { prompt, n_tokens: n, sampling, resp: tx }) {
-                    Ok(()) => {}
-                    Err(TrySendError::Full(_)) => {
-                        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                        metrics.rejected_backpressure.fetch_add(1, Ordering::Relaxed);
-                        let _ = http::write_response(
-                            stream,
-                            503,
-                            "text/plain",
-                            b"queue full (backpressure); retry later",
-                        );
-                        return;
-                    }
-                    Err(TrySendError::Disconnected(_)) => {
-                        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        let _ = http::write_response(stream, 503, "text/plain", b"engine down");
-                        return;
-                    }
-                }
-                match rx.recv() {
-                    Ok(Ok(resp)) => {
-                        let body = gen_response_json(&resp);
-                        let _ =
-                            http::write_response(stream, 200, "application/json", body.as_bytes());
-                    }
-                    Ok(Err(ge)) => {
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        let body = json::to_string(&Value::obj(vec![(
-                            "error",
-                            Value::from(ge.message),
-                        )]));
-                        let _ = http::write_response(
-                            stream,
-                            ge.status,
-                            "application/json",
-                            body.as_bytes(),
-                        );
-                    }
-                    Err(_) => {
-                        metrics.errors.fetch_add(1, Ordering::Relaxed);
-                        let _ = http::write_response(stream, 500, "text/plain", b"worker died");
-                    }
-                }
+                admit_generate(stream, prompt, n, sampling, metrics, queue, max_inflight);
             }
             Err(msg) => {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
                 let body =
                     json::to_string(&Value::obj(vec![("error", Value::from(msg))]));
-                let _ = http::write_response(stream, 400, "application/json", body.as_bytes());
+                let _ = http::write_response(&mut stream, 400, "application/json", body.as_bytes());
             }
         },
         _ => {
-            let _ = http::write_response(stream, 404, "text/plain", b"not found");
+            let _ = http::write_response(&mut stream, 404, "text/plain", b"not found");
+        }
+    }
+}
+
+/// Admission-check a parsed `/generate` and either enqueue it (handing the
+/// socket to the scheduler → responder path) or answer 503 right here.
+/// Either way the HTTP worker returns immediately — it never waits on a
+/// decode.
+fn admit_generate(
+    mut stream: TcpStream,
+    prompt: String,
+    n_tokens: usize,
+    sampling: Sampling,
+    metrics: &ServeMetrics,
+    queue: &AdmissionQueue,
+    max_inflight: usize,
+) {
+    let retry = [("Retry-After", RETRY_AFTER_S.to_string())];
+    // reserve an in-flight slot first (released by the responder after the
+    // response is written): the cap bounds queued + decoding +
+    // completion-pending work, exactly
+    let reserved = metrics
+        .inflight_sessions
+        .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            (v < max_inflight as u64).then_some(v + 1)
+        })
+        .is_ok();
+    if !reserved {
+        metrics.rejected_inflight.fetch_add(1, Ordering::Relaxed);
+        let _ = http::write_response_with_headers(
+            &mut stream,
+            503,
+            "text/plain",
+            &retry,
+            b"in-flight session cap reached; retry later",
+        );
+        return;
+    }
+    let req = GenRequest {
+        prompt,
+        n_tokens,
+        sampling,
+        reply: ReplyTo::Socket(stream),
+        enqueued: Instant::now(),
+    };
+    match queue.try_push(req) {
+        Ok(()) => {} // worker freed; a responder writes the reply
+        Err(PushRejected::Full(req)) => {
+            release_inflight(metrics);
+            metrics.rejected_backpressure.fetch_add(1, Ordering::Relaxed);
+            let ReplyTo::Socket(mut stream) = req.reply else { return };
+            let _ = http::write_response_with_headers(
+                &mut stream,
+                503,
+                "text/plain",
+                &retry,
+                b"queue full (backpressure); retry later",
+            );
+        }
+        Err(PushRejected::Closed(req)) => {
+            release_inflight(metrics);
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let ReplyTo::Socket(mut stream) = req.reply else { return };
+            let _ = http::write_response(&mut stream, 503, "text/plain", b"engine down");
         }
     }
 }
@@ -430,10 +800,16 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 0)? as u64;
     let profile = crate::sim::hardware::by_name(&args.str_or("profile", "A100"))
         .ok_or_else(|| anyhow::anyhow!("bad --profile"))?;
+    let defaults = ServeConfig::default();
     let serve_cfg = ServeConfig {
-        http_workers: args.usize_or("http-workers", 4)?,
-        max_sessions: args.usize_or("max-sessions", 8)?,
-        queue_depth: args.usize_or("queue-depth", 64)?,
+        http_workers: args.usize_or("http-workers", defaults.http_workers)?,
+        max_sessions: args.usize_or("max-sessions", defaults.max_sessions)?,
+        queue_depth: args.usize_or("queue-depth", defaults.queue_depth)?,
+        responders: args.usize_or("responders", defaults.responders)?,
+        queue_timeout_ms: args.usize_or("queue-timeout-ms", defaults.queue_timeout_ms as usize)?
+            as u64,
+        max_inflight_sessions: args
+            .usize_or("max-inflight-sessions", defaults.max_inflight_sessions)?,
     };
 
     let listener = TcpListener::bind(("0.0.0.0", port as u16))?;
@@ -523,10 +899,93 @@ mod tests {
         assert_eq!(v.get("spec_precision").as_f64(), Some(0.5));
     }
 
+    fn request_with_reply(n_tokens: usize) -> (GenRequest, Receiver<GenResult>) {
+        let (tx, rx) = channel();
+        (
+            GenRequest {
+                prompt: "q".into(),
+                n_tokens,
+                sampling: Sampling::Greedy,
+                reply: ReplyTo::Channel(tx),
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn admission_queue_bounds_and_gauges() {
+        let metrics = Arc::new(ServeMetrics::default());
+        let q = AdmissionQueue::new(2, Arc::clone(&metrics));
+        assert!(q.try_push(request_with_reply(1).0).is_ok());
+        assert!(q.try_push(request_with_reply(2).0).is_ok());
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 2);
+        match q.try_push(request_with_reply(3).0) {
+            Err(PushRejected::Full(r)) => assert_eq!(r.n_tokens, 3),
+            _ => panic!("expected Full"),
+        }
+        // FIFO pop, gauge tracks exactly
+        match q.pop(false) {
+            Popped::Req(r) => assert_eq!(r.n_tokens, 1),
+            _ => panic!("expected request"),
+        }
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 1);
+        q.close();
+        match q.try_push(request_with_reply(4).0) {
+            Err(PushRejected::Closed(_)) => {}
+            _ => panic!("expected Closed"),
+        }
+        // closed queues still drain
+        assert!(matches!(q.pop(false), Popped::Req(_)));
+        assert!(matches!(q.pop(false), Popped::Closed));
+        assert!(matches!(q.pop(true), Popped::Closed));
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn admission_queue_sheds_aged_only() {
+        let metrics = Arc::new(ServeMetrics::default());
+        let q = AdmissionQueue::new(8, Arc::clone(&metrics));
+        let (mut old, _rx_old) = request_with_reply(7);
+        if let Some(t) = Instant::now().checked_sub(Duration::from_secs(60)) {
+            old.enqueued = t;
+        } else {
+            return; // machine uptime < backdate window; nothing to test
+        }
+        let (fresh, _rx_fresh) = request_with_reply(8);
+        q.try_push(old).ok().unwrap();
+        q.try_push(fresh).ok().unwrap();
+        let aged = q.take_aged(Duration::from_secs(1));
+        assert_eq!(aged.len(), 1);
+        assert_eq!(aged[0].n_tokens, 7);
+        assert_eq!(q.len(), 1);
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 1);
+        assert!(q.take_aged(Duration::from_secs(1)).is_empty());
+    }
+
+    #[test]
+    fn admission_queue_blocking_pop_wakes_on_push() {
+        let metrics = Arc::new(ServeMetrics::default());
+        let q = AdmissionQueue::new(2, metrics);
+        let q2 = Arc::clone(&q);
+        let popper = std::thread::spawn(move || match q2.pop(true) {
+            Popped::Req(r) => r.n_tokens,
+            _ => 0,
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(request_with_reply(5).0).ok().unwrap();
+        assert_eq!(popper.join().unwrap(), 5);
+    }
+
     #[test]
     fn metrics_json_reports_single_shared_cache_with_sessions() {
-        let metrics = ServerMetrics::default();
+        let metrics = ServeMetrics::default();
         metrics.requests.store(7, Ordering::Relaxed);
+        metrics.rejected_backpressure.store(2, Ordering::Relaxed);
+        metrics.rejected_inflight.store(1, Ordering::Relaxed);
+        metrics.shed_total.store(4, Ordering::Relaxed);
+        metrics.inflight_sessions.store(3, Ordering::Relaxed);
+        metrics.queue_wait.record_ns(1_000);
         let mut snap = ServeSnapshot {
             policy: "lfu".into(),
             capacity_per_layer: 4,
@@ -560,6 +1019,16 @@ mod tests {
         let v = metrics_json(&metrics, &snap);
         assert_eq!(v.get("requests").as_usize(), Some(7));
         assert_eq!(v.get("failed_sessions").as_usize(), Some(1));
+        // admission-control counters: rejected_total = backpressure + cap
+        assert_eq!(v.get("rejected_total").as_usize(), Some(3));
+        assert_eq!(v.get("rejected_backpressure").as_usize(), Some(2));
+        assert_eq!(v.get("rejected_inflight").as_usize(), Some(1));
+        assert_eq!(v.get("shed_total").as_usize(), Some(4));
+        assert_eq!(v.get("inflight_sessions").as_usize(), Some(3));
+        let qw = v.get("queue_wait_ns");
+        assert_eq!(qw.get("count").as_usize(), Some(1));
+        assert!(qw.get("p50").as_f64().unwrap() >= 1_000.0);
+        assert!(qw.get("p99").as_f64().unwrap() >= qw.get("p50").as_f64().unwrap());
         let cache = v.get("shared_cache");
         assert_eq!(cache.get("policy").as_str(), Some("lfu"));
         assert_eq!(cache.get("hits").as_usize(), Some(90));

@@ -12,9 +12,15 @@
 //! expert while it stays resident (the paper's persistent-cache semantics,
 //! now contended across sessions).
 //!
-//! Admission is demand-driven: new requests are drained from the bounded
-//! queue between rounds, up to `max_sessions` in flight; beyond that they
-//! wait in the queue (whose bound is the HTTP 503 backpressure limit).
+//! Admission is demand-driven over the bounded [`AdmissionQueue`]: new
+//! requests are drained between rounds, up to `max_sessions` in flight.
+//! Before every admission pass the scheduler runs a *shed sweep*: queued
+//! requests older than `queue_timeout` answer 503 + `Retry-After` without
+//! ever becoming a session — a shed request consumes zero engine steps.
+//! Finished generations are posted to the completion channel (the client
+//! socket rides along) so the scheduler never writes to a socket and can
+//! never be blocked by a slow client.
+//!
 //! Per-session accounting comes from the engine's session tallies
 //! ([`crate::metrics::SessionTally`]) and is published after every round in
 //! a [`ServeSnapshot`] the `/metrics` endpoint renders without touching the
@@ -22,16 +28,18 @@
 
 use crate::engine::batch::Session;
 use crate::engine::InferenceEngine;
-use crate::metrics::{CacheStats, PipelineStats, PrecisionRecall, SessionTally};
+use crate::metrics::{CacheStats, PipelineStats, PrecisionRecall, ServeMetrics, SessionTally};
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::Tokenizer;
-use crate::serve::{GenError, GenRequest, GenResponse, ServerMetrics};
+use crate::serve::{
+    AdmissionQueue, Completion, GenError, GenRequest, GenResponse, Popped, RETRY_AFTER_S,
+};
 use crate::sim::costmodel::TokenEvents;
 use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// How many finished sessions `/metrics` keeps visible after completion.
 const RECENT_SESSIONS: usize = 32;
@@ -40,11 +48,14 @@ const RECENT_SESSIONS: usize = 32;
 pub struct SchedulerConfig {
     /// Maximum sessions decoded concurrently (further requests queue).
     pub max_sessions: usize,
+    /// Shed queued requests older than this before admitting them
+    /// (`None` = requests wait indefinitely).
+    pub queue_timeout: Option<Duration>,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_sessions: 8 }
+        SchedulerConfig { max_sessions: 8, queue_timeout: None }
     }
 }
 
@@ -90,21 +101,54 @@ struct ActiveSession {
     /// covers every interleaved token, so per-session sim tokens/s reflects
     /// contention — the serving metric, not the solo-decode one.
     sim_start: f64,
-    resp: Sender<Result<GenResponse, GenError>>,
+    reply: crate::serve::ReplyTo,
+    /// Engine failure recorded mid-round; delivered when the session is
+    /// retired (the reply path needs the session by value).
+    error: Option<GenError>,
 }
 
-/// Run the scheduler until the request channel closes and no sessions
-/// remain. Owns the engine for its entire lifetime.
+/// The active-session set, with a panic-safe reply guarantee: if the
+/// scheduler unwinds mid-decode, every still-active session's client gets
+/// a 500 through the completion channel (releasing its in-flight slot)
+/// instead of a silent EOF. On a normal exit the set is empty and the
+/// drop is a no-op.
+struct ActiveSet {
+    sessions: Vec<ActiveSession>,
+    completions: Sender<Completion>,
+}
+
+impl Drop for ActiveSet {
+    fn drop(&mut self) {
+        for s in self.sessions.drain(..) {
+            s.reply.deliver(
+                Err(GenError {
+                    status: 500,
+                    message: "engine worker died mid-decode".into(),
+                    retry_after: None,
+                }),
+                &self.completions,
+            );
+        }
+    }
+}
+
+/// Run the scheduler until the admission queue closes and drains and no
+/// sessions remain. Owns the engine for its entire lifetime and returns it
+/// so callers can inspect post-run engine state (e.g.
+/// [`InferenceEngine::total_steps`] — the shed-consumes-nothing proof).
 pub fn run_scheduler(
     mut engine: InferenceEngine,
-    rx: Receiver<GenRequest>,
+    queue: Arc<AdmissionQueue>,
+    completions: Sender<Completion>,
     cfg: SchedulerConfig,
-    metrics: Arc<ServerMetrics>,
+    metrics: Arc<ServeMetrics>,
     snapshot: Arc<Mutex<ServeSnapshot>>,
-) {
+) -> InferenceEngine {
     let tk = Tokenizer::new(engine.config().vocab_size);
     let max_sessions = cfg.max_sessions.max(1);
-    let mut active: Vec<ActiveSession> = Vec::new();
+    // panic-safe: if anything below unwinds, still-active sessions answer
+    // 500 through the completion channel (see ActiveSet::drop)
+    let mut active = ActiveSet { sessions: Vec::new(), completions: completions.clone() };
     let mut recent: VecDeque<SessionView> = VecDeque::new();
     let mut completed: u64 = 0;
     let mut failed_sessions: u64 = 0;
@@ -118,28 +162,41 @@ pub fn run_scheduler(
     }
 
     'outer: loop {
+        // --- shed sweep: requests past their queue deadline answer 503 +
+        // Retry-After *before* admission — they never become sessions and
+        // never consume an engine step
+        if let Some(t) = cfg.queue_timeout {
+            for req in queue.take_aged(t) {
+                shed(req, &completions, &metrics);
+            }
+        }
+
         // --- admission: block when idle, drain opportunistically when busy
-        while active.len() < max_sessions {
-            let req = if active.is_empty() {
-                match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break 'outer, // all senders gone, nothing active
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(r) => r,
-                    Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        while active.sessions.len() < max_sessions {
+            let req = match queue.pop(active.sessions.is_empty()) {
+                Popped::Req(r) => r,
+                Popped::Empty => break,
+                Popped::Closed => {
+                    if active.sessions.is_empty() {
+                        break 'outer; // closed, drained, nothing active
+                    }
+                    break;
                 }
             };
-            // saturating decrement: the gauge must never wrap if a producer
-            // raced its increment
-            let _ = metrics
-                .queue_depth
-                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
-            // admission failures answer on the response channel; the HTTP
-            // layer counts them in metrics.errors when it relays the Err
-            if let Some(sess) = admit(&engine, &tk, next_id, req) {
-                active.push(sess);
+            // a request can age past its deadline between the sweep and
+            // this pop (e.g. while the scheduler blocked idle): re-check,
+            // so "admitted" always implies "within deadline at admission"
+            if cfg.queue_timeout.is_some_and(|t| req.enqueued.elapsed() > t) {
+                shed(req, &completions, &metrics);
+                continue;
+            }
+            metrics
+                .queue_wait
+                .record_ns(req.enqueued.elapsed().as_nanos() as u64);
+            // admission failures answer on the reply path; the responder
+            // layer counts them in metrics.errors for socket replies
+            if let Some(sess) = admit(&engine, &tk, next_id, req, &completions) {
+                active.sessions.push(sess);
                 next_id += 1;
             }
         }
@@ -147,67 +204,72 @@ pub fn run_scheduler(
         // --- one round-robin pass: every active session advances one token
         let mut finished: Vec<ActiveSession> = Vec::new();
         let mut i = 0;
-        while i < active.len() {
-            let s = &mut active[i];
+        while i < active.sessions.len() {
+            let s = &mut active.sessions[i];
             let was_generated = s.inner.next_token_is_generated();
             let mut ev = TokenEvents::default();
-            let failed = match s.inner.step_once(&mut engine, &mut ev) {
+            match s.inner.step_once(&mut engine, &mut ev) {
                 Ok(_done) => {
                     if was_generated {
                         metrics.tokens_generated.fetch_add(1, Ordering::Relaxed);
                     }
-                    false
                 }
                 Err(e) => {
-                    // engine-side failure: 500, counted by the HTTP layer
-                    let _ = s.resp.send(Err(GenError {
+                    // engine-side failure: 500, delivered at retirement
+                    s.error = Some(GenError {
                         status: 500,
                         message: format!("{e:#}"),
-                    }));
-                    true
+                        retry_after: None,
+                    });
                 }
-            };
-            if failed || s.inner.done {
-                finished.push(active.swap_remove(i));
+            }
+            if s.error.is_some() || s.inner.done {
+                finished.push(active.sessions.swap_remove(i));
             } else {
                 i += 1;
             }
         }
 
         for s in finished {
-            let tally = engine.take_session_tally(s.inner.id);
-            let generated = s.inner.generated().len();
-            let succeeded = s.inner.done;
-            if succeeded {
-                let sim_span = engine.sim_now() - s.sim_start;
-                let resp = GenResponse {
-                    text: tk.decode(s.inner.generated()),
-                    n_prompt: s.inner.n_prompt,
+            let ActiveSession { inner, started, sim_start, reply, error } = s;
+            let tally = engine.take_session_tally(inner.id);
+            let generated = inner.generated().len();
+            let succeeded = error.is_none() && inner.done;
+            let result = if succeeded {
+                let sim_span = engine.sim_now() - sim_start;
+                completed += 1;
+                Ok(GenResponse {
+                    text: tk.decode(inner.generated()),
+                    n_prompt: inner.n_prompt,
                     n_generated: generated,
-                    wall_s: s.started.elapsed().as_secs_f64(),
+                    wall_s: started.elapsed().as_secs_f64(),
                     sim_tokens_per_s: if sim_span > 0.0 {
-                        (s.inner.n_prompt + generated) as f64 / sim_span
+                        (inner.n_prompt + generated) as f64 / sim_span
                     } else {
                         0.0
                     },
                     cache_hit_rate: tally.hit_rate(),
-                    session_id: s.inner.id,
+                    session_id: inner.id,
                     session_hits: tally.hits,
                     session_misses: tally.misses,
                     spec_precision: tally.spec_pr.precision(),
                     spec_recall: tally.spec_pr.recall(),
-                };
-                let _ = s.resp.send(Ok(resp));
-                completed += 1;
+                })
             } else {
                 failed_sessions += 1;
-            }
+                Err(error.unwrap_or_else(|| GenError {
+                    status: 500,
+                    message: "session aborted".into(),
+                    retry_after: None,
+                }))
+            };
+            reply.deliver(result, &completions);
             recent.push_back(SessionView {
-                id: s.inner.id,
+                id: inner.id,
                 state: if succeeded { "done" } else { "failed" },
-                n_prompt: s.inner.n_prompt,
+                n_prompt: inner.n_prompt,
                 generated,
-                target: s.inner.target_new,
+                target: inner.target_new,
                 tally,
             });
             while recent.len() > RECENT_SESSIONS {
@@ -215,14 +277,32 @@ pub fn run_scheduler(
             }
         }
 
-        publish(&engine, &active, &recent, completed, failed_sessions, &snapshot);
+        publish(&engine, &active.sessions, &recent, completed, failed_sessions, &snapshot);
     }
 
-    publish(&engine, &active, &recent, completed, failed_sessions, &snapshot);
+    publish(&engine, &active.sessions, &recent, completed, failed_sessions, &snapshot);
+    engine
+}
+
+/// Refuse one aged request: 503 + `Retry-After`, `shed_total` incremented,
+/// queue wait recorded — and, by construction, zero engine steps consumed.
+fn shed(req: GenRequest, completions: &Sender<Completion>, metrics: &ServeMetrics) {
+    metrics
+        .queue_wait
+        .record_ns(req.enqueued.elapsed().as_nanos() as u64);
+    metrics.shed_total.fetch_add(1, Ordering::Relaxed);
+    req.reply.deliver(
+        Err(GenError {
+            status: 503,
+            message: "shed: queued past --queue-timeout-ms; retry later".into(),
+            retry_after: Some(RETRY_AFTER_S),
+        }),
+        completions,
+    );
 }
 
 /// Validate and set up one request as an active session. On failure the
-/// error is sent on the response channel and `None` returned: length
+/// error is delivered on the reply path and `None` returned: length
 /// violations are the client's fault (400), anything else in session
 /// construction is the server's (500).
 fn admit(
@@ -230,25 +310,33 @@ fn admit(
     tk: &Tokenizer,
     id: u64,
     req: GenRequest,
+    completions: &Sender<Completion>,
 ) -> Option<ActiveSession> {
     let prompt = tk.encode(&req.prompt);
     let max = engine.config().max_seq;
     if prompt.len() + req.n_tokens > max {
-        let _ = req.resp.send(Err(GenError {
-            status: 400,
-            message: format!(
-                "prompt {} + n_tokens {} exceeds max_seq {max}",
-                prompt.len(),
-                req.n_tokens
-            ),
-        }));
+        req.reply.deliver(
+            Err(GenError {
+                status: 400,
+                message: format!(
+                    "prompt {} + n_tokens {} exceeds max_seq {max}",
+                    prompt.len(),
+                    req.n_tokens
+                ),
+                retry_after: None,
+            }),
+            completions,
+        );
         return None;
     }
     let sampler = Sampler::new(req.sampling, id);
     let inner = match Session::new(id, engine, &prompt, req.n_tokens, sampler) {
         Ok(s) => s,
         Err(e) => {
-            let _ = req.resp.send(Err(GenError { status: 500, message: format!("{e:#}") }));
+            req.reply.deliver(
+                Err(GenError { status: 500, message: format!("{e:#}"), retry_after: None }),
+                completions,
+            );
             return None;
         }
     };
@@ -256,7 +344,8 @@ fn admit(
         inner,
         started: Instant::now(),
         sim_start: engine.sim_now(),
-        resp: req.resp,
+        reply: req.reply,
+        error: None,
     })
 }
 
@@ -302,7 +391,8 @@ mod tests {
     use crate::offload::store::HostExpertStore;
     use crate::quant::Scheme;
     use crate::runtime::native::NativeBackend;
-    use std::sync::mpsc::{channel, sync_channel};
+    use crate::serve::{GenResult, ReplyTo};
+    use std::sync::mpsc::{channel, Receiver};
 
     /// Byte-tokenizer-compatible tiny config (vocab must hold 256 bytes +
     /// specials; TINY's vocab of 64 is for raw-token tests only).
@@ -326,53 +416,65 @@ mod tests {
         InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg)
     }
 
-    #[allow(clippy::type_complexity)]
-    fn request(
-        prompt: &str,
-        n: usize,
-    ) -> (GenRequest, std::sync::mpsc::Receiver<Result<GenResponse, GenError>>) {
+    fn request(prompt: &str, n: usize) -> (GenRequest, Receiver<GenResult>) {
         let (tx, rx) = channel();
         (
             GenRequest {
                 prompt: prompt.to_string(),
                 n_tokens: n,
                 sampling: Sampling::Greedy,
-                resp: tx,
+                reply: ReplyTo::Channel(tx),
+                enqueued: Instant::now(),
             },
             rx,
         )
     }
 
+    fn push(queue: &AdmissionQueue, prompt: &str, n: usize) -> Receiver<GenResult> {
+        let (req, rx) = request(prompt, n);
+        assert!(queue.try_push(req).is_ok(), "test queue accepts");
+        rx
+    }
+
+    fn test_queue(
+        depth: usize,
+    ) -> (Arc<AdmissionQueue>, Arc<ServeMetrics>) {
+        let metrics = Arc::new(ServeMetrics::default());
+        (AdmissionQueue::new(depth, Arc::clone(&metrics)), metrics)
+    }
+
     #[test]
     fn scheduler_completes_concurrent_sessions() {
         let engine = test_engine(true);
-        let (tx, rx) = sync_channel::<GenRequest>(16);
-        let metrics = Arc::new(ServerMetrics::default());
+        let (queue, metrics) = test_queue(16);
         let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let (completions, _completion_rx) = channel();
 
         let mut resp_rxs = Vec::new();
         for i in 0..5 {
-            let (req, resp_rx) = request(&format!("prompt number {i}"), 6);
-            tx.send(req).unwrap();
-            metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-            resp_rxs.push(resp_rx);
+            resp_rxs.push(push(&queue, &format!("prompt number {i}"), 6));
         }
-        drop(tx);
-        run_scheduler(
+        queue.close();
+        let engine = run_scheduler(
             engine,
-            rx,
-            SchedulerConfig { max_sessions: 4 },
+            queue,
+            completions,
+            SchedulerConfig { max_sessions: 4, queue_timeout: None },
             Arc::clone(&metrics),
             Arc::clone(&snapshot),
         );
 
         let mut ids = Vec::new();
+        let mut stepped = 0u64;
         for rx in resp_rxs {
             let resp = rx.recv().unwrap().expect("generation ok");
             assert_eq!(resp.n_generated, 6);
             assert!(!ids.contains(&resp.session_id), "duplicate session id");
             ids.push(resp.session_id);
+            stepped += (resp.n_prompt + resp.n_generated) as u64;
         }
+        // admitted sessions account for every engine step
+        assert_eq!(engine.total_steps(), stepped);
         let snap = snapshot.lock().unwrap();
         assert_eq!(snap.completed_sessions, 5);
         assert_eq!(snap.failed_sessions, 0);
@@ -384,6 +486,9 @@ mod tests {
         let part: u64 = snap.sessions.iter().map(|s| s.tally.hits + s.tally.misses).sum();
         assert_eq!(part, snap.cache.hits + snap.cache.misses);
         assert_eq!(metrics.tokens_generated.load(Ordering::Relaxed), 5 * 6);
+        // every admitted request's queue wait was recorded
+        assert_eq!(metrics.queue_wait.count(), 5);
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -392,20 +497,20 @@ mod tests {
         // same requests, same texts, with the pipeline counters live
         let run = |workers: usize| {
             let engine = test_engine_workers(true, workers);
-            let (tx, rx) = sync_channel::<GenRequest>(8);
+            let (queue, metrics) = test_queue(8);
             let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+            let (completions, _completion_rx) = channel();
             let mut resp_rxs = Vec::new();
             for i in 0..3 {
-                let (req, resp_rx) = request(&format!("pipeline probe {i}"), 5);
-                tx.send(req).unwrap();
-                resp_rxs.push(resp_rx);
+                resp_rxs.push(push(&queue, &format!("pipeline probe {i}"), 5));
             }
-            drop(tx);
+            queue.close();
             run_scheduler(
                 engine,
-                rx,
-                SchedulerConfig { max_sessions: 3 },
-                Arc::new(ServerMetrics::default()),
+                queue,
+                completions,
+                SchedulerConfig { max_sessions: 3, queue_timeout: None },
+                metrics,
                 Arc::clone(&snapshot),
             );
             let texts: Vec<String> = resp_rxs
@@ -426,21 +531,67 @@ mod tests {
     #[test]
     fn scheduler_rejects_overlong_requests_and_continues() {
         let engine = test_engine(false);
-        let (tx, rx) = sync_channel::<GenRequest>(8);
-        let metrics = Arc::new(ServerMetrics::default());
+        let (queue, metrics) = test_queue(8);
         let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let (completions, _completion_rx) = channel();
 
-        let (bad, bad_rx) = request("way too long", 4096);
-        let (good, good_rx) = request("ok", 3);
-        tx.send(bad).unwrap();
-        tx.send(good).unwrap();
-        drop(tx);
-        run_scheduler(engine, rx, SchedulerConfig::default(), metrics, snapshot);
+        let bad_rx = push(&queue, "way too long", 4096);
+        let good_rx = push(&queue, "ok", 3);
+        queue.close();
+        run_scheduler(
+            engine,
+            queue,
+            completions,
+            SchedulerConfig::default(),
+            metrics,
+            snapshot,
+        );
 
         let err = bad_rx.recv().unwrap().unwrap_err();
         assert_eq!(err.status, 400, "length violations are the client's fault");
         assert!(err.message.contains("max_seq"));
         assert_eq!(good_rx.recv().unwrap().unwrap().n_generated, 3);
+    }
+
+    #[test]
+    fn scheduler_sheds_aged_requests_before_decode() {
+        // a request that outwaited the queue timeout gets 503 +
+        // Retry-After and consumes ZERO engine steps; fresh requests are
+        // served normally
+        let backdated = Instant::now().checked_sub(Duration::from_secs(120));
+        let Some(backdated) = backdated else {
+            return; // machine uptime too short to backdate; skip
+        };
+        let engine = test_engine(false);
+        let (queue, metrics) = test_queue(8);
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let (completions, _completion_rx) = channel();
+
+        let (mut aged, aged_rx) = request("stale request", 4);
+        aged.enqueued = backdated;
+        assert!(queue.try_push(aged).is_ok());
+        let fresh_rx = push(&queue, "fresh request", 4);
+        queue.close();
+        let engine = run_scheduler(
+            engine,
+            queue,
+            completions,
+            SchedulerConfig { max_sessions: 2, queue_timeout: Some(Duration::from_secs(60)) },
+            Arc::clone(&metrics),
+            snapshot,
+        );
+
+        let err = aged_rx.recv().unwrap().unwrap_err();
+        assert_eq!(err.status, 503);
+        assert_eq!(err.retry_after, Some(RETRY_AFTER_S), "sheds advertise Retry-After");
+        assert!(err.message.contains("shed"), "{}", err.message);
+        let ok = fresh_rx.recv().unwrap().expect("fresh request served");
+        assert_eq!(ok.n_generated, 4);
+        // the shed request consumed nothing on the engine
+        assert_eq!(engine.total_steps(), (ok.n_prompt + ok.n_generated) as u64);
+        assert_eq!(metrics.shed_total.load(Ordering::Relaxed), 1);
+        // both dequeues recorded a queue wait
+        assert_eq!(metrics.queue_wait.count(), 2);
     }
 
     #[test]
@@ -459,21 +610,20 @@ mod tests {
         };
 
         let engine = test_engine(false);
-        let (tx, rx) = sync_channel::<GenRequest>(8);
-        let (probe, probe_rx) = request("determinism check", 5);
-        tx.send(probe).unwrap();
+        let (queue, metrics) = test_queue(8);
+        let (completions, _completion_rx) = channel();
+        let probe_rx = push(&queue, "determinism check", 5);
         let mut others = Vec::new();
         for i in 0..3 {
-            let (req, orx) = request(&format!("background load {i}"), 5);
-            tx.send(req).unwrap();
-            others.push(orx);
+            others.push(push(&queue, &format!("background load {i}"), 5));
         }
-        drop(tx);
+        queue.close();
         run_scheduler(
             engine,
-            rx,
-            SchedulerConfig { max_sessions: 4 },
-            Arc::new(ServerMetrics::default()),
+            queue,
+            completions,
+            SchedulerConfig { max_sessions: 4, queue_timeout: None },
+            metrics,
             Arc::new(Mutex::new(ServeSnapshot::default())),
         );
 

@@ -3,17 +3,22 @@
 
 use moe_offload::cache::{LayerCache, PolicyKind};
 use moe_offload::engine::{EngineConfig, InferenceEngine};
-use moe_offload::metrics::PrecisionRecall;
+use moe_offload::metrics::{PrecisionRecall, ServeMetrics};
 use moe_offload::model::sampler::{top_k, Sampler, Sampling};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
 use moe_offload::offload::store::HostExpertStore;
 use moe_offload::quant::{QTensor, Scheme};
 use moe_offload::runtime::native::NativeBackend;
+use moe_offload::serve::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
+use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, ReplyTo};
 use moe_offload::sim::{cachesim, tracegen};
 use moe_offload::util::json::{self, Value};
 use moe_offload::util::quickcheck::{forall, Gen};
-use std::sync::Arc;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 #[test]
 fn prop_cache_capacity_never_exceeded() {
@@ -165,6 +170,148 @@ fn prop_pipeline_decode_bit_identical_to_sync() {
                     scheme.name()
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_serve_admission_exactly_once() {
+    // serve-layer admission invariants, across random (transfer workers,
+    // session cap, queue depth, request bursts):
+    //   * every accepted request gets EXACTLY one answer;
+    //   * a rejected request is never also served;
+    //   * answers match their request (distinct n_tokens per request — a
+    //     cross-session payload swap would be visible immediately);
+    //   * stale requests are shed with 503 and consume zero engine steps
+    //     (engine.total_steps() equals the steps of served sessions only).
+    forall(6, |g: &mut Gen| {
+        let transfer_workers = *g.choose(&[0usize, 1, 3]);
+        let max_sessions = g.usize(1..=4);
+        let depth = g.usize(1..=6);
+        let n_bursts = g.usize(1..=3);
+        // fresh requests can never age past this within one test run;
+        // stale ones are backdated far beyond it (skipped if the machine
+        // hasn't been up long enough to backdate)
+        let timeout = Duration::from_secs(60);
+        let backdate = Instant::now().checked_sub(Duration::from_secs(300));
+
+        let metrics = Arc::new(ServeMetrics::default());
+        let queue = AdmissionQueue::new(depth, Arc::clone(&metrics));
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let (completions, _completion_rx) = channel();
+
+        // the engine is not Send: build it on the scheduler thread
+        let sched_queue = Arc::clone(&queue);
+        let sched_metrics = Arc::clone(&metrics);
+        let scheduler = std::thread::spawn(move || {
+            let cfg_model =
+                ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY };
+            let weights = Arc::new(generate_weights(cfg_model, 7));
+            let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
+            let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
+            cfg.transfer_workers = transfer_workers;
+            let engine =
+                InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg);
+            let engine = run_scheduler(
+                engine,
+                sched_queue,
+                completions,
+                SchedulerConfig { max_sessions, queue_timeout: Some(timeout) },
+                sched_metrics,
+                Arc::clone(&snapshot),
+            );
+            engine.total_steps()
+        });
+
+        let mut accepted: Vec<(usize, Receiver<GenResult>, bool)> = Vec::new();
+        let mut rejected: Vec<(usize, Receiver<GenResult>)> = Vec::new();
+        let mut idx = 0usize;
+        for _ in 0..n_bursts {
+            for _ in 0..g.usize(1..=8) {
+                let i = idx;
+                idx += 1;
+                let (tx, rx) = channel();
+                let (enqueued, stale) = match (g.bool(), backdate) {
+                    (true, Some(t)) => (t, true),
+                    _ => (Instant::now(), false),
+                };
+                let req = GenRequest {
+                    prompt: format!("req {i}"),
+                    n_tokens: 1 + (i % 12),
+                    sampling: Sampling::Greedy,
+                    reply: ReplyTo::Channel(tx),
+                    enqueued,
+                };
+                match queue.try_push(req) {
+                    Ok(()) => accepted.push((i, rx, stale)),
+                    // the request (and its reply sender) is handed back
+                    // and dropped here: a rejected request has no path to
+                    // a response
+                    Err(_refused) => rejected.push((i, rx)),
+                }
+            }
+            std::thread::sleep(Duration::from_millis(g.usize(0..=2) as u64));
+        }
+        queue.close();
+        let total_steps = scheduler.join().expect("scheduler thread");
+
+        let mut served_steps = 0u64;
+        let mut shed_count = 0u64;
+        for (i, rx, stale) in &accepted {
+            let first = rx
+                .recv()
+                .map_err(|_| format!("request {i} accepted but never answered"))?;
+            match first {
+                Ok(resp) => {
+                    if *stale {
+                        return Err(format!("stale request {i} was decoded, not shed"));
+                    }
+                    if resp.n_generated != 1 + (i % 12) {
+                        return Err(format!(
+                            "request {i}: n_generated {} — cross-request payload swap",
+                            resp.n_generated
+                        ));
+                    }
+                    // byte tokenizer: BOS + one token per prompt byte
+                    if resp.n_prompt != format!("req {i}").len() + 1 {
+                        return Err(format!("request {i}: wrong prompt length {}", resp.n_prompt));
+                    }
+                    served_steps += (resp.n_prompt + resp.n_generated) as u64;
+                }
+                Err(ge) => {
+                    if !*stale {
+                        return Err(format!("fresh request {i} refused: {}", ge.message));
+                    }
+                    if ge.status != 503 || ge.retry_after.is_none() {
+                        return Err(format!(
+                            "shed must be 503 + Retry-After, got {} / {:?}",
+                            ge.status, ge.retry_after
+                        ));
+                    }
+                    shed_count += 1;
+                }
+            }
+            if rx.try_recv().is_ok() {
+                return Err(format!("request {i} answered more than once"));
+            }
+        }
+        for (i, rx) in &rejected {
+            if rx.recv().is_ok() {
+                return Err(format!("request {i} was both rejected and served"));
+            }
+        }
+        if total_steps != served_steps {
+            return Err(format!(
+                "engine stepped {total_steps} tokens but served sessions account for \
+                 {served_steps} — shed/rejected requests consumed engine work"
+            ));
+        }
+        if metrics.shed_total.load(Ordering::Relaxed) != shed_count {
+            return Err(format!(
+                "shed_total {} != shed responses {shed_count}",
+                metrics.shed_total.load(Ordering::Relaxed)
+            ));
         }
         Ok(())
     });
