@@ -25,10 +25,14 @@ const MAX_LINE_BYTES: usize = 8 << 10;
 /// `read_line` loops until newline or EOF, unbounded in both time and
 /// memory). Byte-at-a-time off the `BufReader` — the buffer makes that one
 /// memcpy per byte, one syscall per buffer fill.
-fn read_line_bounded(reader: &mut BufReader<TcpStream>, start: Instant) -> Result<String> {
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    start: Instant,
+    deadline: Duration,
+) -> Result<String> {
     let mut buf = Vec::new();
     loop {
-        if start.elapsed() > READ_DEADLINE {
+        if start.elapsed() > deadline {
             bail!("request read deadline exceeded");
         }
         if buf.len() >= MAX_LINE_BYTES {
@@ -55,9 +59,16 @@ pub struct Request {
 }
 
 pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    read_request_bounded(stream, READ_DEADLINE)
+}
+
+/// [`read_request`] with a caller-chosen absolute deadline — the
+/// control-plane thread parses its (tiny) requests under a much tighter
+/// bound so one drip-feeding client cannot monopolize it for long.
+pub fn read_request_bounded(stream: &mut TcpStream, deadline: Duration) -> Result<Request> {
     let start = Instant::now();
     let mut reader = BufReader::new(stream.try_clone()?);
-    let line = read_line_bounded(&mut reader, start)?;
+    let line = read_line_bounded(&mut reader, start, deadline)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or_default().to_string();
     let path = parts.next().unwrap_or_default().to_string();
@@ -69,10 +80,10 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     // bypass the cap
     let mut terminated = false;
     for _ in 0..MAX_HEADERS {
-        if start.elapsed() > READ_DEADLINE {
+        if start.elapsed() > deadline {
             bail!("request read deadline exceeded");
         }
-        let h = read_line_bounded(&mut reader, start)?;
+        let h = read_line_bounded(&mut reader, start, deadline)?;
         let h = h.trim_end();
         if h.is_empty() {
             terminated = true;
@@ -95,7 +106,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     let mut body = vec![0u8; len];
     let mut filled = 0;
     while filled < len {
-        if start.elapsed() > READ_DEADLINE {
+        if start.elapsed() > deadline {
             bail!("request read deadline exceeded");
         }
         let n = reader.read(&mut body[filled..])?;

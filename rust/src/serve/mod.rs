@@ -447,6 +447,261 @@ pub fn gen_response_json(r: &GenResponse) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// control plane: /metrics and /healthz on a dedicated non-pooled thread
+// ---------------------------------------------------------------------------
+
+enum ControlPath {
+    Healthz,
+    Metrics,
+}
+
+/// A connection owned by the control plane.
+struct ControlConn {
+    stream: TcpStream,
+    path: ControlPath,
+    /// `true` when routed straight from the accept loop (the request
+    /// bytes are still unread and the control thread parses them itself,
+    /// under [`CONTROL_PARSE_DEADLINE`]); `false` when an HTTP worker
+    /// already consumed the request and only the render + write remain.
+    raw: bool,
+}
+
+/// Absolute parse deadline for sniff-routed control requests — they are
+/// single-line GETs whose bytes have normally arrived in full before the
+/// control plane even picks them up, so anything slower is a drip-feeder
+/// that must not monopolize a control thread. Also used as the per-read
+/// socket timeout on those connections, bounding one malicious sniffed
+/// socket's wedge to ~2× this value.
+const CONTROL_PARSE_DEADLINE: Duration = Duration::from_millis(250);
+
+/// Control-plane threads. Two, so one drip-fed control connection cannot
+/// serialize every probe behind its (bounded) parse. Sustained
+/// adversarial flooding of the control path itself is out of scope —
+/// the guarantee is that *decode and parse load can never starve
+/// `/metrics` and `/healthz`*.
+const CONTROL_THREADS: usize = 2;
+
+/// The dedicated control plane: `/metrics` and `/healthz` are answered
+/// here, off the worker pool. Probes that send their request promptly
+/// (every real orchestrator and scraper) are recognized by the
+/// first-bytes sniff ([`sniff_once`], at accept or in the sniffer
+/// thread) and never touch the pool at all, so they stay responsive even
+/// when every pool worker is wedged mid-parse by slow clients AND every
+/// decode slot is saturated. Per-request work is strictly bounded: at
+/// most a [`CONTROL_PARSE_DEADLINE`]-bounded parse, a snapshot lock, a
+/// JSON render, one socket write.
+fn spawn_control_plane(
+    rx: Receiver<ControlConn>,
+    metrics: Arc<ServeMetrics>,
+    snapshot: Arc<Mutex<ServeSnapshot>>,
+    engine_up: Arc<AtomicBool>,
+) -> Vec<std::thread::JoinHandle<()>> {
+    let rx = Arc::new(Mutex::new(rx));
+    (0..CONTROL_THREADS)
+        .map(|i| {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let snapshot = Arc::clone(&snapshot);
+            let engine_up = Arc::clone(&engine_up);
+            std::thread::Builder::new()
+                .name(format!("control-plane-{i}"))
+                .spawn(move || loop {
+                    let conn = match rx.lock().unwrap().recv() {
+                        Ok(c) => c,
+                        Err(_) => break, // every sender gone: shutdown
+                    };
+                    serve_control(conn, &metrics, &snapshot, &engine_up);
+                })
+                .expect("spawn control plane")
+        })
+        .collect()
+}
+
+fn serve_control(
+    conn: ControlConn,
+    metrics: &ServeMetrics,
+    snapshot: &Mutex<ServeSnapshot>,
+    engine_up: &AtomicBool,
+) {
+    let mut stream = conn.stream;
+    if conn.raw {
+        // consume the (sniffed) request off the socket; the path is
+        // already known from the sniff
+        match http::read_request_bounded(&mut stream, CONTROL_PARSE_DEADLINE) {
+            Ok(_) => {
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                // parity with the pool's parse-failure path: answer 400
+                // rather than silently dropping the socket
+                let _ = http::write_response(&mut stream, 400, "text/plain", b"bad request");
+                return;
+            }
+        }
+    }
+    match conn.path {
+        ControlPath::Healthz => {
+            if engine_up.load(Ordering::Relaxed) {
+                let _ = http::write_response(&mut stream, 200, "text/plain", b"ok");
+            } else {
+                let _ = http::write_response(&mut stream, 503, "text/plain", b"engine down");
+            }
+        }
+        ControlPath::Metrics => {
+            let snap = snapshot.lock().unwrap().clone();
+            let body = json::to_string(&metrics_json(metrics, &snap));
+            let _ = http::write_response(&mut stream, 200, "application/json", body.as_bytes());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection routing: first-bytes sniff + park-and-poll sniffer
+// ---------------------------------------------------------------------------
+
+/// One non-blocking route sniff of a connection's first bytes.
+enum Sniff {
+    /// The first bytes spell a control request line exactly.
+    Control(ControlPath),
+    /// Anything else — including EOF and socket errors, which the pool's
+    /// bounded request read fails fast.
+    Ordinary,
+    /// First bytes not yet available (or still an ambiguous prefix of a
+    /// control request line).
+    Undecided,
+}
+
+/// Peek a (non-blocking) socket's first bytes once, without ever waiting:
+/// `GET /healthz ` / `GET /metrics ` route to the control plane, any
+/// other prefix to the pool, and a socket with no decisive bytes yet is
+/// `Undecided` — the caller parks it with the sniffer instead of
+/// sleeping.
+fn sniff_once(stream: &TcpStream) -> Sniff {
+    const HEALTHZ: &[u8] = b"GET /healthz ";
+    const METRICS: &[u8] = b"GET /metrics ";
+    let mut buf = [0u8; HEALTHZ.len()];
+    match stream.peek(&mut buf) {
+        Ok(n) if n >= buf.len() => {
+            if &buf[..] == HEALTHZ {
+                Sniff::Control(ControlPath::Healthz)
+            } else if &buf[..] == METRICS {
+                Sniff::Control(ControlPath::Metrics)
+            } else {
+                Sniff::Ordinary
+            }
+        }
+        // EOF: the peer is gone; let the pool fail it fast
+        Ok(0) => Sniff::Ordinary,
+        Ok(n) => {
+            if HEALTHZ.starts_with(&buf[..n]) || METRICS.starts_with(&buf[..n]) {
+                Sniff::Undecided
+            } else {
+                Sniff::Ordinary
+            }
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Sniff::Undecided,
+        Err(_) => Sniff::Ordinary,
+    }
+}
+
+/// How long the sniffer waits for a connection's first bytes before
+/// giving up and handing it to the pool (whose bounded request read
+/// takes it from there). Parking adds no latency to such a connection —
+/// nothing could parse it before its bytes arrive anyway.
+const SNIFF_DEADLINE: Duration = Duration::from_secs(1);
+
+/// Parked-connection cap: a connect-and-say-nothing flood must not grow
+/// memory; overflow spills to the pool immediately.
+const SNIFF_PENDING_CAP: usize = 1024;
+
+/// Routes one accepted connection to its lane. Cloneable so the accept
+/// loop and the sniffer thread share it.
+#[derive(Clone)]
+struct Dispatcher {
+    pool: Arc<ThreadPool>,
+    metrics: Arc<ServeMetrics>,
+    queue: Arc<AdmissionQueue>,
+    ctl_tx: Sender<ControlConn>,
+    max_inflight: usize,
+}
+
+impl Dispatcher {
+    fn dispatch(&self, stream: TcpStream, sniffed: Option<ControlPath>) {
+        stream.set_nonblocking(false).ok();
+        match sniffed {
+            Some(path) => {
+                // control probe: bypass the pool entirely. The read
+                // timeout is the control parse deadline, NOT the general
+                // client timeout: one stalled sniffed socket may wedge a
+                // control thread for at most ~2×CONTROL_PARSE_DEADLINE.
+                let _ = stream.set_read_timeout(Some(CONTROL_PARSE_DEADLINE));
+                let _ = stream.set_write_timeout(Some(CLIENT_IO_TIMEOUT));
+                let _ = self.ctl_tx.send(ControlConn { stream, path, raw: true });
+            }
+            None => {
+                let metrics = Arc::clone(&self.metrics);
+                let queue = Arc::clone(&self.queue);
+                let ctl_tx = self.ctl_tx.clone();
+                let max_inflight = self.max_inflight;
+                self.pool.execute(move || {
+                    handle_conn(stream, &metrics, &ctl_tx, &queue, max_inflight);
+                });
+            }
+        }
+    }
+}
+
+/// The park-and-poll sniffer: connections whose first bytes haven't
+/// arrived yet are parked here and re-peeked every millisecond, so the
+/// accept loop NEVER sleeps per connection and pool workers only ever
+/// receive connections whose bytes are ready (or that outwaited
+/// [`SNIFF_DEADLINE`]). This is what closes the accept-vs-first-byte
+/// race for control probes without serializing accepts.
+fn spawn_sniffer(rx: Receiver<TcpStream>, dispatcher: Dispatcher) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("sniffer".into())
+        .spawn(move || {
+            let mut pending: Vec<(TcpStream, Instant)> = Vec::new();
+            loop {
+                if pending.is_empty() {
+                    // idle: block until a connection arrives or shutdown
+                    match rx.recv() {
+                        Ok(s) => pending.push((s, Instant::now())),
+                        Err(_) => break,
+                    }
+                }
+                while let Ok(s) = rx.try_recv() {
+                    pending.push((s, Instant::now()));
+                }
+                while pending.len() > SNIFF_PENDING_CAP {
+                    let (s, _) = pending.remove(0);
+                    dispatcher.dispatch(s, None);
+                }
+                let mut i = 0;
+                while i < pending.len() {
+                    let route = match sniff_once(&pending[i].0) {
+                        Sniff::Control(path) => Some(Some(path)),
+                        Sniff::Ordinary => Some(None),
+                        Sniff::Undecided => (pending[i].1.elapsed() > SNIFF_DEADLINE)
+                            .then_some(None),
+                    };
+                    match route {
+                        Some(r) => {
+                            let (s, _) = pending.swap_remove(i);
+                            dispatcher.dispatch(s, r);
+                        }
+                        None => i += 1,
+                    }
+                }
+                if !pending.is_empty() {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        })
+        .expect("spawn sniffer")
+}
+
+// ---------------------------------------------------------------------------
 // responders: write completed responses to client sockets
 // ---------------------------------------------------------------------------
 
@@ -620,10 +875,27 @@ where
 
     let responders = spawn_responders(cfg.responders, completion_rx, Arc::clone(&metrics));
 
+    // /metrics and /healthz answer on their own threads, not the pool
+    let (ctl_tx, ctl_rx) = channel::<ControlConn>();
+    let control_plane = spawn_control_plane(
+        ctl_rx,
+        Arc::clone(&metrics),
+        Arc::clone(&snapshot),
+        Arc::clone(&engine_up),
+    );
+
     // workers never hold a connection across a decode, so the pool is
     // sized for parse throughput only
-    let pool = ThreadPool::new(cfg.http_workers.max(1));
-    let max_inflight = cfg.max_inflight_sessions.max(1);
+    let pool = Arc::new(ThreadPool::new(cfg.http_workers.max(1)));
+    let dispatcher = Dispatcher {
+        pool: Arc::clone(&pool),
+        metrics: Arc::clone(&metrics),
+        queue: Arc::clone(&queue),
+        ctl_tx: ctl_tx.clone(),
+        max_inflight: cfg.max_inflight_sessions.max(1),
+    };
+    let (sniff_tx, sniff_rx) = channel::<TcpStream>();
+    let sniffer = spawn_sniffer(sniff_rx, dispatcher.clone());
     listener.set_nonblocking(true)?;
     println!(
         "serving on {} (max {} concurrent sessions, queue depth {}, inflight cap {})",
@@ -638,14 +910,23 @@ where
         }
         match listener.accept() {
             Ok((stream, _)) => {
-                stream.set_nonblocking(false).ok();
-                let metrics = Arc::clone(&metrics);
-                let snapshot = Arc::clone(&snapshot);
-                let engine_up = Arc::clone(&engine_up);
-                let queue = Arc::clone(&queue);
-                pool.execute(move || {
-                    handle_conn(stream, &metrics, &snapshot, &engine_up, &queue, max_inflight);
-                });
+                // accepted sockets do NOT inherit the listener's
+                // non-blocking mode on all platforms: set it explicitly so
+                // the sniff peek can never block the accept loop — and if
+                // that fails, skip the sniff rather than risk a blocking
+                // peek hanging every future accept
+                match stream.set_nonblocking(true) {
+                    Ok(()) => match sniff_once(&stream) {
+                        Sniff::Control(path) => dispatcher.dispatch(stream, Some(path)),
+                        Sniff::Ordinary => dispatcher.dispatch(stream, None),
+                        // first bytes not here yet: park with the
+                        // sniffer, never sleep in the accept loop
+                        Sniff::Undecided => {
+                            let _ = sniff_tx.send(stream);
+                        }
+                    },
+                    Err(_) => dispatcher.dispatch(stream, None),
+                }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -656,11 +937,18 @@ where
             }
         }
     }
-    drop(pool); // joins HTTP workers: no more pushes
+    drop(sniff_tx); // sniffer finishes its parked connections and exits
+    let _ = sniffer.join();
+    drop(dispatcher); // releases its pool handle and control sender
+    drop(pool); // last pool ref: joins HTTP workers, no more pushes
     queue.close(); // scheduler drains the remaining queue and exits
-    let _ = engine_worker.join(); // drops the completion sender
+    let _ = engine_worker.join(); // drops the completion senders
     for r in responders {
         let _ = r.join(); // responders drained every completion
+    }
+    drop(ctl_tx); // last control sender gone; control threads exit
+    for c in control_plane {
+        let _ = c.join();
     }
     Ok(())
 }
@@ -668,8 +956,7 @@ where
 fn handle_conn(
     mut stream: TcpStream,
     metrics: &ServeMetrics,
-    snapshot: &Mutex<ServeSnapshot>,
-    engine_up: &AtomicBool,
+    ctl_tx: &Sender<ControlConn>,
     queue: &AdmissionQueue,
     max_inflight: usize,
 ) {
@@ -684,18 +971,8 @@ fn handle_conn(
     };
     metrics.requests.fetch_add(1, Ordering::Relaxed);
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            if engine_up.load(Ordering::Relaxed) {
-                let _ = http::write_response(&mut stream, 200, "text/plain", b"ok");
-            } else {
-                let _ = http::write_response(&mut stream, 503, "text/plain", b"engine down");
-            }
-        }
-        ("GET", "/metrics") => {
-            let snap = snapshot.lock().unwrap().clone();
-            let body = json::to_string(&metrics_json(metrics, &snap));
-            let _ = http::write_response(&mut stream, 200, "application/json", body.as_bytes());
-        }
+        ("GET", "/healthz") => route_control(stream, ControlPath::Healthz, ctl_tx),
+        ("GET", "/metrics") => route_control(stream, ControlPath::Metrics, ctl_tx),
         ("POST", "/generate") => match parse_gen_request(&req.body) {
             Ok((prompt, n, sampling)) => {
                 admit_generate(stream, prompt, n, sampling, metrics, queue, max_inflight);
@@ -710,6 +987,19 @@ fn handle_conn(
         _ => {
             let _ = http::write_response(&mut stream, 404, "text/plain", b"not found");
         }
+    }
+}
+
+/// Hand an already-parsed control request to the dedicated control-plane
+/// thread. The thread outlives the worker pool by construction; if its
+/// channel is somehow gone, fail the request loudly rather than hanging
+/// the client.
+fn route_control(stream: TcpStream, path: ControlPath, ctl_tx: &Sender<ControlConn>) {
+    if let Err(std::sync::mpsc::SendError(conn)) =
+        ctl_tx.send(ControlConn { stream, path, raw: false })
+    {
+        let mut stream = conn.stream;
+        let _ = http::write_response(&mut stream, 503, "text/plain", b"control plane down");
     }
 }
 
@@ -961,6 +1251,54 @@ mod tests {
         assert_eq!(q.len(), 1);
         assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 1);
         assert!(q.take_aged(Duration::from_secs(1)).is_empty());
+    }
+
+    #[test]
+    fn sniff_once_routes_by_first_bytes() {
+        use std::io::Write as _;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let sniff_until_decided = |s: &TcpStream| {
+            for _ in 0..1000 {
+                match sniff_once(s) {
+                    Sniff::Undecided => std::thread::sleep(Duration::from_millis(1)),
+                    decided => return decided,
+                }
+            }
+            panic!("sniff never decided");
+        };
+
+        // a control probe: undecided before any bytes, then recognized
+        let mut c1 = TcpStream::connect(addr).unwrap();
+        let (s1, _) = listener.accept().unwrap();
+        s1.set_nonblocking(true).unwrap();
+        assert!(matches!(sniff_once(&s1), Sniff::Undecided), "no bytes yet");
+        c1.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert!(matches!(
+            sniff_until_decided(&s1),
+            Sniff::Control(ControlPath::Healthz)
+        ));
+
+        // an ordinary request decides on its first bytes
+        let mut c2 = TcpStream::connect(addr).unwrap();
+        let (s2, _) = listener.accept().unwrap();
+        s2.set_nonblocking(true).unwrap();
+        c2.write_all(b"POST /generate HTTP/1.1\r\n").unwrap();
+        assert!(matches!(sniff_until_decided(&s2), Sniff::Ordinary));
+
+        // an ambiguous prefix stays undecided until enough bytes arrive
+        let mut c3 = TcpStream::connect(addr).unwrap();
+        let (s3, _) = listener.accept().unwrap();
+        s3.set_nonblocking(true).unwrap();
+        c3.write_all(b"GET /metri").unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(matches!(sniff_once(&s3), Sniff::Undecided));
+        c3.write_all(b"cs HTTP/1.1\r\n\r\n").unwrap();
+        assert!(matches!(
+            sniff_until_decided(&s3),
+            Sniff::Control(ControlPath::Metrics)
+        ));
     }
 
     #[test]

@@ -27,10 +27,11 @@ use moe_offload::serve::http::{
 };
 use moe_offload::serve::{self, ServeConfig};
 use moe_offload::util::json;
-use std::net::{SocketAddr, TcpListener};
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Vocab must hold 256 bytes + specials for the byte tokenizer; the rest
 /// stays TINY-sized so debug-mode tests are fast.
@@ -462,6 +463,120 @@ fn queue_timeout_sheds_with_retry_after() {
     // generated tokens
     assert_eq!(m.get("tokens_generated").as_usize(), Some(long_tokens));
     assert_eq!(m.get("inflight_sessions").as_usize(), Some(0));
+}
+
+/// Regression test for the /metrics-starvation bug: `/metrics` and
+/// `/healthz` are served from a dedicated non-pooled thread, so they
+/// answer within a bounded time even while every decode slot is saturated
+/// by slow sessions and more work is queued. (Pre-completion-routing, each
+/// in-flight /generate pinned a pool worker for its whole decode, so the
+/// control endpoints queued behind blocked decodes.)
+#[test]
+fn control_plane_responds_during_decode_saturation() {
+    let n_clients = 4usize;
+    let n_tokens = 80usize;
+    let server = Server::start_with(
+        ServeConfig {
+            http_workers: 2,
+            max_sessions: 2,
+            queue_depth: 8,
+            ..ServeConfig::default()
+        },
+        || make_slow_engine(Duration::from_millis(5), 0),
+    );
+    let addr = server.addr;
+
+    let clients: Vec<_> = (0..n_clients)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body =
+                    format!(r#"{{"prompt":"saturate {i}","n_tokens":{n_tokens},"greedy":true}}"#);
+                http_post(addr, "/generate", &body).unwrap()
+            })
+        })
+        .collect();
+
+    // wait until decode is demonstrably saturated: both slots busy AND
+    // work waiting in the queue
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, body) = http_get(addr, "/metrics").unwrap();
+        assert_eq!(status, 200);
+        let m = json::parse(&body).unwrap();
+        if m.get("active_sessions").as_usize() == Some(2)
+            && m.get("queue_depth").as_usize().unwrap_or(0) >= 1
+        {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "decode slots never saturated; /metrics said: {body}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // saturated: control endpoints must still answer promptly
+    assert_control_prompt(addr, "decode saturation");
+
+    // the saturating load itself completes exactly-once
+    for c in clients {
+        let (status, body) = c.join().unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+}
+
+/// Regression test for the non-pooled control path specifically: wedge
+/// EVERY HTTP worker mid-parse with a partial request (no terminating
+/// blank line — the worker sits in the bounded read for seconds), then
+/// require `/metrics` and `/healthz` to answer promptly anyway. Without
+/// accept-time sniff routing these probes would queue behind the wedged
+/// parses; with it they never touch the pool.
+#[test]
+fn control_plane_bypasses_wedged_http_workers() {
+    let server = Server::start(
+        ServeConfig { http_workers: 2, ..ServeConfig::default() },
+        false,
+    );
+    let addr = server.addr;
+
+    let wedgers: Vec<TcpStream> = (0..2)
+        .map(|_| {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // request line + one header, never terminated
+            s.write_all(b"POST /generate HTTP/1.1\r\nHost: wedge\r\n").unwrap();
+            s
+        })
+        .collect();
+    // let both pool workers pick the wedgers up and block reading
+    std::thread::sleep(Duration::from_millis(150));
+
+    assert_control_prompt(addr, "wedged HTTP workers");
+
+    drop(wedgers); // workers see EOF and free up, so shutdown stays fast
+}
+
+/// `/metrics` and `/healthz` must both answer 200 within a bounded time.
+fn assert_control_prompt(addr: SocketAddr, situation: &str) {
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let (status, body) = http_get(addr, "/metrics").unwrap();
+        assert_eq!(status, 200, "{body}");
+        assert!(json::parse(&body).is_ok(), "{body}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "/metrics took {:?} under {situation}",
+            t0.elapsed()
+        );
+        let t0 = Instant::now();
+        let (status, body) = http_get(addr, "/healthz").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "/healthz took {:?} under {situation}",
+            t0.elapsed()
+        );
+    }
 }
 
 #[test]
