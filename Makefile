@@ -17,10 +17,13 @@ pytest:
 bench:
 	cargo bench
 
-# Transfer-pipeline perf gate: demand-miss stall sync vs pipelined + pool
-# reuse rate; writes BENCH_transfer_pipeline.json in the repo root.
+# Perf gates, each writing a BENCH_*.json in the repo root:
+# transfer_pipeline — demand-miss stall sync vs pipelined + pool reuse;
+# serve_concurrent — scheduler throughput, shared-cache amortization,
+# overload rejected/shed counts + queue-wait p99.
 perf:
 	cargo bench --bench transfer_pipeline
+	cargo bench --bench serve_concurrent
 
 figures:
 	cargo run --release -- figures --out-dir results
