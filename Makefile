@@ -20,10 +20,15 @@ bench:
 # Perf gates, each writing a BENCH_*.json in the repo root:
 # transfer_pipeline — demand-miss stall sync vs pipelined + pool reuse;
 # serve_concurrent — scheduler throughput, shared-cache amortization,
-# overload rejected/shed counts + queue-wait p99.
+# overload rejected/shed counts + queue-wait p99, and mixed long/short
+# TTFT p50/p99 with chunked prefill on vs off (fields asserted below).
 perf:
 	cargo bench --bench transfer_pipeline
 	cargo bench --bench serve_concurrent
+	@grep -q '"ttft_p50_ns"' BENCH_serve_concurrent.json || \
+		{ echo "BENCH_serve_concurrent.json missing TTFT p50"; exit 1; }
+	@grep -q '"ttft_p99_ns"' BENCH_serve_concurrent.json || \
+		{ echo "BENCH_serve_concurrent.json missing TTFT p99"; exit 1; }
 
 figures:
 	cargo run --release -- figures --out-dir results

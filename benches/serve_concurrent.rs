@@ -2,10 +2,11 @@
 //! round-robin over one engine with a shared expert cache, versus the same
 //! work decoded sequentially. Measures scheduler overhead, reports the
 //! shared-cache amortization (misses/token falls as sessions share
-//! transfers), and exercises the admission-control path (bounded queue
-//! rejections + queue-timeout sheds), writing a
-//! `BENCH_serve_concurrent.json` artifact with rejected/shed counts and
-//! the queue-wait p99.
+//! transfers), exercises the admission-control path (bounded queue
+//! rejections + queue-timeout sheds), and runs a mixed long-prompt/
+//! short-prompt overload with chunked prefill on and off, writing a
+//! `BENCH_serve_concurrent.json` artifact with rejected/shed counts, the
+//! queue-wait p99, and TTFT p50/p99 for the chunked vs unchunked rounds.
 //!
 //!     cargo bench --bench serve_concurrent [-- --smoke]
 
@@ -100,7 +101,7 @@ fn main() {
                     engine,
                     queue,
                     completions,
-                    SchedulerConfig { max_sessions: n_sessions, queue_timeout: None },
+                    SchedulerConfig { max_sessions: n_sessions, ..SchedulerConfig::default() },
                     metrics,
                     Arc::clone(&snapshot),
                 );
@@ -153,6 +154,7 @@ fn main() {
         SchedulerConfig {
             max_sessions: 2,
             queue_timeout: Some(Duration::from_secs(60)),
+            ..SchedulerConfig::default()
         },
         Arc::clone(&metrics),
         Arc::new(Mutex::new(ServeSnapshot::default())),
@@ -178,6 +180,68 @@ fn main() {
     let queue_wait_p99_ns = metrics.queue_wait.percentile_ns(0.99);
     let queue_wait_p50_ns = metrics.queue_wait.percentile_ns(0.50);
 
+    // --- mixed long-prompt/short-prompt overload: TTFT with chunked
+    // prefill on vs off. Long prompts are pushed FIRST so, unchunked,
+    // short sessions' first tokens queue behind whole-prompt prefill
+    // rounds; with chunking the prefill interleaves.
+    let (n_long, n_short) = if smoke { (1usize, 4usize) } else { (2, 8) };
+    let long_prompt_len = 60usize;
+    let mixed_chunk = 8usize;
+    let mixed_budget = 16usize;
+    let run_mixed = |prefill_chunk: usize, round_budget_tokens: usize| {
+        let metrics = Arc::new(ServeMetrics::default());
+        let queue = AdmissionQueue::new(n_long + n_short, Arc::clone(&metrics));
+        let (completions, _completion_rx) = channel();
+        let mut rxs = Vec::new();
+        for _ in 0..n_long {
+            rxs.push(
+                push_request(&queue, "L".repeat(long_prompt_len), 4, Instant::now())
+                    .expect("queue sized for the burst"),
+            );
+        }
+        for i in 0..n_short {
+            rxs.push(
+                push_request(&queue, format!("short {i}"), 4, Instant::now())
+                    .expect("queue sized for the burst"),
+            );
+        }
+        queue.close();
+        let t0 = Instant::now();
+        run_scheduler(
+            make_engine(&weights, &store),
+            queue,
+            completions,
+            SchedulerConfig {
+                max_sessions: 4,
+                prefill_chunk,
+                round_budget_tokens,
+                ..SchedulerConfig::default()
+            },
+            Arc::clone(&metrics),
+            Arc::new(Mutex::new(ServeSnapshot::default())),
+        );
+        let wall_s = t0.elapsed().as_secs_f64();
+        for rx in rxs {
+            let r = rx.recv().unwrap().expect("mixed generation ok");
+            assert_eq!(r.n_generated, 4);
+        }
+        let count = metrics.ttft.count();
+        assert_eq!(
+            count,
+            (n_long + n_short) as u64,
+            "every session's first token must be TTFT-stamped"
+        );
+        (
+            count,
+            metrics.ttft.percentile_ns(0.50),
+            metrics.ttft.percentile_ns(0.99),
+            wall_s,
+        )
+    };
+    let (ttft_count_unchunked, unchunked_p50, unchunked_p99, unchunked_wall_s) = run_mixed(0, 0);
+    let (ttft_count_chunked, chunked_p50, chunked_p99, chunked_wall_s) =
+        run_mixed(mixed_chunk, mixed_budget);
+
     println!("{}", b.render());
     println!("shared-cache amortization (misses per stepped token):");
     for (n, _, mr) in &amortization {
@@ -194,6 +258,15 @@ fn main() {
         "overload: offered {offered}, accepted {accepted}, rejected {rejected}, \
          served {served}, shed {shed}, queue-wait p99 {:.1} µs",
         queue_wait_p99_ns as f64 / 1e3
+    );
+    println!(
+        "mixed TTFT ({n_long} long x {long_prompt_len} + {n_short} short): \
+         unchunked p50 {:.1} µs / p99 {:.1} µs, \
+         chunk {mixed_chunk} budget {mixed_budget} p50 {:.1} µs / p99 {:.1} µs",
+        unchunked_p50 as f64 / 1e3,
+        unchunked_p99 as f64 / 1e3,
+        chunked_p50 as f64 / 1e3,
+        chunked_p99 as f64 / 1e3
     );
 
     // --- artifact
@@ -227,6 +300,34 @@ fn main() {
                 ("wall_s", Value::from(overload_wall_s)),
             ]),
         ),
+        (
+            "ttft",
+            Value::obj(vec![
+                ("n_long", Value::from(n_long)),
+                ("n_short", Value::from(n_short)),
+                ("long_prompt_len", Value::from(long_prompt_len)),
+                ("prefill_chunk", Value::from(mixed_chunk)),
+                ("round_budget_tokens", Value::from(mixed_budget)),
+                (
+                    "unchunked",
+                    Value::obj(vec![
+                        ("count", Value::from(ttft_count_unchunked as f64)),
+                        ("ttft_p50_ns", Value::from(unchunked_p50 as f64)),
+                        ("ttft_p99_ns", Value::from(unchunked_p99 as f64)),
+                        ("wall_s", Value::from(unchunked_wall_s)),
+                    ]),
+                ),
+                (
+                    "chunked",
+                    Value::obj(vec![
+                        ("count", Value::from(ttft_count_chunked as f64)),
+                        ("ttft_p50_ns", Value::from(chunked_p50 as f64)),
+                        ("ttft_p99_ns", Value::from(chunked_p99 as f64)),
+                        ("wall_s", Value::from(chunked_wall_s)),
+                    ]),
+                ),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve_concurrent.json", json::to_string(&artifact))
         .expect("write BENCH_serve_concurrent.json");
@@ -242,4 +343,7 @@ fn main() {
         assert_eq!(metrics.shed_total.load(Ordering::Relaxed), shed);
     }
     assert!(queue_wait_p99_ns >= queue_wait_p50_ns);
+    assert_eq!(ttft_count_chunked, ttft_count_unchunked, "mixed runs saw the same sessions");
+    assert!(unchunked_p99 >= unchunked_p50);
+    assert!(chunked_p99 >= chunked_p50);
 }

@@ -68,6 +68,44 @@ impl Session {
         self.pos >= self.n_prompt
     }
 
+    /// True while the next step feeds a prompt token (the chunked-prefill
+    /// scheduler's phase test).
+    pub fn in_prefill(&self) -> bool {
+        self.pos < self.n_prompt
+    }
+
+    /// Prompt tokens not yet fed through the engine.
+    pub fn prefill_remaining(&self) -> usize {
+        self.n_prompt.saturating_sub(self.pos)
+    }
+
+    /// Advance this session by up to `max_tokens` *prompt* tokens — one
+    /// prefill chunk covering the range `[pos, pos + n)` of the prompt.
+    /// Stops early at the end of the prompt (it never feeds a generated
+    /// token), so callers interleave chunks with decode rounds freely.
+    /// Returns the number of tokens advanced.
+    ///
+    /// Each token runs through [`Session::step_once`] — the exact
+    /// discipline of unchunked decoding, including the per-token
+    /// `step_session` attribution (shared-cache traffic, speculative
+    /// prefetch, sampler state) — so chunked prefill is bit-identical to
+    /// feeding the same prompt one token per round. On an engine error
+    /// `pos` reflects only the tokens that completed (step_once is
+    /// failure-atomic), so the caller can compute the partial advance.
+    pub fn prefill_chunk(
+        &mut self,
+        engine: &mut InferenceEngine,
+        max_tokens: usize,
+        ev: &mut TokenEvents,
+    ) -> Result<usize> {
+        let mut n = 0;
+        while n < max_tokens && !self.done && self.in_prefill() {
+            self.step_once(engine, ev)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
     /// Advance this session by exactly one token on `engine` (feed the next
     /// prompt or sampled token, step, sample the following token). Sets and
     /// returns `done` when the target length is reached. This is the single
@@ -88,7 +126,13 @@ impl Session {
         } else {
             (self.next_tok.expect("sampled token"), true)
         };
-        let logits = engine.step_session(self.id, tok, &mut self.kv, self.pos, ev)?;
+        let logits = if is_generated {
+            engine.step_session(self.id, tok, &mut self.kv, self.pos, ev)?
+        } else {
+            // identical step, counted as prefill work in the engine's
+            // prefill/decode split
+            engine.step_session_prefill(self.id, tok, &mut self.kv, self.pos, ev)?
+        };
         if is_generated {
             self.tokens.push(tok);
         }
@@ -255,6 +299,46 @@ mod tests {
         assert_eq!(hits, total.hits);
         assert_eq!(misses, total.misses);
         assert_eq!(tokens, 24);
+    }
+
+    #[test]
+    fn prefill_chunk_matches_per_token_stepping() {
+        // chunked prefill must be the same computation as feeding the
+        // prompt one step_once at a time: same tokens, same engine totals
+        let prompt = [3u32, 1, 4, 1, 5, 9, 2, 6];
+        let stepped = {
+            let mut eng = engine(4);
+            let mut s =
+                Session::new(0, &eng, &prompt, 4, Sampler::new(Sampling::Greedy, 0)).unwrap();
+            let mut ev = TokenEvents::default();
+            while !s.done {
+                s.step_once(&mut eng, &mut ev).unwrap();
+            }
+            (s.tokens, eng.total_steps(), eng.prefill_steps())
+        };
+        let chunked = {
+            let mut eng = engine(4);
+            let mut s =
+                Session::new(0, &eng, &prompt, 4, Sampler::new(Sampling::Greedy, 0)).unwrap();
+            let mut ev = TokenEvents::default();
+            // ragged chunks covering the whole prompt, interleaved with
+            // nothing (chunking is a scheduling concern, not a math one)
+            assert_eq!(s.prefill_chunk(&mut eng, 3, &mut ev).unwrap(), 3);
+            assert_eq!(s.prefill_chunk(&mut eng, 2, &mut ev).unwrap(), 2);
+            assert!(s.in_prefill());
+            assert_eq!(s.prefill_remaining(), 3);
+            // over-asking stops at the end of the prompt
+            assert_eq!(s.prefill_chunk(&mut eng, 100, &mut ev).unwrap(), 3);
+            assert!(!s.in_prefill(), "prompt fully fed");
+            // a chunk never feeds generated tokens
+            assert_eq!(s.prefill_chunk(&mut eng, 100, &mut ev).unwrap(), 0);
+            while !s.done {
+                s.step_once(&mut eng, &mut ev).unwrap();
+            }
+            (s.tokens, eng.total_steps(), eng.prefill_steps())
+        };
+        assert_eq!(stepped, chunked, "chunked prefill diverged from per-token stepping");
+        assert_eq!(chunked.2, prompt.len() as u64, "prefill step split wrong");
     }
 
     #[test]

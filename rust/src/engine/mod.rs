@@ -142,6 +142,10 @@ pub struct InferenceEngine {
     /// serve layer's proof that admission-control decisions (rejects,
     /// sheds) never consume engine work.
     steps: u64,
+    /// The prompt-phase share of `steps` (tokens fed through
+    /// [`InferenceEngine::step_session_prefill`]); the remainder is decode
+    /// work. The chunked-prefill scheduler and `/metrics` report the split.
+    prefill_steps: u64,
     /// Demand lookups that were satisfied by an expert a *different*
     /// session prefetched — the shared-cache amortization counter.
     cross_session_prefetch_hits: u64,
@@ -196,6 +200,7 @@ impl InferenceEngine {
             spec_pr: PrecisionRecall::default(),
             session_stats: HashMap::new(),
             steps: 0,
+            prefill_steps: 0,
             cross_session_prefetch_hits: 0,
             spec_guess: None,
             trace,
@@ -440,6 +445,23 @@ impl InferenceEngine {
         self.step_session(SOLO_SESSION, tok, kv, pos, ev)
     }
 
+    /// [`InferenceEngine::step_session`] for a *prompt* (prefill) token:
+    /// the identical computation — same cache, same prefetcher, same
+    /// per-session attribution — counted in the engine's prefill/decode
+    /// step split. Chunked prefill (`engine::batch::Session::
+    /// prefill_chunk`) and teacher-forced prompts route through here.
+    pub fn step_session_prefill(
+        &mut self,
+        session: u64,
+        tok: u32,
+        kv: &mut KvState,
+        pos: usize,
+        ev: &mut TokenEvents,
+    ) -> Result<Vec<f32>> {
+        self.prefill_steps += 1;
+        self.step_session(session, tok, kv, pos, ev)
+    }
+
     /// Run one token of `session` through the model; returns logits.
     ///
     /// Concurrent serving interleaves sessions token-by-token on one engine
@@ -596,7 +618,11 @@ impl InferenceEngine {
                 generated.push(tok);
             }
             let mut ev = TokenEvents::default();
-            let logits = self.step(tok, &mut kv, pos, &mut ev)?;
+            let logits = if pos < prompt.len() {
+                self.step_session_prefill(SOLO_SESSION, tok, &mut kv, pos, &mut ev)?
+            } else {
+                self.step(tok, &mut kv, pos, &mut ev)?
+            };
             events.push(ev);
             next_tok = Some(sampler.sample(&logits) as u32);
             let resident = self
@@ -648,6 +674,14 @@ impl InferenceEngine {
     /// admission control contribute nothing here.
     pub fn total_steps(&self) -> u64 {
         self.steps
+    }
+    /// Prompt-phase (prefill) share of [`InferenceEngine::total_steps`].
+    pub fn prefill_steps(&self) -> u64 {
+        self.prefill_steps
+    }
+    /// Decode-phase share of [`InferenceEngine::total_steps`].
+    pub fn decode_steps(&self) -> u64 {
+        self.steps.saturating_sub(self.prefill_steps)
     }
     pub fn spec_precision_recall(&self) -> PrecisionRecall {
         self.spec_pr

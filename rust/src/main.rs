@@ -13,6 +13,13 @@
 //!                                          with 503 + Retry-After (0 = never)
 //!              --max-inflight-sessions N   cap on accepted-but-unfinished
 //!                                          requests (503 beyond it)
+//!              --prefill-chunk N           chunked prefill: ≤ N prompt tokens
+//!                                          per round, one chunk per round,
+//!                                          rotated across prefilling sessions
+//!                                          (0 = one-token-per-session rounds)
+//!              --round-budget-tokens N     cap on total tokens advanced per
+//!                                          scheduler round, deficit carry-over
+//!                                          (0 = unbounded)
 //!              --responders N              response-writer threads
 //!              --http-workers N            parse/admission threads
 //!              --transfer-workers N        async dequant pipeline workers

@@ -219,10 +219,17 @@ pub struct ServeMetrics {
     /// `--queue-timeout-ms` (503 + Retry-After, no engine steps consumed).
     pub shed_total: AtomicU64,
     pub tokens_generated: AtomicU64,
+    /// Prompt tokens fed through the engine (the prefill share of serve
+    /// work; `tokens_generated` is the decode share).
+    pub tokens_prefill: AtomicU64,
     pub queue_depth: AtomicU64,
     pub inflight_sessions: AtomicU64,
     /// Admission-queue wait, recorded at dequeue (admitted or shed).
     pub queue_wait: LatencyHisto,
+    /// Time-to-first-token: enqueue → the session's prompt fully fed
+    /// (its first output token is sampled by that very step). Includes
+    /// queue wait, so it is the client-observable TTFT.
+    pub ttft: LatencyHisto,
 }
 
 impl ServeMetrics {

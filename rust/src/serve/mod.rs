@@ -4,9 +4,12 @@
 //! Architecture (DESIGN.md §6): HTTP workers only parse, admission-check,
 //! and enqueue — they never block on a decode. An accepted `/generate`
 //! carries its client socket through the bounded [`AdmissionQueue`] into
-//! the scheduler ([`scheduler`]), which interleaves up to `max_sessions`
-//! decode sessions round-robin on the ONE engine worker that owns the
-//! (non-`Send`) backend and the shared expert cache. Finished generations
+//! the scheduler ([`scheduler`]), which continuously batches up to
+//! `max_sessions` sessions on the ONE engine worker that owns the
+//! (non-`Send`) backend and the shared expert cache — per round at most
+//! one decode token per session plus at most one prefill chunk
+//! (`--prefill-chunk`), under an optional total-token round budget
+//! (`--round-budget-tokens`) with deficit carry-over. Finished generations
 //! are posted to a completion channel and a small responder set writes the
 //! HTTP responses, so a worker is freed the moment a request is admitted
 //! and `queue_depth` is the true bound on buffered work.
@@ -155,6 +158,15 @@ pub struct ServeConfig {
     /// awaiting a responder write); beyond it, `/generate` answers 503.
     /// Distinct from `queue_depth`, which bounds only the waiting queue.
     pub max_inflight_sessions: usize,
+    /// Chunked prefill: split each prompt into chunks of this many tokens,
+    /// at most one chunk per scheduler round, rotated across prefilling
+    /// sessions — a long prompt can no longer head-of-line block other
+    /// sessions' first tokens. `0` = legacy one-token-per-session rounds.
+    pub prefill_chunk: usize,
+    /// Cap on total tokens (decode + prefill) the scheduler advances per
+    /// round, with deficit carry-over for candidates it had to skip.
+    /// `0` = unbounded.
+    pub round_budget_tokens: usize,
 }
 
 impl Default for ServeConfig {
@@ -166,6 +178,8 @@ impl Default for ServeConfig {
             responders: 2,
             queue_timeout_ms: 0,
             max_inflight_sessions: 128,
+            prefill_chunk: 0,
+            round_budget_tokens: 0,
         }
     }
 }
@@ -338,6 +352,11 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
             "tokens_generated",
             Value::from(metrics.tokens_generated.load(Ordering::Relaxed) as f64),
         ),
+        (
+            "tokens_prefill",
+            Value::from(metrics.tokens_prefill.load(Ordering::Relaxed) as f64),
+        ),
+        ("prefill_backlog", Value::from(snap.prefill_backlog)),
         ("queue_depth", Value::from(metrics.queue_depth.load(Ordering::Relaxed) as f64)),
         (
             "inflight_sessions",
@@ -349,6 +368,14 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
                 ("count", Value::from(metrics.queue_wait.count() as f64)),
                 ("p50", Value::from(metrics.queue_wait.percentile_ns(0.50) as f64)),
                 ("p99", Value::from(metrics.queue_wait.percentile_ns(0.99) as f64)),
+            ]),
+        ),
+        (
+            "ttft_ns",
+            Value::obj(vec![
+                ("count", Value::from(metrics.ttft.count() as f64)),
+                ("p50", Value::from(metrics.ttft.percentile_ns(0.50) as f64)),
+                ("p99", Value::from(metrics.ttft.percentile_ns(0.99) as f64)),
             ]),
         ),
         ("active_sessions", Value::from(snap.active_sessions)),
@@ -845,6 +872,8 @@ where
         max_sessions: cfg.max_sessions,
         queue_timeout: (cfg.queue_timeout_ms > 0)
             .then(|| Duration::from_millis(cfg.queue_timeout_ms)),
+        prefill_chunk: cfg.prefill_chunk,
+        round_budget_tokens: cfg.round_budget_tokens,
     };
     let guard = WorkerGuard {
         queue: Arc::clone(&queue),
@@ -1100,6 +1129,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             as u64,
         max_inflight_sessions: args
             .usize_or("max-inflight-sessions", defaults.max_inflight_sessions)?,
+        prefill_chunk: args.usize_or("prefill-chunk", defaults.prefill_chunk)?,
+        round_budget_tokens: args
+            .usize_or("round-budget-tokens", defaults.round_budget_tokens)?,
     };
 
     let listener = TcpListener::bind(("0.0.0.0", port as u16))?;
@@ -1324,6 +1356,8 @@ mod tests {
         metrics.shed_total.store(4, Ordering::Relaxed);
         metrics.inflight_sessions.store(3, Ordering::Relaxed);
         metrics.queue_wait.record_ns(1_000);
+        metrics.tokens_prefill.store(11, Ordering::Relaxed);
+        metrics.ttft.record_ns(2_000);
         let mut snap = ServeSnapshot {
             policy: "lfu".into(),
             capacity_per_layer: 4,
@@ -1331,6 +1365,7 @@ mod tests {
             active_sessions: 2,
             completed_sessions: 5,
             failed_sessions: 1,
+            prefill_backlog: 6,
             cache: CacheStats { hits: 90, misses: 10, ..Default::default() },
             spec: PrecisionRecall { tp: 8, fp: 2, fn_: 2 },
             cross_session_prefetch_hits: 3,
@@ -1367,6 +1402,13 @@ mod tests {
         assert_eq!(qw.get("count").as_usize(), Some(1));
         assert!(qw.get("p50").as_f64().unwrap() >= 1_000.0);
         assert!(qw.get("p99").as_f64().unwrap() >= qw.get("p50").as_f64().unwrap());
+        // chunked-prefill observability: token split, backlog gauge, TTFT
+        assert_eq!(v.get("tokens_prefill").as_usize(), Some(11));
+        assert_eq!(v.get("prefill_backlog").as_usize(), Some(6));
+        let ttft = v.get("ttft_ns");
+        assert_eq!(ttft.get("count").as_usize(), Some(1));
+        assert!(ttft.get("p50").as_f64().unwrap() >= 2_000.0);
+        assert!(ttft.get("p99").as_f64().unwrap() >= ttft.get("p50").as_f64().unwrap());
         let cache = v.get("shared_cache");
         assert_eq!(cache.get("policy").as_str(), Some("lfu"));
         assert_eq!(cache.get("hits").as_usize(), Some(90));

@@ -2,21 +2,45 @@
 //! engine worker that owns the (non-`Send`) backend and the shared expert
 //! cache.
 //!
-//! Scheduling discipline (DESIGN.md §6): round-robin token interleaving.
-//! Each scheduler round steps every active session by exactly one token
-//! (via [`Session::step_once`], the same feeding discipline offline
-//! lockstep decoding uses), so no session can starve another,
-//! time-to-first-token is bounded by one round, and consecutive tokens of
-//! different sessions share the per-layer expert cache — a transfer paid
-//! by one session is a hit for every other session that activates the same
-//! expert while it stays resident (the paper's persistent-cache semantics,
-//! now contended across sessions).
+//! Scheduling discipline (DESIGN.md §6): **continuous batching with
+//! chunked prefill**. Every scheduler round does bounded, heterogeneous
+//! work:
+//!
+//! * each decode-phase session advances by **at most one token**,
+//! * **at most one prefill chunk** of `prefill_chunk` prompt tokens
+//!   advances one prefill-phase session (rotating across them), and
+//! * a round budget (`round_budget_tokens`) caps the **total** tokens
+//!   advanced per round.
+//!
+//! Candidates (every decode-phase session, plus one *prefill unit*
+//! standing for the oldest-served prefill-phase session) are served
+//! oldest-first by the round they last advanced; when the budget
+//! saturates, unserved candidates keep their older stamp and therefore
+//! outrank this round's served ones next round — the deficit carry-over
+//! that makes starvation impossible. A session skipped for budget waits
+//! at most `candidates − 1` rounds (proven by
+//! `prop_chunked_prefill_fair_and_bit_identical`). With
+//! `prefill_chunk == 0` the scheduler degrades to the legacy discipline:
+//! prompt tokens advance one per session per round exactly like decode
+//! tokens, so a long prompt pays its prefill one round at a time.
+//! Chunking changes *scheduling only*: per-session outputs are
+//! bit-identical to the unchunked path because each token still runs
+//! through [`Session::step_once`]'s feeding discipline.
+//!
+//! Consecutive tokens of different sessions share the per-layer expert
+//! cache — a transfer paid by one session (prefill or decode) is a hit
+//! for every other session that activates the same expert while it stays
+//! resident (the paper's persistent-cache semantics, contended across
+//! sessions); prefill chunks run through the same `step_session`
+//! attribution as decode tokens, so they hit the cache and the
+//! prefetcher identically.
 //!
 //! Admission is demand-driven over the bounded [`AdmissionQueue`]: new
-//! requests are drained between rounds, up to `max_sessions` in flight.
-//! Before every admission pass the scheduler runs a *shed sweep*: queued
-//! requests older than `queue_timeout` answer 503 + `Retry-After` without
-//! ever becoming a session — a shed request consumes zero engine steps.
+//! requests are drained between rounds, up to `max_sessions` in flight —
+//! sessions join and leave mid-flight, no barrier rounds. Before every
+//! admission pass the scheduler runs a *shed sweep*: queued requests
+//! older than `queue_timeout` answer 503 + `Retry-After` without ever
+//! becoming a session — a shed request consumes zero engine steps.
 //! Finished generations are posted to the completion channel (the client
 //! socket rides along) so the scheduler never writes to a socket and can
 //! never be blocked by a slow client.
@@ -24,7 +48,8 @@
 //! Per-session accounting comes from the engine's session tallies
 //! ([`crate::metrics::SessionTally`]) and is published after every round in
 //! a [`ServeSnapshot`] the `/metrics` endpoint renders without touching the
-//! engine thread.
+//! engine thread. Time-to-first-token is recorded the moment a session's
+//! prompt is fully fed (its first output token is sampled right then).
 
 use crate::engine::batch::Session;
 use crate::engine::InferenceEngine;
@@ -51,12 +76,60 @@ pub struct SchedulerConfig {
     /// Shed queued requests older than this before admitting them
     /// (`None` = requests wait indefinitely).
     pub queue_timeout: Option<Duration>,
+    /// Prefill chunk size in prompt tokens. `0` = legacy rounds (prompt
+    /// tokens advance one per session per round, like decode tokens);
+    /// `k > 0` = at most ONE chunk of ≤ `k` prompt tokens per round,
+    /// rotated across prefill-phase sessions.
+    pub prefill_chunk: usize,
+    /// Cap on total tokens advanced per round, decode + prefill
+    /// (`0` = unbounded). When the budget saturates, unserved candidates
+    /// carry their entitlement to later rounds (deficit carry-over,
+    /// oldest first) — long-prompt sessions cannot starve decoders and
+    /// vice versa.
+    pub round_budget_tokens: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_sessions: 8, queue_timeout: None }
+        SchedulerConfig {
+            max_sessions: 8,
+            queue_timeout: None,
+            prefill_chunk: 0,
+            round_budget_tokens: 0,
+        }
     }
+}
+
+/// One session's advancement within a round (see [`RoundReport`]).
+#[derive(Clone, Copy, Debug)]
+pub struct Advance {
+    pub session: u64,
+    /// Tokens this session advanced this round (1 for a decode step,
+    /// up to the chunk size for a prefill chunk).
+    pub tokens: usize,
+    /// The advanced tokens were prompt (prefill) tokens.
+    pub prefill: bool,
+}
+
+/// What one scheduler round did — the observable the fairness and budget
+/// invariants are proven against (`proptest_invariants.rs`). Produced by
+/// [`Scheduler::turn`].
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    /// 1-based round index.
+    pub round: u64,
+    /// Sessions active when the round ran.
+    pub active: usize,
+    /// Decode tokens advanced this round (≤ 1 per session).
+    pub decode_tokens: usize,
+    /// Prompt tokens advanced this round (≤ 1 chunk when chunking).
+    pub prefill_tokens: usize,
+    /// Per-session advancement; `decode_tokens + prefill_tokens` equals
+    /// the sum of `tokens` and never exceeds the round budget.
+    pub advanced: Vec<Advance>,
+    /// Candidates that were eligible but skipped because the budget was
+    /// exhausted; they outrank this round's served candidates next round.
+    pub skipped: Vec<u64>,
 }
 
 /// One session's row in the `/metrics` report.
@@ -85,6 +158,9 @@ pub struct ServeSnapshot {
     /// Sessions that died on an engine error mid-decode (not counted as
     /// completed; their clients got HTTP 500).
     pub failed_sessions: u64,
+    /// Prompt tokens admitted but not yet fed through the engine, summed
+    /// over active sessions — the chunked-prefill work backlog.
+    pub prefill_backlog: usize,
     pub cache: CacheStats,
     pub spec: PrecisionRecall,
     pub cross_session_prefetch_hits: u64,
@@ -97,10 +173,17 @@ pub struct ServeSnapshot {
 struct ActiveSession {
     inner: Session,
     started: Instant,
+    /// When the request entered the admission queue — TTFT measures from
+    /// here, so it includes queue wait.
+    enqueued: Instant,
     /// Simulated clock reading at admission; the span until completion
     /// covers every interleaved token, so per-session sim tokens/s reflects
     /// contention — the serving metric, not the solo-decode one.
     sim_start: f64,
+    /// Last round this session advanced ≥ 1 token (admission round for
+    /// fresh sessions). The scheduler serves candidates oldest-first by
+    /// this stamp — the deficit carry-over under a round budget.
+    last_round: u64,
     reply: crate::serve::ReplyTo,
     /// Engine failure recorded mid-round; delivered when the session is
     /// retired (the reply path needs the session by value).
@@ -132,53 +215,104 @@ impl Drop for ActiveSet {
     }
 }
 
-/// Run the scheduler until the admission queue closes and drains and no
-/// sessions remain. Owns the engine for its entire lifetime and returns it
-/// so callers can inspect post-run engine state (e.g.
-/// [`InferenceEngine::total_steps`] — the shed-consumes-nothing proof).
-pub fn run_scheduler(
-    mut engine: InferenceEngine,
+/// A round candidate: one decode-phase session, or the single prefill
+/// unit (the rotating "one chunk per round" slot).
+enum Cand {
+    Step(usize),
+    PrefillUnit(usize),
+}
+
+/// The serve scheduler as a drivable state machine: [`Scheduler::turn`]
+/// runs one shed-sweep + admission + round + retirement cycle and reports
+/// what the round did, so tests can prove round-level invariants (budget,
+/// fairness, TTFT ordering) deterministically — no sleeps, no wall clock.
+/// [`run_scheduler`] is the production loop over it.
+pub struct Scheduler {
+    engine: InferenceEngine,
+    tk: Tokenizer,
     queue: Arc<AdmissionQueue>,
-    completions: Sender<Completion>,
     cfg: SchedulerConfig,
+    max_sessions: usize,
     metrics: Arc<ServeMetrics>,
     snapshot: Arc<Mutex<ServeSnapshot>>,
-) -> InferenceEngine {
-    let tk = Tokenizer::new(engine.config().vocab_size);
-    let max_sessions = cfg.max_sessions.max(1);
-    // panic-safe: if anything below unwinds, still-active sessions answer
-    // 500 through the completion channel (see ActiveSet::drop)
-    let mut active = ActiveSet { sessions: Vec::new(), completions: completions.clone() };
-    let mut recent: VecDeque<SessionView> = VecDeque::new();
-    let mut completed: u64 = 0;
-    let mut failed_sessions: u64 = 0;
-    let mut next_id: u64 = 1;
+    // panic-safe: if a turn unwinds, still-active sessions answer 500
+    // through the completion channel (see ActiveSet::drop)
+    active: ActiveSet,
+    recent: VecDeque<SessionView>,
+    completed: u64,
+    failed_sessions: u64,
+    next_id: u64,
+    round: u64,
+    /// Last round the prefill unit advanced — its deficit stamp against
+    /// the decode candidates.
+    prefill_last_round: u64,
+}
 
-    {
-        let mut snap = snapshot.lock().unwrap();
-        snap.policy = engine.cfg.policy.name().to_string();
-        snap.capacity_per_layer = engine.cfg.cache_capacity;
-        snap.n_layers = engine.config().n_layers;
+impl Scheduler {
+    pub fn new(
+        engine: InferenceEngine,
+        queue: Arc<AdmissionQueue>,
+        completions: Sender<Completion>,
+        cfg: SchedulerConfig,
+        metrics: Arc<ServeMetrics>,
+        snapshot: Arc<Mutex<ServeSnapshot>>,
+    ) -> Scheduler {
+        let tk = Tokenizer::new(engine.config().vocab_size);
+        {
+            let mut snap = snapshot.lock().unwrap();
+            snap.policy = engine.cfg.policy.name().to_string();
+            snap.capacity_per_layer = engine.cfg.cache_capacity;
+            snap.n_layers = engine.config().n_layers;
+        }
+        Scheduler {
+            tk,
+            queue,
+            max_sessions: cfg.max_sessions.max(1),
+            cfg,
+            metrics,
+            snapshot,
+            active: ActiveSet { sessions: Vec::new(), completions },
+            recent: VecDeque::new(),
+            completed: 0,
+            failed_sessions: 0,
+            next_id: 1,
+            round: 0,
+            prefill_last_round: 0,
+            engine,
+        }
     }
 
-    'outer: loop {
+    /// Recover the engine after the run (e.g. for
+    /// [`InferenceEngine::total_steps`] — the shed-consumes-nothing proof).
+    pub fn into_engine(self) -> InferenceEngine {
+        let Scheduler { engine, .. } = self;
+        engine
+    }
+
+    /// One scheduler cycle: shed sweep, admission drain, one budgeted
+    /// round, retirement, snapshot publish. Blocks for work when idle.
+    /// Returns `None` exactly once — when the queue is closed and drained
+    /// and no session remains (the run is over).
+    pub fn turn(&mut self) -> Option<RoundReport> {
         // --- shed sweep: requests past their queue deadline answer 503 +
         // Retry-After *before* admission — they never become sessions and
         // never consume an engine step
-        if let Some(t) = cfg.queue_timeout {
-            for req in queue.take_aged(t) {
-                shed(req, &completions, &metrics);
+        if let Some(t) = self.cfg.queue_timeout {
+            for req in self.queue.take_aged(t) {
+                shed(req, &self.active.completions, &self.metrics);
             }
         }
 
-        // --- admission: block when idle, drain opportunistically when busy
-        while active.sessions.len() < max_sessions {
-            let req = match queue.pop(active.sessions.is_empty()) {
+        // --- admission: block when idle, drain opportunistically when
+        // busy — sessions join mid-flight, between rounds, never barriers
+        while self.active.sessions.len() < self.max_sessions {
+            let req = match self.queue.pop(self.active.sessions.is_empty()) {
                 Popped::Req(r) => r,
                 Popped::Empty => break,
                 Popped::Closed => {
-                    if active.sessions.is_empty() {
-                        break 'outer; // closed, drained, nothing active
+                    if self.active.sessions.is_empty() {
+                        self.publish(); // final state for /metrics
+                        return None; // closed, drained, nothing active
                     }
                     break;
                 }
@@ -186,60 +320,214 @@ pub fn run_scheduler(
             // a request can age past its deadline between the sweep and
             // this pop (e.g. while the scheduler blocked idle): re-check,
             // so "admitted" always implies "within deadline at admission"
-            if cfg.queue_timeout.is_some_and(|t| req.enqueued.elapsed() > t) {
-                shed(req, &completions, &metrics);
+            if self
+                .cfg
+                .queue_timeout
+                .is_some_and(|t| req.enqueued.elapsed() > t)
+            {
+                shed(req, &self.active.completions, &self.metrics);
                 continue;
             }
-            metrics
+            self.metrics
                 .queue_wait
                 .record_ns(req.enqueued.elapsed().as_nanos() as u64);
             // admission failures answer on the reply path; the responder
             // layer counts them in metrics.errors for socket replies
-            if let Some(sess) = admit(&engine, &tk, next_id, req, &completions) {
-                active.sessions.push(sess);
-                next_id += 1;
+            if let Some(sess) = admit(
+                &self.engine,
+                &self.tk,
+                self.next_id,
+                self.round,
+                req,
+                &self.active.completions,
+            ) {
+                self.active.sessions.push(sess);
+                self.next_id += 1;
             }
         }
 
-        // --- one round-robin pass: every active session advances one token
-        let mut finished: Vec<ActiveSession> = Vec::new();
-        let mut i = 0;
-        while i < active.sessions.len() {
-            let s = &mut active.sessions[i];
-            let was_generated = s.inner.next_token_is_generated();
-            let mut ev = TokenEvents::default();
-            match s.inner.step_once(&mut engine, &mut ev) {
-                Ok(_done) => {
-                    if was_generated {
-                        metrics.tokens_generated.fetch_add(1, Ordering::Relaxed);
+        let report = self.round_pass();
+        self.retire();
+        self.publish();
+        Some(report)
+    }
+
+    /// One budgeted round: serve candidates oldest-first until the token
+    /// budget is spent. Sessions are only retired afterwards, so indices
+    /// stay stable for the whole pass.
+    fn round_pass(&mut self) -> RoundReport {
+        self.round += 1;
+        let budget = match self.cfg.round_budget_tokens {
+            0 => usize::MAX,
+            b => b,
+        };
+        let chunk = self.cfg.prefill_chunk;
+        let mut report = RoundReport {
+            round: self.round,
+            active: self.active.sessions.len(),
+            ..RoundReport::default()
+        };
+
+        // candidate list: (last-advanced round, tiebreak id, kind).
+        // With chunking, prefill-phase sessions are represented by ONE
+        // prefill unit selecting the oldest-served of them; its tiebreak
+        // of u64::MAX gives decode steps priority on equal stamps.
+        let mut cands: Vec<(u64, u64, Cand)> = Vec::new();
+        let mut prefill_sel: Option<usize> = None;
+        for (i, s) in self.active.sessions.iter().enumerate() {
+            if chunk == 0 || s.inner.next_token_is_generated() {
+                cands.push((s.last_round, s.inner.id, Cand::Step(i)));
+            } else {
+                prefill_sel = match prefill_sel {
+                    Some(j) => {
+                        let old = &self.active.sessions[j];
+                        if (s.last_round, s.inner.id) < (old.last_round, old.inner.id) {
+                            Some(i)
+                        } else {
+                            Some(j)
+                        }
+                    }
+                    None => Some(i),
+                };
+            }
+        }
+        if let Some(i) = prefill_sel {
+            cands.push((self.prefill_last_round, u64::MAX, Cand::PrefillUnit(i)));
+        }
+        cands.sort_by_key(|&(last, id, _)| (last, id));
+
+        let mut spent = 0usize;
+        for (_, _, cand) in cands {
+            match cand {
+                Cand::Step(i) => {
+                    if spent >= budget {
+                        report.skipped.push(self.active.sessions[i].inner.id);
+                        continue;
+                    }
+                    if let Some(adv) = self.advance_one(i) {
+                        spent += adv.tokens;
+                        if adv.prefill {
+                            report.prefill_tokens += adv.tokens;
+                        } else {
+                            report.decode_tokens += adv.tokens;
+                        }
+                        report.advanced.push(adv);
                     }
                 }
-                Err(e) => {
-                    // engine-side failure: 500, delivered at retirement
-                    s.error = Some(GenError {
-                        status: 500,
-                        message: format!("{e:#}"),
-                        retry_after: None,
-                    });
+                Cand::PrefillUnit(i) => {
+                    if spent >= budget {
+                        report.skipped.push(self.active.sessions[i].inner.id);
+                        continue;
+                    }
+                    let grant = chunk.min(budget - spent);
+                    if let Some(adv) = self.advance_prefill(i, grant) {
+                        spent += adv.tokens;
+                        report.prefill_tokens += adv.tokens;
+                        report.advanced.push(adv);
+                    }
                 }
             }
+        }
+        report
+    }
+
+    /// Advance session `i` by one token (prompt or generated). Returns
+    /// what happened for the round report; `None` tokens advanced on an
+    /// engine error (the session is retired with a 500 afterwards).
+    fn advance_one(&mut self, i: usize) -> Option<Advance> {
+        let round = self.round;
+        let s = &mut self.active.sessions[i];
+        let was_generated = s.inner.next_token_is_generated();
+        let mut ev = TokenEvents::default();
+        match s.inner.step_once(&mut self.engine, &mut ev) {
+            Ok(_done) => {
+                s.last_round = round;
+                if was_generated {
+                    self.metrics.tokens_generated.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.metrics.tokens_prefill.fetch_add(1, Ordering::Relaxed);
+                    if s.inner.next_token_is_generated() {
+                        // prompt fully fed: the first output token was
+                        // sampled by this very step — that's TTFT
+                        self.metrics
+                            .ttft
+                            .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+                    }
+                }
+                Some(Advance { session: s.inner.id, tokens: 1, prefill: !was_generated })
+            }
+            Err(e) => {
+                // engine-side failure: 500, delivered at retirement
+                s.last_round = round;
+                s.error = Some(GenError {
+                    status: 500,
+                    message: format!("{e:#}"),
+                    retry_after: None,
+                });
+                None
+            }
+        }
+    }
+
+    /// Advance session `i` by one prefill chunk of up to `grant` prompt
+    /// tokens (a budget-truncated grant leaves the session's cursor in
+    /// place — the shortfall carries over to its next rotation slot).
+    fn advance_prefill(&mut self, i: usize, grant: usize) -> Option<Advance> {
+        let round = self.round;
+        let s = &mut self.active.sessions[i];
+        let before = s.inner.pos;
+        let mut ev = TokenEvents::default();
+        let err = s.inner.prefill_chunk(&mut self.engine, grant, &mut ev).err();
+        let advanced = s.inner.pos - before;
+        s.last_round = round;
+        self.prefill_last_round = round;
+        if advanced > 0 {
+            self.metrics
+                .tokens_prefill
+                .fetch_add(advanced as u64, Ordering::Relaxed);
+        }
+        if err.is_none() && s.inner.next_token_is_generated() {
+            self.metrics
+                .ttft
+                .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+        }
+        if let Some(e) = err {
+            s.error = Some(GenError {
+                status: 500,
+                message: format!("{e:#}"),
+                retry_after: None,
+            });
+        }
+        if advanced > 0 {
+            Some(Advance { session: s.inner.id, tokens: advanced, prefill: true })
+        } else {
+            None
+        }
+    }
+
+    /// Retire finished and failed sessions: deliver replies, fold tallies
+    /// into the recent ring.
+    fn retire(&mut self) {
+        let mut finished: Vec<ActiveSession> = Vec::new();
+        let mut i = 0;
+        while i < self.active.sessions.len() {
+            let s = &self.active.sessions[i];
             if s.error.is_some() || s.inner.done {
-                finished.push(active.sessions.swap_remove(i));
+                finished.push(self.active.sessions.swap_remove(i));
             } else {
                 i += 1;
             }
         }
-
         for s in finished {
-            let ActiveSession { inner, started, sim_start, reply, error } = s;
-            let tally = engine.take_session_tally(inner.id);
+            let ActiveSession { inner, started, sim_start, reply, error, .. } = s;
+            let tally = self.engine.take_session_tally(inner.id);
             let generated = inner.generated().len();
             let succeeded = error.is_none() && inner.done;
             let result = if succeeded {
-                let sim_span = engine.sim_now() - sim_start;
-                completed += 1;
+                let sim_span = self.engine.sim_now() - sim_start;
+                self.completed += 1;
                 Ok(GenResponse {
-                    text: tk.decode(inner.generated()),
+                    text: self.tk.decode(inner.generated()),
                     n_prompt: inner.n_prompt,
                     n_generated: generated,
                     wall_s: started.elapsed().as_secs_f64(),
@@ -256,15 +544,15 @@ pub fn run_scheduler(
                     spec_recall: tally.spec_pr.recall(),
                 })
             } else {
-                failed_sessions += 1;
+                self.failed_sessions += 1;
                 Err(error.unwrap_or_else(|| GenError {
                     status: 500,
                     message: "session aborted".into(),
                     retry_after: None,
                 }))
             };
-            reply.deliver(result, &completions);
-            recent.push_back(SessionView {
+            reply.deliver(result, &self.active.completions);
+            self.recent.push_back(SessionView {
                 id: inner.id,
                 state: if succeeded { "done" } else { "failed" },
                 n_prompt: inner.n_prompt,
@@ -272,16 +560,61 @@ pub fn run_scheduler(
                 target: inner.target_new,
                 tally,
             });
-            while recent.len() > RECENT_SESSIONS {
-                recent.pop_front();
+            while self.recent.len() > RECENT_SESSIONS {
+                self.recent.pop_front();
             }
         }
-
-        publish(&engine, &active.sessions, &recent, completed, failed_sessions, &snapshot);
     }
 
-    publish(&engine, &active.sessions, &recent, completed, failed_sessions, &snapshot);
-    engine
+    fn publish(&self) {
+        let mut views: Vec<SessionView> = self
+            .active
+            .sessions
+            .iter()
+            .map(|s| SessionView {
+                id: s.inner.id,
+                state: "active",
+                n_prompt: s.inner.n_prompt,
+                generated: s.inner.generated().len(),
+                target: s.inner.target_new,
+                tally: self.engine.session_tally(s.inner.id),
+            })
+            .collect();
+        views.extend(self.recent.iter().cloned());
+        let backlog: usize = self
+            .active
+            .sessions
+            .iter()
+            .map(|s| s.inner.n_prompt.saturating_sub(s.inner.pos))
+            .sum();
+        let mut snap = self.snapshot.lock().unwrap();
+        snap.active_sessions = self.active.sessions.len();
+        snap.completed_sessions = self.completed;
+        snap.failed_sessions = self.failed_sessions;
+        snap.prefill_backlog = backlog;
+        snap.cache = self.engine.cache_stats();
+        snap.spec = self.engine.spec_precision_recall();
+        snap.cross_session_prefetch_hits = self.engine.cross_session_prefetch_hits();
+        snap.pipeline = self.engine.pipeline_stats();
+        snap.sessions = views;
+    }
+}
+
+/// Run the scheduler until the admission queue closes and drains and no
+/// sessions remain. Owns the engine for its entire lifetime and returns it
+/// so callers can inspect post-run engine state (e.g.
+/// [`InferenceEngine::total_steps`] — the shed-consumes-nothing proof).
+pub fn run_scheduler(
+    engine: InferenceEngine,
+    queue: Arc<AdmissionQueue>,
+    completions: Sender<Completion>,
+    cfg: SchedulerConfig,
+    metrics: Arc<ServeMetrics>,
+    snapshot: Arc<Mutex<ServeSnapshot>>,
+) -> InferenceEngine {
+    let mut sched = Scheduler::new(engine, queue, completions, cfg, metrics, snapshot);
+    while sched.turn().is_some() {}
+    sched.into_engine()
 }
 
 /// Refuse one aged request: 503 + `Retry-After`, `shed_total` incremented,
@@ -309,6 +642,7 @@ fn admit(
     engine: &InferenceEngine,
     tk: &Tokenizer,
     id: u64,
+    round: u64,
     req: GenRequest,
     completions: &Sender<Completion>,
 ) -> Option<ActiveSession> {
@@ -343,41 +677,12 @@ fn admit(
     Some(ActiveSession {
         inner,
         started: Instant::now(),
+        enqueued: req.enqueued,
         sim_start: engine.sim_now(),
+        last_round: round,
         reply: req.reply,
         error: None,
     })
-}
-
-fn publish(
-    engine: &InferenceEngine,
-    active: &[ActiveSession],
-    recent: &VecDeque<SessionView>,
-    completed: u64,
-    failed_sessions: u64,
-    snapshot: &Arc<Mutex<ServeSnapshot>>,
-) {
-    let mut views: Vec<SessionView> = active
-        .iter()
-        .map(|s| SessionView {
-            id: s.inner.id,
-            state: "active",
-            n_prompt: s.inner.n_prompt,
-            generated: s.inner.generated().len(),
-            target: s.inner.target_new,
-            tally: engine.session_tally(s.inner.id),
-        })
-        .collect();
-    views.extend(recent.iter().cloned());
-    let mut snap = snapshot.lock().unwrap();
-    snap.active_sessions = active.len();
-    snap.completed_sessions = completed;
-    snap.failed_sessions = failed_sessions;
-    snap.cache = engine.cache_stats();
-    snap.spec = engine.spec_precision_recall();
-    snap.cross_session_prefetch_hits = engine.cross_session_prefetch_hits();
-    snap.pipeline = engine.pipeline_stats();
-    snap.sessions = views;
 }
 
 #[cfg(test)]
@@ -459,26 +764,32 @@ mod tests {
             engine,
             queue,
             completions,
-            SchedulerConfig { max_sessions: 4, queue_timeout: None },
+            SchedulerConfig { max_sessions: 4, ..SchedulerConfig::default() },
             Arc::clone(&metrics),
             Arc::clone(&snapshot),
         );
 
         let mut ids = Vec::new();
         let mut stepped = 0u64;
+        let mut prompt_toks = 0u64;
         for rx in resp_rxs {
             let resp = rx.recv().unwrap().expect("generation ok");
             assert_eq!(resp.n_generated, 6);
             assert!(!ids.contains(&resp.session_id), "duplicate session id");
             ids.push(resp.session_id);
             stepped += (resp.n_prompt + resp.n_generated) as u64;
+            prompt_toks += resp.n_prompt as u64;
         }
-        // admitted sessions account for every engine step
+        // admitted sessions account for every engine step, split exactly
+        // into prefill (prompt) and decode work
         assert_eq!(engine.total_steps(), stepped);
+        assert_eq!(engine.prefill_steps(), prompt_toks);
+        assert_eq!(engine.decode_steps(), stepped - prompt_toks);
         let snap = snapshot.lock().unwrap();
         assert_eq!(snap.completed_sessions, 5);
         assert_eq!(snap.failed_sessions, 0);
         assert_eq!(snap.active_sessions, 0);
+        assert_eq!(snap.prefill_backlog, 0, "no prompt work left behind");
         // the recent ring keeps every finished session visible
         assert_eq!(snap.sessions.len(), 5);
         assert!(snap.sessions.iter().all(|s| s.state == "done"));
@@ -486,6 +797,9 @@ mod tests {
         let part: u64 = snap.sessions.iter().map(|s| s.tally.hits + s.tally.misses).sum();
         assert_eq!(part, snap.cache.hits + snap.cache.misses);
         assert_eq!(metrics.tokens_generated.load(Ordering::Relaxed), 5 * 6);
+        assert_eq!(metrics.tokens_prefill.load(Ordering::Relaxed), prompt_toks);
+        // every session's first token has a TTFT sample
+        assert_eq!(metrics.ttft.count(), 5);
         // every admitted request's queue wait was recorded
         assert_eq!(metrics.queue_wait.count(), 5);
         assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 0);
@@ -509,7 +823,7 @@ mod tests {
                 engine,
                 queue,
                 completions,
-                SchedulerConfig { max_sessions: 3, queue_timeout: None },
+                SchedulerConfig { max_sessions: 3, ..SchedulerConfig::default() },
                 metrics,
                 Arc::clone(&snapshot),
             );
@@ -576,7 +890,11 @@ mod tests {
             engine,
             queue,
             completions,
-            SchedulerConfig { max_sessions: 2, queue_timeout: Some(Duration::from_secs(60)) },
+            SchedulerConfig {
+                max_sessions: 2,
+                queue_timeout: Some(Duration::from_secs(60)),
+                ..SchedulerConfig::default()
+            },
             Arc::clone(&metrics),
             snapshot,
         );
@@ -622,7 +940,7 @@ mod tests {
             engine,
             queue,
             completions,
-            SchedulerConfig { max_sessions: 4, queue_timeout: None },
+            SchedulerConfig { max_sessions: 4, ..SchedulerConfig::default() },
             metrics,
             Arc::new(Mutex::new(ServeSnapshot::default())),
         );
@@ -633,5 +951,186 @@ mod tests {
         for orx in others {
             assert!(orx.recv().unwrap().is_ok());
         }
+    }
+
+    #[test]
+    fn chunked_prefill_outputs_bit_identical_to_unchunked() {
+        // chunking changes scheduling only: same requests, same texts,
+        // same engine step totals as the legacy one-token-per-round path
+        let run = |chunk: usize, budget: usize| {
+            let engine = test_engine(true);
+            let (queue, metrics) = test_queue(8);
+            let (completions, _completion_rx) = channel();
+            let mut rxs = Vec::new();
+            rxs.push(push(&queue, &"L".repeat(40), 4)); // long prompt
+            for i in 0..3 {
+                rxs.push(push(&queue, &format!("short {i}"), 4));
+            }
+            queue.close();
+            let engine = run_scheduler(
+                engine,
+                queue,
+                completions,
+                SchedulerConfig {
+                    max_sessions: 4,
+                    prefill_chunk: chunk,
+                    round_budget_tokens: budget,
+                    ..SchedulerConfig::default()
+                },
+                metrics,
+                Arc::new(Mutex::new(ServeSnapshot::default())),
+            );
+            let texts: Vec<String> = rxs
+                .into_iter()
+                .map(|r| r.recv().unwrap().expect("generation ok").text)
+                .collect();
+            (texts, engine.total_steps(), engine.prefill_steps())
+        };
+        let (legacy, legacy_steps, legacy_prefill) = run(0, 0);
+        for (chunk, budget) in [(3usize, 0usize), (8, 6), (1, 2)] {
+            let (texts, steps, prefill) = run(chunk, budget);
+            assert_eq!(texts, legacy, "chunk {chunk}/budget {budget} changed outputs");
+            assert_eq!(steps, legacy_steps, "chunk {chunk}/budget {budget} changed step count");
+            assert_eq!(prefill, legacy_prefill, "prefill step split drifted");
+        }
+    }
+
+    /// Drive `Scheduler::turn` directly — the deterministic harness: no
+    /// sleeps, no wall clock, round-level assertions.
+    fn driven_scheduler(
+        cfg: SchedulerConfig,
+        requests: &[(&str, usize)],
+    ) -> (Scheduler, Vec<Receiver<GenResult>>) {
+        let engine = test_engine(false);
+        let (queue, metrics) = test_queue(requests.len().max(1));
+        // channel replies deliver inline; the completion channel is only
+        // exercised by socket replies, so the receiver can drop here
+        let (completions, _completion_rx) = channel();
+        let rxs: Vec<_> = requests.iter().map(|(p, n)| push(&queue, p, *n)).collect();
+        queue.close();
+        let sched = Scheduler::new(
+            engine,
+            queue,
+            completions,
+            cfg,
+            metrics,
+            Arc::new(Mutex::new(ServeSnapshot::default())),
+        );
+        (sched, rxs)
+    }
+
+    #[test]
+    fn round_budget_caps_round_work_with_deficit_carryover() {
+        let (mut sched, rxs) = driven_scheduler(
+            SchedulerConfig {
+                max_sessions: 4,
+                prefill_chunk: 4,
+                round_budget_tokens: 3,
+                ..SchedulerConfig::default()
+            },
+            &[("aaaaaaaaaaaaaaaaaaaa", 3), ("bb", 3), ("cc", 3), ("dd", 3)],
+        );
+        let mut reports = Vec::new();
+        while let Some(r) = sched.turn() {
+            assert!(
+                r.decode_tokens + r.prefill_tokens <= 3,
+                "round {} advanced {} tokens past the budget",
+                r.round,
+                r.decode_tokens + r.prefill_tokens
+            );
+            // at most one prefill chunk per round, never above chunk size
+            let prefill_entries: Vec<_> =
+                r.advanced.iter().filter(|a| a.prefill).collect();
+            assert!(prefill_entries.len() <= 1, "more than one prefill chunk in a round");
+            for a in &prefill_entries {
+                assert!(a.tokens <= 4, "chunk of {} exceeds prefill_chunk", a.tokens);
+            }
+            // decode steps are one token each
+            assert!(r.advanced.iter().filter(|a| !a.prefill).all(|a| a.tokens == 1));
+            reports.push(r);
+        }
+        // budget 3 < the work of a full round: some round must have skipped
+        // a candidate, and every skipped candidate advanced soon after
+        assert!(reports.iter().any(|r| !r.skipped.is_empty()), "budget never saturated");
+        for (k, r) in reports.iter().enumerate() {
+            for &id in &r.skipped {
+                let within = reports[k + 1..]
+                    .iter()
+                    .take(5) // candidates ≤ 5 (4 sessions + prefill unit)
+                    .any(|later| later.advanced.iter().any(|a| a.session == id));
+                assert!(within, "session {id} skipped in round {} starved", r.round);
+            }
+        }
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().expect("served").n_generated, 3);
+        }
+    }
+
+    /// The discriminating TTFT test: the same mixed workload runs
+    /// unchunked and chunked, counting rounds until the LONG session's
+    /// first token. Unchunked, a prompt advances one token per round, so
+    /// a p-token prompt costs p rounds of TTFT; chunked, it costs about
+    /// ⌈p/k⌉ rotation slots. The comparison fails if chunking is ever
+    /// silently disabled (no multi-token chunk, no round-count win) —
+    /// unlike the "shorts don't wait" property, which BOTH disciplines
+    /// satisfy (one-token-per-session rounds never head-of-line blocked
+    /// short sessions; that invariant is asserted for both here).
+    #[test]
+    fn chunked_prefill_cuts_long_prompt_ttft_rounds() {
+        let run = |chunk: usize| {
+            let long_prompt = "L".repeat(60);
+            let (mut sched, rxs) = driven_scheduler(
+                SchedulerConfig {
+                    max_sessions: 4,
+                    prefill_chunk: chunk,
+                    ..SchedulerConfig::default()
+                },
+                &[(long_prompt.as_str(), 2), ("s0", 2), ("s1", 2), ("s2", 2)],
+            );
+            let metrics = Arc::clone(&sched.metrics);
+            let mut long_ttft_round = None;
+            let mut multi_token_chunk = false;
+            let mut shorts_before_long = false;
+            while let Some(r) = sched.turn() {
+                multi_token_chunk |= r.advanced.iter().any(|a| a.prefill && a.tokens > 1);
+                let long_in_prefill = sched
+                    .active
+                    .sessions
+                    .iter()
+                    .any(|s| s.inner.n_prompt > 50 && s.inner.in_prefill());
+                // ttft counts sessions whose prompt is fully fed (first
+                // output token sampled)
+                if long_in_prefill && metrics.ttft.count() >= 3 {
+                    shorts_before_long = true;
+                }
+                if long_ttft_round.is_none() && metrics.ttft.count() == 4 {
+                    long_ttft_round = Some(r.round); // the long one crossed
+                }
+            }
+            for rx in rxs {
+                assert_eq!(rx.recv().unwrap().expect("served").n_generated, 2);
+            }
+            (
+                long_ttft_round.expect("long session never reached its first token"),
+                multi_token_chunk,
+                shorts_before_long,
+            )
+        };
+        let (unchunked_rounds, unchunked_multi, unchunked_shorts_first) = run(0);
+        let (chunked_rounds, chunked_multi, chunked_shorts_first) = run(4);
+        // short sessions' first tokens precede the long prefill under
+        // BOTH disciplines — chunking must preserve that
+        assert!(unchunked_shorts_first, "legacy rounds starved short sessions");
+        assert!(chunked_shorts_first, "chunking made short sessions wait on the long prefill");
+        // the chunked run must really chunk...
+        assert!(!unchunked_multi, "unchunked run advanced a multi-token chunk");
+        assert!(chunked_multi, "prefill_chunk=4 never advanced a multi-token chunk");
+        // ...and that is what cuts the long prompt's TTFT: ~p/k rotation
+        // slots instead of p one-token rounds
+        assert!(
+            chunked_rounds < unchunked_rounds,
+            "chunking did not reduce long-prompt TTFT rounds \
+             ({chunked_rounds} vs {unchunked_rounds})"
+        );
     }
 }

@@ -1,0 +1,215 @@
+//! Shared deterministic serve-test harness.
+//!
+//! Two tools replace wall-clock guesswork in the serve suites:
+//!
+//! * [`wait_until`] — deadline polling: spin a predicate until it holds
+//!   or a generous deadline passes. Assertions express *what* must
+//!   eventually be true, never *how fast* the machine is.
+//! * [`Pace`] + [`PacedBackend`] — a test backend whose per-token step is
+//!   gated on explicitly granted permits and stamped on a
+//!   `util::simclock::SimClock` (virtual seconds), instead of a
+//!   `std::thread::sleep` per step. Tests grant an exact number of steps,
+//!   wait for the engine to consume them (it then blocks, so `/metrics`
+//!   quiesces), and make race-free assertions about mid-flight state:
+//!   "after ≤ N engine steps, X holds" is machine-speed independent.
+//!
+//! Included via `mod common;` from each integration-test crate; not every
+//! crate uses every item, hence the file-level `allow(dead_code)`.
+#![allow(dead_code)]
+
+use moe_offload::cache::PolicyKind;
+use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::ModelConfig;
+use moe_offload::offload::store::HostExpertStore;
+use moe_offload::quant::Scheme;
+use moe_offload::runtime::native::NativeBackend;
+use moe_offload::runtime::{Backend, ExpertHandle, KvState};
+use moe_offload::util::simclock::SimClock;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Poll `pred` every couple of milliseconds until it returns true or
+/// `deadline` elapses; returns the predicate's final verdict. Use a
+/// generous deadline — it only bounds how long a FAILING test takes.
+pub fn wait_until(mut pred: impl FnMut() -> bool, deadline: Duration) -> bool {
+    let t0 = Instant::now();
+    loop {
+        if pred() {
+            return true;
+        }
+        if t0.elapsed() > deadline {
+            return pred();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+struct PaceState {
+    /// Steps the engine may still take; `None` = unlimited (opened).
+    permits: Option<u64>,
+    /// Steps taken so far.
+    consumed: u64,
+    /// Virtual time: one fixed `dt` per engine step.
+    clock: SimClock,
+}
+
+/// Step-permit gate + virtual clock shared between a test and its
+/// [`PacedBackend`]. Starts closed (zero permits): the engine blocks on
+/// its first token until the test grants steps, so admission/queue state
+/// can be arranged with ZERO decode progress in between.
+pub struct Pace {
+    state: Mutex<PaceState>,
+    granted: Condvar,
+    /// Virtual seconds charged per engine step.
+    pub dt: f64,
+}
+
+impl Pace {
+    pub fn new() -> Arc<Pace> {
+        Arc::new(Pace {
+            state: Mutex::new(PaceState {
+                permits: Some(0),
+                consumed: 0,
+                clock: SimClock::new(),
+            }),
+            granted: Condvar::new(),
+            dt: 1.0,
+        })
+    }
+
+    /// Allow `n` more engine steps.
+    pub fn grant(&self, n: u64) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(p) = &mut st.permits {
+            *p += n;
+        }
+        self.granted.notify_all();
+    }
+
+    /// Remove the gate entirely: the engine runs freely from here on.
+    pub fn open(&self) {
+        self.state.lock().unwrap().permits = None;
+        self.granted.notify_all();
+    }
+
+    /// Open the pace when the returned guard drops — declare it right
+    /// AFTER the `Server` so an assertion failure (unwind) releases the
+    /// engine before the server's drop joins its threads.
+    pub fn open_on_drop(pace: &Arc<Pace>) -> OpenOnDrop {
+        OpenOnDrop(Arc::clone(pace))
+    }
+
+    /// Engine steps taken so far.
+    pub fn consumed(&self) -> u64 {
+        self.state.lock().unwrap().consumed
+    }
+
+    /// Virtual time consumed by the engine, in simulated seconds.
+    pub fn sim_now(&self) -> f64 {
+        self.state.lock().unwrap().clock.now()
+    }
+
+    /// Called by [`PacedBackend`] once per token step: block until a
+    /// permit is available (or the gate is open), then consume it and
+    /// advance the virtual clock.
+    fn step(&self) {
+        let mut st = self.state.lock().unwrap();
+        while st.permits == Some(0) {
+            st = self.granted.wait(st).unwrap();
+        }
+        if let Some(p) = &mut st.permits {
+            *p -= 1;
+        }
+        st.consumed += 1;
+        let dt = self.dt;
+        st.clock.advance(dt);
+    }
+}
+
+/// Releases the [`Pace`] gate on drop (including on panic/unwind).
+pub struct OpenOnDrop(Arc<Pace>);
+
+impl Drop for OpenOnDrop {
+    fn drop(&mut self) {
+        self.0.open();
+    }
+}
+
+/// A native backend whose per-token step is gated by a [`Pace`] instead
+/// of slowed by `std::thread::sleep`: tests decide exactly how many
+/// steps the engine may take and read virtual time off the pace's
+/// `SimClock`. `embed` runs exactly once per token step — the one choke
+/// point, same as the legacy `SlowBackend`.
+pub struct PacedBackend {
+    inner: NativeBackend,
+    pace: Arc<Pace>,
+}
+
+impl Backend for PacedBackend {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+    fn new_kv(&self) -> anyhow::Result<KvState> {
+        self.inner.new_kv()
+    }
+    fn embed(&self, tok: u32) -> anyhow::Result<Vec<f32>> {
+        self.pace.step();
+        self.inner.embed(tok)
+    }
+    fn attn(
+        &self,
+        layer: usize,
+        x: &[f32],
+        kv: &mut KvState,
+        pos: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.attn(layer, x, kv, pos)
+    }
+    fn router(&self, layer: usize, x_res: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.inner.router(layer, x_res)
+    }
+    fn spec_router(&self, layer: usize, x_res: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.spec_router(layer, x_res)
+    }
+    fn expert(&self, h: &[f32], handle: &ExpertHandle) -> anyhow::Result<Vec<f32>> {
+        self.inner.expert(h, handle)
+    }
+    fn upload_expert(
+        &self,
+        w1: Vec<f32>,
+        w3: Vec<f32>,
+        w2: Vec<f32>,
+    ) -> anyhow::Result<ExpertHandle> {
+        self.inner.upload_expert(w1, w3, w2)
+    }
+    fn final_logits(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.final_logits(x)
+    }
+    fn name(&self) -> &'static str {
+        "native-paced"
+    }
+}
+
+/// Byte-tokenizer-compatible tiny config (vocab must hold 256 bytes +
+/// specials), shared by the serve-layer integration tests.
+pub fn serve_model_config() -> ModelConfig {
+    ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY }
+}
+
+/// Engine over a [`PacedBackend`]: every per-token step consumes one
+/// permit from `pace`.
+pub fn paced_engine(
+    pace: Arc<Pace>,
+    transfer_workers: usize,
+) -> anyhow::Result<InferenceEngine> {
+    let weights = Arc::new(generate_weights(serve_model_config(), 42));
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32)?);
+    let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
+    cfg.transfer_workers = transfer_workers;
+    Ok(InferenceEngine::new(
+        Box::new(PacedBackend { inner: NativeBackend::new(weights), pace }),
+        store,
+        cfg,
+    ))
+}

@@ -1,7 +1,7 @@
 //! Serve-layer integration tests: real TCP listener on an ephemeral port,
 //! concurrent `POST /generate` clients, and `/metrics` assertions.
 //!
-//! Two properties carry the suite:
+//! Three properties carry the suite:
 //!
 //! 1. N ≥ 4 concurrent sessions decode over ONE shared expert cache (the
 //!    `/metrics` `shared_cache` object is singular and the per-session
@@ -13,7 +13,19 @@
 //!    exactly one 200, aged queued requests are shed with 503 +
 //!    `Retry-After`, and `/metrics` stays responsive throughout — the
 //!    completion-routed flow of DESIGN.md §6.
+//! 3. Chunked prefill kills head-of-line blocking: with `--prefill-chunk`
+//!    on, short sessions' first tokens land while a long prompt's prefill
+//!    is still in progress (proven with a step-budget argument on the
+//!    permit-gated `PacedBackend` — no wall-clock margins).
+//!
+//! Timing discipline (`tests/common/mod.rs`): assertions that depend on
+//! engine progress either poll a deadline (`wait_until`) or gate the
+//! engine on explicit step permits (`Pace`/`PacedBackend`, virtual time);
+//! no assertion rests on a bare `sleep` margin.
 
+mod common;
+
+use common::{paced_engine, wait_until, Pace};
 use moe_offload::cache::PolicyKind;
 use moe_offload::engine::{EngineConfig, InferenceEngine};
 use moe_offload::model::weights::generate_weights;
@@ -26,17 +38,15 @@ use moe_offload::serve::http::{
     client_get as http_get, client_post as http_post, client_post_text as http_post_text,
 };
 use moe_offload::serve::{self, ServeConfig};
-use moe_offload::util::json;
+use moe_offload::util::json::{self, Value};
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
-/// Vocab must hold 256 bytes + specials for the byte tokenizer; the rest
-/// stays TINY-sized so debug-mode tests are fast.
 fn serve_config() -> ModelConfig {
-    ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY }
+    common::serve_model_config()
 }
 
 fn make_engine(spec: bool) -> anyhow::Result<InferenceEngine> {
@@ -49,9 +59,10 @@ fn make_engine(spec: bool) -> anyhow::Result<InferenceEngine> {
     ))
 }
 
-/// A native backend whose per-token step is slowed by a fixed sleep, so
-/// overload tests can saturate decode slots deterministically without
-/// depending on machine speed.
+/// A native backend whose per-token step is slowed by a fixed sleep, used
+/// where the test WANTS wall-clock pressure (a real overload flood that
+/// outpaces the drain rate). Tests whose assertions depend on exact
+/// engine progress use `common::PacedBackend` instead.
 struct SlowBackend {
     inner: NativeBackend,
     step_delay: Duration,
@@ -146,13 +157,14 @@ impl Server {
     }
 
     fn wait_healthy(&self) {
-        for _ in 0..200 {
-            if let Ok((200, _)) = http_get(self.addr, "/healthz") {
-                return;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(10));
-        }
-        panic!("server never became healthy");
+        let addr = self.addr;
+        assert!(
+            wait_until(
+                || matches!(http_get(addr, "/healthz"), Ok((200, _))),
+                Duration::from_secs(5)
+            ),
+            "server never became healthy"
+        );
     }
 }
 
@@ -163,6 +175,12 @@ impl Drop for Server {
             let _ = h.join();
         }
     }
+}
+
+fn fetch_metrics(addr: SocketAddr) -> Value {
+    let (status, body) = http_get(addr, "/metrics").unwrap();
+    assert_eq!(status, 200, "{body}");
+    json::parse(&body).unwrap()
 }
 
 #[test]
@@ -208,17 +226,28 @@ fn concurrent_sessions_share_one_cache() {
         session_ids.push(id);
     }
 
-    let (status, body) = http_get(addr, "/metrics").unwrap();
-    assert_eq!(status, 200);
-    let m = json::parse(&body).unwrap();
+    // responders release in-flight slots AFTER writing the response the
+    // clients just read — poll the gauge down instead of racing it
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("inflight_sessions").as_usize() == Some(0),
+            Duration::from_secs(5)
+        ),
+        "in-flight slots never released"
+    );
+    let m = fetch_metrics(addr);
     assert_eq!(m.get("completed_sessions").as_usize(), Some(n_clients));
     assert_eq!(m.get("active_sessions").as_usize(), Some(0));
     assert_eq!(
         m.get("tokens_generated").as_usize(),
         Some(n_clients * n_tokens)
     );
-    // all responses written => no in-flight requests remain
-    assert_eq!(m.get("inflight_sessions").as_usize(), Some(0));
+    // prompt work is metered separately (BOS + one token per byte)
+    let n_prompt = "concurrent prompt 0".len() + 1;
+    assert_eq!(m.get("tokens_prefill").as_usize(), Some(n_clients * n_prompt));
+    assert_eq!(m.get("prefill_backlog").as_usize(), Some(0));
+    // every session crossed into decode exactly once
+    assert_eq!(m.get("ttft_ns").get("count").as_usize(), Some(n_clients));
     assert_eq!(m.get("queue_wait_ns").get("count").as_usize(), Some(n_clients));
 
     // exactly one shared cache, multi-session counters partition it
@@ -235,7 +264,7 @@ fn concurrent_sessions_share_one_cache() {
     assert_eq!(part, total, "per-session counters must partition the shared cache");
     for s in sessions {
         assert_eq!(s.get("state").as_str(), Some("done"));
-        assert_eq!(s.get("tokens").as_usize(), Some(n_tokens + 1 + "concurrent prompt 0".len()));
+        assert_eq!(s.get("tokens").as_usize(), Some(n_tokens + n_prompt));
     }
 
     // speculation ran and its per-guess cardinality identity held (§5.4)
@@ -288,14 +317,13 @@ fn bounded_queue_applies_backpressure() {
     assert!(ok >= 1, "at least the first request must be served");
     assert!(rejected >= 1, "queue bound must reject overload");
 
-    let (_, body) = http_get(addr, "/metrics").unwrap();
-    let m = json::parse(&body).unwrap();
+    let m = fetch_metrics(addr);
     assert_eq!(m.get("rejected_backpressure").as_usize(), Some(rejected));
     assert_eq!(m.get("rejected_total").as_usize(), Some(rejected));
     assert_eq!(m.get("completed_sessions").as_usize(), Some(ok));
 }
 
-/// The tentpole acceptance test: at the DEFAULT `ServeConfig` — no tuned
+/// The overload acceptance test: at the DEFAULT `ServeConfig` — no tuned
 /// `http_workers > queue_depth` ratio — an overload burst of slow decodes
 /// produces real 503s, the `queue_depth` gauge never exceeds its bound
 /// (sampled live via `/metrics`, which must stay responsive during
@@ -329,15 +357,19 @@ fn overload_run(transfer_workers: usize) {
         let samples = Arc::clone(&samples);
         let max_queue_depth = Arc::clone(&max_queue_depth);
         std::thread::spawn(move || {
-            while !flood_done.load(Ordering::Relaxed) {
-                let (status, body) = http_get(addr, "/metrics").unwrap();
-                assert_eq!(status, 200, "/metrics must answer during overload");
-                let m = json::parse(&body).unwrap();
-                let qd = m.get("queue_depth").as_usize().unwrap() as u64;
-                max_queue_depth.fetch_max(qd, Ordering::Relaxed);
-                samples.fetch_add(1, Ordering::Relaxed);
-                std::thread::sleep(Duration::from_millis(5));
-            }
+            // deadline-poll until the flood settles; each poll is a live
+            // /metrics sample
+            let sampled = wait_until(
+                || {
+                    let m = fetch_metrics(addr);
+                    let qd = m.get("queue_depth").as_usize().unwrap() as u64;
+                    max_queue_depth.fetch_max(qd, Ordering::Relaxed);
+                    samples.fetch_add(1, Ordering::Relaxed);
+                    flood_done.load(Ordering::Relaxed)
+                },
+                Duration::from_secs(300),
+            );
+            assert!(sampled, "flood never settled within the monitor deadline");
         })
     };
 
@@ -395,25 +427,38 @@ fn overload_run(transfer_workers: usize) {
         max_queue_depth.load(Ordering::Relaxed)
     );
 
-    // exactly-once completion: the server's own accounting matches the
-    // clients' tallies
-    let (_, body) = http_get(addr, "/metrics").unwrap();
-    let m = json::parse(&body).unwrap();
+    // responders release slots after the clients read their responses:
+    // poll the gauges down, then check the exactly-once accounting
+    assert!(
+        wait_until(
+            || {
+                let m = fetch_metrics(addr);
+                m.get("queue_depth").as_usize() == Some(0)
+                    && m.get("inflight_sessions").as_usize() == Some(0)
+            },
+            Duration::from_secs(10)
+        ),
+        "queue/inflight gauges never drained (workers={transfer_workers})"
+    );
+    let m = fetch_metrics(addr);
     assert_eq!(m.get("completed_sessions").as_usize(), Some(ok));
     assert_eq!(m.get("rejected_total").as_usize(), Some(rejected));
     assert_eq!(m.get("tokens_generated").as_usize(), Some(ok * n_tokens));
     assert_eq!(m.get("shed_total").as_usize(), Some(0), "no shedding at default config");
     assert_eq!(m.get("failed_sessions").as_usize(), Some(0));
-    assert_eq!(m.get("queue_depth").as_usize(), Some(0), "queue drained");
-    assert_eq!(m.get("inflight_sessions").as_usize(), Some(0), "all slots released");
 }
 
+/// Queue-age shedding, deterministically: the single decode slot is held
+/// by a session on a permit-gated `PacedBackend`, so how long it stays
+/// busy is measured in granted steps (≥ 2 ms each), not machine speed —
+/// the queued waiters MUST age past `--queue-timeout-ms` and be shed with
+/// 503 + `Retry-After` before consuming a single engine step.
 #[test]
 fn queue_timeout_sheds_with_retry_after() {
-    // one decode slot, slow decode: queued requests age past the timeout
-    // and must be shed with 503 + Retry-After BEFORE consuming engine work
     let n_waiters = 4usize;
     let long_tokens = 72usize;
+    let pace = Pace::new();
+    let pace_engine = Arc::clone(&pace);
     let server = Server::start_with(
         ServeConfig {
             max_sessions: 1,
@@ -421,17 +466,39 @@ fn queue_timeout_sheds_with_retry_after() {
             queue_timeout_ms: 75,
             ..ServeConfig::default()
         },
-        || make_slow_engine(Duration::from_millis(4), 0),
+        move || paced_engine(pace_engine, 0),
     );
+    // declared after `server`: drops first on any unwind, releasing the
+    // engine so the server's own drop can join its threads
+    let _open = Pace::open_on_drop(&pace);
     let addr = server.addr;
 
-    // occupy the single decode slot for ~(14 + 72) * 4ms ≈ 350ms
-    let first = std::thread::spawn(move || {
+    let holder = std::thread::spawn(move || {
         let body =
             format!(r#"{{"prompt":"hold the slot","n_tokens":{long_tokens},"greedy":true}}"#);
         http_post(addr, "/generate", &body).unwrap()
     });
-    std::thread::sleep(Duration::from_millis(40)); // first is admitted, slot busy
+    // no engine steps yet: wait for the holder to be accepted (the
+    // in-flight gauge is set at admission, before any decode)
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("inflight_sessions").as_usize() == Some(1),
+            Duration::from_secs(10)
+        ),
+        "holder never admitted"
+    );
+    // grant single steps until the scheduler publishes the holder as the
+    // active session occupying the one decode slot
+    assert!(
+        wait_until(
+            || {
+                pace.grant(1);
+                fetch_metrics(addr).get("active_sessions").as_usize() == Some(1)
+            },
+            Duration::from_secs(10)
+        ),
+        "holder never became active"
+    );
 
     let waiters: Vec<_> = (0..n_waiters)
         .map(|i| {
@@ -441,7 +508,28 @@ fn queue_timeout_sheds_with_retry_after() {
             })
         })
         .collect();
+    // all four queued behind the busy slot before any of them can age
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("queue_depth").as_usize() == Some(n_waiters),
+            Duration::from_secs(10)
+        ),
+        "waiters never queued"
+    );
 
+    // drip one engine step per poll (≥ 2 ms apart): rounds — and their
+    // shed sweeps — keep cycling while the holder's remaining ≥ 80 steps
+    // keep the slot busy for ≥ 160 ms, far past the 75 ms queue timeout
+    assert!(
+        wait_until(
+            || {
+                pace.grant(1);
+                waiters.iter().all(|w| w.is_finished())
+            },
+            Duration::from_secs(60)
+        ),
+        "waiters never answered"
+    );
     let mut shed = 0usize;
     for w in waiters {
         let raw = w.join().unwrap();
@@ -450,19 +538,136 @@ fn queue_timeout_sheds_with_retry_after() {
         assert!(raw.contains("shed"), "{raw}");
         shed += 1;
     }
-    let (status, body) = first.join().unwrap();
+    // release the engine so the holder finishes
+    pace.open();
+    let (status, body) = holder.join().unwrap();
     assert_eq!(status, 200, "the admitted request completes: {body}");
     let v = json::parse(&body).unwrap();
     assert_eq!(v.get("n_generated").as_usize(), Some(long_tokens));
 
-    let (_, body) = http_get(addr, "/metrics").unwrap();
-    let m = json::parse(&body).unwrap();
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("inflight_sessions").as_usize() == Some(0),
+            Duration::from_secs(5)
+        ),
+        "in-flight slots never released"
+    );
+    let m = fetch_metrics(addr);
     assert_eq!(m.get("shed_total").as_usize(), Some(shed));
     assert_eq!(m.get("completed_sessions").as_usize(), Some(1));
     // shed requests never reached the engine: only the admitted session
-    // generated tokens
+    // generated (and prefilled) tokens — "hold the slot" is BOS + 13 bytes
     assert_eq!(m.get("tokens_generated").as_usize(), Some(long_tokens));
-    assert_eq!(m.get("inflight_sessions").as_usize(), Some(0));
+    assert_eq!(m.get("tokens_prefill").as_usize(), Some("hold the slot".len() + 1));
+}
+
+/// The chunked-prefill TTFT property, end-to-end: one long prompt plus
+/// three short prompts through the real HTTP stack on a permit-gated
+/// engine. The step budget we grant is strictly smaller than the long
+/// prompt, so the long prefill CANNOT have finished — yet every short
+/// session must reach its first output token, proven by arithmetic
+/// rather than timing. This pins the bounded-TTFT invariant under
+/// chunked rounds (budget accounting, rotation, admission all live);
+/// the *discriminating* chunked-vs-unchunked comparison — chunking must
+/// actually cut the long prompt's own TTFT — is the deterministic
+/// scheduler unit test `chunked_prefill_cuts_long_prompt_ttft_rounds`.
+#[test]
+fn short_first_tokens_land_during_long_prefill() {
+    let long_prompt = "L".repeat(64); // 65 prompt tokens with BOS
+    let long_n_prompt = 64 + 1;
+    let step_cap = 55u64; // < long_n_prompt: the long prefill can't finish
+    let pace = Pace::new();
+    let pace_engine = Arc::clone(&pace);
+    let server = Server::start_with(
+        ServeConfig {
+            max_sessions: 8,
+            queue_depth: 16,
+            prefill_chunk: 2,
+            round_budget_tokens: 6,
+            ..ServeConfig::default()
+        },
+        move || paced_engine(pace_engine, 0),
+    );
+    let _open = Pace::open_on_drop(&pace);
+    let addr = server.addr;
+
+    let long_client = {
+        let prompt = long_prompt.clone();
+        std::thread::spawn(move || {
+            let body = format!(r#"{{"prompt":"{prompt}","n_tokens":2,"greedy":true}}"#);
+            http_post(addr, "/generate", &body).unwrap()
+        })
+    };
+    let short_clients: Vec<_> = (0..3)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let body = format!(r#"{{"prompt":"s{i}","n_tokens":2,"greedy":true}}"#);
+                http_post(addr, "/generate", &body).unwrap()
+            })
+        })
+        .collect();
+    // zero engine steps until all four are accepted — admission needs no
+    // decode progress, so this arranges the mixed workload race-free
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("inflight_sessions").as_usize() == Some(4),
+            Duration::from_secs(10)
+        ),
+        "mixed workload never fully admitted"
+    );
+
+    // drip steps, never exceeding the cap; the proof point is one
+    // /metrics snapshot where all three shorts have produced output while
+    // the long prompt is (necessarily — steps < prompt) still prefilling
+    let mut granted = 0u64;
+    let proven = wait_until(
+        || {
+            if granted < step_cap {
+                pace.grant(1);
+                granted += 1;
+            }
+            let m = fetch_metrics(addr);
+            let sessions = m.get("sessions").as_arr().unwrap();
+            let shorts_started = sessions
+                .iter()
+                .filter(|s| {
+                    s.get("n_prompt").as_usize() == Some(3)
+                        && s.get("generated").as_usize().unwrap_or(0) >= 1
+                })
+                .count();
+            let long_prefilling = sessions.iter().any(|s| {
+                s.get("n_prompt").as_usize() == Some(long_n_prompt)
+                    && s.get("tokens").as_usize().unwrap_or(0) < long_n_prompt
+            });
+            // three first tokens TTFT-stamped, long prefill still pending
+            shorts_started == 3
+                && long_prefilling
+                && m.get("ttft_ns").get("count").as_usize() == Some(3)
+                && m.get("prefill_backlog").as_usize().unwrap_or(0) > 0
+        },
+        Duration::from_secs(30),
+    );
+    assert!(pace.consumed() <= step_cap, "engine outran its permit budget");
+    assert!(
+        proven,
+        "short sessions' first tokens waited on the long prefill \
+         (consumed {} steps of {step_cap})",
+        pace.consumed()
+    );
+
+    // release the engine; everything completes exactly-once
+    pace.open();
+    for c in short_clients {
+        let (status, body) = c.join().unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = json::parse(&body).unwrap();
+        assert_eq!(v.get("n_generated").as_usize(), Some(2));
+    }
+    let (status, body) = long_client.join().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("n_prompt").as_usize(), Some(long_n_prompt));
+    assert_eq!(v.get("n_generated").as_usize(), Some(2));
 }
 
 /// Regression test for the /metrics-starvation bug: `/metrics` and
@@ -498,22 +703,17 @@ fn control_plane_responds_during_decode_saturation() {
 
     // wait until decode is demonstrably saturated: both slots busy AND
     // work waiting in the queue
-    let deadline = Instant::now() + Duration::from_secs(10);
-    loop {
-        let (status, body) = http_get(addr, "/metrics").unwrap();
-        assert_eq!(status, 200);
-        let m = json::parse(&body).unwrap();
-        if m.get("active_sessions").as_usize() == Some(2)
-            && m.get("queue_depth").as_usize().unwrap_or(0) >= 1
-        {
-            break;
-        }
-        assert!(
-            Instant::now() < deadline,
-            "decode slots never saturated; /metrics said: {body}"
-        );
-        std::thread::sleep(Duration::from_millis(5));
-    }
+    assert!(
+        wait_until(
+            || {
+                let m = fetch_metrics(addr);
+                m.get("active_sessions").as_usize() == Some(2)
+                    && m.get("queue_depth").as_usize().unwrap_or(0) >= 1
+            },
+            Duration::from_secs(10)
+        ),
+        "decode slots never saturated"
+    );
 
     // saturated: control endpoints must still answer promptly
     assert_control_prompt(addr, "decode saturation");
@@ -547,7 +747,11 @@ fn control_plane_bypasses_wedged_http_workers() {
             s
         })
         .collect();
-    // let both pool workers pick the wedgers up and block reading
+    // give both pool workers a chance to pick the wedgers up and block
+    // reading — not a correctness margin: if they haven't yet, the control
+    // probes below pass trivially (the regression can only FAIL when the
+    // workers really are wedged, which this wait makes overwhelmingly
+    // likely on any scheduler)
     std::thread::sleep(Duration::from_millis(150));
 
     assert_control_prompt(addr, "wedged HTTP workers");

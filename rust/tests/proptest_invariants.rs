@@ -10,7 +10,9 @@ use moe_offload::model::ModelConfig;
 use moe_offload::offload::store::HostExpertStore;
 use moe_offload::quant::{QTensor, Scheme};
 use moe_offload::runtime::native::NativeBackend;
-use moe_offload::serve::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
+use moe_offload::serve::scheduler::{
+    run_scheduler, RoundReport, Scheduler, SchedulerConfig, ServeSnapshot,
+};
 use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, ReplyTo};
 use moe_offload::sim::{cachesim, tracegen};
 use moe_offload::util::json::{self, Value};
@@ -217,7 +219,11 @@ fn prop_serve_admission_exactly_once() {
                 engine,
                 sched_queue,
                 completions,
-                SchedulerConfig { max_sessions, queue_timeout: Some(timeout) },
+                SchedulerConfig {
+                    max_sessions,
+                    queue_timeout: Some(timeout),
+                    ..SchedulerConfig::default()
+                },
                 sched_metrics,
                 Arc::clone(&snapshot),
             );
@@ -312,6 +318,159 @@ fn prop_serve_admission_exactly_once() {
                 "shed_total {} != shed responses {shed_count}",
                 metrics.shed_total.load(Ordering::Relaxed)
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_prefill_fair_and_bit_identical() {
+    // chunked-prefill/continuous-batching invariants, across random mixes
+    // of prompt lengths, generation lengths, chunk sizes, round budgets
+    // and session caps:
+    //   * every admitted session eventually completes (the turn loop ends
+    //     and every receiver holds an Ok with the right n_generated);
+    //   * no round advances more tokens than the configured budget, at
+    //     most one prefill chunk (≤ chunk tokens) per round, decode steps
+    //     are one token each;
+    //   * no starvation: a candidate skipped for budget advances within
+    //     the next `max_sessions + 1` rounds (deficit carry-over);
+    //   * outputs are bit-identical to `prefill_chunk = 0` — chunking is
+    //     scheduling, not semantics.
+    forall(6, |g: &mut Gen| {
+        let n_req = g.usize(2..=6);
+        let chunk = g.usize(1..=6);
+        let budget = *g.choose(&[0usize, 1, 2, 3, 6, 10]);
+        let max_sessions = g.usize(2..=4);
+        let requests: Vec<(String, usize)> = (0..n_req)
+            .map(|i| {
+                let prompt =
+                    String::from_utf8(vec![b'a' + (i as u8 % 26); g.usize(1..=40)]).unwrap();
+                (prompt, g.usize(1..=6))
+            })
+            .collect();
+        let sampling = if g.bool() {
+            Sampling::Greedy
+        } else {
+            Sampling::TopP { temperature: 0.9, top_p: 0.9 }
+        };
+
+        let run = |chunk: usize,
+                   budget: usize|
+         -> Result<(Vec<String>, Vec<RoundReport>), String> {
+            let cfg_model = ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY };
+            let weights = Arc::new(generate_weights(cfg_model, 7));
+            let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
+            let engine = InferenceEngine::new(
+                Box::new(NativeBackend::new(weights)),
+                store,
+                EngineConfig::serving(4, PolicyKind::Lfu, true),
+            );
+            let metrics = Arc::new(ServeMetrics::default());
+            let queue = AdmissionQueue::new(n_req, Arc::clone(&metrics));
+            let (completions, _completion_rx) = channel();
+            let mut rxs: Vec<Receiver<GenResult>> = Vec::new();
+            for (prompt, n_tokens) in &requests {
+                let (tx, rx) = channel();
+                queue
+                    .try_push(GenRequest {
+                        prompt: prompt.clone(),
+                        n_tokens: *n_tokens,
+                        sampling,
+                        reply: ReplyTo::Channel(tx),
+                        enqueued: Instant::now(),
+                    })
+                    .ok()
+                    .ok_or("queue sized for the burst")?;
+                rxs.push(rx);
+            }
+            queue.close();
+            let mut sched = Scheduler::new(
+                engine,
+                queue,
+                completions,
+                SchedulerConfig {
+                    max_sessions,
+                    queue_timeout: None,
+                    prefill_chunk: chunk,
+                    round_budget_tokens: budget,
+                },
+                metrics,
+                Arc::new(Mutex::new(ServeSnapshot::default())),
+            );
+            let mut reports = Vec::new();
+            while let Some(r) = sched.turn() {
+                reports.push(r);
+                if reports.len() > 100_000 {
+                    return Err("scheduler failed to terminate (liveness)".into());
+                }
+            }
+            let mut texts = Vec::new();
+            for (i, rx) in rxs.iter().enumerate() {
+                let resp = rx
+                    .recv()
+                    .map_err(|_| format!("request {i} never answered"))?
+                    .map_err(|e| format!("request {i} failed: {}", e.message))?;
+                if resp.n_generated != requests[i].1 {
+                    return Err(format!(
+                        "request {i}: n_generated {} != {}",
+                        resp.n_generated, requests[i].1
+                    ));
+                }
+                texts.push(resp.text);
+            }
+            Ok((texts, reports))
+        };
+
+        let (base_texts, _) = run(0, 0)?;
+        let (texts, reports) = run(chunk, budget)?;
+        if texts != base_texts {
+            return Err(format!(
+                "outputs diverged from the unchunked path (chunk {chunk}, budget {budget})"
+            ));
+        }
+
+        let mut starving: std::collections::HashMap<u64, usize> = Default::default();
+        for r in &reports {
+            let total = r.decode_tokens + r.prefill_tokens;
+            if budget > 0 && total > budget {
+                return Err(format!(
+                    "round {} advanced {total} tokens over budget {budget}",
+                    r.round
+                ));
+            }
+            let prefill_chunks = r.advanced.iter().filter(|a| a.prefill).count();
+            if prefill_chunks > 1 {
+                return Err(format!("round {}: {prefill_chunks} prefill chunks", r.round));
+            }
+            for a in &r.advanced {
+                if a.prefill && a.tokens > chunk {
+                    return Err(format!(
+                        "round {}: chunk of {} > prefill_chunk {chunk}",
+                        r.round, a.tokens
+                    ));
+                }
+                if !a.prefill && a.tokens != 1 {
+                    return Err(format!(
+                        "round {}: decode step of {} tokens",
+                        r.round, a.tokens
+                    ));
+                }
+                starving.remove(&a.session);
+            }
+            // deficit carry-over: skipped candidates must advance within
+            // max_sessions + 1 rounds (candidates ≤ sessions + the one
+            // prefill unit, and ≥ 1 candidate is served per round)
+            for &id in &r.skipped {
+                let c = starving.entry(id).or_insert(0);
+                *c += 1;
+                if *c > max_sessions + 1 {
+                    return Err(format!(
+                        "session {id} skipped {c} consecutive rounds (round {}): starvation",
+                        r.round
+                    ));
+                }
+            }
         }
         Ok(())
     });
