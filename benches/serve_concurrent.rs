@@ -242,6 +242,59 @@ fn main() {
     let (ttft_count_chunked, chunked_p50, chunked_p99, chunked_wall_s) =
         run_mixed(mixed_chunk, mixed_budget);
 
+    // --- round-level expert batching: identical-prompt sessions admitted
+    // in one drain decode in lockstep, so every decode round is maximally
+    // dedupable — one fetch+dequant per distinct (layer, expert), joined by
+    // the other sessions. Same workload through the legacy per-session
+    // path for the tokens/s comparison and a bit-identity check.
+    let n_batch_sessions = 6usize;
+    let batch_tokens = if smoke { 6usize } else { 16 };
+    let run_batched = |round_batching: bool| {
+        let metrics = Arc::new(ServeMetrics::default());
+        let queue = AdmissionQueue::new(n_batch_sessions, Arc::clone(&metrics));
+        let (completions, _completion_rx) = channel();
+        let mut rxs = Vec::new();
+        for _ in 0..n_batch_sessions {
+            rxs.push(
+                push_request(
+                    &queue,
+                    "shared expert path".to_string(),
+                    batch_tokens,
+                    Instant::now(),
+                )
+                .expect("queue sized for the burst"),
+            );
+        }
+        queue.close();
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let t0 = Instant::now();
+        run_scheduler(
+            make_engine(&weights, &store),
+            queue,
+            completions,
+            SchedulerConfig {
+                max_sessions: n_batch_sessions,
+                round_batching,
+                ..SchedulerConfig::default()
+            },
+            Arc::clone(&metrics),
+            Arc::clone(&snapshot),
+        );
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut texts = Vec::new();
+        let mut tokens = 0u64;
+        for rx in rxs {
+            let r = rx.recv().unwrap().expect("batched generation ok");
+            assert_eq!(r.n_generated, batch_tokens);
+            tokens += (r.n_prompt + r.n_generated) as u64;
+            texts.push(r.text);
+        }
+        let stats = snapshot.lock().unwrap().round_batching;
+        (texts, tokens as f64 / wall_s.max(1e-12), stats)
+    };
+    let (legacy_texts, tps_off, _off_stats) = run_batched(false);
+    let (batched_texts, tps_on, rb_stats) = run_batched(true);
+
     println!("{}", b.render());
     println!("shared-cache amortization (misses per stepped token):");
     for (n, _, mr) in &amortization {
@@ -267,6 +320,18 @@ fn main() {
         unchunked_p99 as f64 / 1e3,
         chunked_p50 as f64 / 1e3,
         chunked_p99 as f64 / 1e3
+    );
+    println!(
+        "round batching ({n_batch_sessions} identical sessions x {batch_tokens} tok): \
+         {:.1} tok/s on vs {:.1} tok/s off ({:.2}x), \
+         {} joins over {} distinct experts in {} rounds (join rate {:.2})",
+        tps_on,
+        tps_off,
+        tps_on / tps_off.max(1e-12),
+        rb_stats.dedup_joins,
+        rb_stats.distinct_experts,
+        rb_stats.rounds,
+        rb_stats.join_rate()
     );
 
     // --- artifact
@@ -328,6 +393,21 @@ fn main() {
                 ),
             ]),
         ),
+        (
+            "round_batching",
+            Value::obj(vec![
+                ("sessions", Value::from(n_batch_sessions)),
+                ("n_tokens", Value::from(batch_tokens)),
+                ("tokens_per_s_on", Value::from(tps_on)),
+                ("tokens_per_s_off", Value::from(tps_off)),
+                ("speedup", Value::from(tps_on / tps_off.max(1e-12))),
+                ("rounds", Value::from(rb_stats.rounds as f64)),
+                ("distinct_experts", Value::from(rb_stats.distinct_experts as f64)),
+                ("dedup_joins", Value::from(rb_stats.dedup_joins as f64)),
+                ("batched_rows", Value::from(rb_stats.batched_rows as f64)),
+                ("join_rate", Value::from(rb_stats.join_rate())),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve_concurrent.json", json::to_string(&artifact))
         .expect("write BENCH_serve_concurrent.json");
@@ -346,4 +426,14 @@ fn main() {
     assert_eq!(ttft_count_chunked, ttft_count_unchunked, "mixed runs saw the same sessions");
     assert!(unchunked_p99 >= unchunked_p50);
     assert!(chunked_p99 >= chunked_p50);
+    assert_eq!(batched_texts, legacy_texts, "round batching changed session outputs");
+    assert!(
+        rb_stats.dedup_joins > 0,
+        "identical-prompt lockstep sessions must produce dedup joins"
+    );
+    assert_eq!(
+        rb_stats.batched_rows - rb_stats.distinct_experts,
+        rb_stats.dedup_joins,
+        "dedup ledger: every batched row beyond the first per group is a join"
+    );
 }

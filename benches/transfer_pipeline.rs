@@ -16,10 +16,13 @@ use moe_offload::engine::{EngineConfig, InferenceEngine};
 use moe_offload::model::sampler::{Sampler, Sampling};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
+use moe_offload::model::weights::Weights;
 use moe_offload::offload::pipeline::{BufferPool, TransferPipeline};
 use moe_offload::offload::store::HostExpertStore;
+use moe_offload::offload::transfer::TransferEngine;
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::native::{expert_ffn_into, NativeBackend};
+use moe_offload::runtime::ExpertHandle;
 use moe_offload::util::json::{self, Value};
 use moe_offload::util::rng::Rng;
 use std::sync::Arc;
@@ -161,6 +164,68 @@ fn run_pipelined(
     (stall, completed)
 }
 
+/// Byte-accounting parity: replay the SAME demand trace through the
+/// un-deduped synchronous path (one `TransferEngine::fetch` per demand,
+/// each recording its own bytes) and through the pipelined path under the
+/// engine's record-at-issue discipline (a prefetch records its bytes when
+/// its bus slot is reserved; a demand that *joins* it records nothing
+/// further). Dedup changes WHO pays for a transfer, never HOW MUCH — the
+/// two ledgers must agree to the byte. A demand join that re-recorded its
+/// bytes (the latent double-count this guards against) shows up here as
+/// an inflated pipelined total.
+/// Returns (sync transfers, sync bytes, pipelined transfers, pipelined bytes).
+fn run_byte_parity(
+    weights: &Arc<Weights>,
+    store: &Arc<HostExpertStore>,
+    schedule: &[Vec<(usize, usize)>],
+    workers: usize,
+) -> (u64, u64, u64, u64) {
+    let be = NativeBackend::new(Arc::clone(weights));
+
+    // un-deduped: every demand is its own fetch and its own ledger entry
+    let sync_pool = BufferPool::new();
+    let mut sync_te = TransferEngine::new(Arc::clone(store), Arc::clone(&sync_pool));
+    for step in schedule {
+        for &(l, e) in step {
+            let (h, _) = sync_te.fetch(&be, l, e).expect("sync fetch");
+            let ExpertHandle::Host { w1, w3, w2 } = h else {
+                unreachable!("native backend returns host handles")
+            };
+            sync_pool.release(w1);
+            sync_pool.release(w3);
+            sync_pool.release(w2);
+        }
+    }
+
+    // deduped: oracle prefetch of step s+1 while demanding step s, byte
+    // accounting mirrored from the engine — record at issue, skip issuing
+    // (and recording) when the key is already in flight, and never record
+    // on a join
+    let pool = BufferPool::new();
+    let mut te = TransferEngine::new(Arc::clone(store), Arc::clone(&pool));
+    let mut pipe = TransferPipeline::spawn(Arc::clone(store), Arc::clone(&pool), workers);
+    for (i, step) in schedule.iter().enumerate() {
+        if let Some(next) = schedule.get(i + 1) {
+            for &(l, e) in next {
+                if !pipe.in_flight(l, e) {
+                    pipe.submit_prefetch(l, e);
+                    te.record_scheduled();
+                }
+            }
+        }
+        for &(l, e) in step {
+            if !pipe.submit_demand(l, e) {
+                te.record_scheduled(); // fresh demand: bus reserved here
+            }
+            let r = pipe.wait_for(l, e).expect("pipeline result");
+            pool.release(r.w1);
+            pool.release(r.w3);
+            pool.release(r.w2);
+        }
+    }
+    (sync_te.stats.transfers, sync_te.stats.bytes, te.stats.transfers, te.stats.bytes)
+}
+
 /// End-to-end decode tokens/s through the full engine.
 fn run_engine(workers: usize, n_tokens: usize) -> (f64, moe_offload::metrics::PipelineStats) {
     let cfg = bench_config();
@@ -182,7 +247,7 @@ fn main() {
     let (steps, compute_iters, gen_tokens) = if smoke { (12, 2, 16) } else { (60, 6, 140) };
 
     let cfg = bench_config();
-    let weights = generate_weights(cfg, 42);
+    let weights = Arc::new(generate_weights(cfg, 42));
     let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 }).unwrap());
     let schedule = demand_schedule(&cfg, steps, 7);
     let mut compute = ComputeLoad::new(&store, &cfg, compute_iters);
@@ -211,6 +276,19 @@ fn main() {
         n_stall * 1e3
     );
     println!("pool reuse rate:     {:>9.1}%", pool_reuse * 100.0);
+
+    // --- part 1b: byte-accounting parity under dedup ----------------------
+    let (sync_transfers, sync_bytes, piped_transfers, piped_bytes) =
+        run_byte_parity(&weights, &store, &schedule, N_WORKERS);
+    assert_eq!(
+        (sync_transfers, sync_bytes),
+        (piped_transfers, piped_bytes),
+        "demand-join dedup changed the reported transfer volume"
+    );
+    println!(
+        "byte parity:         sync {sync_transfers} transfers / {sync_bytes} B == \
+         pipelined {piped_transfers} transfers / {piped_bytes} B"
+    );
 
     // --- part 2: end-to-end decode ---------------------------------------
     let (tps_sync, _) = run_engine(0, gen_tokens);
@@ -258,6 +336,15 @@ fn main() {
                 ("engine_reuse_rate", Value::from(engine_pool_reuse)),
                 ("engine_allocs", Value::from(pipe_stats.pool_allocs as f64)),
                 ("engine_reuses", Value::from(pipe_stats.pool_reuses as f64)),
+            ]),
+        ),
+        (
+            "byte_parity",
+            Value::obj(vec![
+                ("sync_transfers", Value::from(sync_transfers as f64)),
+                ("sync_bytes", Value::from(sync_bytes as f64)),
+                ("pipelined_transfers", Value::from(piped_transfers as f64)),
+                ("pipelined_bytes", Value::from(piped_bytes as f64)),
             ]),
         ),
         (

@@ -121,11 +121,7 @@ impl Session {
         ev: &mut TokenEvents,
     ) -> Result<bool> {
         debug_assert!(!self.done, "step_once on a finished session");
-        let (tok, is_generated) = if self.pos < self.n_prompt {
-            (self.tokens[self.pos], false)
-        } else {
-            (self.next_tok.expect("sampled token"), true)
-        };
+        let (tok, is_generated) = self.peek_next();
         let logits = if is_generated {
             engine.step_session(self.id, tok, &mut self.kv, self.pos, ev)?
         } else {
@@ -133,15 +129,38 @@ impl Session {
             // prefill/decode split
             engine.step_session_prefill(self.id, tok, &mut self.kv, self.pos, ev)?
         };
+        Ok(self.apply_step(tok, is_generated, &logits))
+    }
+
+    /// The token the next step will feed, and whether it is a *generated*
+    /// token (vs a prompt token). Pure read: the round-batching scheduler
+    /// peeks every candidate, dispatches one `step_round`, then commits
+    /// each result through [`Session::apply_step`] — the same feeding
+    /// discipline as [`Session::step_once`], split at the engine call.
+    pub fn peek_next(&self) -> (u32, bool) {
+        if self.pos < self.n_prompt {
+            (self.tokens[self.pos], false)
+        } else {
+            (self.next_tok.expect("sampled token"), true)
+        }
+    }
+
+    /// Commit one successfully stepped token (the second half of
+    /// [`Session::step_once`]): append it if generated, sample the next
+    /// token from `logits`, advance `pos`, and set/return `done`. Call
+    /// ONLY with the `(tok, is_generated)` pair returned by `peek_next`
+    /// and the logits the engine produced for it — skipping the commit on
+    /// an engine error preserves step_once's failure atomicity.
+    pub fn apply_step(&mut self, tok: u32, is_generated: bool, logits: &[f32]) -> bool {
         if is_generated {
             self.tokens.push(tok);
         }
-        self.next_tok = Some(self.sampler.sample(&logits) as u32);
+        self.next_tok = Some(self.sampler.sample(logits) as u32);
         self.pos += 1;
         if self.pos >= self.n_prompt + self.target_new {
             self.done = true;
         }
-        Ok(self.done)
+        self.done
     }
 }
 
@@ -339,6 +358,132 @@ mod tests {
         };
         assert_eq!(stepped, chunked, "chunked prefill diverged from per-token stepping");
         assert_eq!(chunked.2, prompt.len() as u64, "prefill step split wrong");
+    }
+
+    #[test]
+    fn round_stepping_matches_step_once() {
+        use crate::engine::RoundWork;
+        // legacy: token-at-a-time lockstep
+        let legacy: Vec<Vec<u32>> = {
+            let mut eng = engine(4);
+            let mut sessions: Vec<Session> = (1..=3u64)
+                .map(|i| {
+                    Session::new(i, &eng, &[i as u32, 2, 8], 5, Sampler::new(Sampling::Greedy, i))
+                        .unwrap()
+                })
+                .collect();
+            decode_lockstep(&mut eng, &mut sessions).unwrap();
+            sessions.into_iter().map(|s| s.tokens).collect()
+        };
+        // round path: same lockstep rounds through ONE step_round each
+        let mut eng = engine(4);
+        let mut sessions: Vec<Session> = (1..=3u64)
+            .map(|i| {
+                Session::new(i, &eng, &[i as u32, 2, 8], 5, Sampler::new(Sampling::Greedy, i))
+                    .unwrap()
+            })
+            .collect();
+        loop {
+            let feeds: Vec<(usize, u32, bool)> = sessions
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.done)
+                .map(|(i, s)| {
+                    let (tok, gen) = s.peek_next();
+                    (i, tok, gen)
+                })
+                .collect();
+            if feeds.is_empty() {
+                break;
+            }
+            let mut slots: Vec<Option<&mut Session>> = sessions.iter_mut().map(Some).collect();
+            let mut work = Vec::new();
+            for &(i, tok, gen) in &feeds {
+                let s = slots[i].take().unwrap();
+                work.push(RoundWork {
+                    session: s.id,
+                    tok,
+                    pos: s.pos,
+                    prefill: !gen,
+                    kv: &mut s.kv,
+                });
+            }
+            let results = eng.step_round(&mut work);
+            drop(work);
+            drop(slots);
+            // every round preserves the dedup identity
+            assert_eq!(
+                results.stats.batched_rows - results.stats.distinct_experts,
+                results.stats.dedup_joins
+            );
+            for ((i, tok, gen), outcome) in feeds.into_iter().zip(results.outcomes) {
+                sessions[i].apply_step(tok, gen, &outcome.unwrap());
+            }
+        }
+        let round: Vec<Vec<u32>> = sessions.into_iter().map(|s| s.tokens).collect();
+        assert_eq!(round, legacy, "round batching changed token streams");
+        assert!(eng.round_batch_stats().rounds > 0);
+    }
+
+    #[test]
+    fn round_dedup_counts_exact_for_identical_sessions() {
+        use crate::engine::RoundWork;
+        // identical prompts + greedy sampling → identical token streams →
+        // identical routing: every distinct expert in a round receives one
+        // row from EACH session, so the dedup counters are exact multiples
+        let n = 3usize;
+        let mut eng = engine(4);
+        let mut sessions: Vec<Session> = (1..=n as u64)
+            .map(|i| {
+                Session::new(i, &eng, &[3, 2, 8], 5, Sampler::new(Sampling::Greedy, i)).unwrap()
+            })
+            .collect();
+        loop {
+            let feeds: Vec<(usize, u32, bool)> = sessions
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.done)
+                .map(|(i, s)| {
+                    let (tok, gen) = s.peek_next();
+                    (i, tok, gen)
+                })
+                .collect();
+            if feeds.is_empty() {
+                break;
+            }
+            let mut slots: Vec<Option<&mut Session>> = sessions.iter_mut().map(Some).collect();
+            let mut work = Vec::new();
+            for &(i, tok, gen) in &feeds {
+                let s = slots[i].take().unwrap();
+                work.push(RoundWork {
+                    session: s.id,
+                    tok,
+                    pos: s.pos,
+                    prefill: !gen,
+                    kv: &mut s.kv,
+                });
+            }
+            let results = eng.step_round(&mut work);
+            drop(work);
+            drop(slots);
+            for ((i, tok, gen), outcome) in feeds.into_iter().zip(results.outcomes) {
+                sessions[i].apply_step(tok, gen, &outcome.unwrap());
+            }
+        }
+        let stats = eng.round_batch_stats();
+        assert!(stats.distinct_experts > 0);
+        assert_eq!(stats.batched_rows, stats.distinct_experts * n as u64);
+        assert_eq!(stats.dedup_joins, stats.distinct_experts * (n as u64 - 1));
+        // per-session tallies still partition the shared cache's totals
+        let total = eng.cache_stats();
+        let (mut hits, mut misses) = (0, 0);
+        for i in 1..=n as u64 {
+            let t = eng.session_tally(i);
+            hits += t.hits;
+            misses += t.misses;
+        }
+        assert_eq!(hits, total.hits);
+        assert_eq!(misses, total.misses);
     }
 
     #[test]

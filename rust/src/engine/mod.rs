@@ -24,7 +24,7 @@ pub mod batch;
 pub mod selfcheck;
 
 use crate::cache::{ExpertCache, PolicyKind};
-use crate::metrics::{PipelineStats, PrecisionRecall, SessionTally, Throughput};
+use crate::metrics::{PipelineStats, PrecisionRecall, RoundBatchStats, SessionTally, Throughput};
 use crate::model::sampler::{top_k, Sampler};
 use crate::offload::pipeline::{BufferPool, TransferPipeline};
 use crate::offload::prefetch::{PendingPrefetch, PrefetchConfig, TaggedGuess};
@@ -121,6 +121,43 @@ pub struct GenerationOutput {
     pub transfer_bytes: u64,
 }
 
+/// One session's contribution to a batched round: the token it feeds this
+/// round plus the mutable per-session state (`kv`) the step needs. Built by
+/// the serve scheduler from [`batch::Session::peek_next`]; results are
+/// committed back via [`batch::Session::apply_step`].
+pub struct RoundWork<'a> {
+    pub session: u64,
+    pub tok: u32,
+    pub pos: usize,
+    /// Counted in the engine's prefill/decode step split (the equivalent of
+    /// routing through [`InferenceEngine::step_session_prefill`]).
+    pub prefill: bool,
+    pub kv: &'a mut KvState,
+}
+
+/// Outcome of one [`InferenceEngine::step_round`] call. Items are in input
+/// order; a per-item error fails only that item (the scheduler retires the
+/// session with a 500), matching the legacy per-session failure isolation.
+pub struct RoundResults {
+    /// Per item: final logits, or the error that killed the item.
+    pub outcomes: Vec<Result<Vec<f32>>>,
+    /// Per item cost-model events (misses, activations, hidden transfers,
+    /// wasted prefetches) — same semantics as the `ev` out-param of
+    /// [`InferenceEngine::step_session`].
+    pub events: Vec<TokenEvents>,
+    /// This round's batching counters; also merged into the engine-lifetime
+    /// totals returned by [`InferenceEngine::round_batch_stats`].
+    pub stats: RoundBatchStats,
+}
+
+/// Per-item routing product for one layer of a batched round.
+struct RoutedItem {
+    x_res: Vec<f32>,
+    h: Vec<f32>,
+    selected: Vec<usize>,
+    gate_w: Vec<f32>,
+}
+
 pub struct InferenceEngine {
     pub backend: Box<dyn Backend>,
     pub cfg: EngineConfig,
@@ -151,6 +188,9 @@ pub struct InferenceEngine {
     cross_session_prefetch_hits: u64,
     /// Pending speculative guess for the next layer, session-tagged.
     spec_guess: Option<TaggedGuess>,
+    /// Cumulative round-batching counters over every `step_round` call
+    /// (DESIGN.md §8); the legacy per-session path never touches them.
+    round_stats: RoundBatchStats,
     trace: Option<Trace>,
     /// Per-layer compute seconds (dense) and per-expert seconds, derived
     /// from the profile and the artifact's true dimensions.
@@ -203,6 +243,7 @@ impl InferenceEngine {
             prefill_steps: 0,
             cross_session_prefetch_hits: 0,
             spec_guess: None,
+            round_stats: RoundBatchStats::default(),
             trace,
             dense_s_per_layer,
             expert_s,
@@ -310,6 +351,12 @@ impl InferenceEngine {
             // credit as when the worker finishes first (otherwise the
             // prefetch-hit counters would vary with worker timing).
             Some(p) if joined => self.credit_prefetch(session, l, p, ev),
+            // joined an in-flight prefetch whose engine-side record was
+            // superseded: its bus slot and bytes were still charged at
+            // issue, so a second full reservation here would double-count
+            // the transfer. A join NEVER re-reserves the bus (asserted by
+            // the byte-parity check in benches/transfer_pipeline.rs).
+            None if joined => {}
             // fresh (or superseding) demand transfer: full bus reservation
             _ => {
                 let now = self.clock.now();
@@ -591,6 +638,281 @@ impl InferenceEngine {
         self.backend.final_logits(&x)
     }
 
+    /// Attention + routing + speculation for ONE item at ONE layer — the
+    /// per-session half of a batched round, running the exact per-item math
+    /// of [`InferenceEngine::step_layers`] (bit-identity depends on it).
+    /// Returns the routing product plus the item's speculative-settlement
+    /// delta (recorded globally here, merged into the session tally by the
+    /// caller).
+    #[allow(clippy::too_many_arguments)]
+    fn route_item(
+        &mut self,
+        l: usize,
+        session: u64,
+        x: &[f32],
+        kv: &mut KvState,
+        pos: usize,
+        ev: &mut TokenEvents,
+        guess: &mut Option<TaggedGuess>,
+        token_idx: usize,
+    ) -> Result<(RoutedItem, PrecisionRecall)> {
+        let mc = *self.backend.config();
+        let x_res = self.backend.attn(l, x, kv, pos)?;
+        self.clock.advance(self.dense_s_per_layer);
+        let (h, probs) = self.backend.router(l, &x_res)?;
+        let selected = top_k(&probs, mc.top_k);
+        ev.activations += selected.len();
+
+        // settle this item's previous-layer guess against the truth. The
+        // slot is per item (NOT the engine-wide `spec_guess`), so
+        // co-rounded sessions cannot clobber each other's guesses; the
+        // layer/session guard matches the legacy path's.
+        let mut spec_delta = PrecisionRecall::default();
+        if let Some(g) = guess.take() {
+            if g.layer == l && g.session == session {
+                spec_delta.record(&g.experts, &selected);
+                self.spec_pr.merge(&spec_delta);
+                if let Some(t) = &mut self.trace {
+                    t.at_mut(token_idx, l).spec_guess = Some(g.experts.clone());
+                }
+                let correct = g.experts.iter().filter(|e| selected.contains(e)).count();
+                ev.wasted_prefetches = ev.wasted_prefetches.saturating_sub(correct);
+            }
+        }
+
+        if let Some(t) = &mut self.trace {
+            let rec = t.at_mut(token_idx, l);
+            rec.cached_before = self.cache.layers[l].resident();
+            rec.activated = selected.clone();
+        }
+
+        let wsum: f32 = selected.iter().map(|&e| probs[e]).sum();
+        let gate_w: Vec<f32> = selected.iter().map(|&e| probs[e] / wsum).collect();
+        if let Some(t) = &mut self.trace {
+            t.at_mut(token_idx, l).weights = gate_w.clone();
+        }
+
+        if self.cfg.prefetch.enabled && l + 1 < mc.n_layers {
+            let spec_probs = self.backend.spec_router(l + 1, &x_res)?;
+            let guesses = top_k(&spec_probs, self.cfg.prefetch.k);
+            self.prefetch(session, l + 1, &guesses, ev)?;
+            *guess = Some(TaggedGuess { session, layer: l + 1, experts: guesses });
+        }
+        Ok((RoutedItem { x_res, h, selected, gate_w }, spec_delta))
+    }
+
+    /// Round-at-a-time stepping (DESIGN.md §8): run every item's attention
+    /// and router independently, then group the round's routed rows by
+    /// `(layer, expert)` and execute ONE resident-ensure + multi-row FFN
+    /// per distinct expert. Sessions co-routed to an expert share a single
+    /// fetch + dequant: the first arrival pays it (hit or miss in its
+    /// tally, exactly as the legacy path would charge it) and each further
+    /// row is a dedup join — one `access()` on the shared cache, i.e. a
+    /// plain hit attributed to the joining session, so the per-session
+    /// partition of the cache totals stays exact.
+    ///
+    /// Token/logit streams are bit-identical to stepping each session
+    /// through [`InferenceEngine::step_session`] (the proptest suite's
+    /// `prop_round_batching_bit_identical`): expert output depends only on
+    /// the row's hidden state and the dequantized weights, and
+    /// [`Backend::expert_multi`] runs the identical per-row kernel. Cache
+    /// eviction order, simulated timings, and prefetch interleavings MAY
+    /// diverge between the two paths — none of them feed back into the
+    /// math.
+    ///
+    /// Per-item failure isolation matches the legacy path: an item's error
+    /// fails that item (and any row sharing its failed expert group);
+    /// engine-wide failures (transfer collection) fail the whole round.
+    pub fn step_round(&mut self, work: &mut [RoundWork]) -> RoundResults {
+        fn kill_rows(dead: &mut [Option<anyhow::Error>], rows: &[(usize, usize)], err: anyhow::Error) {
+            let msg = format!("{err:#}");
+            let mut orig = Some(err);
+            for &(i, _) in rows {
+                dead[i] = Some(
+                    orig.take()
+                        .unwrap_or_else(|| anyhow::anyhow!("co-routed expert failed: {msg}")),
+                );
+            }
+        }
+
+        let n = work.len();
+        let mc = *self.backend.config();
+        let mut round = RoundBatchStats { rounds: 1, ..RoundBatchStats::default() };
+        let mut events = vec![TokenEvents::default(); n];
+        let mut dead: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+        let mut xs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut guesses: Vec<Option<TaggedGuess>> = (0..n).map(|_| None).collect();
+        let mut token_idxs = vec![0usize; n];
+
+        self.backend.begin_round();
+
+        // front matter + embed, per item
+        for (i, w) in work.iter().enumerate() {
+            self.steps += 1;
+            if w.prefill {
+                self.prefill_steps += 1;
+            }
+            if let Some(t) = &mut self.trace {
+                t.push_token(w.tok);
+            }
+            token_idxs[i] = self.trace.as_ref().map_or(0, |t| t.n_tokens() - 1);
+            self.session_stats.entry(w.session).or_default().tokens += 1;
+            match self.backend.embed(w.tok) {
+                Ok(x) => xs[i] = x,
+                Err(e) => dead[i] = Some(e),
+            }
+        }
+
+        for l in 0..mc.n_layers {
+            // engine-wide upkeep once per layer; a failure here wedges the
+            // engine itself, not one session — fail the whole round
+            if let Err(e) = self.collect_transfers() {
+                let msg = format!("{e:#}");
+                let mut orig = Some(e);
+                for d in dead.iter_mut().filter(|d| d.is_none()) {
+                    *d = Some(
+                        orig.take()
+                            .unwrap_or_else(|| anyhow::anyhow!("round engine failure: {msg}")),
+                    );
+                }
+                break;
+            }
+
+            // Phase A: attention + routing + speculation per item (KV and
+            // attention are inherently per-session; only expert FFNs batch)
+            let mut routed: Vec<Option<RoutedItem>> = (0..n).map(|_| None).collect();
+            for i in 0..n {
+                if dead[i].is_some() {
+                    continue;
+                }
+                let w = &mut work[i];
+                let session = w.session;
+                match self.route_item(
+                    l,
+                    session,
+                    &xs[i],
+                    w.kv,
+                    w.pos,
+                    &mut events[i],
+                    &mut guesses[i],
+                    token_idxs[i],
+                ) {
+                    Ok((item, spec_delta)) => {
+                        self.session_stats
+                            .entry(session)
+                            .or_default()
+                            .spec_pr
+                            .merge(&spec_delta);
+                        routed[i] = Some(item);
+                    }
+                    Err(e) => dead[i] = Some(e),
+                }
+            }
+
+            // Phase B: group the round's rows by expert, first-appearance
+            // order (deterministic: item order × selection order)
+            let mut groups: Vec<(usize, Vec<(usize, usize)>)> = Vec::new();
+            for i in 0..n {
+                let Some(r) = &routed[i] else { continue };
+                for (j, &e) in r.selected.iter().enumerate() {
+                    match groups.iter_mut().find(|(ge, _)| *ge == e) {
+                        Some((_, rows)) => rows.push((i, j)),
+                        None => groups.push((e, vec![(i, j)])),
+                    }
+                }
+            }
+
+            // Phase C: one ensure + one multi-row FFN per distinct expert.
+            // Outputs are staged per (item, selection slot) and reduced in
+            // selection order below: accumulating in group order would
+            // reorder the f32 summation for top_k > 2 and break
+            // bit-identity with the per-session path.
+            let mut row_outs: Vec<Vec<Option<Vec<f32>>>> =
+                (0..n).map(|_| vec![None; mc.top_k]).collect();
+            for (e, rows) in groups {
+                let live: Vec<(usize, usize)> =
+                    rows.into_iter().filter(|&(i, _)| dead[i].is_none()).collect();
+                if live.is_empty() {
+                    continue;
+                }
+                round.distinct_experts += 1;
+                round.batched_rows += live.len() as u64;
+                round.dedup_joins += live.len() as u64 - 1;
+                // first arrival pays the fetch (or takes the hit)…
+                let (i0, _) = live[0];
+                match self.ensure_resident(work[i0].session, l, e, &mut events[i0]) {
+                    Ok(hit) => {
+                        let t = self.session_stats.entry(work[i0].session).or_default();
+                        if hit {
+                            t.hits += 1;
+                        } else {
+                            t.misses += 1;
+                        }
+                    }
+                    Err(err) => {
+                        kill_rows(&mut dead, &live, err);
+                        continue;
+                    }
+                }
+                // …and every co-routed row joins: `access()` is the single
+                // cache-stats increment site, so each join lands as exactly
+                // one shared-cache hit, attributed to the joining session
+                for &(i, _) in &live[1..] {
+                    let _ = self.cache.layers[l].access(e);
+                    self.session_stats.entry(work[i].session).or_default().hits += 1;
+                }
+                let sessions: Vec<u64> =
+                    live.iter().map(|&(i, _)| work[i].session).collect();
+                let hs: Vec<&[f32]> = live
+                    .iter()
+                    .map(|&(i, _)| routed[i].as_ref().expect("live row").h.as_slice())
+                    .collect();
+                let handle = self.cache.layers[l].peek(e).expect("just ensured");
+                match self.backend.expert_multi(l, e, &sessions, &hs, handle) {
+                    Ok(outs) => {
+                        for (&(i, j), out) in live.iter().zip(outs) {
+                            row_outs[i][j] = Some(out);
+                        }
+                        // compute is NOT deduplicated — every row still runs
+                        // its FFN — so simulated time charges per row
+                        self.clock.advance(self.expert_s * live.len() as f64);
+                    }
+                    Err(err) => kill_rows(&mut dead, &live, err),
+                }
+            }
+
+            // gate-weighted sum in selection order, then residual, per item
+            for i in 0..n {
+                if dead[i].is_some() {
+                    continue;
+                }
+                let r = routed[i].take().expect("live item routed");
+                let mut y = vec![0.0f32; r.x_res.len()];
+                for (slot, &gw) in row_outs[i].iter_mut().zip(&r.gate_w) {
+                    let out = slot.take().expect("live item has every slot");
+                    for (yv, &ov) in y.iter_mut().zip(&out) {
+                        *yv += gw * ov;
+                    }
+                }
+                xs[i] = r.x_res.iter().zip(&y).map(|(&rv, &yv)| rv + yv).collect();
+            }
+        }
+
+        let mut outcomes: Vec<Result<Vec<f32>>> = Vec::with_capacity(n);
+        for i in 0..n {
+            // settled even for dead items, matching the legacy path's
+            // failure-time attribution
+            self.session_stats.entry(work[i].session).or_default().wasted_prefetches +=
+                events[i].wasted_prefetches as u64;
+            match dead[i].take() {
+                Some(e) => outcomes.push(Err(e)),
+                None => outcomes.push(self.backend.final_logits(&xs[i])),
+            }
+        }
+        self.round_stats.merge(&round);
+        RoundResults { outcomes, events, stats: round }
+    }
+
     /// Decode: teacher-force `prompt`, then sample `n_gen` tokens.
     pub fn generate(
         &mut self,
@@ -685,6 +1007,11 @@ impl InferenceEngine {
     }
     pub fn spec_precision_recall(&self) -> PrecisionRecall {
         self.spec_pr
+    }
+    /// Engine-lifetime round-batching counters — zeros when the round path
+    /// never ran (solo decoding, or `--round-batching off`).
+    pub fn round_batch_stats(&self) -> RoundBatchStats {
+        self.round_stats
     }
     /// Transfer-pipeline queue counters plus buffer-pool accounting
     /// (`workers == 0` on the synchronous path — the pool still applies).

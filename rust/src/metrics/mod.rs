@@ -108,6 +108,43 @@ impl SessionTally {
     }
 }
 
+/// Round-level expert-batching counters (DESIGN.md §8): one `step_round`
+/// groups every routed token in the round by `(layer, expert)` and runs ONE
+/// resident-ensure + multi-row FFN per distinct expert. The first arriving
+/// session pays the fetch; each co-routed session is a dedup join (a plain
+/// cache hit in its tally). `batched_rows - distinct_experts == dedup_joins`
+/// by construction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundBatchStats {
+    /// `step_round` calls executed.
+    pub rounds: u64,
+    /// Distinct `(layer, expert)` groups executed (one ensure + one
+    /// multi-row FFN each).
+    pub distinct_experts: u64,
+    /// Rows that joined a group another session had already opened this
+    /// round — each one is a fetch + dequant that per-session stepping
+    /// would have had to consider separately.
+    pub dedup_joins: u64,
+    /// Total rows pushed through batched expert FFNs.
+    pub batched_rows: u64,
+}
+
+impl RoundBatchStats {
+    /// Fraction of batched rows that were dedup joins (0.0 when idle).
+    pub fn join_rate(&self) -> f64 {
+        if self.batched_rows == 0 {
+            return 0.0;
+        }
+        self.dedup_joins as f64 / self.batched_rows as f64
+    }
+    pub fn merge(&mut self, o: &RoundBatchStats) {
+        self.rounds += o.rounds;
+        self.distinct_experts += o.distinct_experts;
+        self.dedup_joins += o.dedup_joins;
+        self.batched_rows += o.batched_rows;
+    }
+}
+
 /// Transfer-pipeline counters (`offload::pipeline`): queue behaviour of the
 /// multi-worker dequant pipeline plus the shared buffer pool's allocation
 /// accounting. `workers == 0` means the engine ran the synchronous path
@@ -378,6 +415,21 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert_eq!(h.percentile_ns(0.25), 1); // bucket 0 upper bound
         assert_eq!(h.percentile_ns(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn round_batch_stats_join_rate_and_merge() {
+        let mut a = RoundBatchStats { rounds: 1, distinct_experts: 2, dedup_joins: 1, batched_rows: 3 };
+        let b = RoundBatchStats { rounds: 1, distinct_experts: 2, dedup_joins: 3, batched_rows: 5 };
+        a.merge(&b);
+        assert_eq!(a.rounds, 2);
+        assert_eq!(a.distinct_experts, 4);
+        assert_eq!(a.dedup_joins, 4);
+        assert_eq!(a.batched_rows, 8);
+        // the structural identity every round preserves
+        assert_eq!(a.batched_rows - a.distinct_experts, a.dedup_joins);
+        assert_eq!(a.join_rate(), 0.5);
+        assert_eq!(RoundBatchStats::default().join_rate(), 0.0);
     }
 
     #[test]

@@ -85,6 +85,28 @@ pub trait Backend {
     fn spec_router(&self, layer: usize, x_res: &[f32]) -> Result<Vec<f32>>;
     /// One expert's FFN with explicitly provided (cached) weights.
     fn expert(&self, h: &[f32], handle: &ExpertHandle) -> Result<Vec<f32>>;
+    /// Marks the start of one `step_round` call. A pure observability hook:
+    /// test wrappers (the round recorder) segment their logs on it; real
+    /// backends need no state and keep the default no-op.
+    fn begin_round(&self) {}
+    /// One expert's FFN over several rows at once — the round-batched form
+    /// of [`Backend::expert`]. `layer`/`expert`/`sessions` are observability
+    /// tags (consumed by test wrappers, ignored by real backends); the math
+    /// contract is that row `i` of the result is bit-identical to
+    /// `self.expert(hs[i], handle)`, which is exactly what the default
+    /// implementation computes. Backends with reusable scratch (native)
+    /// override this to amortize buffer setup across rows.
+    fn expert_multi(
+        &self,
+        layer: usize,
+        expert: usize,
+        sessions: &[u64],
+        hs: &[&[f32]],
+        handle: &ExpertHandle,
+    ) -> Result<Vec<Vec<f32>>> {
+        let _ = (layer, expert, sessions);
+        hs.iter().map(|h| self.expert(h, handle)).collect()
+    }
     /// Make dequantized expert weights device-resident (the upload half of a
     /// transfer; the dequant half lives in `offload::store`).
     fn upload_expert(&self, w1: Vec<f32>, w3: Vec<f32>, w2: Vec<f32>) -> Result<ExpertHandle>;

@@ -171,6 +171,37 @@ pub fn expert_ffn(h: &[f32], w1: &[f32], w3: &[f32], w2: &[f32], f: usize, out: 
     expert_ffn_into(h, w1, w3, w2, f, &mut a, &mut u, out);
 }
 
+/// One expert's SwiGLU FFN over several rows at once — the round-batched
+/// form of [`expert_ffn_into`]. Row `i` of `outs` is bit-identical to
+/// `expert_ffn_into(hs[i], ...)` because each row runs the exact same
+/// per-row vecmat sequence over the same weights; batching only amortizes
+/// the intermediate buffers (`a`/`u` resized once, then recycled row to
+/// row — the zero-allocation invariant from DESIGN.md §7 holds for the
+/// whole batch).
+#[allow(clippy::too_many_arguments)]
+pub fn expert_ffn_multi_into(
+    hs: &[&[f32]],
+    w1: &[f32],
+    w3: &[f32],
+    w2: &[f32],
+    f: usize,
+    a: &mut Vec<f32>,
+    u: &mut Vec<f32>,
+    outs: &mut [Vec<f32>],
+) {
+    debug_assert_eq!(hs.len(), outs.len());
+    a.resize(f, 0.0);
+    u.resize(f, 0.0);
+    for (h, out) in hs.iter().zip(outs.iter_mut()) {
+        vecmat(h, w1, f, a);
+        vecmat(h, w3, f, u);
+        for (av, &uv) in a.iter_mut().zip(u.iter()) {
+            *av = silu(*av) * uv;
+        }
+        vecmat(a, w2, out.len(), out);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Backend impl
 // ---------------------------------------------------------------------------
@@ -276,6 +307,24 @@ impl Backend for NativeBackend {
         let Scratch { ffn_a, ffn_u, .. } = &mut *scratch;
         expert_ffn_into(h, w1, w3, w2, self.cfg.ffn_size, ffn_a, ffn_u, &mut out);
         Ok(out)
+    }
+
+    fn expert_multi(
+        &self,
+        _layer: usize,
+        _expert: usize,
+        _sessions: &[u64],
+        hs: &[&[f32]],
+        handle: &ExpertHandle,
+    ) -> Result<Vec<Vec<f32>>> {
+        let ExpertHandle::Host { w1, w3, w2 } = handle else {
+            bail!("native backend got a device handle");
+        };
+        let mut outs = vec![vec![0.0f32; self.cfg.hidden_size]; hs.len()];
+        let mut scratch = self.scratch.borrow_mut();
+        let Scratch { ffn_a, ffn_u, .. } = &mut *scratch;
+        expert_ffn_multi_into(hs, w1, w3, w2, self.cfg.ffn_size, ffn_a, ffn_u, &mut outs);
+        Ok(outs)
     }
 
     fn upload_expert(&self, w1: Vec<f32>, w3: Vec<f32>, w2: Vec<f32>) -> Result<ExpertHandle> {
@@ -411,6 +460,56 @@ mod tests {
         rope_inplace(&mut v, 17, 10000.0);
         let n1: f32 = v.iter().map(|x| x * x).sum();
         assert!((n0 - n1).abs() < 1e-5);
+    }
+
+    #[test]
+    fn expert_ffn_multi_matches_single_bitwise() {
+        // ragged hidden values either side of the unroll boundary, with a
+        // dirty (oversized, garbage-filled) scratch pair — each batched row
+        // must equal its solo expert_ffn_into run bit for bit
+        let (hsz, f) = (6usize, 10usize);
+        let w1: Vec<f32> = (0..hsz * f).map(|i| (i as f32 * 0.11).sin()).collect();
+        let w3: Vec<f32> = (0..hsz * f).map(|i| (i as f32 * 0.07).cos()).collect();
+        let w2: Vec<f32> = (0..f * hsz).map(|i| (i as f32 * 0.05).sin()).collect();
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|r| (0..hsz).map(|i| ((r * 7 + i) as f32 * 0.31).sin()).collect())
+            .collect();
+        let hs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let mut a = vec![9.9f32; f + 5];
+        let mut u = vec![-9.9f32; f + 5];
+        let mut outs = vec![vec![0.0f32; hsz]; rows.len()];
+        expert_ffn_multi_into(&hs, &w1, &w3, &w2, f, &mut a, &mut u, &mut outs);
+        for (row, batched) in rows.iter().zip(&outs) {
+            let mut solo = vec![0.0f32; hsz];
+            let (mut sa, mut su) = (Vec::new(), Vec::new());
+            expert_ffn_into(row, &w1, &w3, &w2, f, &mut sa, &mut su, &mut solo);
+            assert_eq!(batched, &solo);
+        }
+    }
+
+    #[test]
+    fn backend_expert_multi_matches_expert() {
+        use crate::model::weights::generate_weights;
+        let w = Arc::new(generate_weights(ModelConfig::TINY, 7));
+        let be = NativeBackend::new(w);
+        let (w1, w3, w2) = (
+            be.weights().expert(0, 0, "w1").unwrap().to_vec(),
+            be.weights().expert(0, 0, "w3").unwrap().to_vec(),
+            be.weights().expert(0, 0, "w2").unwrap().to_vec(),
+        );
+        let handle = be.upload_expert(w1, w3, w2).unwrap();
+        let rows: Vec<Vec<f32>> = (0..4)
+            .map(|r| {
+                (0..be.config().hidden_size)
+                    .map(|i| ((r * 5 + i) as f32 * 0.17).sin())
+                    .collect()
+            })
+            .collect();
+        let hs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let outs = be.expert_multi(0, 0, &[1, 2, 3, 4], &hs, &handle).unwrap();
+        for (row, batched) in rows.iter().zip(&outs) {
+            assert_eq!(batched, &be.expert(row, &handle).unwrap());
+        }
     }
 
     #[test]

@@ -167,6 +167,12 @@ pub struct ServeConfig {
     /// round, with deficit carry-over for candidates it had to skip.
     /// `0` = unbounded.
     pub round_budget_tokens: usize,
+    /// Round-level expert batching (on by default): each scheduler round
+    /// dispatches all its tokens through one engine round so sessions
+    /// routing to the same `(layer, expert)` share a single transfer +
+    /// dequant + batched FFN pass. `--round-batching off` falls back to
+    /// the bit-identical per-session step loop.
+    pub round_batching: bool,
 }
 
 impl Default for ServeConfig {
@@ -180,6 +186,7 @@ impl Default for ServeConfig {
             max_inflight_sessions: 128,
             prefill_chunk: 0,
             round_budget_tokens: 0,
+            round_batching: true,
         }
     }
 }
@@ -417,6 +424,19 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
                 ("pool_allocs", Value::from(snap.pipeline.pool_allocs as f64)),
                 ("pool_reuses", Value::from(snap.pipeline.pool_reuses as f64)),
                 ("pool_reuse_rate", Value::from(snap.pipeline.pool_reuse_rate())),
+            ]),
+        ),
+        (
+            "round_batching",
+            Value::obj(vec![
+                ("rounds", Value::from(snap.round_batching.rounds as f64)),
+                (
+                    "distinct_experts",
+                    Value::from(snap.round_batching.distinct_experts as f64),
+                ),
+                ("dedup_joins", Value::from(snap.round_batching.dedup_joins as f64)),
+                ("batched_rows", Value::from(snap.round_batching.batched_rows as f64)),
+                ("join_rate", Value::from(snap.round_batching.join_rate())),
             ]),
         ),
         (
@@ -874,6 +894,7 @@ where
             .then(|| Duration::from_millis(cfg.queue_timeout_ms)),
         prefill_chunk: cfg.prefill_chunk,
         round_budget_tokens: cfg.round_budget_tokens,
+        round_batching: cfg.round_batching,
     };
     let guard = WorkerGuard {
         queue: Arc::clone(&queue),
@@ -1132,6 +1153,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         prefill_chunk: args.usize_or("prefill-chunk", defaults.prefill_chunk)?,
         round_budget_tokens: args
             .usize_or("round-budget-tokens", defaults.round_budget_tokens)?,
+        // value-style flag (not a bare bool): on by default, disabled with
+        // `--round-batching off` (or false/0/no) for the legacy path
+        round_batching: !matches!(
+            args.str_or("round-batching", "on").as_str(),
+            "off" | "false" | "0" | "no"
+        ),
     };
 
     let listener = TcpListener::bind(("0.0.0.0", port as u16))?;
@@ -1171,7 +1198,9 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::{CacheStats, PipelineStats, PrecisionRecall, SessionTally};
+    use crate::metrics::{
+        CacheStats, PipelineStats, PrecisionRecall, RoundBatchStats, SessionTally,
+    };
     use super::scheduler::SessionView;
 
     #[test]
@@ -1377,6 +1406,12 @@ mod tests {
                 pool_reuses: 90,
                 ..Default::default()
             },
+            round_batching: RoundBatchStats {
+                rounds: 6,
+                distinct_experts: 20,
+                dedup_joins: 10,
+                batched_rows: 30,
+            },
             sessions: Vec::new(),
         };
         for id in 1..=2u64 {
@@ -1418,6 +1453,13 @@ mod tests {
         assert_eq!(pipe.get("demand_joined_prefetch").as_usize(), Some(4));
         assert_eq!(pipe.get("cancelled_prefetches").as_usize(), Some(1));
         assert_eq!(pipe.get("pool_reuse_rate").as_f64(), Some(0.9));
+        // round-level expert-batching counters, with the derived join rate
+        let rb = v.get("round_batching");
+        assert_eq!(rb.get("rounds").as_usize(), Some(6));
+        assert_eq!(rb.get("distinct_experts").as_usize(), Some(20));
+        assert_eq!(rb.get("dedup_joins").as_usize(), Some(10));
+        assert_eq!(rb.get("batched_rows").as_usize(), Some(30));
+        assert!((rb.get("join_rate").as_f64().unwrap() - 10.0 / 30.0).abs() < 1e-12);
         let sessions = v.get("sessions").as_arr().unwrap();
         assert_eq!(sessions.len(), 2);
         assert_eq!(sessions[0].get("hits").as_usize(), Some(45));

@@ -52,8 +52,10 @@
 //! prompt is fully fed (its first output token is sampled right then).
 
 use crate::engine::batch::Session;
-use crate::engine::InferenceEngine;
-use crate::metrics::{CacheStats, PipelineStats, PrecisionRecall, ServeMetrics, SessionTally};
+use crate::engine::{InferenceEngine, RoundWork};
+use crate::metrics::{
+    CacheStats, PipelineStats, PrecisionRecall, RoundBatchStats, ServeMetrics, SessionTally,
+};
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::Tokenizer;
 use crate::serve::{
@@ -87,6 +89,14 @@ pub struct SchedulerConfig {
     /// oldest first) — long-prompt sessions cannot starve decoders and
     /// vice versa.
     pub round_budget_tokens: usize,
+    /// Round-level expert batching (DESIGN.md §8): dispatch the whole
+    /// round's tokens through ONE [`InferenceEngine::step_round`] so
+    /// sessions routing to the same `(layer, expert)` share a single
+    /// resident-ensure + dequant + batched FFN pass. `false` falls back
+    /// to the legacy per-session `step_once` loop (`--round-batching
+    /// off`); both paths produce bit-identical outputs
+    /// (`prop_round_batching_bit_identical`).
+    pub round_batching: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -96,6 +106,7 @@ impl Default for SchedulerConfig {
             queue_timeout: None,
             prefill_chunk: 0,
             round_budget_tokens: 0,
+            round_batching: true,
         }
     }
 }
@@ -167,6 +178,11 @@ pub struct ServeSnapshot {
     /// Transfer-pipeline queue + buffer-pool counters (workers == 0 when
     /// the engine runs transfers synchronously).
     pub pipeline: PipelineStats,
+    /// Round-level expert-batching counters (all zero when the scheduler
+    /// runs with `round_batching` off): distinct `(layer, expert)` groups
+    /// executed, dedup joins (rows that piggybacked on a group's first
+    /// arrival), and total batched rows.
+    pub round_batching: RoundBatchStats,
     pub sessions: Vec<SessionView>,
 }
 
@@ -397,6 +413,39 @@ impl Scheduler {
         cands.sort_by_key(|&(last, id, _)| (last, id));
 
         let mut spent = 0usize;
+        if self.cfg.round_batching {
+            // --- batched dispatch: settle the budget FIRST (selection is
+            // identical to the legacy loop on error-free rounds), then run
+            // every selected token through ONE engine round so sessions
+            // routing to the same (layer, expert) share one transfer +
+            // dequant + batched FFN pass (DESIGN.md §8)
+            let mut batch_idx: Vec<usize> = Vec::new();
+            let mut prefill_grant: Option<(usize, usize)> = None;
+            for (_, _, cand) in cands {
+                match cand {
+                    Cand::Step(i) => {
+                        if spent >= budget {
+                            report.skipped.push(self.active.sessions[i].inner.id);
+                            continue;
+                        }
+                        batch_idx.push(i);
+                        spent += 1;
+                    }
+                    Cand::PrefillUnit(i) => {
+                        if spent >= budget {
+                            report.skipped.push(self.active.sessions[i].inner.id);
+                            continue;
+                        }
+                        let grant = chunk.min(budget - spent);
+                        batch_idx.push(i);
+                        prefill_grant = Some((i, grant));
+                        spent += grant.min(self.active.sessions[i].inner.prefill_remaining());
+                    }
+                }
+            }
+            self.dispatch_round(&batch_idx, prefill_grant, &mut report);
+            return report;
+        }
         for (_, _, cand) in cands {
             match cand {
                 Cand::Step(i) => {
@@ -429,6 +478,154 @@ impl Scheduler {
             }
         }
         report
+    }
+
+    /// Run one batched round: peek every selected session's next token,
+    /// dispatch ONE [`InferenceEngine::step_round`] over all of them, then
+    /// commit each outcome through [`Session::apply_step`] with the exact
+    /// bookkeeping of [`Scheduler::advance_one`] (token meters, TTFT at
+    /// prompt completion, engine errors as deferred 500s).
+    ///
+    /// `prefill_grant = (i, grant)` marks session `i` as this round's
+    /// prefill-chunk unit: only its FIRST prompt token rides the batched
+    /// round (token `t+1`'s attention needs token `t`'s KV write, so one
+    /// session contributes at most one row per round); the remaining
+    /// `grant − 1` tokens run as singleton `step_round` calls right after,
+    /// preserving `advance_prefill`'s chunk semantics and its single
+    /// aggregated [`Advance`] entry.
+    fn dispatch_round(
+        &mut self,
+        batch_idx: &[usize],
+        prefill_grant: Option<(usize, usize)>,
+        report: &mut RoundReport,
+    ) {
+        if batch_idx.is_empty() {
+            return;
+        }
+        let round = self.round;
+        let prefill_idx = prefill_grant.map(|(i, _)| i);
+        let feeds: Vec<(u32, bool)> = batch_idx
+            .iter()
+            .map(|&i| self.active.sessions[i].inner.peek_next())
+            .collect();
+        // disjoint &mut borrows of the chosen sessions (candidate indices
+        // are distinct by construction): take each out of a slot vector so
+        // every RoundWork can hold `&mut kv` simultaneously
+        let mut slots: Vec<Option<&mut ActiveSession>> =
+            self.active.sessions.iter_mut().map(Some).collect();
+        let mut chosen: Vec<&mut ActiveSession> = batch_idx
+            .iter()
+            .map(|&i| slots[i].take().expect("distinct candidate indices"))
+            .collect();
+        let mut work: Vec<RoundWork> = chosen
+            .iter_mut()
+            .zip(&feeds)
+            .map(|(s, &(tok, gen))| RoundWork {
+                session: s.inner.id,
+                tok,
+                pos: s.inner.pos,
+                prefill: !gen,
+                kv: &mut s.inner.kv,
+            })
+            .collect();
+        let results = self.engine.step_round(&mut work);
+        drop(work);
+        // the prefill unit's first-token advance is reported together with
+        // its continuation tokens as one aggregated chunk entry below
+        let mut chunk_fed = 0usize;
+        for (((&i, s), &(tok, was_generated)), outcome) in batch_idx
+            .iter()
+            .zip(chosen.iter_mut())
+            .zip(&feeds)
+            .zip(results.outcomes)
+        {
+            s.last_round = round;
+            match outcome {
+                Ok(logits) => {
+                    s.inner.apply_step(tok, was_generated, &logits);
+                    if was_generated {
+                        self.metrics.tokens_generated.fetch_add(1, Ordering::Relaxed);
+                        report.decode_tokens += 1;
+                        report.advanced.push(Advance {
+                            session: s.inner.id,
+                            tokens: 1,
+                            prefill: false,
+                        });
+                    } else {
+                        self.metrics.tokens_prefill.fetch_add(1, Ordering::Relaxed);
+                        if s.inner.next_token_is_generated() {
+                            self.metrics
+                                .ttft
+                                .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+                        }
+                        if Some(i) == prefill_idx {
+                            chunk_fed = 1;
+                        } else {
+                            report.prefill_tokens += 1;
+                            report.advanced.push(Advance {
+                                session: s.inner.id,
+                                tokens: 1,
+                                prefill: true,
+                            });
+                        }
+                    }
+                }
+                Err(e) => {
+                    s.error = Some(GenError {
+                        status: 500,
+                        message: format!("{e:#}"),
+                        retry_after: None,
+                    });
+                }
+            }
+        }
+        drop(chosen);
+        drop(slots);
+        if let Some((i, grant)) = prefill_grant {
+            let sid = self.active.sessions[i].inner.id;
+            while chunk_fed > 0 && chunk_fed < grant {
+                let s = &mut self.active.sessions[i];
+                if s.error.is_some() || s.inner.done || !s.inner.in_prefill() {
+                    break;
+                }
+                let (tok, _gen) = s.inner.peek_next();
+                let mut work = [RoundWork {
+                    session: sid,
+                    tok,
+                    pos: s.inner.pos,
+                    prefill: true,
+                    kv: &mut s.inner.kv,
+                }];
+                let mut results = self.engine.step_round(&mut work);
+                drop(work);
+                match results.outcomes.pop().expect("one outcome per work item") {
+                    Ok(logits) => {
+                        let s = &mut self.active.sessions[i];
+                        s.inner.apply_step(tok, false, &logits);
+                        chunk_fed += 1;
+                        self.metrics.tokens_prefill.fetch_add(1, Ordering::Relaxed);
+                        if s.inner.next_token_is_generated() {
+                            self.metrics
+                                .ttft
+                                .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+                        }
+                    }
+                    Err(e) => {
+                        self.active.sessions[i].error = Some(GenError {
+                            status: 500,
+                            message: format!("{e:#}"),
+                            retry_after: None,
+                        });
+                        break;
+                    }
+                }
+            }
+            self.prefill_last_round = round;
+            if chunk_fed > 0 {
+                report.prefill_tokens += chunk_fed;
+                report.advanced.push(Advance { session: sid, tokens: chunk_fed, prefill: true });
+            }
+        }
     }
 
     /// Advance session `i` by one token (prompt or generated). Returns
@@ -596,6 +793,7 @@ impl Scheduler {
         snap.spec = self.engine.spec_precision_recall();
         snap.cross_session_prefetch_hits = self.engine.cross_session_prefetch_hits();
         snap.pipeline = self.engine.pipeline_stats();
+        snap.round_batching = self.engine.round_batch_stats();
         snap.sessions = views;
     }
 }
@@ -993,6 +1191,97 @@ mod tests {
             assert_eq!(steps, legacy_steps, "chunk {chunk}/budget {budget} changed step count");
             assert_eq!(prefill, legacy_prefill, "prefill step split drifted");
         }
+    }
+
+    #[test]
+    fn round_batching_outputs_bit_identical_to_per_session() {
+        // the tentpole invariant at the scheduler level: batched rounds
+        // are a dispatch optimization only — same requests, same texts,
+        // same engine step totals as the per-session step_once loop,
+        // across chunking and budget configurations
+        let run = |on: bool, chunk: usize, budget: usize| {
+            let engine = test_engine(true);
+            let (queue, metrics) = test_queue(8);
+            let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+            let (completions, _completion_rx) = channel();
+            let mut rxs = Vec::new();
+            rxs.push(push(&queue, &"L".repeat(40), 4)); // long prompt
+            for i in 0..3 {
+                rxs.push(push(&queue, &format!("short {i}"), 4));
+            }
+            queue.close();
+            let engine = run_scheduler(
+                engine,
+                queue,
+                completions,
+                SchedulerConfig {
+                    max_sessions: 4,
+                    prefill_chunk: chunk,
+                    round_budget_tokens: budget,
+                    round_batching: on,
+                    ..SchedulerConfig::default()
+                },
+                metrics,
+                Arc::clone(&snapshot),
+            );
+            let texts: Vec<String> = rxs
+                .into_iter()
+                .map(|r| r.recv().unwrap().expect("generation ok").text)
+                .collect();
+            let stats = snapshot.lock().unwrap().round_batching;
+            (texts, engine.total_steps(), engine.prefill_steps(), stats)
+        };
+        for (chunk, budget) in [(0usize, 0usize), (3, 0), (8, 6)] {
+            let (legacy, legacy_steps, legacy_prefill, off_stats) = run(false, chunk, budget);
+            let (batched, steps, prefill, on_stats) = run(true, chunk, budget);
+            assert_eq!(batched, legacy, "chunk {chunk}/budget {budget}: outputs diverged");
+            assert_eq!(steps, legacy_steps, "chunk {chunk}/budget {budget}: step count diverged");
+            assert_eq!(prefill, legacy_prefill, "prefill step split drifted");
+            // the off path never touches the round engine...
+            assert_eq!(off_stats.rounds, 0);
+            assert_eq!(off_stats.batched_rows, 0);
+            // ...the on path runs everything through it, preserving the
+            // dedup identity
+            assert!(on_stats.rounds > 0, "round path never dispatched");
+            assert_eq!(
+                on_stats.batched_rows - on_stats.distinct_experts,
+                on_stats.dedup_joins
+            );
+        }
+    }
+
+    #[test]
+    fn round_batching_dedups_identical_sessions() {
+        // three sessions with the SAME prompt under greedy sampling decode
+        // identical token streams in lockstep, so every round routes all
+        // three onto the same experts — dedup joins are guaranteed
+        let engine = test_engine(false);
+        let (queue, metrics) = test_queue(8);
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let (completions, _completion_rx) = channel();
+        let rxs: Vec<_> = (0..3).map(|_| push(&queue, "same text", 5)).collect();
+        queue.close();
+        run_scheduler(
+            engine,
+            queue,
+            completions,
+            SchedulerConfig { max_sessions: 3, ..SchedulerConfig::default() },
+            metrics,
+            Arc::clone(&snapshot),
+        );
+        let texts: Vec<String> = rxs
+            .into_iter()
+            .map(|r| r.recv().unwrap().expect("generation ok").text)
+            .collect();
+        assert!(texts.windows(2).all(|w| w[0] == w[1]), "greedy twins diverged");
+        let snap = snapshot.lock().unwrap();
+        let stats = snap.round_batching;
+        assert!(stats.dedup_joins > 0, "identical lockstep sessions never deduped");
+        assert_eq!(stats.batched_rows - stats.distinct_experts, stats.dedup_joins);
+        // first-arrival-pays attribution keeps the per-session tallies an
+        // exact partition of the shared cache totals
+        let part: u64 = snap.sessions.iter().map(|s| s.tally.hits + s.tally.misses).sum();
+        assert_eq!(part, snap.cache.hits + snap.cache.misses);
     }
 
     /// Drive `Scheduler::turn` directly — the deterministic harness: no

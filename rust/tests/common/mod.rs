@@ -175,6 +175,21 @@ impl Backend for PacedBackend {
     fn expert(&self, h: &[f32], handle: &ExpertHandle) -> anyhow::Result<Vec<f32>> {
         self.inner.expert(h, handle)
     }
+    fn begin_round(&self) {
+        self.inner.begin_round()
+    }
+    fn expert_multi(
+        &self,
+        layer: usize,
+        expert: usize,
+        sessions: &[u64],
+        hs: &[&[f32]],
+        handle: &ExpertHandle,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        // forward to the inner backend's scratch-reusing implementation —
+        // the pace gates per-token progress at `embed`, not per expert
+        self.inner.expert_multi(layer, expert, sessions, hs, handle)
+    }
     fn upload_expert(
         &self,
         w1: Vec<f32>,
@@ -188,6 +203,150 @@ impl Backend for PacedBackend {
     }
     fn name(&self) -> &'static str {
         "native-paced"
+    }
+}
+
+/// One batched expert pass as observed by a [`RoundRecorder`]: the
+/// `(layer, expert)` group and the sessions whose rows it carried, in
+/// arrival order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchedPass {
+    pub layer: usize,
+    pub expert: usize,
+    pub sessions: Vec<u64>,
+}
+
+enum RecEntry {
+    /// A `begin_round` boundary — starts a new round segment.
+    Round,
+    Pass(BatchedPass),
+}
+
+/// Backend wrapper recording every round boundary and batched expert pass
+/// (the round-shape observability layer): wraps any [`Backend`], forwards
+/// all math untouched, and logs `(layer, expert, sessions)` per
+/// `expert_multi` call segmented by `begin_round`. Reused across unit,
+/// integration, and property tests to assert the round-batching shape —
+/// at most ONE batched pass per distinct `(layer, expert)` per round
+/// ([`assert_round_shape`]).
+pub struct RoundRecorder<B: Backend> {
+    inner: B,
+    log: Arc<Mutex<Vec<RecEntry>>>,
+}
+
+impl<B: Backend> RoundRecorder<B> {
+    pub fn new(inner: B) -> RoundRecorder<B> {
+        RoundRecorder { inner, log: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// Handle to the shared log, to read rounds back after the engine
+    /// (which owns the backend) has been moved away.
+    pub fn log_handle(&self) -> RoundLog {
+        RoundLog(Arc::clone(&self.log))
+    }
+}
+
+/// Cloneable read/drain handle onto a [`RoundRecorder`]'s log.
+#[derive(Clone)]
+pub struct RoundLog(Arc<Mutex<Vec<RecEntry>>>);
+
+impl RoundLog {
+    /// Drain the log into per-round segments of batched passes (one
+    /// segment per `begin_round`; passes before the first boundary — e.g.
+    /// from non-round engine paths — land in a leading segment).
+    pub fn take_rounds(&self) -> Vec<Vec<BatchedPass>> {
+        let mut entries = self.0.lock().unwrap();
+        let mut rounds = vec![Vec::new()];
+        for e in entries.drain(..) {
+            match e {
+                RecEntry::Round => rounds.push(Vec::new()),
+                RecEntry::Pass(p) => rounds.last_mut().unwrap().push(p),
+            }
+        }
+        if rounds.first().is_some_and(|r| r.is_empty()) {
+            rounds.remove(0);
+        }
+        rounds
+    }
+}
+
+/// The round-shape invariant: within one round, each distinct
+/// `(layer, expert)` is executed by at most ONE batched pass — dedup
+/// happened before dispatch, never after.
+pub fn assert_round_shape(passes: &[BatchedPass]) {
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    for p in passes {
+        assert!(
+            !seen.contains(&(p.layer, p.expert)),
+            "round executed (layer {}, expert {}) in more than one batched pass",
+            p.layer,
+            p.expert
+        );
+        assert!(!p.sessions.is_empty(), "batched pass with no rows");
+        seen.push((p.layer, p.expert));
+    }
+}
+
+impl<B: Backend> Backend for RoundRecorder<B> {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+    fn new_kv(&self) -> anyhow::Result<KvState> {
+        self.inner.new_kv()
+    }
+    fn embed(&self, tok: u32) -> anyhow::Result<Vec<f32>> {
+        self.inner.embed(tok)
+    }
+    fn attn(
+        &self,
+        layer: usize,
+        x: &[f32],
+        kv: &mut KvState,
+        pos: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.attn(layer, x, kv, pos)
+    }
+    fn router(&self, layer: usize, x_res: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.inner.router(layer, x_res)
+    }
+    fn spec_router(&self, layer: usize, x_res: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.spec_router(layer, x_res)
+    }
+    fn expert(&self, h: &[f32], handle: &ExpertHandle) -> anyhow::Result<Vec<f32>> {
+        self.inner.expert(h, handle)
+    }
+    fn begin_round(&self) {
+        self.log.lock().unwrap().push(RecEntry::Round);
+        self.inner.begin_round()
+    }
+    fn expert_multi(
+        &self,
+        layer: usize,
+        expert: usize,
+        sessions: &[u64],
+        hs: &[&[f32]],
+        handle: &ExpertHandle,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.log.lock().unwrap().push(RecEntry::Pass(BatchedPass {
+            layer,
+            expert,
+            sessions: sessions.to_vec(),
+        }));
+        self.inner.expert_multi(layer, expert, sessions, hs, handle)
+    }
+    fn upload_expert(
+        &self,
+        w1: Vec<f32>,
+        w3: Vec<f32>,
+        w2: Vec<f32>,
+    ) -> anyhow::Result<ExpertHandle> {
+        self.inner.upload_expert(w1, w3, w2)
+    }
+    fn final_logits(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.final_logits(x)
+    }
+    fn name(&self) -> &'static str {
+        "round-recorder"
     }
 }
 

@@ -670,6 +670,140 @@ fn short_first_tokens_land_during_long_prefill() {
     assert_eq!(v.get("n_generated").as_usize(), Some(2));
 }
 
+/// Round-batching dedup accounting, deterministically (permit-gated
+/// engine, no wall-clock margins). Phase 1: a single session's rounds
+/// have one row per distinct `(layer, expert)` — `dedup_joins` stays 0
+/// while `batched_rows == distinct_experts > 0`. Phase 2: three sessions
+/// with IDENTICAL prompts under greedy sampling decode in lockstep, so
+/// every distinct expert group carries one row from EACH session — the
+/// `/metrics` deltas must show exactly one fetch plus N−1 joins per
+/// group: `Δbatched_rows == 3·Δdistinct` and `Δdedup_joins == 2·Δdistinct`.
+#[test]
+fn round_batching_dedup_accounting_is_exact() {
+    let pace = Pace::new();
+    let pace_engine = Arc::clone(&pace);
+    let server = Server::start_with(
+        ServeConfig { max_sessions: 8, queue_depth: 16, ..ServeConfig::default() },
+        move || paced_engine(pace_engine, 0),
+    );
+    let _open = Pace::open_on_drop(&pace);
+    let addr = server.addr;
+
+    let rb = |m: &Value, k: &str| m.get("round_batching").get(k).as_usize().unwrap();
+
+    // --- phase 1: session A alone; its first round is one token of one
+    // session, so every expert group has exactly one row
+    let a_client = std::thread::spawn(move || {
+        http_post(addr, "/generate", r#"{"prompt":"x","n_tokens":1,"greedy":true}"#).unwrap()
+    });
+    pace.grant(1); // round 1: A's BOS token, alone by construction
+    assert!(
+        wait_until(
+            || rb(&fetch_metrics(addr), "rounds") == 1,
+            Duration::from_secs(10)
+        ),
+        "first round never published"
+    );
+    let s0 = fetch_metrics(addr);
+    assert_eq!(rb(&s0, "dedup_joins"), 0, "a single-session round cannot join");
+    let d0 = rb(&s0, "distinct_experts");
+    assert!(d0 > 0, "round executed no experts");
+    assert_eq!(rb(&s0, "batched_rows"), d0, "one row per group when alone");
+
+    // --- phase 2: three identical-prompt twins enqueue while the engine
+    // is blocked inside A's second round (zero permits), so the scheduler
+    // admits all three in ONE drain — they decode in lockstep from pos 0
+    let twins: Vec<_> = (0..3)
+        .map(|_| {
+            std::thread::spawn(move || {
+                http_post(addr, "/generate", r#"{"prompt":"tw","n_tokens":5,"greedy":true}"#)
+                    .unwrap()
+            })
+        })
+        .collect();
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("queue_depth").as_usize() == Some(3),
+            Duration::from_secs(10)
+        ),
+        "twins were admitted before the same drain could take all three"
+    );
+    // round 2: A alone (1 permit); round 3: A's last token + the twins'
+    // first (4 permits) — then A retires and the engine blocks again
+    pace.grant(5);
+    assert!(
+        wait_until(
+            || {
+                let m = fetch_metrics(addr);
+                m.get("completed_sessions").as_usize() == Some(1)
+                    && rb(&m, "rounds") == 3
+            },
+            Duration::from_secs(10)
+        ),
+        "phase boundary never quiesced"
+    );
+    let s1 = fetch_metrics(addr);
+    // lockstep precondition: all three twins advanced exactly once (in
+    // round 3) — admitted together, aligned forever after
+    let aligned = s1
+        .get("sessions")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|s| s.get("state").as_str() == Some("active"))
+        .map(|s| s.get("tokens").as_usize().unwrap())
+        .collect::<Vec<_>>();
+    assert_eq!(aligned, vec![1, 1, 1], "twins not admitted in one drain");
+
+    // --- release: the remaining rounds are exactly the three aligned
+    // twins, so the deltas over them are exact multiples
+    pace.open();
+    // gate on the PUBLISHED all-done snapshot, not the live inflight
+    // gauge: the gauge drops in retire(), a hair before the final round's
+    // stats are published
+    assert!(
+        wait_until(
+            || {
+                let m = fetch_metrics(addr);
+                m.get("sessions").as_arr().is_some_and(|ss| {
+                    ss.len() == 4 && ss.iter().all(|s| s.get("state").as_str() == Some("done"))
+                })
+            },
+            Duration::from_secs(10)
+        ),
+        "twins never completed"
+    );
+    for t in twins {
+        let (status, body) = t.join().unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+    let (status, _) = a_client.join().unwrap();
+    assert_eq!(status, 200);
+
+    let s2 = fetch_metrics(addr);
+    let d_distinct = rb(&s2, "distinct_experts") - rb(&s1, "distinct_experts");
+    let d_joins = rb(&s2, "dedup_joins") - rb(&s1, "dedup_joins");
+    let d_rows = rb(&s2, "batched_rows") - rb(&s1, "batched_rows");
+    assert!(d_distinct > 0, "twin rounds executed no experts");
+    assert_eq!(d_rows, 3 * d_distinct, "each group must carry one row per twin");
+    assert_eq!(d_joins, 2 * d_distinct, "each group must pay 1 fetch + N-1 joins");
+    // cumulative identity and the first-arrival-pays partition
+    assert_eq!(
+        rb(&s2, "batched_rows") - rb(&s2, "distinct_experts"),
+        rb(&s2, "dedup_joins")
+    );
+    let cache = s2.get("shared_cache");
+    let total = cache.get("hits").as_usize().unwrap() + cache.get("misses").as_usize().unwrap();
+    let part: usize = s2
+        .get("sessions")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("hits").as_usize().unwrap() + s.get("misses").as_usize().unwrap())
+        .sum();
+    assert_eq!(part, total, "dedup joins must not break the tally partition");
+}
+
 /// Regression test for the /metrics-starvation bug: `/metrics` and
 /// `/healthz` are served from a dedicated non-pooled thread, so they
 /// answer within a bounded time even while every decode slot is saturated

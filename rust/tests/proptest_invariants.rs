@@ -3,7 +3,7 @@
 
 use moe_offload::cache::{LayerCache, PolicyKind};
 use moe_offload::engine::{EngineConfig, InferenceEngine};
-use moe_offload::metrics::{PrecisionRecall, ServeMetrics};
+use moe_offload::metrics::{PrecisionRecall, RoundBatchStats, ServeMetrics};
 use moe_offload::model::sampler::{top_k, Sampler, Sampling};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
@@ -394,6 +394,7 @@ fn prop_chunked_prefill_fair_and_bit_identical() {
                     queue_timeout: None,
                     prefill_chunk: chunk,
                     round_budget_tokens: budget,
+                    round_batching: true,
                 },
                 metrics,
                 Arc::new(Mutex::new(ServeSnapshot::default())),
@@ -471,6 +472,137 @@ fn prop_chunked_prefill_fair_and_bit_identical() {
                     ));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_batching_bit_identical() {
+    // round-level expert batching is scheduling + dedup, not semantics:
+    // across random session counts × prompts × cache policies × quant
+    // schemes × prefetch on/off × chunk/budget settings, every session's
+    // full token stream under round batching (one `step_round` dispatch
+    // per round, per-(layer, expert) dedup) is bit-identical to the
+    // legacy per-session path (`--round-batching off`). The dedup ledger
+    // must also stay structurally exact on the batched run —
+    // `batched_rows − distinct_experts == dedup_joins` — while the legacy
+    // run records zero batched activity.
+    forall(6, |g: &mut Gen| {
+        let n_req = g.usize(2..=5);
+        let policy = *g.choose(&PolicyKind::all_online());
+        let scheme = *g.choose(&[Scheme::F32, Scheme::Int8 { block: 16 }]);
+        let prefetch = g.bool();
+        let capacity = g.usize(2..=6);
+        let chunk = *g.choose(&[0usize, 2, 5]);
+        let budget = *g.choose(&[0usize, 3, 8]);
+        let max_sessions = g.usize(2..=4);
+        // a two-letter alphabet makes duplicate prompts (the interesting
+        // dedup case) common without forcing them
+        let requests: Vec<(String, usize)> = (0..n_req)
+            .map(|i| {
+                let prompt =
+                    String::from_utf8(vec![b'a' + (i as u8 % 2); g.usize(1..=24)]).unwrap();
+                (prompt, g.usize(1..=6))
+            })
+            .collect();
+        let sampling = if g.bool() {
+            Sampling::Greedy
+        } else {
+            Sampling::TopP { temperature: 0.9, top_p: 0.9 }
+        };
+
+        let run = |round_batching: bool| -> Result<(Vec<String>, RoundBatchStats), String> {
+            let cfg_model = ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY };
+            let weights = Arc::new(generate_weights(cfg_model, 7));
+            let store = Arc::new(HostExpertStore::build(&weights, scheme).unwrap());
+            let engine = InferenceEngine::new(
+                Box::new(NativeBackend::new(weights)),
+                store,
+                EngineConfig::serving(capacity, policy, prefetch),
+            );
+            let metrics = Arc::new(ServeMetrics::default());
+            let queue = AdmissionQueue::new(n_req, Arc::clone(&metrics));
+            let (completions, _completion_rx) = channel();
+            let mut rxs: Vec<Receiver<GenResult>> = Vec::new();
+            for (prompt, n_tokens) in &requests {
+                let (tx, rx) = channel();
+                queue
+                    .try_push(GenRequest {
+                        prompt: prompt.clone(),
+                        n_tokens: *n_tokens,
+                        sampling,
+                        reply: ReplyTo::Channel(tx),
+                        enqueued: Instant::now(),
+                    })
+                    .ok()
+                    .ok_or("queue sized for the burst")?;
+                rxs.push(rx);
+            }
+            queue.close();
+            let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+            let mut sched = Scheduler::new(
+                engine,
+                queue,
+                completions,
+                SchedulerConfig {
+                    max_sessions,
+                    queue_timeout: None,
+                    prefill_chunk: chunk,
+                    round_budget_tokens: budget,
+                    round_batching,
+                },
+                metrics,
+                Arc::clone(&snapshot),
+            );
+            let mut turns = 0usize;
+            while sched.turn().is_some() {
+                turns += 1;
+                if turns > 100_000 {
+                    return Err("scheduler failed to terminate (liveness)".into());
+                }
+            }
+            let mut texts = Vec::new();
+            for (i, rx) in rxs.iter().enumerate() {
+                let resp = rx
+                    .recv()
+                    .map_err(|_| format!("request {i} never answered"))?
+                    .map_err(|e| format!("request {i} failed: {}", e.message))?;
+                if resp.n_generated != requests[i].1 {
+                    return Err(format!(
+                        "request {i}: n_generated {} != {}",
+                        resp.n_generated, requests[i].1
+                    ));
+                }
+                texts.push(resp.text);
+            }
+            let stats = snapshot.lock().unwrap().round_batching;
+            Ok((texts, stats))
+        };
+
+        let (legacy_texts, off_stats) = run(false)?;
+        let (batched_texts, on_stats) = run(true)?;
+        if batched_texts != legacy_texts {
+            return Err(format!(
+                "{}/{}/prefetch={prefetch}/cap={capacity}/chunk={chunk}/budget={budget}: \
+                 round batching changed session outputs",
+                policy.name(),
+                scheme.name()
+            ));
+        }
+        if off_stats.rounds != 0 || off_stats.batched_rows != 0 {
+            return Err(format!(
+                "legacy path recorded batched activity: {off_stats:?}"
+            ));
+        }
+        if on_stats.rounds == 0 || on_stats.batched_rows == 0 {
+            return Err("batched path recorded no rounds".into());
+        }
+        if on_stats.batched_rows - on_stats.distinct_experts != on_stats.dedup_joins {
+            return Err(format!(
+                "dedup ledger broken: rows {} − distinct {} != joins {}",
+                on_stats.batched_rows, on_stats.distinct_experts, on_stats.dedup_joins
+            ));
         }
         Ok(())
     });
