@@ -40,6 +40,8 @@ fn bench_config(
                 profile: hardware::by_name("A6000").unwrap(),
                 seed: 0,
                 record_trace: false,
+                fetch_retries: 2,
+                demand_deadline_ms: 0,
             },
         );
         let mut sampler = Sampler::new(Sampling::Greedy, 0);

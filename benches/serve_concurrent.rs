@@ -7,6 +7,11 @@
 //! short-prompt overload with chunked prefill on and off, writing a
 //! `BENCH_serve_concurrent.json` artifact with rejected/shed counts, the
 //! queue-wait p99, and TTFT p50/p99 for the chunked vs unchunked rounds.
+//! A churn section hangs up half the fleet mid-decode at a fixed rate
+//! (scheduler-driven cancels) and records `cancelled_sessions`, the
+//! reclaimed-round fraction, the interactive-vs-batch TTFT p99 split, and
+//! the churn-vs-no-churn engine throughput; a faulted pass stalls every
+//! expert past a demand deadline and records `degraded_tokens`.
 //!
 //!     cargo bench --bench serve_concurrent [-- --smoke]
 
@@ -18,10 +23,11 @@ use moe_offload::model::sampler::Sampling;
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
 use moe_offload::offload::store::HostExpertStore;
+use moe_offload::offload::transfer::FaultPlan;
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::native::NativeBackend;
-use moe_offload::serve::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
-use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, ReplyTo};
+use moe_offload::serve::scheduler::{run_scheduler, Scheduler, SchedulerConfig, ServeSnapshot};
+use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, Priority, ReplyTo};
 use moe_offload::util::json::{self, Value};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver};
@@ -50,11 +56,22 @@ fn push_request(
     n_tokens: usize,
     enqueued: Instant,
 ) -> Option<Receiver<GenResult>> {
+    push_request_pri(queue, prompt, n_tokens, Priority::Interactive, enqueued)
+}
+
+fn push_request_pri(
+    queue: &AdmissionQueue,
+    prompt: String,
+    n_tokens: usize,
+    priority: Priority,
+    enqueued: Instant,
+) -> Option<Receiver<GenResult>> {
     let (tx, rx) = channel();
     let req = GenRequest {
         prompt,
         n_tokens,
         sampling: Sampling::Greedy,
+        priority,
         reply: ReplyTo::Channel(tx),
         enqueued,
     };
@@ -295,6 +312,163 @@ fn main() {
     let (legacy_texts, tps_off, _off_stats) = run_batched(false);
     let (batched_texts, tps_on, rb_stats) = run_batched(true);
 
+    // --- churn: half the fleet hangs up mid-decode at a fixed rate. The
+    // driven scheduler cancels each doomed session after its 2nd generated
+    // token; the freed round capacity goes to survivors, so the engine's
+    // token rate holds while total rounds shrink. Interactive requests are
+    // pushed (and admitted) first, so ids 1..=n/2 are interactive and the
+    // rest batch; doomed = even ids, hitting both tiers.
+    struct ChurnStats {
+        rounds: u64,
+        tokens_per_s: f64,
+        cancelled: u64,
+        reclaimed_round_fraction: f64,
+        ttft_interactive_p99_ns: u64,
+        ttft_batch_p99_ns: u64,
+    }
+    let n_churn = 8usize;
+    let churn_tokens = if smoke { 8usize } else { 24 };
+    let run_churn = |churn: bool| -> ChurnStats {
+        let metrics = Arc::new(ServeMetrics::default());
+        let queue = AdmissionQueue::new(n_churn, Arc::clone(&metrics));
+        let (completions, _completion_rx) = channel();
+        let mut rxs = Vec::new();
+        for i in 0..n_churn {
+            let pri =
+                if i < n_churn / 2 { Priority::Interactive } else { Priority::Batch };
+            rxs.push(
+                push_request_pri(
+                    &queue,
+                    format!("churn {i}"),
+                    churn_tokens,
+                    pri,
+                    Instant::now(),
+                )
+                .expect("queue sized for the burst"),
+            );
+        }
+        queue.close();
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let mut sched = Scheduler::new(
+            make_engine(&weights, &store),
+            queue,
+            completions,
+            SchedulerConfig { max_sessions: 4, ..SchedulerConfig::default() },
+            Arc::clone(&metrics),
+            Arc::clone(&snapshot),
+        );
+        let doomed: Vec<u64> = if churn {
+            (1..=n_churn as u64).filter(|id| id % 2 == 0).collect()
+        } else {
+            Vec::new()
+        };
+        let mut generated: std::collections::HashMap<u64, u64> = Default::default();
+        let mut cancelled: Vec<u64> = Vec::new();
+        let mut advanced_tokens = 0u64;
+        let mut rounds = 0u64;
+        let mut last_cancel_round = 0u64;
+        let t0 = Instant::now();
+        while let Some(r) = sched.turn() {
+            rounds += 1;
+            advanced_tokens += (r.decode_tokens + r.prefill_tokens) as u64;
+            for a in &r.advanced {
+                if !a.prefill {
+                    *generated.entry(a.session).or_insert(0) += a.tokens as u64;
+                }
+            }
+            for &id in &doomed {
+                if !cancelled.contains(&id)
+                    && generated.get(&id).copied().unwrap_or(0) >= 2
+                {
+                    assert!(sched.cancel(id), "cancel({id}) found no active session");
+                    cancelled.push(id);
+                    last_cancel_round = rounds;
+                }
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        for (i, rx) in rxs.iter().enumerate() {
+            let id = (i + 1) as u64;
+            match rx.recv() {
+                Ok(r) => {
+                    assert!(!doomed.contains(&id), "doomed session {id} was answered");
+                    assert_eq!(r.expect("churn generation ok").n_generated, churn_tokens);
+                }
+                Err(_) => assert!(doomed.contains(&id), "survivor {id} unanswered"),
+            }
+        }
+        assert_eq!(cancelled.len(), doomed.len(), "every doomed session cancelled");
+        assert_eq!(
+            metrics.cancelled_sessions.load(Ordering::Relaxed),
+            doomed.len() as u64
+        );
+        assert_eq!(snapshot.lock().unwrap().failed_sessions, 0, "hang-ups are not failures");
+        assert_eq!(
+            metrics.ttft_interactive.count() + metrics.ttft_batch.count(),
+            n_churn as u64,
+            "every session's first token lands in exactly one TTFT tier"
+        );
+        ChurnStats {
+            rounds,
+            tokens_per_s: advanced_tokens as f64 / wall_s.max(1e-12),
+            cancelled: cancelled.len() as u64,
+            reclaimed_round_fraction: if churn && rounds > 0 {
+                (rounds - last_cancel_round) as f64 / rounds as f64
+            } else {
+                0.0
+            },
+            ttft_interactive_p99_ns: metrics.ttft_interactive.percentile_ns(0.99),
+            ttft_batch_p99_ns: metrics.ttft_batch.percentile_ns(0.99),
+        }
+    };
+    let nochurn = run_churn(false);
+    let churned = run_churn(true);
+
+    // --- degrade: every expert stalled 1000 virtual ms against a 1 ms
+    // demand deadline — interactive rounds renormalize around the stalls
+    // and still complete, counted in degraded_tokens
+    let degraded_tokens = {
+        let metrics = Arc::new(ServeMetrics::default());
+        let queue = AdmissionQueue::new(2, Arc::clone(&metrics));
+        let (completions, _completion_rx) = channel();
+        let rxs: Vec<_> = (0..2)
+            .map(|i| {
+                push_request(&queue, format!("degrade {i}"), 4, Instant::now())
+                    .expect("queue sized for the burst")
+            })
+            .collect();
+        queue.close();
+        let mut ecfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
+        ecfg.demand_deadline_ms = 1;
+        let mut engine = InferenceEngine::new(
+            Box::new(NativeBackend::new(Arc::clone(&weights))),
+            Arc::clone(&store),
+            ecfg,
+        );
+        let mc = cfg();
+        let mut plan = FaultPlan::seeded(5);
+        for l in 0..mc.n_layers {
+            for e in 0..mc.n_experts {
+                plan = plan.stall_ms(l, e, 1000.0);
+            }
+        }
+        engine.inject_faults(plan);
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        run_scheduler(
+            engine,
+            queue,
+            completions,
+            SchedulerConfig::default(),
+            Arc::clone(&metrics),
+            Arc::clone(&snapshot),
+        );
+        for rx in rxs {
+            let r = rx.recv().unwrap().expect("degraded generation ok");
+            assert_eq!(r.n_generated, 4, "degraded session cut short");
+        }
+        snapshot.lock().unwrap().degraded_tokens
+    };
+
     println!("{}", b.render());
     println!("shared-cache amortization (misses per stepped token):");
     for (n, _, mr) in &amortization {
@@ -332,6 +506,23 @@ fn main() {
         rb_stats.distinct_experts,
         rb_stats.rounds,
         rb_stats.join_rate()
+    );
+    println!(
+        "churn ({n_churn} sessions x {churn_tokens} tok, half hang up mid-decode): \
+         cancelled_sessions {}, reclaimed-round fraction {:.2}, \
+         ttft p99 interactive {:.1} µs vs batch {:.1} µs, \
+         {:.1} tok/s churn vs {:.1} tok/s no-churn ({:.2}x)",
+        churned.cancelled,
+        churned.reclaimed_round_fraction,
+        churned.ttft_interactive_p99_ns as f64 / 1e3,
+        churned.ttft_batch_p99_ns as f64 / 1e3,
+        churned.tokens_per_s,
+        nochurn.tokens_per_s,
+        churned.tokens_per_s / nochurn.tokens_per_s.max(1e-12)
+    );
+    println!(
+        "degraded pass (every expert stalled past the demand deadline): \
+         degraded_tokens {degraded_tokens}"
     );
 
     // --- artifact
@@ -408,6 +599,28 @@ fn main() {
                 ("join_rate", Value::from(rb_stats.join_rate())),
             ]),
         ),
+        (
+            "churn",
+            Value::obj(vec![
+                ("sessions", Value::from(n_churn)),
+                ("n_tokens", Value::from(churn_tokens)),
+                ("cancelled_sessions", Value::from(churned.cancelled as f64)),
+                (
+                    "reclaimed_round_fraction",
+                    Value::from(churned.reclaimed_round_fraction),
+                ),
+                (
+                    "ttft_interactive_p99_ns",
+                    Value::from(churned.ttft_interactive_p99_ns as f64),
+                ),
+                ("ttft_batch_p99_ns", Value::from(churned.ttft_batch_p99_ns as f64)),
+                ("tokens_per_s_churn", Value::from(churned.tokens_per_s)),
+                ("tokens_per_s_nochurn", Value::from(nochurn.tokens_per_s)),
+                ("rounds_churn", Value::from(churned.rounds as f64)),
+                ("rounds_nochurn", Value::from(nochurn.rounds as f64)),
+            ]),
+        ),
+        ("degraded_tokens", Value::from(degraded_tokens as f64)),
     ]);
     std::fs::write("BENCH_serve_concurrent.json", json::to_string(&artifact))
         .expect("write BENCH_serve_concurrent.json");
@@ -436,4 +649,14 @@ fn main() {
         rb_stats.dedup_joins,
         "dedup ledger: every batched row beyond the first per group is a join"
     );
+    assert_eq!(churned.cancelled, (n_churn / 2) as u64, "half the fleet must hang up");
+    assert_eq!(nochurn.cancelled, 0);
+    assert!(
+        churned.rounds < nochurn.rounds,
+        "cancelled capacity must be reclaimed: churn took {} rounds vs {} without",
+        churned.rounds,
+        nochurn.rounds
+    );
+    assert!(churned.reclaimed_round_fraction > 0.0);
+    assert!(degraded_tokens > 0, "stalled experts never tripped the degrade path");
 }

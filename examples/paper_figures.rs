@@ -49,6 +49,8 @@ fn main() -> Result<()> {
             profile: hardware::by_name("A6000").unwrap(),
             seed: 0,
             record_trace: true,
+            fetch_retries: 2,
+            demand_deadline_ms: 0,
         },
     );
     let tk = Tokenizer::new(engine.config().vocab_size);

@@ -79,6 +79,8 @@ fn main() -> Result<()> {
             profile: hardware::by_name("A100").unwrap(),
             seed: 0,
             record_trace: true,
+            fetch_retries: 2,
+            demand_deadline_ms: 0,
         },
     );
 

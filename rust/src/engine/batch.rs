@@ -405,6 +405,7 @@ mod tests {
                     tok,
                     pos: s.pos,
                     prefill: !gen,
+                    degradable: false,
                     kv: &mut s.kv,
                 });
             }
@@ -460,6 +461,7 @@ mod tests {
                     tok,
                     pos: s.pos,
                     prefill: !gen,
+                    degradable: false,
                     kv: &mut s.kv,
                 });
             }

@@ -29,7 +29,7 @@ use crate::model::sampler::{top_k, Sampler};
 use crate::offload::pipeline::{BufferPool, TransferPipeline};
 use crate::offload::prefetch::{PendingPrefetch, PrefetchConfig, TaggedGuess};
 use crate::offload::store::HostExpertStore;
-use crate::offload::transfer::TransferEngine;
+use crate::offload::transfer::{FaultAction, FaultPlan, TransferEngine};
 use crate::runtime::{Backend, ExpertHandle, KvState};
 use crate::sim::costmodel::TokenEvents;
 use crate::sim::hardware::{HwProfile, ModelScale};
@@ -61,6 +61,18 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Record the full activation/cache trace.
     pub record_trace: bool,
+    /// Bounded retry budget for transiently failed demand fetches: each
+    /// retry waits an exponential virtual backoff
+    /// ([`FETCH_BACKOFF_BASE_S`]) before re-attempting; the budget
+    /// exhausted, the fetch error fails the item (per-item isolation).
+    pub fetch_retries: usize,
+    /// Demand-miss deadline in virtual milliseconds for *degradable*
+    /// (interactive) rows in a batched round: when the estimated stall of
+    /// a demand fetch exceeds this, the round skips the stalled expert's
+    /// gate-weighted contribution (renormalizing the remaining selections,
+    /// counted in `degraded_tokens`) instead of stalling. `0` = never
+    /// degrade (every miss waits).
+    pub demand_deadline_ms: u64,
 }
 
 impl EngineConfig {
@@ -73,6 +85,8 @@ impl EngineConfig {
             profile: crate::sim::hardware::physical()[0],
             seed: 0,
             record_trace: true,
+            fetch_retries: 2,
+            demand_deadline_ms: 0,
         }
     }
 
@@ -107,6 +121,24 @@ impl Default for EngineConfig {
     }
 }
 
+/// Base of the exponential *virtual* backoff between demand-fetch retry
+/// attempts: attempt `n` (1-based) waits `base * 2^(n-1)` simulated seconds
+/// before re-hitting the store. Virtual because injected transient faults
+/// model bus/DMA hiccups inside the simulated timeline, not wall-clock I/O.
+pub const FETCH_BACKOFF_BASE_S: f64 = 0.002;
+
+/// What `ensure_resident` did about a demanded expert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum EnsureOutcome {
+    /// The expert is on-device; `hit` distinguishes cache hit from a paid
+    /// demand transfer (the caller's per-session tally needs the split).
+    Resident { hit: bool },
+    /// The estimated stall exceeded the caller's demand-miss deadline; the
+    /// expert was NOT fetched and nothing was charged to the clock or bus.
+    /// Only possible when a deadline was passed in.
+    DeadlineBreached,
+}
+
 /// Outcome of one `generate` call.
 pub struct GenerationOutput {
     pub tokens: Vec<u32>,
@@ -132,6 +164,10 @@ pub struct RoundWork<'a> {
     /// Counted in the engine's prefill/decode step split (the equivalent of
     /// routing through [`InferenceEngine::step_session_prefill`]).
     pub prefill: bool,
+    /// Whether this item may trade quality for latency under a demand-miss
+    /// deadline (interactive sessions say yes, batch says no — a batch row
+    /// always waits the fetch out, and pins any group it shares).
+    pub degradable: bool,
     pub kv: &'a mut KvState,
 }
 
@@ -191,6 +227,9 @@ pub struct InferenceEngine {
     /// Cumulative round-batching counters over every `step_round` call
     /// (DESIGN.md §8); the legacy per-session path never touches them.
     round_stats: RoundBatchStats,
+    /// Tokens that shipped with at least one selected expert skipped under
+    /// the demand-miss deadline (the degrade path of DESIGN.md §9).
+    degraded_tokens: u64,
     trace: Option<Trace>,
     /// Per-layer compute seconds (dense) and per-expert seconds, derived
     /// from the profile and the artifact's true dimensions.
@@ -244,6 +283,7 @@ impl InferenceEngine {
             cross_session_prefetch_hits: 0,
             spec_guess: None,
             round_stats: RoundBatchStats::default(),
+            degraded_tokens: 0,
             trace,
             dense_s_per_layer,
             expert_s,
@@ -273,13 +313,23 @@ impl InferenceEngine {
     /// Ensure `e` is resident in layer `l`'s cache; returns whether it was a
     /// hit and updates the sim clock for any stall. `session` attributes the
     /// lookup (and any cross-session prefetch credit) under concurrency.
+    ///
+    /// On a miss the fault hook on [`TransferEngine`] is consulted first:
+    /// transient failures are retried up to `cfg.fetch_retries` times with
+    /// exponential virtual backoff, permanent failures bail (the caller's
+    /// per-item isolation turns that into a failed session, not a downed
+    /// engine). When `deadline_s` is set and the estimated stall (injected
+    /// delay plus residual or full transfer time) exceeds it, the fetch is
+    /// abandoned side-effect-free and `DeadlineBreached` returned — the
+    /// batched round's degrade path (DESIGN.md §9) takes it from there.
     fn ensure_resident(
         &mut self,
         session: u64,
         l: usize,
         e: usize,
         ev: &mut TokenEvents,
-    ) -> Result<bool> {
+        deadline_s: Option<f64>,
+    ) -> Result<EnsureOutcome> {
         // already resident?
         if self.cache.layers[l].access(e).is_some() {
             // if it arrived via an in-flight prefetch, we may still need to
@@ -292,9 +342,60 @@ impl InferenceEngine {
                 let pending = self.pending_prefetch.swap_remove(i);
                 self.credit_prefetch(session, l, pending, ev);
             }
-            return Ok(true);
+            return Ok(EnsureOutcome::Resident { hit: true });
         }
-        // miss: demand transfer on the critical path. The pending prefetch
+        // miss: before paying for anything, run the injected-fault ladder.
+        // Transient failures retry with exponential virtual backoff until
+        // the budget runs out; the backoff is charged to the sim clock so
+        // retried fetches are visibly slower, not silently free.
+        let mut attempt: usize = 0;
+        let extra_delay_s = loop {
+            match self.transfer.fault.check(l, e) {
+                FaultAction::Proceed { extra_delay_s } => break extra_delay_s,
+                FaultAction::PermanentFail => {
+                    anyhow::bail!(
+                        "expert (layer {l}, expert {e}): permanent fetch failure injected"
+                    );
+                }
+                FaultAction::TransientFail => {
+                    if attempt >= self.cfg.fetch_retries {
+                        anyhow::bail!(
+                            "expert (layer {l}, expert {e}): fetch still failing after \
+                             {attempt} retries"
+                        );
+                    }
+                    attempt += 1;
+                    self.transfer.stats.retries += 1;
+                    self.clock
+                        .advance(FETCH_BACKOFF_BASE_S * (1u64 << (attempt - 1)) as f64);
+                }
+            }
+        };
+        // deadline gate: estimate the stall this demand transfer would cost
+        // (injected delay + the residual of a joinable in-flight prefetch,
+        // or a full transfer when there is nothing to join). Breaching
+        // callers get out BEFORE the fetch so no clock, bus, cache, or
+        // cost-model state is touched — the shared-cache miss counted by
+        // the failed residency probe above is the only trace, and the
+        // caller attributes it.
+        if let Some(deadline) = deadline_s {
+            let now = self.clock.now();
+            let residual = self
+                .pending_prefetch
+                .iter()
+                .find(|p| p.layer == l && p.expert == e)
+                .map(|p| (p.done_at - now).max(0.0));
+            let stall = extra_delay_s + residual.unwrap_or_else(|| self.transfer_s());
+            if stall > deadline {
+                return Ok(EnsureOutcome::DeadlineBreached);
+            }
+        }
+        // injected stall (e.g. a degraded PCIe link for this expert): paid
+        // on the critical path, before the transfer itself
+        if extra_delay_s > 0.0 {
+            self.clock.advance(extra_delay_s);
+        }
+        // demand transfer on the critical path. The pending prefetch
         // record for this expert (if any) is consumed here: when the demand
         // JOINS that still-in-flight prefetch, its simulated bus slot was
         // already reserved at issue time and only the residual is charged;
@@ -367,7 +468,7 @@ impl InferenceEngine {
         if let Some((victim, evicted)) = self.cache.layers[l].insert(e, handle) {
             self.handle_eviction(l, victim, evicted);
         }
-        Ok(false)
+        Ok(EnsureOutcome::Resident { hit: false })
     }
 
     /// Credit one consumed prefetch record — the ONE accounting used both
@@ -622,7 +723,7 @@ impl InferenceEngine {
             // expert compute with cache/transfer
             let mut y = vec![0.0f32; mc.hidden_size];
             for (j, &e) in selected.iter().enumerate() {
-                self.ensure_resident(session, l, e, ev)?;
+                self.ensure_resident(session, l, e, ev, None)?;
                 let handle = self.cache.layers[l].peek(e).expect("just inserted");
                 let out = self.backend.expert(&h, handle)?;
                 let w = gate_w[j];
@@ -740,6 +841,7 @@ impl InferenceEngine {
         let mut round = RoundBatchStats { rounds: 1, ..RoundBatchStats::default() };
         let mut events = vec![TokenEvents::default(); n];
         let mut dead: Vec<Option<anyhow::Error>> = (0..n).map(|_| None).collect();
+        let mut degraded = vec![false; n];
         let mut xs: Vec<Vec<f32>> = vec![Vec::new(); n];
         let mut guesses: Vec<Option<TaggedGuess>> = (0..n).map(|_| None).collect();
         let mut token_idxs = vec![0usize; n];
@@ -840,14 +942,30 @@ impl InferenceEngine {
                 round.dedup_joins += live.len() as u64 - 1;
                 // first arrival pays the fetch (or takes the hit)…
                 let (i0, _) = live[0];
-                match self.ensure_resident(work[i0].session, l, e, &mut events[i0]) {
-                    Ok(hit) => {
+                // the demand-miss deadline applies only when EVERY row in
+                // the group may degrade: one non-degradable (batch) row and
+                // the fetch must happen anyway, so co-routed interactive
+                // rows ride it for free rather than skipping the expert
+                let deadline_s = (self.cfg.demand_deadline_ms > 0
+                    && live.iter().all(|&(i, _)| work[i].degradable))
+                    .then(|| self.cfg.demand_deadline_ms as f64 / 1e3);
+                match self.ensure_resident(work[i0].session, l, e, &mut events[i0], deadline_s) {
+                    Ok(EnsureOutcome::Resident { hit }) => {
                         let t = self.session_stats.entry(work[i0].session).or_default();
                         if hit {
                             t.hits += 1;
                         } else {
                             t.misses += 1;
                         }
+                    }
+                    Ok(EnsureOutcome::DeadlineBreached) => {
+                        // the failed residency probe counted one shared-cache
+                        // miss; attribute it to the first arrival so the
+                        // per-session partition of the cache totals stays
+                        // exact. The group's slots stay `None` and the
+                        // reduce below renormalizes around the gap.
+                        self.session_stats.entry(work[i0].session).or_default().misses += 1;
+                        continue;
                     }
                     Err(err) => {
                         kill_rows(&mut dead, &live, err);
@@ -888,11 +1006,42 @@ impl InferenceEngine {
                 }
                 let r = routed[i].take().expect("live item routed");
                 let mut y = vec![0.0f32; r.x_res.len()];
-                for (slot, &gw) in row_outs[i].iter_mut().zip(&r.gate_w) {
-                    let out = slot.take().expect("live item has every slot");
-                    for (yv, &ov) in y.iter_mut().zip(&out) {
-                        *yv += gw * ov;
+                let complete = row_outs[i]
+                    .iter()
+                    .zip(&r.gate_w)
+                    .all(|(slot, _)| slot.is_some());
+                if complete {
+                    // every selected expert ran — the exact legacy reduce,
+                    // byte-for-byte (bit-identity with the per-session path
+                    // rides on this branch being untouched)
+                    for (slot, &gw) in row_outs[i].iter_mut().zip(&r.gate_w) {
+                        let out = slot.take().expect("checked complete");
+                        for (yv, &ov) in y.iter_mut().zip(&out) {
+                            *yv += gw * ov;
+                        }
                     }
+                } else {
+                    // degrade (DESIGN.md §9): a deadline-breached group left
+                    // gaps. Renormalize the surviving gate weights so the
+                    // mixture stays a convex combination, still reducing in
+                    // selection order; with every slot gone the token rides
+                    // the residual stream alone.
+                    let wsum: f32 = row_outs[i]
+                        .iter()
+                        .zip(&r.gate_w)
+                        .filter_map(|(slot, &gw)| slot.as_ref().map(|_| gw))
+                        .sum();
+                    if wsum > 0.0 {
+                        for (slot, &gw) in row_outs[i].iter_mut().zip(&r.gate_w) {
+                            if let Some(out) = slot.take() {
+                                let w = gw / wsum;
+                                for (yv, &ov) in y.iter_mut().zip(&out) {
+                                    *yv += w * ov;
+                                }
+                            }
+                        }
+                    }
+                    degraded[i] = true;
                 }
                 xs[i] = r.x_res.iter().zip(&y).map(|(&rv, &yv)| rv + yv).collect();
             }
@@ -906,7 +1055,14 @@ impl InferenceEngine {
                 events[i].wasted_prefetches as u64;
             match dead[i].take() {
                 Some(e) => outcomes.push(Err(e)),
-                None => outcomes.push(self.backend.final_logits(&xs[i])),
+                None => {
+                    // one per TOKEN that lost at least one expert, however
+                    // many layers breached
+                    if degraded[i] {
+                        self.degraded_tokens += 1;
+                    }
+                    outcomes.push(self.backend.final_logits(&xs[i]));
+                }
             }
         }
         self.round_stats.merge(&round);
@@ -1030,5 +1186,221 @@ impl InferenceEngine {
     }
     pub fn sim_now(&self) -> f64 {
         self.clock.now()
+    }
+    /// Tokens shipped with at least one selected expert skipped under the
+    /// demand-miss deadline (`/metrics` → `degraded_tokens`).
+    pub fn degraded_tokens(&self) -> u64 {
+        self.degraded_tokens
+    }
+    /// Install a deterministic fault plan on the transfer layer — the
+    /// test/bench hook behind every injected delay and fetch failure. An
+    /// empty plan (the default) is free on the hot path.
+    pub fn inject_faults(&mut self, plan: FaultPlan) {
+        self.transfer.set_fault_plan(plan);
+    }
+    /// Demand fetches re-attempted after a transient failure.
+    pub fn fetch_retries_performed(&self) -> u64 {
+        self.transfer.stats.retries
+    }
+    /// Sessions with at least one in-flight prefetch record — the serve
+    /// layer's post-cancel invariant check ("no queued prefetch tagged to a
+    /// dead session").
+    pub fn pending_prefetch_sessions(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.pending_prefetch.iter().map(|p| p.session).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+    /// Forget everything held on behalf of a cancelled session: its queued
+    /// (not yet running) pipeline prefetches are cancelled, its in-flight
+    /// prefetch records dropped (each bus slot was charged at issue — same
+    /// precedent as supersession), its tally removed, and any pending
+    /// speculative guess it owned discarded so it can never settle against
+    /// a survivor's activations. Callers wanting the tally must
+    /// [`InferenceEngine::take_session_tally`] it FIRST. Experts its
+    /// prefetches already cached stay — they are shared-cache property and
+    /// may serve other sessions (counted as cross-session hits).
+    pub fn cancel_session(&mut self, session: u64) {
+        let mine: Vec<(usize, usize)> = self
+            .pending_prefetch
+            .iter()
+            .filter(|p| p.session == session)
+            .map(|p| (p.layer, p.expert))
+            .collect();
+        for (l, e) in mine {
+            if let Some(p) = &mut self.pipeline {
+                p.cancel_queued_prefetch(l, e);
+            }
+            self.drop_pending_prefetch(l, e);
+        }
+        self.session_stats.remove(&session);
+        if self.spec_guess.as_ref().is_some_and(|g| g.session == session) {
+            self.spec_guess = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::batch::Session;
+    use crate::model::sampler::Sampling;
+    use crate::model::weights::generate_weights;
+    use crate::model::ModelConfig;
+    use crate::quant::Scheme;
+    use crate::runtime::native::NativeBackend;
+
+    fn engine_with(tweak: impl FnOnce(&mut EngineConfig)) -> InferenceEngine {
+        let weights = Arc::new(generate_weights(ModelConfig::TINY, 42));
+        let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
+        let mut cfg = EngineConfig::baseline_lru(4);
+        cfg.record_trace = false;
+        tweak(&mut cfg);
+        InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg)
+    }
+
+    /// Fault plan covering EVERY (layer, expert) pair, so the test does not
+    /// depend on which experts the router happens to demand.
+    fn plan_all(mc: &crate::model::ModelConfig, f: impl Fn(FaultPlan, usize, usize) -> FaultPlan) -> FaultPlan {
+        let mut plan = FaultPlan::seeded(7);
+        for l in 0..mc.n_layers {
+            for e in 0..mc.n_experts {
+                plan = f(plan, l, e);
+            }
+        }
+        plan
+    }
+
+    #[test]
+    fn transient_faults_retry_with_backoff_and_keep_outputs() {
+        let prompt = [3u32, 1, 4];
+        let clean = {
+            let mut eng = engine_with(|_| {});
+            let mut s = Sampler::new(Sampling::Greedy, 0);
+            let out = eng.generate(&prompt, 5, &mut s).unwrap();
+            (out.generated, eng.sim_now())
+        };
+        let mut eng = engine_with(|c| c.fetch_retries = 2);
+        let mc = *eng.config();
+        eng.inject_faults(plan_all(&mc, |p, l, e| p.fail_transient(l, e, 1)));
+        let mut s = Sampler::new(Sampling::Greedy, 0);
+        let out = eng.generate(&prompt, 5, &mut s).unwrap();
+        // retried fetches change timing, never tokens
+        assert_eq!(out.generated, clean.0, "retries changed outputs");
+        assert!(eng.fetch_retries_performed() > 0, "no retry recorded");
+        assert!(
+            eng.sim_now() > clean.1,
+            "backoff must cost virtual time: {} vs clean {}",
+            eng.sim_now(),
+            clean.1
+        );
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_the_fetch() {
+        let mut eng = engine_with(|c| c.fetch_retries = 2);
+        let mc = *eng.config();
+        eng.inject_faults(plan_all(&mc, |p, l, e| p.fail_transient(l, e, 10)));
+        let mut s = Sampler::new(Sampling::Greedy, 0);
+        let err = eng.generate(&[3, 1, 4], 2, &mut s).unwrap_err();
+        assert!(format!("{err:#}").contains("retries"), "unexpected error: {err:#}");
+        // the first demanded expert burned the whole budget, then bailed
+        assert_eq!(eng.fetch_retries_performed(), 2);
+    }
+
+    #[test]
+    fn permanent_fault_fails_without_retrying() {
+        let mut eng = engine_with(|_| {});
+        let mc = *eng.config();
+        eng.inject_faults(plan_all(&mc, |p, l, e| p.fail_permanent(l, e)));
+        let mut s = Sampler::new(Sampling::Greedy, 0);
+        let err = eng.generate(&[3, 1, 4], 2, &mut s).unwrap_err();
+        assert!(format!("{err:#}").contains("permanent"), "unexpected error: {err:#}");
+        assert_eq!(eng.fetch_retries_performed(), 0, "permanent faults must not retry");
+    }
+
+    /// Drive one session to completion through `step_round`, returning its
+    /// tokens.
+    fn run_rounds(eng: &mut InferenceEngine, degradable: bool) -> Vec<u32> {
+        let mut s = Session::new(1, eng, &[3, 2, 8], 5, Sampler::new(Sampling::Greedy, 1)).unwrap();
+        while !s.done {
+            let (tok, gen) = s.peek_next();
+            let mut work = [RoundWork {
+                session: s.id,
+                tok,
+                pos: s.pos,
+                prefill: !gen,
+                degradable,
+                kv: &mut s.kv,
+            }];
+            let mut results = eng.step_round(&mut work);
+            let logits = results.outcomes.remove(0).unwrap();
+            s.apply_step(tok, gen, &logits);
+        }
+        s.tokens
+    }
+
+    #[test]
+    fn deadline_breach_degrades_interactive_rounds() {
+        // every expert stalls 1000 virtual ms against a 1 ms deadline:
+        // every demand miss breaches, yet every round still completes
+        let mut eng = engine_with(|c| c.demand_deadline_ms = 1);
+        let mc = *eng.config();
+        eng.inject_faults(plan_all(&mc, |p, l, e| p.stall_ms(l, e, 1000.0)));
+        let tokens = run_rounds(&mut eng, true);
+        assert_eq!(tokens.len(), 3 + 5, "degraded session must still finish");
+        assert!(eng.degraded_tokens() > 0, "no degrade recorded");
+        // the failed residency probes stay attributed: per-session tallies
+        // still partition the shared cache's totals exactly
+        let total = eng.cache_stats();
+        let t = eng.session_tally(1);
+        assert_eq!(t.hits, total.hits);
+        assert_eq!(t.misses, total.misses);
+    }
+
+    #[test]
+    fn batch_rows_pin_the_fetch_and_never_degrade() {
+        // same stall, but the row is NOT degradable: the round waits the
+        // stall out instead of skipping the expert
+        let mut eng = engine_with(|c| c.demand_deadline_ms = 1);
+        let mc = *eng.config();
+        eng.inject_faults(plan_all(&mc, |p, l, e| p.stall_ms(l, e, 1000.0)));
+        let tokens = run_rounds(&mut eng, false);
+        assert_eq!(tokens.len(), 3 + 5);
+        assert_eq!(eng.degraded_tokens(), 0, "non-degradable row degraded");
+        assert!(eng.sim_now() > 1.0, "injected stalls were not paid");
+    }
+
+    #[test]
+    fn degraded_outputs_match_stall_free_outputs_only_when_nothing_breaches() {
+        // control: a deadline with no faults never degrades and stays
+        // bit-identical to the no-deadline run
+        let base = {
+            let mut eng = engine_with(|_| {});
+            run_rounds(&mut eng, true)
+        };
+        let mut eng = engine_with(|c| c.demand_deadline_ms = 60_000);
+        let with_deadline = run_rounds(&mut eng, true);
+        assert_eq!(eng.degraded_tokens(), 0);
+        assert_eq!(with_deadline, base, "idle deadline changed outputs");
+    }
+
+    #[test]
+    fn cancel_session_drops_prefetch_records_and_tally() {
+        let mut eng = engine_with(|c| {
+            c.prefetch = PrefetchConfig { enabled: true, k: 2 };
+        });
+        let mut s = Session::new(1, &eng, &[3, 2, 8], 4, Sampler::new(Sampling::Greedy, 1)).unwrap();
+        let mut ev = TokenEvents::default();
+        for _ in 0..3 {
+            s.step_once(&mut eng, &mut ev).unwrap();
+        }
+        assert!(eng.session_tally(1).tokens > 0);
+        eng.cancel_session(1);
+        assert!(
+            !eng.pending_prefetch_sessions().contains(&1),
+            "cancelled session still owns prefetch records"
+        );
+        assert_eq!(eng.session_tally(1).tokens, 0, "tally survived cancellation");
     }
 }

@@ -164,6 +164,8 @@ pub fn check_decode(
             profile: crate::sim::hardware::physical()[0],
             seed: 0,
             record_trace: true,
+            fetch_retries: 2,
+            demand_deadline_ms: 0,
         },
     );
     let mut sampler = Sampler::new(Sampling::Greedy, 0);

@@ -24,8 +24,18 @@
 //!              --http-workers N            parse/admission threads
 //!              --transfer-workers N        async dequant pipeline workers
 //!                                          (0 = sync; legacy --overlap = 1)
+//!              --fetch-retries N           bounded retries (with exponential
+//!                                          backoff) on transient expert-fetch
+//!                                          failures (default 2)
+//!              --demand-deadline-ms N      per-token demand-miss deadline:
+//!                                          interactive rounds degrade around
+//!                                          an expert stalled past N ms instead
+//!                                          of waiting (0 = never degrade)
 //!              --synthetic                 seeded synthetic weights + native
 //!                                          backend, works from a clean checkout
+//!              POST /generate?stream=1 streams chunked text as it decodes;
+//!              ?priority=batch (or x-priority: batch) opts into the
+//!              throughput tier
 //!   figures    regenerate every paper table/figure into --out-dir
 
 use anyhow::{bail, Result};
@@ -131,6 +141,8 @@ fn engine_from_args(args: &Args, loaded: &Loaded) -> Result<InferenceEngine> {
         profile,
         seed: args.usize_or("seed", 0)? as u64,
         record_trace: true,
+        fetch_retries: args.usize_or("fetch-retries", 2)?,
+        demand_deadline_ms: args.usize_or("demand-deadline-ms", 0)? as u64,
     };
     Ok(InferenceEngine::new(backend, store, cfg))
 }

@@ -261,12 +261,28 @@ pub struct ServeMetrics {
     pub tokens_prefill: AtomicU64,
     pub queue_depth: AtomicU64,
     pub inflight_sessions: AtomicU64,
+    /// Responder writes that failed because the CLIENT went away
+    /// (connection reset / broken pipe, or any failure after the client
+    /// already received streamed body bytes). Not a server error.
+    pub client_disconnects: AtomicU64,
+    /// Responder writes that failed for any other (server-side) reason —
+    /// e.g. a local socket error before the first byte reached the peer.
+    pub write_errors: AtomicU64,
+    /// Sessions cancelled mid-decode because their streamed client
+    /// disconnected (or an operator cancel): retired at the next round
+    /// boundary, resources reclaimed, no response delivered.
+    pub cancelled_sessions: AtomicU64,
     /// Admission-queue wait, recorded at dequeue (admitted or shed).
     pub queue_wait: LatencyHisto,
     /// Time-to-first-token: enqueue → the session's prompt fully fed
     /// (its first output token is sampled by that very step). Includes
     /// queue wait, so it is the client-observable TTFT.
     pub ttft: LatencyHisto,
+    /// TTFT split by priority class — the SLO-tier observable: an
+    /// `interactive` request's sample lands in both `ttft` and here.
+    pub ttft_interactive: LatencyHisto,
+    /// TTFT of `batch`-priority requests (see `ttft_interactive`).
+    pub ttft_batch: LatencyHisto,
 }
 
 impl ServeMetrics {
@@ -285,6 +301,9 @@ pub struct TransferStats {
     pub bytes: u64,
     pub dequant_ns: u64,
     pub upload_ns: u64,
+    /// Demand fetches re-attempted after an injected (or real) transient
+    /// failure; each retry pays an exponential virtual backoff first.
+    pub retries: u64,
 }
 
 impl TransferStats {

@@ -36,12 +36,20 @@ impl Tokenizer {
     /// Decode tokens back to text; specials are dropped, non-byte tokens
     /// become U+FFFD.
     pub fn decode(&self, toks: &[u32]) -> String {
-        let bytes: Vec<u8> = toks
-            .iter()
+        String::from_utf8_lossy(&self.decode_bytes(toks)).into_owned()
+    }
+
+    /// The raw byte stream behind [`Tokenizer::decode`] (specials and
+    /// out-of-range tokens dropped, no UTF-8 substitution). Streaming
+    /// delivery works at this level so it can hold back a trailing
+    /// incomplete UTF-8 sequence until later tokens stabilize it —
+    /// keeping the concatenated stream byte-identical to `decode` of the
+    /// whole sequence.
+    pub fn decode_bytes(&self, toks: &[u32]) -> Vec<u8> {
+        toks.iter()
             .filter(|&&t| t >= BYTE_OFFSET && t < BYTE_OFFSET + 256)
             .map(|&t| (t - BYTE_OFFSET) as u8)
-            .collect();
-        String::from_utf8_lossy(&bytes).into_owned()
+            .collect()
     }
 
     pub fn is_special(&self, tok: u32) -> bool {

@@ -13,6 +13,7 @@ use crate::offload::pipeline::BufferPool;
 use crate::offload::store::HostExpertStore;
 use crate::runtime::{Backend, ExpertHandle};
 use anyhow::Result;
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -24,9 +25,118 @@ pub struct TransferReceipt {
     pub upload_ns: u64,
 }
 
+/// The fault to inject on fetches of one `(layer, expert)`: an extra
+/// virtual stall before the transfer, a budget of transient failures
+/// (consumed one per attempt), or a permanent failure.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSpec {
+    /// Extra simulated seconds the transfer stalls before starting.
+    pub delay_s: f64,
+    /// Remaining attempts that fail transiently (retryable).
+    pub transient_fails: u32,
+    /// Every attempt fails (non-retryable).
+    pub permanent: bool,
+}
+
+/// What the fault layer decided for one fetch attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Fetch normally, after charging `extra_delay_s` of virtual stall
+    /// (0.0 for unfaulted experts).
+    Proceed { extra_delay_s: f64 },
+    /// This attempt fails; a retry may succeed.
+    TransientFail,
+    /// Every attempt fails.
+    PermanentFail,
+}
+
+/// Deterministic fault-injection plan for the transfer path (tests and
+/// benches only — the default plan is empty and free). Faults are keyed
+/// by `(layer, expert)` and consulted on the engine thread at demand-miss
+/// time, so injection is identical under synchronous and pipelined
+/// transfers. Built either explicitly (`stall_ms`, `fail_transient`,
+/// `fail_permanent`) or pseudo-randomly from the seed (`scatter_transient`)
+/// so randomized runs replay exactly.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    faults: HashMap<(usize, usize), FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: HashMap::new() }
+    }
+
+    /// Stall every fetch of `(layer, expert)` by `ms` virtual milliseconds.
+    pub fn stall_ms(mut self, layer: usize, expert: usize, ms: f64) -> FaultPlan {
+        self.faults.entry((layer, expert)).or_default().delay_s = ms / 1e3;
+        self
+    }
+
+    /// Fail the next `n` fetch attempts of `(layer, expert)` transiently.
+    pub fn fail_transient(mut self, layer: usize, expert: usize, n: u32) -> FaultPlan {
+        self.faults.entry((layer, expert)).or_default().transient_fails = n;
+        self
+    }
+
+    /// Fail every fetch attempt of `(layer, expert)`.
+    pub fn fail_permanent(mut self, layer: usize, expert: usize) -> FaultPlan {
+        self.faults.entry((layer, expert)).or_default().permanent = true;
+        self
+    }
+
+    /// Seed-derived scatter: mark `count` pseudo-random `(layer, expert)`
+    /// pairs to fail their next `fails_each` attempts transiently.
+    pub fn scatter_transient(
+        mut self,
+        n_layers: usize,
+        n_experts: usize,
+        count: usize,
+        fails_each: u32,
+    ) -> FaultPlan {
+        let mut x = self.seed | 1;
+        let mut placed = 0;
+        // bounded walk: xorshift64 is a full-period generator, so distinct
+        // pairs keep appearing as long as count <= n_layers * n_experts
+        while placed < count.min(n_layers * n_experts) {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let key = ((x as usize >> 8) % n_layers, (x as usize >> 40) % n_experts);
+            if !self.faults.contains_key(&key) {
+                self.faults.insert(key, FaultSpec { transient_fails: fails_each, ..Default::default() });
+                placed += 1;
+            }
+        }
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Decide one fetch attempt of `(layer, expert)`, consuming a
+    /// transient-failure budget entry if one is armed.
+    pub fn check(&mut self, layer: usize, expert: usize) -> FaultAction {
+        match self.faults.get_mut(&(layer, expert)) {
+            None => FaultAction::Proceed { extra_delay_s: 0.0 },
+            Some(f) if f.permanent => FaultAction::PermanentFail,
+            Some(f) if f.transient_fails > 0 => {
+                f.transient_fails -= 1;
+                FaultAction::TransientFail
+            }
+            Some(f) => FaultAction::Proceed { extra_delay_s: f.delay_s },
+        }
+    }
+}
+
 pub struct TransferEngine {
     pub store: Arc<HostExpertStore>,
     pub stats: TransferStats,
+    /// Test/bench fault hook, consulted by the engine on every demand miss
+    /// (empty — and free — in production).
+    pub fault: FaultPlan,
     /// Shared f32 buffer pool: dequant targets come from here and return
     /// here when the cache evicts the resulting `ExpertHandle::Host`.
     pool: Arc<BufferPool>,
@@ -36,7 +146,18 @@ pub struct TransferEngine {
 
 impl TransferEngine {
     pub fn new(store: Arc<HostExpertStore>, pool: Arc<BufferPool>) -> Self {
-        TransferEngine { store, stats: TransferStats::default(), pool, bus_free_at: 0.0 }
+        TransferEngine {
+            store,
+            stats: TransferStats::default(),
+            fault: FaultPlan::default(),
+            pool,
+            bus_free_at: 0.0,
+        }
+    }
+
+    /// Install a [`FaultPlan`] (replacing any previous one).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = plan;
     }
 
     /// Perform the real transfer work (dequant into pooled buffers +
@@ -133,6 +254,44 @@ mod tests {
         let _ = te.fetch(&be, 0, 1).unwrap();
         assert_eq!(pool.allocs(), 3, "steady state must not allocate");
         assert_eq!(pool.reuses(), 3);
+    }
+
+    #[test]
+    fn fault_plan_consumes_transients_then_proceeds() {
+        let mut plan = FaultPlan::seeded(7).fail_transient(2, 5, 2).stall_ms(2, 5, 50.0);
+        assert_eq!(plan.check(2, 5), FaultAction::TransientFail);
+        assert_eq!(plan.check(2, 5), FaultAction::TransientFail);
+        // transients exhausted: the stall still applies on the attempt
+        // that finally proceeds
+        match plan.check(2, 5) {
+            FaultAction::Proceed { extra_delay_s } => {
+                assert!((extra_delay_s - 0.05).abs() < 1e-12)
+            }
+            other => panic!("expected Proceed, got {other:?}"),
+        }
+        // unfaulted experts are free
+        assert_eq!(plan.check(0, 0), FaultAction::Proceed { extra_delay_s: 0.0 });
+        // permanent failures never clear
+        let mut perm = FaultPlan::seeded(0).fail_permanent(1, 1);
+        assert_eq!(perm.check(1, 1), FaultAction::PermanentFail);
+        assert_eq!(perm.check(1, 1), FaultAction::PermanentFail);
+    }
+
+    #[test]
+    fn fault_plan_scatter_is_seed_deterministic() {
+        let a = FaultPlan::seeded(42).scatter_transient(12, 8, 5, 2);
+        let b = FaultPlan::seeded(42).scatter_transient(12, 8, 5, 2);
+        assert_eq!(a.faults.len(), 5);
+        for (k, v) in &a.faults {
+            let bv = b.faults.get(k).expect("same seed, same keys");
+            assert_eq!(v.transient_fails, bv.transient_fails);
+        }
+        let c = FaultPlan::seeded(43).scatter_transient(12, 8, 5, 2);
+        assert!(
+            a.faults.keys().any(|k| !c.faults.contains_key(k))
+                || a.faults.len() != c.faults.len(),
+            "different seeds should scatter differently"
+        );
     }
 
     #[test]

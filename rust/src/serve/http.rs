@@ -163,6 +163,69 @@ pub fn write_response_with_headers(
 }
 
 // ---------------------------------------------------------------------------
+// chunked transfer encoding (streamed /generate responses)
+// ---------------------------------------------------------------------------
+
+/// Response head for a streamed body: `Transfer-Encoding: chunked`, no
+/// `Content-Length` (the length is unknown while tokens are still
+/// decoding), `Connection: close` like every other response.
+pub fn write_chunked_head(stream: &mut TcpStream, status: u16, content_type: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        _ => "Unknown",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One chunk frame: `{len:x}\r\n{data}\r\n`. Empty data is silently
+/// skipped — a zero-length frame IS the terminator, so writing one here
+/// would truncate the stream.
+pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// The terminating zero-length chunk (`0\r\n\r\n`, no trailers).
+pub fn write_chunked_end(stream: &mut TcpStream) -> Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Decode a chunked body into its chunks. Returns `None` on framing errors
+/// (bad length line, missing terminator) so tests can assert on the exact
+/// wire format, not just the concatenation.
+pub fn dechunk(body: &str) -> Option<Vec<String>> {
+    let mut chunks = Vec::new();
+    let mut rest = body;
+    loop {
+        let (len_line, after) = rest.split_once("\r\n")?;
+        let len = usize::from_str_radix(len_line.trim(), 16).ok()?;
+        if len == 0 {
+            // terminator: `0\r\n` then a final empty line
+            return after.starts_with("\r\n").then_some(chunks);
+        }
+        if after.len() < len {
+            return None;
+        }
+        let (data, tail) = after.split_at(len);
+        chunks.push(data.to_string());
+        rest = tail.strip_prefix("\r\n")?;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // minimal blocking client (Connection: close framing), shared by the load
 // example and the serve integration tests so the two cannot drift apart
 // ---------------------------------------------------------------------------
@@ -218,6 +281,33 @@ fn post_raw(path: &str, body: &str) -> String {
         "POST {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
+}
+
+/// POST and decode a chunked response: returns `(status, chunks)`, where
+/// each element is one chunk's payload in arrival order. Errors with
+/// `InvalidData` when the response is not chunked or mis-framed.
+pub fn client_post_stream(
+    addr: std::net::SocketAddr,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, Vec<String>)> {
+    let resp = client_request_text(addr, &post_raw(path, body))?;
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or(0);
+    let (head, raw_body) = resp
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "no header break"))?;
+    if !head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+        // error responses (4xx/5xx) come back buffered with Content-Length
+        return Ok((status, vec![raw_body.to_string()]));
+    }
+    let chunks = dechunk(raw_body).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "mis-framed chunked body")
+    })?;
+    Ok((status, chunks))
 }
 
 #[cfg(test)]
@@ -285,6 +375,33 @@ mod tests {
         assert!(raw.contains("\r\nRetry-After: 1\r\n"), "{raw}");
         assert!(raw.ends_with("busy"), "{raw}");
         server.join().unwrap();
+    }
+
+    #[test]
+    fn chunked_roundtrip_and_dechunk() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = read_request(&mut s).unwrap();
+            write_chunked_head(&mut s, 200, "text/plain").unwrap();
+            write_chunk(&mut s, b"hello ").unwrap();
+            write_chunk(&mut s, b"").unwrap(); // skipped, NOT a terminator
+            write_chunk(&mut s, b"world").unwrap();
+            write_chunked_end(&mut s).unwrap();
+        });
+        let (status, chunks) = client_post_stream(addr, "/generate?stream=1", "{}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(chunks, vec!["hello ".to_string(), "world".to_string()]);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn dechunk_rejects_bad_framing() {
+        assert_eq!(dechunk("5\r\nhello\r\n0\r\n\r\n").unwrap(), vec!["hello"]);
+        assert!(dechunk("5\r\nhel").is_none(), "truncated data");
+        assert!(dechunk("zz\r\nhello\r\n").is_none(), "bad length line");
+        assert!(dechunk("5\r\nhello\r\n").is_none(), "missing terminator");
     }
 
     #[test]

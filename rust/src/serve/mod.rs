@@ -29,6 +29,12 @@
 //!   POST /generate   {"prompt": str, "n_tokens": int, "temperature"?: f,
 //!                     "top_p"?: f, "greedy"?: bool}
 //!                    -> text + per-session cache/speculation stats
+//!                    `?stream=1` streams the decoded text as chunked
+//!                    transfer frames instead (DESIGN.md §9); the
+//!                    concatenated chunks equal the buffered `text` field
+//!                    byte for byte. `?priority=batch` (or an
+//!                    `x-priority: batch` header) opts into the
+//!                    throughput tier; default is `interactive`.
 //!   GET  /metrics    serve counters (rejected/shed/queue-wait percentiles)
 //!                    + aggregate and per-session counters over the ONE
 //!                    shared expert cache (JSON)
@@ -66,42 +72,170 @@ pub const RETRY_AFTER_S: u64 = 1;
 /// Result of one generation, as delivered to the reply path.
 pub type GenResult = std::result::Result<GenResponse, GenError>;
 
+/// Request priority class (DESIGN.md §9). `Interactive` (the default)
+/// outranks `Batch` at admission pop and inside the scheduler's round
+/// budget, and is the only class allowed to degrade under a demand-miss
+/// deadline; `Batch` trades latency for never-degraded output, with an
+/// anti-starvation promotion bounding how long it can be outranked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Priority {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
 /// Where a finished (or refused) generation is delivered.
 pub enum ReplyTo {
     /// In-process channel — tests, benches, offline drivers. Delivered
     /// inline by the scheduler (a channel send cannot block).
     Channel(Sender<GenResult>),
     /// Completion-routed: the client socket rides through the scheduler
-    /// and a responder thread writes the HTTP response.
+    /// and a responder thread writes the buffered HTTP response.
     Socket(TcpStream),
+    /// Streamed (`/generate?stream=1`): the scheduler appends decoded text
+    /// to the connection's buffer as tokens land and posts
+    /// [`Completion::Chunk`] flush events; a responder writes the chunked
+    /// frames. Delivery of the final result marks end-of-stream.
+    Stream(Arc<StreamConn>),
 }
 
 impl ReplyTo {
     /// Deliver `result`: inline for channels, via the completion channel
-    /// (and thus a responder thread) for sockets — the scheduler must
-    /// never write to a client socket itself.
+    /// (and thus a responder thread) for sockets and streams — the
+    /// scheduler must never write to a client socket itself.
     pub fn deliver(self, result: GenResult, completions: &Sender<Completion>) {
         match self {
             ReplyTo::Channel(tx) => {
                 let _ = tx.send(result);
             }
             ReplyTo::Socket(stream) => {
-                let _ = completions.send(Completion { stream, result });
+                let _ = completions.send(Completion::Done { stream, result });
+            }
+            ReplyTo::Stream(conn) => {
+                conn.finish(result.err());
+                let _ = completions.send(Completion::Chunk { conn });
             }
         }
     }
 }
 
-/// A finished generation routed back to its client socket.
-pub struct Completion {
-    pub stream: TcpStream,
-    pub result: GenResult,
+/// A unit of responder work.
+pub enum Completion {
+    /// A finished buffered generation routed back to its client socket.
+    Done { stream: TcpStream, result: GenResult },
+    /// A streamed session has pending text (or its end-of-stream marker)
+    /// to flush. The text itself rides the connection's shared buffer, so
+    /// N responders draining one session cannot reorder it.
+    Chunk { conn: Arc<StreamConn> },
+}
+
+/// A streamed `/generate` connection, shared between the scheduler (which
+/// appends text and eventually the final result) and the responder set
+/// (which writes chunked frames). The `stream` mutex serializes writers;
+/// `state` carries the undelivered text and the stream's lifecycle flags.
+pub struct StreamConn {
+    stream: Mutex<TcpStream>,
+    state: Mutex<StreamState>,
+    /// Latched true by a failed write or an EOF peek — the scheduler's
+    /// disconnect sweep reads it without touching the socket again.
+    disconnected: AtomicBool,
+}
+
+struct StreamState {
+    /// Decoded-but-unflushed text (appended by the scheduler, drained by
+    /// whichever responder handles the next flush event).
+    buf: String,
+    /// The scheduler delivered the final result; flush the tail and
+    /// terminate (or report `error`).
+    ended: bool,
+    error: Option<GenError>,
+    headers_sent: bool,
+    /// Terminal: the response is fully written (or abandoned) and the
+    /// in-flight slot released. Later flush events are no-ops.
+    finished: bool,
+}
+
+impl StreamConn {
+    pub fn new(stream: TcpStream) -> Arc<StreamConn> {
+        Arc::new(StreamConn {
+            stream: Mutex::new(stream),
+            state: Mutex::new(StreamState {
+                buf: String::new(),
+                ended: false,
+                error: None,
+                headers_sent: false,
+                finished: false,
+            }),
+            disconnected: AtomicBool::new(false),
+        })
+    }
+
+    /// Scheduler side: append newly decoded text. A
+    /// [`Completion::Chunk`] event must follow for a responder to flush
+    /// it.
+    pub fn push_text(&self, text: &str) {
+        self.state.lock().unwrap().buf.push_str(text);
+    }
+
+    /// Scheduler side: mark the stream ended, carrying the failure (if
+    /// any) for the responder to report.
+    pub fn finish(&self, error: Option<GenError>) {
+        let mut st = self.state.lock().unwrap();
+        st.ended = true;
+        st.error = error;
+    }
+
+    /// Is the client known (failed write) or observed (zero-byte peek =
+    /// EOF) to be gone? Non-blocking — the scheduler calls this every
+    /// round for its disconnect sweep; a responder holding the stream
+    /// lock mid-write just means "alive as far as we know".
+    pub fn client_gone(&self) -> bool {
+        if self.disconnected.load(Ordering::Relaxed) {
+            return true;
+        }
+        let Ok(stream) = self.stream.try_lock() else {
+            return false;
+        };
+        if stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let mut buf = [0u8; 1];
+        let gone = match stream.peek(&mut buf) {
+            Ok(0) => true, // orderly shutdown from the peer
+            Ok(_) => false,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+            Err(_) => true,
+        };
+        let _ = stream.set_nonblocking(false);
+        if gone {
+            self.disconnected.store(true, Ordering::Relaxed);
+        }
+        gone
+    }
 }
 
 pub struct GenRequest {
     pub prompt: String,
     pub n_tokens: usize,
     pub sampling: Sampling,
+    pub priority: Priority,
     pub reply: ReplyTo,
     /// When the request entered the admission queue; queue-age shedding
     /// and the queue-wait percentiles both measure from here.
@@ -268,12 +402,22 @@ impl AdmissionQueue {
         Ok(())
     }
 
-    /// Pop the oldest request. With `block`, waits until a request arrives
-    /// or the queue closes; otherwise returns [`Popped::Empty`] right away.
+    /// Pop the oldest *interactive* request, falling back to the oldest
+    /// request of any class — FIFO within a priority class, interactive
+    /// ahead of batch across classes. Under shed pressure this is the SLO
+    /// tiering: batch requests wait longer and therefore age out first.
+    /// With `block`, waits until a request arrives or the queue closes;
+    /// otherwise returns [`Popped::Empty`] right away.
     pub fn pop(&self, block: bool) -> Popped {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(r) = st.q.pop_front() {
+            let idx = st
+                .q
+                .iter()
+                .position(|r| r.priority == Priority::Interactive)
+                .or(if st.q.is_empty() { None } else { Some(0) });
+            if let Some(i) = idx {
+                let r = st.q.remove(i).unwrap();
                 self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
                 return Popped::Req(r);
             }
@@ -345,6 +489,15 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
     Value::obj(vec![
         ("requests", Value::from(metrics.requests.load(Ordering::Relaxed) as f64)),
         ("errors", Value::from(metrics.errors.load(Ordering::Relaxed) as f64)),
+        (
+            "client_disconnects",
+            Value::from(metrics.client_disconnects.load(Ordering::Relaxed) as f64),
+        ),
+        ("write_errors", Value::from(metrics.write_errors.load(Ordering::Relaxed) as f64)),
+        (
+            "cancelled_sessions",
+            Value::from(metrics.cancelled_sessions.load(Ordering::Relaxed) as f64),
+        ),
         ("rejected_total", Value::from(metrics.rejected_total() as f64)),
         (
             "rejected_backpressure",
@@ -363,6 +516,8 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
             "tokens_prefill",
             Value::from(metrics.tokens_prefill.load(Ordering::Relaxed) as f64),
         ),
+        ("degraded_tokens", Value::from(snap.degraded_tokens as f64)),
+        ("fetch_retries", Value::from(snap.fetch_retries as f64)),
         ("prefill_backlog", Value::from(snap.prefill_backlog)),
         ("queue_depth", Value::from(metrics.queue_depth.load(Ordering::Relaxed) as f64)),
         (
@@ -383,6 +538,22 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
                 ("count", Value::from(metrics.ttft.count() as f64)),
                 ("p50", Value::from(metrics.ttft.percentile_ns(0.50) as f64)),
                 ("p99", Value::from(metrics.ttft.percentile_ns(0.99) as f64)),
+            ]),
+        ),
+        (
+            "ttft_interactive_ns",
+            Value::obj(vec![
+                ("count", Value::from(metrics.ttft_interactive.count() as f64)),
+                ("p50", Value::from(metrics.ttft_interactive.percentile_ns(0.50) as f64)),
+                ("p99", Value::from(metrics.ttft_interactive.percentile_ns(0.99) as f64)),
+            ]),
+        ),
+        (
+            "ttft_batch_ns",
+            Value::obj(vec![
+                ("count", Value::from(metrics.ttft_batch.count() as f64)),
+                ("p50", Value::from(metrics.ttft_batch.percentile_ns(0.50) as f64)),
+                ("p99", Value::from(metrics.ttft_batch.percentile_ns(0.99) as f64)),
             ]),
         ),
         ("active_sessions", Value::from(snap.active_sessions)),
@@ -776,15 +947,28 @@ fn spawn_responders(
         .collect()
 }
 
-/// Write one completion to its client socket and release its in-flight
-/// slot. Write failures (client gone, write timeout) are swallowed — the
+/// Handle one responder work unit: write a buffered completion, or flush
+/// a streamed session's pending chunks. Write failures are classified
+/// (`client_disconnects` vs `write_errors`) but never retried — the
 /// decode already happened; there is nobody left to tell.
 fn respond(c: Completion, metrics: &ServeMetrics) {
-    let mut stream = c.stream;
-    match c.result {
+    match c {
+        Completion::Done { stream, result } => respond_done(stream, result, metrics),
+        Completion::Chunk { conn } => flush_stream(&conn, metrics),
+    }
+}
+
+/// Write one buffered completion to its client socket and release its
+/// in-flight slot.
+fn respond_done(mut stream: TcpStream, result: GenResult, metrics: &ServeMetrics) {
+    match result {
         Ok(resp) => {
             let body = gen_response_json(&resp);
-            let _ = http::write_response(&mut stream, 200, "application/json", body.as_bytes());
+            if let Err(e) =
+                http::write_response(&mut stream, 200, "application/json", body.as_bytes())
+            {
+                count_write_failure(&e, false, metrics);
+            }
         }
         Err(ge) => {
             // admission-control 503s are counted by their own counters
@@ -801,16 +985,133 @@ fn respond(c: Completion, metrics: &ServeMetrics) {
                 .map(|s| ("Retry-After", s.to_string()))
                 .into_iter()
                 .collect();
-            let _ = http::write_response_with_headers(
+            if let Err(e) = http::write_response_with_headers(
                 &mut stream,
                 ge.status,
                 "application/json",
                 &extra,
                 body.as_bytes(),
-            );
+            ) {
+                count_write_failure(&e, false, metrics);
+            }
         }
     }
     release_inflight(metrics);
+}
+
+/// Classify one failed client write. After the response body started
+/// flowing (`mid_stream`), any failure means the client hung up — that is
+/// their prerogative, not a server error. Before that, only io error
+/// kinds that positively identify a vanished peer count as disconnects;
+/// the rest (timeouts, local socket trouble) are server-side
+/// `write_errors`.
+fn count_write_failure(err: &anyhow::Error, mid_stream: bool, metrics: &ServeMetrics) {
+    use std::io::ErrorKind::{BrokenPipe, ConnectionAborted, ConnectionReset, UnexpectedEof};
+    let disconnect = mid_stream
+        || err.downcast_ref::<std::io::Error>().is_some_and(|e| {
+            matches!(e.kind(), BrokenPipe | ConnectionReset | ConnectionAborted | UnexpectedEof)
+        });
+    if disconnect {
+        metrics.client_disconnects.fetch_add(1, Ordering::Relaxed);
+    } else {
+        metrics.write_errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Flush a streamed session: send the chunked head with (or before) the
+/// first data, one chunk frame per flush, and — once the scheduler has
+/// delivered the final result — either the terminator or an error. An
+/// error before any bytes went out becomes the same buffered error
+/// response the non-streamed path writes; after the head is out the
+/// status cannot change, so a mid-stream failure cuts the stream without
+/// the terminator and the client sees the truncation. Exactly-once: the
+/// in-flight slot is released on the transition to `finished`, whichever
+/// path gets there first.
+fn flush_stream(conn: &StreamConn, metrics: &ServeMetrics) {
+    // the stream lock serializes concurrent responders flushing the same
+    // session; text order is preserved because text rides the shared
+    // buffer, not the flush events
+    let mut stream = conn.stream.lock().unwrap();
+    let (data, ended, error, headers_sent) = {
+        let mut st = conn.state.lock().unwrap();
+        if st.finished {
+            return;
+        }
+        (std::mem::take(&mut st.buf), st.ended, st.error.clone(), st.headers_sent)
+    };
+    if let (Some(ge), false) = (&error, headers_sent) {
+        if ge.status != 503 {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let body =
+            json::to_string(&Value::obj(vec![("error", Value::from(ge.message.clone()))]));
+        let extra: Vec<(&str, String)> = ge
+            .retry_after
+            .map(|s| ("Retry-After", s.to_string()))
+            .into_iter()
+            .collect();
+        if let Err(e) = http::write_response_with_headers(
+            &mut stream,
+            ge.status,
+            "application/json",
+            &extra,
+            body.as_bytes(),
+        ) {
+            conn.disconnected.store(true, Ordering::Relaxed);
+            count_write_failure(&e, false, metrics);
+        }
+        finish_stream(conn, metrics);
+        return;
+    }
+    if !headers_sent {
+        if data.is_empty() && !ended {
+            return; // nothing to say yet
+        }
+        if let Err(e) = http::write_chunked_head(&mut stream, 200, "text/plain; charset=utf-8") {
+            conn.disconnected.store(true, Ordering::Relaxed);
+            count_write_failure(&e, false, metrics);
+            finish_stream(conn, metrics);
+            return;
+        }
+        conn.state.lock().unwrap().headers_sent = true;
+    }
+    if !data.is_empty() {
+        if let Err(e) = http::write_chunk(&mut stream, data.as_bytes()) {
+            conn.disconnected.store(true, Ordering::Relaxed);
+            count_write_failure(&e, true, metrics);
+            finish_stream(conn, metrics);
+            return;
+        }
+    }
+    if ended {
+        match &error {
+            Some(ge) => {
+                // headers are out: the status cannot change. Count the
+                // server-side failure and cut the stream unterminated.
+                if ge.status != 503 {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            None => {
+                if let Err(e) = http::write_chunked_end(&mut stream) {
+                    conn.disconnected.store(true, Ordering::Relaxed);
+                    count_write_failure(&e, true, metrics);
+                }
+            }
+        }
+        finish_stream(conn, metrics);
+    }
+}
+
+/// Idempotently mark a streamed session terminal and release its
+/// in-flight slot exactly once.
+fn finish_stream(conn: &StreamConn, metrics: &ServeMetrics) {
+    let mut st = conn.state.lock().unwrap();
+    if !st.finished {
+        st.finished = true;
+        drop(st);
+        release_inflight(metrics);
+    }
 }
 
 /// Release the in-flight slot reserved at admission (saturating: the
@@ -1020,12 +1321,33 @@ fn handle_conn(
         }
     };
     metrics.requests.fetch_add(1, Ordering::Relaxed);
-    match (req.method.as_str(), req.path.as_str()) {
+    // the path may carry a query string (`/generate?stream=1&priority=batch`);
+    // route on the bare path, hand the query to the generate handler
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => route_control(stream, ControlPath::Healthz, ctl_tx),
         ("GET", "/metrics") => route_control(stream, ControlPath::Metrics, ctl_tx),
         ("POST", "/generate") => match parse_gen_request(&req.body) {
             Ok((prompt, n, sampling)) => {
-                admit_generate(stream, prompt, n, sampling, metrics, queue, max_inflight);
+                let stream_mode = query
+                    .split('&')
+                    .any(|kv| matches!(kv, "stream=1" | "stream=true"));
+                // query param wins over the x-priority header; absent both,
+                // requests are interactive (the latency-sensitive default)
+                let priority = query
+                    .split('&')
+                    .find_map(|kv| kv.strip_prefix("priority=").and_then(Priority::parse))
+                    .or_else(|| {
+                        req.headers.get("x-priority").and_then(|v| Priority::parse(v))
+                    })
+                    .unwrap_or_default();
+                admit_generate(
+                    stream, prompt, n, sampling, stream_mode, priority, metrics, queue,
+                    max_inflight,
+                );
             }
             Err(msg) => {
                 metrics.errors.fetch_add(1, Ordering::Relaxed);
@@ -1057,11 +1379,14 @@ fn route_control(stream: TcpStream, path: ControlPath, ctl_tx: &Sender<ControlCo
 /// socket to the scheduler → responder path) or answer 503 right here.
 /// Either way the HTTP worker returns immediately — it never waits on a
 /// decode.
+#[allow(clippy::too_many_arguments)]
 fn admit_generate(
     mut stream: TcpStream,
     prompt: String,
     n_tokens: usize,
     sampling: Sampling,
+    stream_mode: bool,
+    priority: Priority,
     metrics: &ServeMetrics,
     queue: &AdmissionQueue,
     max_inflight: usize,
@@ -1077,6 +1402,8 @@ fn admit_generate(
         })
         .is_ok();
     if !reserved {
+        // rejection happens before any streaming starts, so streamed and
+        // buffered requests get the same plain 503
         metrics.rejected_inflight.fetch_add(1, Ordering::Relaxed);
         let _ = http::write_response_with_headers(
             &mut stream,
@@ -1087,11 +1414,17 @@ fn admit_generate(
         );
         return;
     }
+    let reply = if stream_mode {
+        ReplyTo::Stream(StreamConn::new(stream))
+    } else {
+        ReplyTo::Socket(stream)
+    };
     let req = GenRequest {
         prompt,
         n_tokens,
         sampling,
-        reply: ReplyTo::Socket(stream),
+        priority,
+        reply,
         enqueued: Instant::now(),
     };
     match queue.try_push(req) {
@@ -1099,11 +1432,9 @@ fn admit_generate(
         Err(PushRejected::Full(req)) => {
             release_inflight(metrics);
             metrics.rejected_backpressure.fetch_add(1, Ordering::Relaxed);
-            let ReplyTo::Socket(mut stream) = req.reply else { return };
-            let _ = http::write_response_with_headers(
-                &mut stream,
+            reject_reply(
+                req.reply,
                 503,
-                "text/plain",
                 &retry,
                 b"queue full (backpressure); retry later",
             );
@@ -1111,8 +1442,34 @@ fn admit_generate(
         Err(PushRejected::Closed(req)) => {
             release_inflight(metrics);
             metrics.errors.fetch_add(1, Ordering::Relaxed);
-            let ReplyTo::Socket(mut stream) = req.reply else { return };
-            let _ = http::write_response(&mut stream, 503, "text/plain", b"engine down");
+            reject_reply(req.reply, 503, &[], b"engine down");
+        }
+    }
+}
+
+/// Write an admission-time rejection straight to whichever reply shape the
+/// request carried. No chunked framing was started for streamed requests,
+/// so a plain error response is still well-formed on their socket.
+fn reject_reply(reply: ReplyTo, status: u16, extra: &[(&str, String)], body: &[u8]) {
+    match reply {
+        ReplyTo::Socket(mut stream) => {
+            let _ = http::write_response_with_headers(
+                &mut stream, status, "text/plain", extra, body,
+            );
+        }
+        ReplyTo::Stream(conn) => {
+            let mut stream = conn.stream.lock().unwrap();
+            let _ = http::write_response_with_headers(
+                &mut stream, status, "text/plain", extra, body,
+            );
+            conn.state.lock().unwrap().finished = true;
+        }
+        ReplyTo::Channel(tx) => {
+            let _ = tx.send(Err(GenError {
+                status,
+                message: String::from_utf8_lossy(body).into_owned(),
+                retry_after: None,
+            }));
         }
     }
 }
@@ -1140,6 +1497,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 0)? as u64;
     let profile = crate::sim::hardware::by_name(&args.str_or("profile", "A100"))
         .ok_or_else(|| anyhow::anyhow!("bad --profile"))?;
+    let fetch_retries = args.usize_or("fetch-retries", 2)?;
+    let demand_deadline_ms = args.usize_or("demand-deadline-ms", 0)? as u64;
     let defaults = ServeConfig::default();
     let serve_cfg = ServeConfig {
         http_workers: args.usize_or("http-workers", defaults.http_workers)?,
@@ -1188,6 +1547,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             cfg.transfer_workers = transfer_workers;
             cfg.profile = profile;
             cfg.seed = seed;
+            cfg.fetch_retries = fetch_retries;
+            cfg.demand_deadline_ms = demand_deadline_ms;
             Ok(crate::engine::InferenceEngine::new(backend, store, cfg))
         },
         serve_cfg,
@@ -1257,6 +1618,7 @@ mod tests {
                 prompt: "q".into(),
                 n_tokens,
                 sampling: Sampling::Greedy,
+                priority: Priority::Interactive,
                 reply: ReplyTo::Channel(tx),
                 enqueued: Instant::now(),
             },
@@ -1412,6 +1774,8 @@ mod tests {
                 dedup_joins: 10,
                 batched_rows: 30,
             },
+            degraded_tokens: 2,
+            fetch_retries: 3,
             sessions: Vec::new(),
         };
         for id in 1..=2u64 {
@@ -1460,6 +1824,14 @@ mod tests {
         assert_eq!(rb.get("dedup_joins").as_usize(), Some(10));
         assert_eq!(rb.get("batched_rows").as_usize(), Some(30));
         assert!((rb.get("join_rate").as_f64().unwrap() - 10.0 / 30.0).abs() < 1e-12);
+        // degrade/robustness counters surface at the top level
+        assert_eq!(v.get("degraded_tokens").as_usize(), Some(2));
+        assert_eq!(v.get("fetch_retries").as_usize(), Some(3));
+        assert_eq!(v.get("client_disconnects").as_usize(), Some(0));
+        assert_eq!(v.get("write_errors").as_usize(), Some(0));
+        assert_eq!(v.get("cancelled_sessions").as_usize(), Some(0));
+        let ti = v.get("ttft_interactive_ns");
+        assert_eq!(ti.get("count").as_usize(), Some(0));
         let sessions = v.get("sessions").as_arr().unwrap();
         assert_eq!(sessions.len(), 2);
         assert_eq!(sessions[0].get("hits").as_usize(), Some(45));
@@ -1472,5 +1844,176 @@ mod tests {
             part,
             cache.get("hits").as_usize().unwrap() + cache.get("misses").as_usize().unwrap()
         );
+    }
+
+    #[test]
+    fn priority_parse_accepts_both_classes_case_insensitively() {
+        assert_eq!(Priority::parse("interactive"), Some(Priority::Interactive));
+        assert_eq!(Priority::parse(" Batch "), Some(Priority::Batch));
+        assert_eq!(Priority::parse("BATCH"), Some(Priority::Batch));
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert_eq!(Priority::Batch.as_str(), "batch");
+    }
+
+    #[test]
+    fn admission_queue_pops_interactive_before_older_batch() {
+        let metrics = Arc::new(ServeMetrics::default());
+        let q = AdmissionQueue::new(4, Arc::clone(&metrics));
+        // the test only inspects pop order, never delivers, so dropping the
+        // reply receivers here is fine
+        let mk = |n: usize, pri: Priority| {
+            let (mut r, _rx) = request_with_reply(n);
+            r.priority = pri;
+            r
+        };
+        assert!(q.try_push(mk(1, Priority::Batch)).is_ok());
+        assert!(q.try_push(mk(2, Priority::Batch)).is_ok());
+        assert!(q.try_push(mk(3, Priority::Interactive)).is_ok());
+        assert!(q.try_push(mk(4, Priority::Interactive)).is_ok());
+        // interactive requests jump the batch backlog, FIFO within class
+        match q.pop(false) {
+            Popped::Req(r) => assert_eq!(r.n_tokens, 3),
+            _ => panic!("expected request"),
+        }
+        match q.pop(false) {
+            Popped::Req(r) => assert_eq!(r.n_tokens, 4),
+            _ => panic!("expected request"),
+        }
+        // batch drains FIFO once no interactive work is waiting
+        match q.pop(false) {
+            Popped::Req(r) => assert_eq!(r.n_tokens, 1),
+            _ => panic!("expected request"),
+        }
+        match q.pop(false) {
+            Popped::Req(r) => assert_eq!(r.n_tokens, 2),
+            _ => panic!("expected request"),
+        }
+        q.close();
+    }
+
+    /// Loopback socket pair for exercising StreamConn against a real TCP
+    /// stream without a full server.
+    fn socket_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    fn read_all(mut s: TcpStream) -> String {
+        use std::io::Read;
+        let mut buf = String::new();
+        let _ = s.read_to_string(&mut buf);
+        buf
+    }
+
+    #[test]
+    fn stream_conn_flushes_chunks_and_terminator() {
+        let (client, server) = socket_pair();
+        let metrics = ServeMetrics::default();
+        metrics.inflight_sessions.store(1, Ordering::Relaxed);
+        let conn = StreamConn::new(server);
+        conn.push_text("hel");
+        flush_stream(&conn, &metrics);
+        conn.push_text("lo");
+        flush_stream(&conn, &metrics);
+        conn.finish(None);
+        flush_stream(&conn, &metrics);
+        // terminal flush released the in-flight slot, exactly once
+        assert_eq!(metrics.inflight_sessions.load(Ordering::Relaxed), 0);
+        flush_stream(&conn, &metrics); // idempotent after finish
+        assert_eq!(metrics.inflight_sessions.load(Ordering::Relaxed), 0);
+        drop(conn);
+        let raw = read_all(client);
+        assert!(raw.contains("Transfer-Encoding: chunked"), "head missing: {raw}");
+        let body = raw.split("\r\n\r\n").nth(1).unwrap();
+        let chunks = http::dechunk(body).expect("well-formed chunked body");
+        assert_eq!(chunks, vec!["hel".to_string(), "lo".to_string()]);
+        assert_eq!(metrics.write_errors.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.client_disconnects.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn stream_conn_error_before_first_chunk_is_a_buffered_error_response() {
+        let (client, server) = socket_pair();
+        let metrics = ServeMetrics::default();
+        metrics.inflight_sessions.store(1, Ordering::Relaxed);
+        let conn = StreamConn::new(server);
+        conn.finish(Some(GenError {
+            status: 500,
+            message: "decode failed".into(),
+            retry_after: None,
+        }));
+        flush_stream(&conn, &metrics);
+        assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.inflight_sessions.load(Ordering::Relaxed), 0);
+        drop(conn);
+        let raw = read_all(client);
+        // no chunked framing started, so the client gets a plain error
+        assert!(raw.starts_with("HTTP/1.1 500"), "raw: {raw}");
+        assert!(!raw.contains("Transfer-Encoding"), "raw: {raw}");
+        assert!(raw.contains("decode failed"), "raw: {raw}");
+    }
+
+    #[test]
+    fn stream_conn_error_after_head_cuts_stream_without_terminator() {
+        let (client, server) = socket_pair();
+        let metrics = ServeMetrics::default();
+        metrics.inflight_sessions.store(1, Ordering::Relaxed);
+        let conn = StreamConn::new(server);
+        conn.push_text("part");
+        flush_stream(&conn, &metrics);
+        conn.finish(Some(GenError {
+            status: 500,
+            message: "expert lost".into(),
+            retry_after: None,
+        }));
+        flush_stream(&conn, &metrics);
+        assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.inflight_sessions.load(Ordering::Relaxed), 0);
+        drop(conn);
+        let raw = read_all(client);
+        let body = raw.split("\r\n\r\n").nth(1).unwrap();
+        // truncation is visible to the client: no 0-length final frame
+        assert!(http::dechunk(body).is_none(), "body should be unterminated: {body}");
+        assert!(body.contains("part"));
+    }
+
+    #[test]
+    fn stream_conn_detects_client_eof() {
+        let (client, server) = socket_pair();
+        let conn = StreamConn::new(server);
+        assert!(!conn.client_gone(), "connected client misread as gone");
+        drop(client);
+        // EOF is visible via the zero-byte peek and latches (allow a few
+        // polls for the FIN to land, even on loopback)
+        let mut gone = false;
+        for _ in 0..200 {
+            if conn.client_gone() {
+                gone = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(gone, "EOF never observed");
+        assert!(conn.disconnected.load(Ordering::Relaxed));
+        assert!(conn.client_gone(), "latch must persist");
+    }
+
+    #[test]
+    fn write_failure_classification_splits_disconnects_from_server_errors() {
+        let metrics = ServeMetrics::default();
+        let pipe: anyhow::Error =
+            std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone").into();
+        count_write_failure(&pipe, false, &metrics);
+        let timeout: anyhow::Error =
+            std::io::Error::new(std::io::ErrorKind::TimedOut, "slow").into();
+        count_write_failure(&timeout, false, &metrics);
+        // mid-stream failures always mean the client hung up
+        count_write_failure(&timeout, true, &metrics);
+        assert_eq!(metrics.client_disconnects.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.write_errors.load(Ordering::Relaxed), 1);
     }
 }

@@ -50,6 +50,26 @@
 //! a [`ServeSnapshot`] the `/metrics` endpoint renders without touching the
 //! engine thread. Time-to-first-token is recorded the moment a session's
 //! prompt is fully fed (its first output token is sampled right then).
+//!
+//! Robustness extensions (DESIGN.md §9):
+//!
+//! * **Streaming**: a session with a [`ReplyTo::Stream`] reply pushes each
+//!   newly stable span of decoded text onto its connection buffer as the
+//!   token lands and posts a flush event; the responder set writes the
+//!   chunked frames. Only the longest prefix whose UTF-8 decoding can no
+//!   longer change is streamed per token, so the concatenated chunks are
+//!   byte-identical to the buffered `text` field.
+//! * **Cancellation**: a disconnect sweep before every round flags
+//!   streamed sessions whose client is gone (`request → active →
+//!   retiring → released`); a flagged session does no further engine work
+//!   and is retired at that round boundary — its queued prefetches are
+//!   cancelled, its tally and speculative state dropped, and its
+//!   in-flight slot released, with no reply delivered.
+//! * **Priority**: `interactive` candidates outrank `batch` inside the
+//!   round budget. A batch candidate that has waited more than
+//!   `max_sessions + 1` rounds is promoted to interactive rank with an
+//!   older deficit stamp, so batch TTFT is bounded by roughly
+//!   `2·max_sessions + 2` rounds even under saturating interactive load.
 
 use crate::engine::batch::Session;
 use crate::engine::{InferenceEngine, RoundWork};
@@ -59,7 +79,8 @@ use crate::metrics::{
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::Tokenizer;
 use crate::serve::{
-    AdmissionQueue, Completion, GenError, GenRequest, GenResponse, Popped, RETRY_AFTER_S,
+    release_inflight, AdmissionQueue, Completion, GenError, GenRequest, GenResponse, Popped,
+    Priority, ReplyTo, RETRY_AFTER_S,
 };
 use crate::sim::costmodel::TokenEvents;
 use std::collections::VecDeque;
@@ -183,6 +204,13 @@ pub struct ServeSnapshot {
     /// executed, dedup joins (rows that piggybacked on a group's first
     /// arrival), and total batched rows.
     pub round_batching: RoundBatchStats,
+    /// Tokens that completed by renormalizing around a stalled expert
+    /// under the demand-miss deadline (interactive degrade path, `0`
+    /// unless `--demand-deadline-ms` is set).
+    pub degraded_tokens: u64,
+    /// Demand fetches re-attempted after a transient failure (each retry
+    /// pays an exponential virtual backoff first).
+    pub fetch_retries: u64,
     pub sessions: Vec<SessionView>,
 }
 
@@ -200,10 +228,22 @@ struct ActiveSession {
     /// fresh sessions). The scheduler serves candidates oldest-first by
     /// this stamp — the deficit carry-over under a round budget.
     last_round: u64,
-    reply: crate::serve::ReplyTo,
+    /// SLO class: interactive candidates outrank batch within the round
+    /// budget, and only interactive rows may degrade under the
+    /// demand-miss deadline.
+    priority: Priority,
+    reply: ReplyTo,
     /// Engine failure recorded mid-round; delivered when the session is
     /// retired (the reply path needs the session by value).
     error: Option<GenError>,
+    /// Flagged by the disconnect sweep (or the [`Scheduler::cancel`] test
+    /// hook): the session does no further engine work and is retired at
+    /// this round boundary without delivering a reply.
+    cancelled: bool,
+    /// Bytes of `decode_bytes(generated())` already streamed to the
+    /// client (streamed replies only) — the held-back tail is at most one
+    /// incomplete UTF-8 sequence.
+    emitted_bytes: usize,
 }
 
 /// The active-session set, with a panic-safe reply guarantee: if the
@@ -236,6 +276,69 @@ impl Drop for ActiveSet {
 enum Cand {
     Step(usize),
     PrefillUnit(usize),
+}
+
+/// Priority rank for the candidate sort: interactive first. A batch
+/// candidate that has waited more than `max_sessions + 1` rounds is
+/// promoted to interactive rank — with its older deficit stamp it then
+/// wins the tie, bounding batch starvation at roughly `2·max_sessions +
+/// 2` rounds (`batch_starvation_is_bounded`).
+fn rank(priority: Priority, round: u64, last_round: u64, max_sessions: usize) -> u8 {
+    match priority {
+        Priority::Interactive => 0,
+        Priority::Batch if round.saturating_sub(last_round) > max_sessions as u64 + 1 => 0,
+        Priority::Batch => 1,
+    }
+}
+
+/// Record a session's time-to-first-token, in aggregate and per priority
+/// class (the SLO split `/metrics` reports).
+fn record_ttft(metrics: &ServeMetrics, s: &ActiveSession) {
+    let ns = s.enqueued.elapsed().as_nanos() as u64;
+    metrics.ttft.record_ns(ns);
+    match s.priority {
+        Priority::Interactive => metrics.ttft_interactive.record_ns(ns),
+        Priority::Batch => metrics.ttft_batch.record_ns(ns),
+    }
+}
+
+/// Length of the longest prefix of `bytes` whose lossy UTF-8 decoding is
+/// final. A trailing *incomplete* sequence is excluded (later bytes may
+/// complete it, changing its decoding); an *invalid* sequence is included
+/// (lossy decoding already settled it to U+FFFD).
+fn utf8_stable_prefix(bytes: &[u8]) -> usize {
+    let mut i = 0;
+    loop {
+        match std::str::from_utf8(&bytes[i..]) {
+            Ok(_) => return bytes.len(),
+            Err(e) => match e.error_len() {
+                Some(n) => i += e.valid_up_to() + n,
+                None => return i + e.valid_up_to(),
+            },
+        }
+    }
+}
+
+/// Push session `s`'s newly stable decoded text to its stream connection
+/// (no-op for buffered replies) and post a flush event. `final_flush`
+/// forces out a held-back incomplete UTF-8 tail as U+FFFD — exactly what
+/// `Tokenizer::decode` of the full sequence produces — so the
+/// concatenated chunks always equal the buffered `text` byte for byte.
+fn stream_progress(
+    tk: &Tokenizer,
+    s: &mut ActiveSession,
+    completions: &Sender<Completion>,
+    final_flush: bool,
+) {
+    let ReplyTo::Stream(conn) = &s.reply else { return };
+    let bytes = tk.decode_bytes(s.inner.generated());
+    let upto = if final_flush { bytes.len() } else { utf8_stable_prefix(&bytes) };
+    if upto > s.emitted_bytes {
+        let delta = String::from_utf8_lossy(&bytes[s.emitted_bytes..upto]);
+        conn.push_text(&delta);
+        s.emitted_bytes = upto;
+        let _ = completions.send(Completion::Chunk { conn: Arc::clone(conn) });
+    }
 }
 
 /// The serve scheduler as a drivable state machine: [`Scheduler::turn`]
@@ -362,10 +465,43 @@ impl Scheduler {
             }
         }
 
+        // --- disconnect sweep: a streamed client that hung up cancels its
+        // session at this round boundary — it contributes no further rows
+        // and `retire` releases everything it held (engine prefetches,
+        // tally, in-flight slot) without delivering a reply
+        for s in &mut self.active.sessions {
+            if !s.cancelled {
+                if let ReplyTo::Stream(conn) = &s.reply {
+                    if conn.client_gone() {
+                        s.cancelled = true;
+                    }
+                }
+            }
+        }
+
         let report = self.round_pass();
         self.retire();
         self.publish();
         Some(report)
+    }
+
+    /// Test/bench hook: flag `session` for cancellation exactly as the
+    /// disconnect sweep would (same retire path, same accounting).
+    /// Returns whether the session was active.
+    pub fn cancel(&mut self, session: u64) -> bool {
+        match self.active.sessions.iter_mut().find(|s| s.inner.id == session) {
+            Some(s) => {
+                s.cancelled = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Engine state for post-run assertions (pending prefetch tags,
+    /// degrade counters) without consuming the scheduler.
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
     }
 
     /// One budgeted round: serve candidates oldest-first until the token
@@ -384,15 +520,23 @@ impl Scheduler {
             ..RoundReport::default()
         };
 
-        // candidate list: (last-advanced round, tiebreak id, kind).
-        // With chunking, prefill-phase sessions are represented by ONE
-        // prefill unit selecting the oldest-served of them; its tiebreak
-        // of u64::MAX gives decode steps priority on equal stamps.
-        let mut cands: Vec<(u64, u64, Cand)> = Vec::new();
+        // candidate list: (priority rank, last-advanced round, tiebreak
+        // id, kind) — interactive rank outranks batch (with the
+        // anti-starvation promotion in `rank`), then oldest-first within
+        // rank. Cancelled sessions contribute no candidates: they are
+        // retired at this round boundary. With chunking, prefill-phase
+        // sessions are represented by ONE prefill unit selecting the
+        // oldest-served of them; its tiebreak of u64::MAX gives decode
+        // steps priority on equal stamps.
+        let mut cands: Vec<(u8, u64, u64, Cand)> = Vec::new();
         let mut prefill_sel: Option<usize> = None;
         for (i, s) in self.active.sessions.iter().enumerate() {
+            if s.cancelled {
+                continue;
+            }
             if chunk == 0 || s.inner.next_token_is_generated() {
-                cands.push((s.last_round, s.inner.id, Cand::Step(i)));
+                let r = rank(s.priority, self.round, s.last_round, self.max_sessions);
+                cands.push((r, s.last_round, s.inner.id, Cand::Step(i)));
             } else {
                 prefill_sel = match prefill_sel {
                     Some(j) => {
@@ -408,9 +552,15 @@ impl Scheduler {
             }
         }
         if let Some(i) = prefill_sel {
-            cands.push((self.prefill_last_round, u64::MAX, Cand::PrefillUnit(i)));
+            let r = rank(
+                self.active.sessions[i].priority,
+                self.round,
+                self.prefill_last_round,
+                self.max_sessions,
+            );
+            cands.push((r, self.prefill_last_round, u64::MAX, Cand::PrefillUnit(i)));
         }
-        cands.sort_by_key(|&(last, id, _)| (last, id));
+        cands.sort_by_key(|&(r, last, id, _)| (r, last, id));
 
         let mut spent = 0usize;
         if self.cfg.round_batching {
@@ -421,7 +571,7 @@ impl Scheduler {
             // dequant + batched FFN pass (DESIGN.md §8)
             let mut batch_idx: Vec<usize> = Vec::new();
             let mut prefill_grant: Option<(usize, usize)> = None;
-            for (_, _, cand) in cands {
+            for (_, _, _, cand) in cands {
                 match cand {
                     Cand::Step(i) => {
                         if spent >= budget {
@@ -446,7 +596,7 @@ impl Scheduler {
             self.dispatch_round(&batch_idx, prefill_grant, &mut report);
             return report;
         }
-        for (_, _, cand) in cands {
+        for (_, _, _, cand) in cands {
             match cand {
                 Cand::Step(i) => {
                     if spent >= budget {
@@ -525,6 +675,9 @@ impl Scheduler {
                 tok,
                 pos: s.inner.pos,
                 prefill: !gen,
+                // only interactive rows may degrade under the demand-miss
+                // deadline; a batch row in an expert group pins the fetch
+                degradable: s.priority == Priority::Interactive,
                 kv: &mut s.inner.kv,
             })
             .collect();
@@ -545,6 +698,7 @@ impl Scheduler {
                     s.inner.apply_step(tok, was_generated, &logits);
                     if was_generated {
                         self.metrics.tokens_generated.fetch_add(1, Ordering::Relaxed);
+                        stream_progress(&self.tk, s, &self.active.completions, false);
                         report.decode_tokens += 1;
                         report.advanced.push(Advance {
                             session: s.inner.id,
@@ -554,9 +708,7 @@ impl Scheduler {
                     } else {
                         self.metrics.tokens_prefill.fetch_add(1, Ordering::Relaxed);
                         if s.inner.next_token_is_generated() {
-                            self.metrics
-                                .ttft
-                                .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+                            record_ttft(&self.metrics, s);
                         }
                         if Some(i) == prefill_idx {
                             chunk_fed = 1;
@@ -589,11 +741,13 @@ impl Scheduler {
                     break;
                 }
                 let (tok, _gen) = s.inner.peek_next();
+                let degradable = s.priority == Priority::Interactive;
                 let mut work = [RoundWork {
                     session: sid,
                     tok,
                     pos: s.inner.pos,
                     prefill: true,
+                    degradable,
                     kv: &mut s.inner.kv,
                 }];
                 let mut results = self.engine.step_round(&mut work);
@@ -605,9 +759,7 @@ impl Scheduler {
                         chunk_fed += 1;
                         self.metrics.tokens_prefill.fetch_add(1, Ordering::Relaxed);
                         if s.inner.next_token_is_generated() {
-                            self.metrics
-                                .ttft
-                                .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+                            record_ttft(&self.metrics, s);
                         }
                     }
                     Err(e) => {
@@ -641,14 +793,13 @@ impl Scheduler {
                 s.last_round = round;
                 if was_generated {
                     self.metrics.tokens_generated.fetch_add(1, Ordering::Relaxed);
+                    stream_progress(&self.tk, s, &self.active.completions, false);
                 } else {
                     self.metrics.tokens_prefill.fetch_add(1, Ordering::Relaxed);
                     if s.inner.next_token_is_generated() {
                         // prompt fully fed: the first output token was
                         // sampled by this very step — that's TTFT
-                        self.metrics
-                            .ttft
-                            .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+                        record_ttft(&self.metrics, s);
                     }
                 }
                 Some(Advance { session: s.inner.id, tokens: 1, prefill: !was_generated })
@@ -684,9 +835,7 @@ impl Scheduler {
                 .fetch_add(advanced as u64, Ordering::Relaxed);
         }
         if err.is_none() && s.inner.next_token_is_generated() {
-            self.metrics
-                .ttft
-                .record_ns(s.enqueued.elapsed().as_nanos() as u64);
+            record_ttft(&self.metrics, s);
         }
         if let Some(e) = err {
             s.error = Some(GenError {
@@ -702,23 +851,57 @@ impl Scheduler {
         }
     }
 
-    /// Retire finished and failed sessions: deliver replies, fold tallies
-    /// into the recent ring.
+    /// Retire finished, failed, and cancelled sessions: deliver replies
+    /// (cancelled sessions get none — their client is gone), release
+    /// engine-side and admission-side state, fold tallies into the recent
+    /// ring.
     fn retire(&mut self) {
         let mut finished: Vec<ActiveSession> = Vec::new();
         let mut i = 0;
         while i < self.active.sessions.len() {
             let s = &self.active.sessions[i];
-            if s.error.is_some() || s.inner.done {
+            if s.error.is_some() || s.inner.done || s.cancelled {
                 finished.push(self.active.sessions.swap_remove(i));
             } else {
                 i += 1;
             }
         }
-        for s in finished {
-            let ActiveSession { inner, started, sim_start, reply, error, .. } = s;
+        for mut s in finished {
+            if !s.cancelled && s.error.is_none() {
+                // flush a held-back incomplete UTF-8 tail so the streamed
+                // bytes match the buffered decode exactly
+                stream_progress(&self.tk, &mut s, &self.active.completions, true);
+            }
+            let ActiveSession { inner, started, sim_start, reply, error, cancelled, .. } = s;
+            // tally first: cancel_session drops the engine's records
             let tally = self.engine.take_session_tally(inner.id);
             let generated = inner.generated().len();
+            if cancelled {
+                // released: queued prefetches cancelled, speculative state
+                // dropped, in-flight slot freed. No reply — for a streamed
+                // session the finish transition below is exactly-once
+                // against any still-queued responder flush.
+                self.engine.cancel_session(inner.id);
+                self.metrics.cancelled_sessions.fetch_add(1, Ordering::Relaxed);
+                match reply {
+                    ReplyTo::Stream(conn) => {
+                        crate::serve::finish_stream(&conn, &self.metrics);
+                    }
+                    _ => release_inflight(&self.metrics),
+                }
+                self.recent.push_back(SessionView {
+                    id: inner.id,
+                    state: "cancelled",
+                    n_prompt: inner.n_prompt,
+                    generated,
+                    target: inner.target_new,
+                    tally,
+                });
+                while self.recent.len() > RECENT_SESSIONS {
+                    self.recent.pop_front();
+                }
+                continue;
+            }
             let succeeded = error.is_none() && inner.done;
             let result = if succeeded {
                 let sim_span = self.engine.sim_now() - sim_start;
@@ -794,6 +977,8 @@ impl Scheduler {
         snap.cross_session_prefetch_hits = self.engine.cross_session_prefetch_hits();
         snap.pipeline = self.engine.pipeline_stats();
         snap.round_batching = self.engine.round_batch_stats();
+        snap.degraded_tokens = self.engine.degraded_tokens();
+        snap.fetch_retries = self.engine.fetch_retries_performed();
         snap.sessions = views;
     }
 }
@@ -878,8 +1063,11 @@ fn admit(
         enqueued: req.enqueued,
         sim_start: engine.sim_now(),
         last_round: round,
+        priority: req.priority,
         reply: req.reply,
         error: None,
+        cancelled: false,
+        emitted_bytes: 0,
     })
 }
 
@@ -926,6 +1114,7 @@ mod tests {
                 prompt: prompt.to_string(),
                 n_tokens: n,
                 sampling: Sampling::Greedy,
+                priority: Priority::Interactive,
                 reply: ReplyTo::Channel(tx),
                 enqueued: Instant::now(),
             },
@@ -1421,5 +1610,198 @@ mod tests {
             "chunking did not reduce long-prompt TTFT rounds \
              ({chunked_rounds} vs {unchunked_rounds})"
         );
+    }
+
+    fn push_pri(
+        queue: &AdmissionQueue,
+        prompt: &str,
+        n: usize,
+        pri: Priority,
+    ) -> Receiver<GenResult> {
+        let (mut req, rx) = request(prompt, n);
+        req.priority = pri;
+        assert!(queue.try_push(req).is_ok(), "test queue accepts");
+        rx
+    }
+
+    /// Mixed-priority harness: two interactive and two batch sessions
+    /// under a 1-token round budget, driven to completion. Returns the
+    /// round each session FIRST advanced and every (round, session)
+    /// advancement, with interactive sessions admitted as ids 1–2 and
+    /// batch as ids 3–4 (the admission pop itself serves interactive
+    /// first).
+    fn mixed_priority_run() -> (Vec<(u64, u64)>, Vec<Receiver<GenResult>>) {
+        let engine = test_engine(false);
+        let (queue, metrics) = test_queue(8);
+        let (completions, _completion_rx) = channel();
+        let mut rxs = Vec::new();
+        rxs.push(push_pri(&queue, "batch 0", 3, Priority::Batch));
+        rxs.push(push_pri(&queue, "batch 1", 3, Priority::Batch));
+        rxs.push(push_pri(&queue, "inter 0", 3, Priority::Interactive));
+        rxs.push(push_pri(&queue, "inter 1", 3, Priority::Interactive));
+        queue.close();
+        let mut sched = Scheduler::new(
+            engine,
+            queue,
+            completions,
+            SchedulerConfig {
+                max_sessions: 4,
+                round_budget_tokens: 1,
+                ..SchedulerConfig::default()
+            },
+            metrics,
+            Arc::new(Mutex::new(ServeSnapshot::default())),
+        );
+        let mut advances = Vec::new();
+        while let Some(r) = sched.turn() {
+            for a in &r.advanced {
+                advances.push((r.round, a.session));
+            }
+        }
+        (advances, rxs)
+    }
+
+    #[test]
+    fn interactive_outranks_batch_within_the_round_budget() {
+        let (advances, rxs) = mixed_priority_run();
+        // interactive requests were popped first at admission → ids 1, 2
+        let first = |id: u64| {
+            advances
+                .iter()
+                .find(|&&(_, s)| s == id)
+                .map(|&(r, _)| r)
+                .expect("session advanced")
+        };
+        let interactive_first = first(1).max(first(2));
+        let batch_first = first(3).min(first(4));
+        assert!(
+            interactive_first < batch_first,
+            "batch (round {batch_first}) advanced before both interactive \
+             sessions (last at round {interactive_first})"
+        );
+        // the tier is a priority, not a denial of service
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().expect("served").n_generated, 3);
+        }
+    }
+
+    #[test]
+    fn batch_starvation_is_bounded() {
+        let (advances, rxs) = mixed_priority_run();
+        // anti-starvation promotion: a batch session never waits more
+        // than ~2·max_sessions + 2 rounds between advances
+        let bound = 2 * 4 + 2;
+        for id in [3u64, 4] {
+            let rounds: Vec<u64> = advances
+                .iter()
+                .filter(|&&(_, s)| s == id)
+                .map(|&(r, _)| r)
+                .collect();
+            assert!(!rounds.is_empty(), "batch session {id} never ran");
+            let mut prev = 0u64; // admitted before round 1
+            for &r in &rounds {
+                assert!(
+                    r - prev <= bound,
+                    "batch session {id} waited {} rounds (bound {bound})",
+                    r - prev
+                );
+                prev = r;
+            }
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+
+    #[test]
+    fn cancel_releases_everything_and_survivors_match() {
+        // reference: the surviving prompts decoded with no one else around
+        // (after the cancelled sessions' retire round, the engine must
+        // behave as if they never existed — cache contents may differ, but
+        // outputs are cache-transparent)
+        let reference: Vec<String> = {
+            let (mut sched, rxs) = driven_scheduler(
+                SchedulerConfig { max_sessions: 4, ..SchedulerConfig::default() },
+                &[("keeper zero", 6), ("keeper one", 6)],
+            );
+            let mut reference_turns = 0u64;
+            while sched.turn().is_some() {
+                reference_turns += 1;
+            }
+            assert!(reference_turns > 0);
+            rxs.into_iter().map(|rx| rx.recv().unwrap().expect("served").text).collect()
+        };
+
+        // spec prefetch on: cancellation must also drop the engine's
+        // queued prefetch records tagged to the dead sessions
+        let engine = test_engine(true);
+        let (queue, metrics) = test_queue(8);
+        let (completions, _completion_rx) = channel();
+        let keep_rx: Vec<_> = [("keeper zero", 6), ("keeper one", 6)]
+            .iter()
+            .map(|&(p, n)| push(&queue, p, n))
+            .collect();
+        let doomed_rx: Vec<_> = [("doomed two", 40), ("doomed three", 40)]
+            .iter()
+            .map(|&(p, n)| push(&queue, p, n))
+            .collect();
+        queue.close();
+        let mut sched = Scheduler::new(
+            engine,
+            queue,
+            completions,
+            SchedulerConfig { max_sessions: 4, ..SchedulerConfig::default() },
+            Arc::clone(&metrics),
+            Arc::new(Mutex::new(ServeSnapshot::default())),
+        );
+        // run until both doomed sessions are mid-decode (≥ 1 generated)
+        for _ in 0..10_000 {
+            sched.turn().expect("work remains");
+            let mid_decode = sched
+                .active
+                .sessions
+                .iter()
+                .filter(|s| s.inner.id >= 3)
+                .filter(|s| !s.inner.generated().is_empty())
+                .count();
+            if mid_decode == 2 {
+                break;
+            }
+        }
+        assert!(sched.cancel(3), "session 3 active");
+        assert!(sched.cancel(4), "session 4 active");
+        assert!(!sched.cancel(99), "unknown session");
+        // ONE round boundary releases them: no engine work, retired out
+        sched.turn().expect("survivors still active");
+        assert_eq!(metrics.cancelled_sessions.load(Ordering::Relaxed), 2);
+        assert!(sched.active.sessions.iter().all(|s| s.inner.id < 3));
+        let pending = sched.engine().pending_prefetch_sessions();
+        assert!(
+            !pending.contains(&3) && !pending.contains(&4),
+            "queued prefetches still tagged to cancelled sessions: {pending:?}"
+        );
+        let mut turns_after = 0u64;
+        while sched.turn().is_some() {
+            turns_after += 1;
+            assert!(turns_after < 10_000, "survivors failed to finish");
+        }
+        let texts: Vec<String> = keep_rx
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().expect("survivor served").text)
+            .collect();
+        assert_eq!(texts, reference, "cancellation perturbed survivor outputs");
+        // cancelled clients get silence (their channel drops undelivered),
+        // and the sessions count as cancelled, not completed or failed
+        for rx in doomed_rx {
+            assert!(rx.recv().is_err(), "cancelled session delivered a reply");
+        }
+        assert_eq!(sched.completed, 2);
+        assert_eq!(sched.failed_sessions, 0);
+        let cancelled_views = sched
+            .recent
+            .iter()
+            .filter(|v| v.state == "cancelled")
+            .count();
+        assert_eq!(cancelled_views, 2);
     }
 }

@@ -22,6 +22,7 @@ use moe_offload::engine::{EngineConfig, InferenceEngine};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
 use moe_offload::offload::store::HostExpertStore;
+use moe_offload::offload::transfer::FaultPlan;
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::native::NativeBackend;
 use moe_offload::runtime::{Backend, ExpertHandle, KvState};
@@ -371,4 +372,48 @@ pub fn paced_engine(
         store,
         cfg,
     ))
+}
+
+/// Engine with a seeded [`FaultPlan`] injected on its transfer engine, so
+/// integration tests can script per-`(layer, expert)` delays, transient
+/// fetch failures, and permanent failures deterministically (e.g. "expert
+/// (l, e) fails twice then succeeds", "expert (l, e) stalls 50 virtual
+/// ms"). `tweak` adjusts the serving config (deadline, retry budget)
+/// before construction.
+pub fn faulty_engine(
+    plan: FaultPlan,
+    transfer_workers: usize,
+    tweak: impl FnOnce(&mut EngineConfig),
+) -> anyhow::Result<InferenceEngine> {
+    let weights = Arc::new(generate_weights(serve_model_config(), 42));
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32)?);
+    let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
+    cfg.transfer_workers = transfer_workers;
+    tweak(&mut cfg);
+    let mut engine =
+        InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg);
+    engine.inject_faults(plan);
+    Ok(engine)
+}
+
+/// [`paced_engine`] with a [`FaultPlan`] injected on top — permit-gated
+/// steps AND scripted transfer faults in one deterministic harness.
+pub fn paced_engine_with_faults(
+    pace: Arc<Pace>,
+    transfer_workers: usize,
+    plan: FaultPlan,
+    tweak: impl FnOnce(&mut EngineConfig),
+) -> anyhow::Result<InferenceEngine> {
+    let weights = Arc::new(generate_weights(serve_model_config(), 42));
+    let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32)?);
+    let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
+    cfg.transfer_workers = transfer_workers;
+    tweak(&mut cfg);
+    let mut engine = InferenceEngine::new(
+        Box::new(PacedBackend { inner: NativeBackend::new(weights), pace }),
+        store,
+        cfg,
+    );
+    engine.inject_faults(plan);
+    Ok(engine)
 }

@@ -41,6 +41,8 @@ fn run(
             profile: hardware::by_name("A6000").unwrap(),
             seed,
             record_trace: true,
+            fetch_retries: 2,
+            demand_deadline_ms: 0,
         },
     );
     let mut sampler = Sampler::new(Sampling::Greedy, seed);
@@ -147,6 +149,8 @@ fn sim_clock_slower_on_worse_bandwidth() {
                 profile: hardware::by_name(profile).unwrap(),
                 seed: 0,
                 record_trace: false,
+                fetch_retries: 2,
+                demand_deadline_ms: 0,
             },
         );
         let mut sampler = Sampler::new(Sampling::Greedy, 0);

@@ -92,6 +92,8 @@ fn pjrt_engine_decode_with_quantized_store() {
             profile: hardware::by_name("A100").unwrap(),
             seed: 0,
             record_trace: true,
+            fetch_retries: 2,
+            demand_deadline_ms: 0,
         },
     );
     let mut sampler = Sampler::new(Sampling::Greedy, 0);

@@ -17,6 +17,11 @@
 //!    on, short sessions' first tokens land while a long prompt's prefill
 //!    is still in progress (proven with a step-budget argument on the
 //!    permit-gated `PacedBackend` — no wall-clock margins).
+//! 4. The serve path is failure-aware end to end (DESIGN.md §9): streamed
+//!    (`?stream=1`) and buffered completions are byte-identical, a client
+//!    hang-up mid-decode cancels its session and frees its resources while
+//!    survivors finish, and scripted transfer faults are absorbed by the
+//!    retry/degrade ladder without failing a single session.
 //!
 //! Timing discipline (`tests/common/mod.rs`): assertions that depend on
 //! engine progress either poll a deadline (`wait_until`) or gate the
@@ -25,21 +30,23 @@
 
 mod common;
 
-use common::{paced_engine, wait_until, Pace};
+use common::{faulty_engine, paced_engine, wait_until, Pace};
 use moe_offload::cache::PolicyKind;
 use moe_offload::engine::{EngineConfig, InferenceEngine};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
 use moe_offload::offload::store::HostExpertStore;
+use moe_offload::offload::transfer::FaultPlan;
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::native::NativeBackend;
 use moe_offload::runtime::{Backend, ExpertHandle, KvState};
 use moe_offload::serve::http::{
-    client_get as http_get, client_post as http_post, client_post_text as http_post_text,
+    client_get as http_get, client_post as http_post, client_post_stream,
+    client_post_text as http_post_text,
 };
 use moe_offload::serve::{self, ServeConfig};
 use moe_offload::util::json::{self, Value};
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
@@ -934,4 +941,239 @@ fn invalid_requests_are_rejected_cleanly() {
     assert!(body.contains("max_seq"), "{body}");
     let (status, _) = http_get(server.addr, "/nope").unwrap();
     assert_eq!(status, 404);
+}
+
+// ---------------------------------------------------------------------------
+// Robustness suite: streaming, disconnect cancellation, fault ladder (§9)
+// ---------------------------------------------------------------------------
+
+/// Streamed and buffered modes must produce byte-identical completion
+/// text for the same greedy request: the stable-UTF-8-prefix chunking in
+/// the scheduler may only change WHERE the text is split, never the text.
+#[test]
+fn streamed_response_matches_buffered_text() {
+    let server = Server::start(
+        ServeConfig { max_sessions: 2, ..ServeConfig::default() },
+        false,
+    );
+    let addr = server.addr;
+    let body = r#"{"prompt":"stream parity","n_tokens":24,"greedy":true}"#;
+
+    let (status, buffered) = http_post(addr, "/generate", body).unwrap();
+    assert_eq!(status, 200, "{buffered}");
+    let text = json::parse(&buffered)
+        .unwrap()
+        .get("text")
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    let (status, chunks) = client_post_stream(addr, "/generate?stream=1", body).unwrap();
+    assert_eq!(status, 200, "{chunks:?}");
+    assert!(!chunks.is_empty(), "stream carried no chunks");
+    assert_eq!(chunks.concat(), text, "streamed bytes must equal the buffered text");
+
+    // a cleanly read stream is neither a disconnect nor a write error
+    let m = fetch_metrics(addr);
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(2));
+    assert_eq!(m.get("client_disconnects").as_usize(), Some(0));
+    assert_eq!(m.get("write_errors").as_usize(), Some(0));
+    assert_eq!(m.get("cancelled_sessions").as_usize(), Some(0));
+}
+
+/// True after the response head AND at least one complete non-empty chunk
+/// have arrived — the point where the client is demonstrably mid-stream.
+fn first_chunk_received(buf: &[u8]) -> bool {
+    let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") else {
+        return false;
+    };
+    let rest = &buf[head_end + 4..];
+    let Some(line_end) = rest.windows(2).position(|w| w == b"\r\n") else {
+        return false;
+    };
+    let Some(size) = std::str::from_utf8(&rest[..line_end])
+        .ok()
+        .and_then(|s| usize::from_str_radix(s.trim(), 16).ok())
+    else {
+        return false;
+    };
+    size > 0 && rest.len() >= line_end + 2 + size
+}
+
+/// A client that hangs up mid-stream is cancelled by the scheduler's
+/// disconnect sweep: its in-flight slot is released and a concurrent
+/// buffered session completes untouched, with the abandonment counted as
+/// a cancellation — never as a server failure.
+#[test]
+fn mid_decode_disconnect_frees_resources_while_survivors_finish() {
+    let doomed_tokens = 60usize;
+    let survivor_tokens = 8usize;
+    let server = Server::start_with(
+        ServeConfig { max_sessions: 4, queue_depth: 8, ..ServeConfig::default() },
+        || make_slow_engine(Duration::from_millis(2), 0),
+    );
+    let addr = server.addr;
+
+    // doomed: a raw streamed connection the test can hang up mid-decode
+    let mut doomed = TcpStream::connect(addr).unwrap();
+    let body = format!(r#"{{"prompt":"doomed","n_tokens":{doomed_tokens},"greedy":true}}"#);
+    write!(
+        doomed,
+        "POST /generate?stream=1 HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+
+    let survivor = std::thread::spawn(move || {
+        let body =
+            format!(r#"{{"prompt":"survivor","n_tokens":{survivor_tokens},"greedy":true}}"#);
+        http_post(addr, "/generate", &body).unwrap()
+    });
+
+    // read until the chunked head and a first chunk arrive: the doomed
+    // session is demonstrably mid-decode (2 ms/step × 60 tokens pending)
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 256];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !first_chunk_received(&buf) {
+        assert!(Instant::now() < deadline, "no first chunk before deadline");
+        let n = doomed.read(&mut tmp).unwrap();
+        assert!(n > 0, "server closed the stream early");
+        buf.extend_from_slice(&tmp[..n]);
+    }
+    let head = String::from_utf8_lossy(&buf).to_string();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(
+        head.to_ascii_lowercase().contains("transfer-encoding: chunked"),
+        "{head}"
+    );
+
+    drop(doomed); // hang up mid-stream
+
+    // the next scheduler turn's sweep sees the dead socket and retires the
+    // session at the round boundary — long before 60 tokens could finish
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("cancelled_sessions").as_usize() == Some(1),
+            Duration::from_secs(10)
+        ),
+        "disconnect never cancelled the session"
+    );
+
+    let (status, body) = survivor.join().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("n_generated").as_usize(), Some(survivor_tokens));
+
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("inflight_sessions").as_usize() == Some(0),
+            Duration::from_secs(10)
+        ),
+        "cancelled session never released its in-flight slot"
+    );
+    let m = fetch_metrics(addr);
+    assert_eq!(m.get("cancelled_sessions").as_usize(), Some(1));
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(1));
+    assert_eq!(m.get("failed_sessions").as_usize(), Some(0), "a hang-up is not a failure");
+    assert_eq!(m.get("active_sessions").as_usize(), Some(0));
+    // the doomed decode stopped early: well under its 60-token ask
+    assert!(
+        m.get("tokens_generated").as_usize().unwrap() < doomed_tokens + survivor_tokens,
+        "cancelled session decoded to completion anyway"
+    );
+    let cancelled_views = m
+        .get("sessions")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|s| s.get("state").as_str() == Some("cancelled"))
+        .count();
+    assert_eq!(cancelled_views, 1, "cancelled session missing from the ring");
+}
+
+/// Transient fetch faults under the retry budget are absorbed invisibly:
+/// the request succeeds with the exact fault-free text, and the paid
+/// retries surface in `/metrics` as `fetch_retries`.
+#[test]
+fn transient_fetch_faults_are_retried_end_to_end() {
+    let body = r#"{"prompt":"retry me","n_tokens":10,"greedy":true}"#;
+    // control: the fault-free text for the same greedy request
+    let clean_text = {
+        let control = Server::start(ServeConfig::default(), false);
+        let (status, resp) = http_post(control.addr, "/generate", body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        json::parse(&resp).unwrap().get("text").as_str().unwrap().to_string()
+    };
+
+    // every (layer, expert) fails once before succeeding, so the test
+    // does not depend on which experts the router demands
+    let mc = serve_config();
+    let mut plan = FaultPlan::seeded(7);
+    for l in 0..mc.n_layers {
+        for e in 0..mc.n_experts {
+            plan = plan.fail_transient(l, e, 1);
+        }
+    }
+    let server = Server::start_with(ServeConfig::default(), move || {
+        faulty_engine(plan, 0, |c| c.fetch_retries = 2)
+    });
+    let (status, resp) = http_post(server.addr, "/generate", body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("n_generated").as_usize(), Some(10));
+    assert_eq!(
+        v.get("text").as_str(),
+        Some(clean_text.as_str()),
+        "retries changed timing AND tokens"
+    );
+
+    let m = fetch_metrics(server.addr);
+    assert!(
+        m.get("fetch_retries").as_usize().unwrap() > 0,
+        "no retry surfaced in /metrics"
+    );
+    assert_eq!(m.get("failed_sessions").as_usize(), Some(0));
+    assert_eq!(m.get("degraded_tokens").as_usize(), Some(0));
+}
+
+/// Deadline breaches degrade instead of stalling: with every expert
+/// stalled far past `--demand-deadline-ms`, interactive sessions still
+/// complete their full token ask — counted in `degraded_tokens` — and
+/// the streamed and buffered degraded texts stay identical (the degrade
+/// decision is deterministic, not a race against the wall clock).
+#[test]
+fn deadline_breach_degrades_interactive_sessions_to_completion() {
+    let mc = serve_config();
+    let mut plan = FaultPlan::seeded(3);
+    for l in 0..mc.n_layers {
+        for e in 0..mc.n_experts {
+            plan = plan.stall_ms(l, e, 1000.0);
+        }
+    }
+    let server = Server::start_with(ServeConfig::default(), move || {
+        faulty_engine(plan, 0, |c| c.demand_deadline_ms = 1)
+    });
+    let addr = server.addr;
+    let body = r#"{"prompt":"degrade","n_tokens":12,"greedy":true}"#;
+
+    let (status, buffered) = http_post(addr, "/generate", body).unwrap();
+    assert_eq!(status, 200, "{buffered}");
+    let v = json::parse(&buffered).unwrap();
+    assert_eq!(v.get("n_generated").as_usize(), Some(12), "degraded session cut short");
+    let text = v.get("text").as_str().unwrap().to_string();
+
+    let (status, chunks) = client_post_stream(addr, "/generate?stream=1", body).unwrap();
+    assert_eq!(status, 200, "{chunks:?}");
+    assert_eq!(chunks.concat(), text, "degraded streamed text diverged from buffered");
+
+    let m = fetch_metrics(addr);
+    assert!(
+        m.get("degraded_tokens").as_usize().unwrap() > 0,
+        "stalled experts never tripped the degrade path"
+    );
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(2));
+    assert_eq!(m.get("failed_sessions").as_usize(), Some(0));
+    assert_eq!(m.get("cancelled_sessions").as_usize(), Some(0));
 }

@@ -13,7 +13,7 @@ use moe_offload::runtime::native::NativeBackend;
 use moe_offload::serve::scheduler::{
     run_scheduler, RoundReport, Scheduler, SchedulerConfig, ServeSnapshot,
 };
-use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, ReplyTo};
+use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, Priority, ReplyTo};
 use moe_offload::sim::{cachesim, tracegen};
 use moe_offload::util::json::{self, Value};
 use moe_offload::util::quickcheck::{forall, Gen};
@@ -246,6 +246,7 @@ fn prop_serve_admission_exactly_once() {
                     prompt: format!("req {i}"),
                     n_tokens: 1 + (i % 12),
                     sampling: Sampling::Greedy,
+                    priority: Priority::Interactive,
                     reply: ReplyTo::Channel(tx),
                     enqueued,
                 };
@@ -377,6 +378,7 @@ fn prop_chunked_prefill_fair_and_bit_identical() {
                         prompt: prompt.clone(),
                         n_tokens: *n_tokens,
                         sampling,
+                        priority: Priority::Interactive,
                         reply: ReplyTo::Channel(tx),
                         enqueued: Instant::now(),
                     })
@@ -532,6 +534,7 @@ fn prop_round_batching_bit_identical() {
                         prompt: prompt.clone(),
                         n_tokens: *n_tokens,
                         sampling,
+                        priority: Priority::Interactive,
                         reply: ReplyTo::Channel(tx),
                         enqueued: Instant::now(),
                     })
@@ -603,6 +606,202 @@ fn prop_round_batching_bit_identical() {
                 "dedup ledger broken: rows {} − distinct {} != joins {}",
                 on_stats.batched_rows, on_stats.distinct_experts, on_stats.dedup_joins
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cancel_releases_everything() {
+    // mid-decode cancellation invariants (DESIGN.md §9), across random
+    // policies × prefetch on/off × chunk sizes × round budgets × cancel
+    // points:
+    //   * survivors decode bit-identically to a run that never contained
+    //     the cancelled sessions — cancellation is isolation, not noise;
+    //   * a cancelled session's reply channel drops unanswered, and within
+    //     one full turn of the cancel the engine owns no queued prefetch
+    //     for it;
+    //   * survivors never starve (deficit skip-streak ≤ max_sessions + 1)
+    //     even while cancels reshape the round mid-flight;
+    //   * the books stay exact: every cancel is counted, nothing lands in
+    //     failed_sessions, and the in-flight gauge ends at zero.
+    forall(6, |g: &mut Gen| {
+        let policy = *g.choose(&PolicyKind::all_online());
+        let prefetch = g.bool();
+        let chunk = *g.choose(&[0usize, 2, 4]);
+        let budget = *g.choose(&[0usize, 2, 6]);
+        let max_sessions = g.usize(2..=4);
+        let n_keep = g.usize(1..=3);
+        let n_doom = g.usize(1..=2);
+        let sampling = if g.bool() {
+            Sampling::Greedy
+        } else {
+            Sampling::TopP { temperature: 0.9, top_p: 0.9 }
+        };
+        let keepers: Vec<(String, usize)> = (0..n_keep)
+            .map(|i| (format!("keep {i}"), g.usize(2..=5)))
+            .collect();
+        // doomed sessions ask for far more tokens than any keeper, so the
+        // cancel always lands mid-decode
+        let doomed: Vec<(String, usize)> =
+            (0..n_doom).map(|i| (format!("doom {i}"), 40)).collect();
+        // session ids are assigned in admission (push) order: keepers get
+        // 1..=n_keep, doomed n_keep+1..; cancel each doomed session after
+        // a random number of generated tokens
+        let cancels: std::collections::HashMap<u64, u64> = (0..n_doom)
+            .map(|i| ((n_keep + 1 + i) as u64, g.usize(1..=5) as u64))
+            .collect();
+
+        let run = |requests: &[(String, usize)],
+                   cancels: &std::collections::HashMap<u64, u64>|
+         -> Result<(Vec<Option<String>>, u64), String> {
+            let cfg_model = ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY };
+            let weights = Arc::new(generate_weights(cfg_model, 7));
+            let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
+            let engine = InferenceEngine::new(
+                Box::new(NativeBackend::new(weights)),
+                store,
+                EngineConfig::serving(4, policy, prefetch),
+            );
+            let metrics = Arc::new(ServeMetrics::default());
+            let queue = AdmissionQueue::new(requests.len(), Arc::clone(&metrics));
+            let (completions, _completion_rx) = channel();
+            let mut rxs: Vec<Receiver<GenResult>> = Vec::new();
+            for (prompt, n_tokens) in requests {
+                let (tx, rx) = channel();
+                queue
+                    .try_push(GenRequest {
+                        prompt: prompt.clone(),
+                        n_tokens: *n_tokens,
+                        sampling,
+                        priority: Priority::Interactive,
+                        reply: ReplyTo::Channel(tx),
+                        enqueued: Instant::now(),
+                    })
+                    .ok()
+                    .ok_or("queue sized for the burst")?;
+                rxs.push(rx);
+            }
+            queue.close();
+            let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+            let mut sched = Scheduler::new(
+                engine,
+                queue,
+                completions,
+                SchedulerConfig {
+                    max_sessions,
+                    queue_timeout: None,
+                    prefill_chunk: chunk,
+                    round_budget_tokens: budget,
+                    round_batching: true,
+                },
+                Arc::clone(&metrics),
+                Arc::clone(&snapshot),
+            );
+            let mut generated: std::collections::HashMap<u64, u64> = Default::default();
+            let mut cancelled_at: std::collections::HashMap<u64, usize> = Default::default();
+            let mut starving: std::collections::HashMap<u64, usize> = Default::default();
+            let mut turns = 0usize;
+            while let Some(r) = sched.turn() {
+                turns += 1;
+                if turns > 100_000 {
+                    return Err("scheduler failed to terminate (liveness)".into());
+                }
+                for a in &r.advanced {
+                    if !a.prefill {
+                        *generated.entry(a.session).or_insert(0) += a.tokens as u64;
+                    }
+                    starving.remove(&a.session);
+                }
+                for &id in &r.skipped {
+                    let c = starving.entry(id).or_insert(0);
+                    *c += 1;
+                    if *c > max_sessions + 1 {
+                        return Err(format!(
+                            "session {id} skipped {c} consecutive rounds (round {}): starvation",
+                            r.round
+                        ));
+                    }
+                }
+                for (&id, &after) in cancels {
+                    if !cancelled_at.contains_key(&id)
+                        && generated.get(&id).copied().unwrap_or(0) >= after
+                    {
+                        if !sched.cancel(id) {
+                            return Err(format!("cancel({id}) found no active session"));
+                        }
+                        starving.remove(&id);
+                        cancelled_at.insert(id, turns);
+                    }
+                }
+                // one full turn after a cancel the engine must hold no
+                // queued prefetch for the dead session
+                for (&id, &at) in &cancelled_at {
+                    if turns > at && sched.engine().pending_prefetch_sessions().contains(&id) {
+                        return Err(format!(
+                            "cancelled session {id} still owns queued prefetches"
+                        ));
+                    }
+                }
+            }
+            if cancelled_at.len() != cancels.len() {
+                return Err("not every doomed session reached its cancel point".into());
+            }
+            let mut texts = Vec::new();
+            for (i, rx) in rxs.iter().enumerate() {
+                match rx.recv() {
+                    Ok(Ok(resp)) => {
+                        if resp.n_generated != requests[i].1 {
+                            return Err(format!(
+                                "request {i}: n_generated {} != {}",
+                                resp.n_generated, requests[i].1
+                            ));
+                        }
+                        texts.push(Some(resp.text));
+                    }
+                    Ok(Err(e)) => {
+                        return Err(format!("request {i} failed: {}", e.message));
+                    }
+                    // reply dropped undelivered: the cancelled session
+                    Err(_) => texts.push(None),
+                }
+            }
+            if metrics.inflight_sessions.load(Ordering::Relaxed) != 0 {
+                return Err(format!(
+                    "in-flight gauge leaked or underflowed: {}",
+                    metrics.inflight_sessions.load(Ordering::Relaxed)
+                ));
+            }
+            let snap = snapshot.lock().unwrap();
+            if snap.failed_sessions != 0 {
+                return Err(format!("{} sessions failed", snap.failed_sessions));
+            }
+            Ok((texts, metrics.cancelled_sessions.load(Ordering::Relaxed)))
+        };
+
+        let all: Vec<(String, usize)> =
+            keepers.iter().cloned().chain(doomed.iter().cloned()).collect();
+        let (ref_texts, ref_cancelled) = run(&keepers, &Default::default())?;
+        if ref_cancelled != 0 || ref_texts.iter().any(|t| t.is_none()) {
+            return Err("reference run lost sessions without any cancel".into());
+        }
+        let (texts, cancelled) = run(&all, &cancels)?;
+        if cancelled != n_doom as u64 {
+            return Err(format!("cancelled_sessions {cancelled} != {n_doom}"));
+        }
+        for i in 0..n_keep {
+            if texts[i] != ref_texts[i] {
+                return Err(format!(
+                    "{}/prefetch={prefetch}/chunk={chunk}/budget={budget}: survivor {i} \
+                     diverged from the cancel-free run",
+                    policy.name()
+                ));
+            }
+        }
+        for (i, t) in texts.iter().enumerate().skip(n_keep) {
+            if t.is_some() {
+                return Err(format!("cancelled request {i} was answered anyway"));
+            }
         }
         Ok(())
     });
