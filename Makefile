@@ -21,14 +21,21 @@ bench:
 # transfer_pipeline — demand-miss stall sync vs pipelined + pool reuse;
 # serve_concurrent — scheduler throughput, shared-cache amortization,
 # overload rejected/shed counts + queue-wait p99, and mixed long/short
-# TTFT p50/p99 with chunked prefill on vs off (fields asserted below).
+# TTFT p50/p99 with chunked prefill on vs off (fields asserted below);
+# tiered_store — RAM-budget sweep over the disk tier: per-budget RAM hit
+# rate + disk read p99 (monotonicity and cliff asserted in the bench).
 perf:
 	cargo bench --bench transfer_pipeline
 	cargo bench --bench serve_concurrent
+	cargo bench --bench tiered_store
 	@grep -q '"ttft_p50_ns"' BENCH_serve_concurrent.json || \
 		{ echo "BENCH_serve_concurrent.json missing TTFT p50"; exit 1; }
 	@grep -q '"ttft_p99_ns"' BENCH_serve_concurrent.json || \
 		{ echo "BENCH_serve_concurrent.json missing TTFT p99"; exit 1; }
+	@grep -q '"ram_hit_rate"' BENCH_tiered_store.json || \
+		{ echo "BENCH_tiered_store.json missing RAM hit rate"; exit 1; }
+	@grep -q '"disk_read_p99_ns"' BENCH_tiered_store.json || \
+		{ echo "BENCH_tiered_store.json missing disk read p99"; exit 1; }
 
 figures:
 	cargo run --release -- figures --out-dir results

@@ -38,6 +38,7 @@ fn bench_config(
                 prefetch: PrefetchConfig { enabled: spec, k: 2 },
                 transfer_workers,
                 profile: hardware::by_name("A6000").unwrap(),
+                disk: hardware::DiskProfile::default(),
                 seed: 0,
                 record_trace: false,
                 fetch_retries: 2,

@@ -1,0 +1,209 @@
+//! Bench: the disk tier under host RAM (`--host-cache-mb`). Replays a
+//! decode-shaped demand trace against tiered stores across a sweep of RAM
+//! budgets and reports per-budget RAM hit rate, disk promotions and disk
+//! read latency, plus an offline `replay_host_tier` sweep that prices the
+//! same budgets on the simulated disk. Writes `BENCH_tiered_store.json`
+//! (see EXPERIMENTS.md).
+//!
+//!     cargo bench --bench tiered_store [-- --smoke]
+
+use moe_offload::cache::PolicyKind;
+use moe_offload::model::weights::generate_weights;
+use moe_offload::model::ModelConfig;
+use moe_offload::offload::pipeline::BufferPool;
+use moe_offload::offload::store::{HostExpertStore, HostTierConfig};
+use moe_offload::quant::Scheme;
+use moe_offload::sim::hardware::DiskProfile;
+use moe_offload::sim::{cachesim, tracegen};
+use moe_offload::util::json::{self, Value};
+use moe_offload::util::rng::Rng;
+use std::sync::Arc;
+
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        vocab_size: 256,
+        hidden_size: 192,
+        n_layers: 4,
+        n_heads: 6,
+        n_experts: 8,
+        top_k: 2,
+        ffn_size: 768,
+        max_seq: 160,
+    }
+}
+
+/// Per-step demanded experts: `top_k` distinct experts per layer, with the
+/// mild temporal locality real gate traffic shows (every fourth step
+/// replays the previous step's picks).
+fn demand_schedule(cfg: &ModelConfig, steps: usize, seed: u64) -> Vec<Vec<(usize, usize)>> {
+    let mut rng = Rng::new(seed);
+    let mut prev: Option<Vec<(usize, usize)>> = None;
+    (0..steps)
+        .map(|i| {
+            if i % 4 == 3 {
+                if let Some(p) = &prev {
+                    return p.clone();
+                }
+            }
+            let mut step = Vec::new();
+            for l in 0..cfg.n_layers {
+                let first = rng.below(cfg.n_experts);
+                let mut second = rng.below(cfg.n_experts);
+                while second == first {
+                    second = rng.below(cfg.n_experts);
+                }
+                step.push((l, first));
+                step.push((l, second));
+            }
+            prev = Some(step.clone());
+            step
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let steps = if smoke { 12 } else { 200 };
+
+    let cfg = bench_config();
+    let weights = Arc::new(generate_weights(cfg, 42));
+    let scheme = Scheme::Int4 { block: 16 };
+    let ram = Arc::new(HostExpertStore::build(&weights, scheme).unwrap());
+    let entry_bytes = ram.expert_transfer_bytes();
+    let total_entries = cfg.n_layers * cfg.n_experts;
+    let schedule = demand_schedule(&cfg, steps, 7);
+    // RAM budgets in entries, smallest to the full expert set
+    let budgets = [4usize, 8, 16, total_entries];
+
+    // --- part 1: the live tiered store under a demand replay --------------
+    println!(
+        "== tiered_store: {} demand fetches, {} entries × {} B (int4) ==",
+        steps * cfg.n_layers * cfg.top_k,
+        total_entries,
+        entry_bytes
+    );
+    let mut live_rows = Vec::new();
+    let mut live_hit_rates = Vec::new();
+    let mut live_disk_p99 = Vec::new();
+    for &budget in &budgets {
+        let tier = HostTierConfig {
+            ram_budget_bytes: budget * entry_bytes,
+            policy: PolicyKind::Lru,
+            seed: 0,
+            spill_dir: None,
+        };
+        let store = Arc::new(HostExpertStore::build_tiered(&weights, scheme, &tier).unwrap());
+        // spot-check bit identity against the all-RAM store before timing
+        for &(l, e) in schedule[0].iter().take(2) {
+            assert_eq!(store.fetch(l, e), ram.fetch(l, e), "disk tier rewrote expert bytes");
+        }
+        let pool = BufferPool::new();
+        for step in &schedule {
+            for &(l, e) in step {
+                let (w1, w3, w2) = store.fetch_pooled(&pool, l, e);
+                pool.release(w1);
+                pool.release(w3);
+                pool.release(w2);
+            }
+        }
+        let ht = store.tier_stats();
+        assert_eq!(
+            ht.ram_hits + ht.disk_promotions,
+            ht.host_accesses,
+            "tier counters leak at budget {budget}"
+        );
+        println!(
+            "budget {budget:>2} entries: hit rate {:>5.1}%  promotions {:>5}  \
+             evictions {:>5}  disk p99 {:>9} ns",
+            100.0 * ht.ram_hit_rate(),
+            ht.disk_promotions,
+            ht.ram_evictions,
+            ht.disk_read_p99_ns
+        );
+        live_hit_rates.push(ht.ram_hit_rate());
+        live_disk_p99.push(ht.disk_read_p99_ns);
+        live_rows.push(Value::obj(vec![
+            ("budget_entries", Value::from(budget)),
+            ("budget_bytes", Value::from((budget * entry_bytes) as f64)),
+            ("ram_hit_rate", Value::from(ht.ram_hit_rate())),
+            ("ram_hits", Value::from(ht.ram_hits as f64)),
+            ("disk_promotions", Value::from(ht.disk_promotions as f64)),
+            ("ram_evictions", Value::from(ht.ram_evictions as f64)),
+            ("disk_read_ns", Value::from(ht.disk_read_ns as f64)),
+            ("disk_read_p99_ns", Value::from(ht.disk_read_p99_ns as f64)),
+        ]));
+    }
+
+    // --- part 2: offline RAM-budget sweep on the simulated disk ------------
+    let trace = tracegen::generate(&tracegen::TraceGenConfig {
+        n_layers: cfg.n_layers,
+        n_tokens: steps.max(20),
+        seed: 7,
+        ..Default::default()
+    });
+    let disk = DiskProfile::default();
+    let mut sim_rows = Vec::new();
+    let mut sim_hit_rates = Vec::new();
+    println!("== tiered_store: simulated sweep ({} tokens, SATA-class disk) ==", trace.n_tokens());
+    for &budget in &budgets {
+        let r = cachesim::replay_host_tier(
+            &trace,
+            PolicyKind::Lru,
+            4,
+            PolicyKind::Lru,
+            budget,
+            0,
+            disk,
+            entry_bytes,
+        );
+        println!(
+            "budget {budget:>2} entries: hit rate {:>5.1}%  disk {:>8.3} ms",
+            100.0 * r.host.ram_hit_rate(),
+            r.disk_s * 1e3
+        );
+        sim_hit_rates.push(r.host.ram_hit_rate());
+        sim_rows.push(Value::obj(vec![
+            ("budget_entries", Value::from(budget)),
+            ("ram_hit_rate", Value::from(r.host.ram_hit_rate())),
+            ("disk_promotions", Value::from(r.host.disk_promotions as f64)),
+            ("disk_s", Value::from(r.disk_s)),
+        ]));
+    }
+
+    let artifact = Value::obj(vec![
+        ("bench", Value::from("tiered_store")),
+        ("smoke", Value::from(smoke)),
+        ("scheme", Value::from("int4")),
+        ("entry_bytes", Value::from(entry_bytes)),
+        ("total_entries", Value::from(total_entries)),
+        ("live_replay", Value::Arr(live_rows)),
+        ("sim_sweep", Value::Arr(sim_rows)),
+    ]);
+    std::fs::write("BENCH_tiered_store.json", json::to_string(&artifact))
+        .expect("write BENCH_tiered_store.json");
+    println!("wrote BENCH_tiered_store.json");
+
+    // the sweep IS the perf gate: a LRU host tier is a stack algorithm, so
+    // the hit rate must be monotone in the budget, and bounding RAM far
+    // below the expert set must actually cost hit rate (the second cliff);
+    // not enforced in --smoke where the replay is too short to trust
+    if !smoke {
+        for rates in [&live_hit_rates, &sim_hit_rates] {
+            for w in rates.windows(2) {
+                assert!(
+                    w[1] >= w[0] - 1e-9,
+                    "hit rate not monotone in RAM budget: {rates:?}"
+                );
+            }
+            assert!(
+                rates[budgets.len() - 1] > rates[0] + 0.05,
+                "full-RAM budget shows no cliff over {} entries: {rates:?}",
+                budgets[0]
+            );
+        }
+        assert!(
+            live_disk_p99[0] > 0,
+            "no disk read latency recorded at the smallest budget"
+        );
+    }
+}

@@ -47,6 +47,7 @@ fn main() -> Result<()> {
             prefetch: PrefetchConfig { enabled: true, k: 2 },
             transfer_workers: 0,
             profile: hardware::by_name("A6000").unwrap(),
+            disk: hardware::DiskProfile::default(),
             seed: 0,
             record_trace: true,
             fetch_retries: 2,

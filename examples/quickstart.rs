@@ -77,6 +77,7 @@ fn main() -> Result<()> {
             prefetch: PrefetchConfig { enabled: args.bool("spec"), k: 2 },
             transfer_workers: 0,
             profile: hardware::by_name("A100").unwrap(),
+            disk: hardware::DiskProfile::default(),
             seed: 0,
             record_trace: true,
             fetch_retries: 2,

@@ -44,6 +44,7 @@ fn run_once(
             prefetch: PrefetchConfig { enabled: spec, k: 2 },
             transfer_workers,
             profile: hardware::by_name("A6000").unwrap(),
+            disk: hardware::DiskProfile::default(),
             seed: 0,
             record_trace: true,
             fetch_retries: 2,

@@ -32,7 +32,7 @@ use crate::offload::store::HostExpertStore;
 use crate::offload::transfer::{FaultAction, FaultPlan, TransferEngine};
 use crate::runtime::{Backend, ExpertHandle, KvState};
 use crate::sim::costmodel::TokenEvents;
-use crate::sim::hardware::{HwProfile, ModelScale};
+use crate::sim::hardware::{DiskProfile, HwProfile, ModelScale};
 use crate::trace::Trace;
 use crate::util::simclock::SimClock;
 use anyhow::Result;
@@ -58,6 +58,12 @@ pub struct EngineConfig {
     pub transfer_workers: usize,
     /// Hardware profile for the simulated clock.
     pub profile: HwProfile,
+    /// Disk profile for the tier under host RAM: when the store is tiered
+    /// (`HostExpertStore::build_tiered`) and a demanded/prefetched expert is
+    /// not RAM-resident, its disk read is charged to the simulated clock
+    /// ahead of the PCIe transfer (the second cliff, DESIGN.md §10).
+    /// Ignored for all-RAM stores.
+    pub disk: DiskProfile,
     pub seed: u64,
     /// Record the full activation/cache trace.
     pub record_trace: bool,
@@ -83,6 +89,7 @@ impl EngineConfig {
             prefetch: PrefetchConfig::default(),
             transfer_workers: 0,
             profile: crate::sim::hardware::physical()[0],
+            disk: DiskProfile::default(),
             seed: 0,
             record_trace: true,
             fetch_retries: 2,
@@ -314,14 +321,18 @@ impl InferenceEngine {
     /// hit and updates the sim clock for any stall. `session` attributes the
     /// lookup (and any cross-session prefetch credit) under concurrency.
     ///
-    /// On a miss the fault hook on [`TransferEngine`] is consulted first:
-    /// transient failures are retried up to `cfg.fetch_retries` times with
+    /// On a miss, when `deadline_s` is set the stall is estimated FIRST,
+    /// entirely side-effect-free: pending transient-retry backoff (peeked,
+    /// not consumed), any injected delay, the disk read when the expert is
+    /// not RAM-resident in a tiered store, plus the residual of a joinable
+    /// in-flight prefetch or a full transfer. A breach returns
+    /// `DeadlineBreached` before ANY fault is consumed or backoff charged —
+    /// the batched round's degrade path (DESIGN.md §9) takes it from there.
+    /// Only then does the fault hook on [`TransferEngine`] run: transient
+    /// failures are retried up to `cfg.fetch_retries` times with
     /// exponential virtual backoff, permanent failures bail (the caller's
     /// per-item isolation turns that into a failed session, not a downed
-    /// engine). When `deadline_s` is set and the estimated stall (injected
-    /// delay plus residual or full transfer time) exceeds it, the fetch is
-    /// abandoned side-effect-free and `DeadlineBreached` returned — the
-    /// batched round's degrade path (DESIGN.md §9) takes it from there.
+    /// engine).
     fn ensure_resident(
         &mut self,
         session: u64,
@@ -344,10 +355,51 @@ impl InferenceEngine {
             }
             return Ok(EnsureOutcome::Resident { hit: true });
         }
-        // miss: before paying for anything, run the injected-fault ladder.
-        // Transient failures retry with exponential virtual backoff until
-        // the budget runs out; the backoff is charged to the sim clock so
-        // retried fetches are visibly slower, not silently free.
+        // miss: a demand fetch that is not RAM-resident in a tiered store
+        // pays a disk read ahead of the PCIe hop. Probe residency NOW,
+        // before anything promotes the expert (the fetch below does), and
+        // remember the charge for the bus reservation.
+        let disk_s = if self.store.ram_resident(l, e) {
+            0.0
+        } else {
+            self.cfg.disk.read_time(self.store.expert_transfer_bytes())
+        };
+        // deadline gate FIRST, side-effect-free: estimate the stall this
+        // demand transfer would cost — pending transient-retry backoff
+        // (peeked via the non-consuming fault accessors, capped at the
+        // retry budget), injected delay, the disk read, and the residual
+        // of a joinable in-flight prefetch or a full transfer when there
+        // is nothing to join (a join's disk read was charged at prefetch
+        // issue, so it is not re-added). Breaching callers get out before
+        // any fault is consumed, backoff charged, or bus slot reserved —
+        // the shared-cache miss counted by the failed residency probe
+        // above is the only trace, and the caller attributes it.
+        if let Some(deadline) = deadline_s {
+            let now = self.clock.now();
+            let retries = self
+                .transfer
+                .fault
+                .pending_transients(l, e)
+                .min(self.cfg.fetch_retries as u32);
+            let backoff_s: f64 = (1..=retries)
+                .map(|i| FETCH_BACKOFF_BASE_S * (1u64 << (i - 1)) as f64)
+                .sum();
+            let residual = self
+                .pending_prefetch
+                .iter()
+                .find(|p| p.layer == l && p.expert == e)
+                .map(|p| (p.done_at - now).max(0.0));
+            let stall = backoff_s
+                + self.transfer.fault.peek_delay(l, e)
+                + residual.unwrap_or_else(|| disk_s + self.transfer_s());
+            if stall > deadline {
+                return Ok(EnsureOutcome::DeadlineBreached);
+            }
+        }
+        // injected-fault ladder, only past the gate. Transient failures
+        // retry with exponential virtual backoff until the budget runs
+        // out; the backoff is charged to the sim clock so retried fetches
+        // are visibly slower, not silently free.
         let mut attempt: usize = 0;
         let extra_delay_s = loop {
             match self.transfer.fault.check(l, e) {
@@ -371,25 +423,6 @@ impl InferenceEngine {
                 }
             }
         };
-        // deadline gate: estimate the stall this demand transfer would cost
-        // (injected delay + the residual of a joinable in-flight prefetch,
-        // or a full transfer when there is nothing to join). Breaching
-        // callers get out BEFORE the fetch so no clock, bus, cache, or
-        // cost-model state is touched — the shared-cache miss counted by
-        // the failed residency probe above is the only trace, and the
-        // caller attributes it.
-        if let Some(deadline) = deadline_s {
-            let now = self.clock.now();
-            let residual = self
-                .pending_prefetch
-                .iter()
-                .find(|p| p.layer == l && p.expert == e)
-                .map(|p| (p.done_at - now).max(0.0));
-            let stall = extra_delay_s + residual.unwrap_or_else(|| self.transfer_s());
-            if stall > deadline {
-                return Ok(EnsureOutcome::DeadlineBreached);
-            }
-        }
         // injected stall (e.g. a degraded PCIe link for this expert): paid
         // on the critical path, before the transfer itself
         if extra_delay_s > 0.0 {
@@ -458,10 +491,11 @@ impl InferenceEngine {
             // the transfer. A join NEVER re-reserves the bus (asserted by
             // the byte-parity check in benches/transfer_pipeline.rs).
             None if joined => {}
-            // fresh (or superseding) demand transfer: full bus reservation
+            // fresh (or superseding) demand transfer: full bus reservation,
+            // behind the disk read when the expert was not RAM-resident
             _ => {
                 let now = self.clock.now();
-                let done = self.transfer.schedule_bus(now, self.transfer_s());
+                let done = self.transfer.schedule_bus(now + disk_s, self.transfer_s());
                 self.clock.advance(done - now);
             }
         }
@@ -538,9 +572,16 @@ impl InferenceEngine {
                 continue; // already being fetched: joining is free too
             }
             // transfer early; simulated completion is bus-serialized but NOT
-            // awaited — compute continues (overlap)
+            // awaited — compute continues (overlap). A RAM-missing expert in
+            // a tiered store pays its disk read ahead of the PCIe hop;
+            // probed before the worker promotes it.
             let now = self.clock.now();
-            let done = self.transfer.schedule_bus(now, self.transfer_s());
+            let disk_s = if self.store.ram_resident(next_layer, e) {
+                0.0
+            } else {
+                self.cfg.disk.read_time(self.store.expert_transfer_bytes())
+            };
+            let done = self.transfer.schedule_bus(now + disk_s, self.transfer_s());
             // a re-prefetch supersedes any stale record for this expert
             self.drop_pending_prefetch(next_layer, e);
             self.pending_prefetch.push(PendingPrefetch {
@@ -1202,6 +1243,11 @@ impl InferenceEngine {
     pub fn fetch_retries_performed(&self) -> u64 {
         self.transfer.stats.retries
     }
+    /// Host-tier (RAM-over-disk) counters of the underlying expert store:
+    /// all zeros for an all-RAM store (`/metrics` → `host_tier`).
+    pub fn host_tier_stats(&self) -> crate::metrics::HostTierStats {
+        self.store.tier_stats()
+    }
     /// Sessions with at least one in-flight prefetch record — the serve
     /// layer's post-cancel invariant check ("no queued prefetch tagged to a
     /// dead session").
@@ -1356,6 +1402,28 @@ mod tests {
         let t = eng.session_tally(1);
         assert_eq!(t.hits, total.hits);
         assert_eq!(t.misses, total.misses);
+    }
+
+    #[test]
+    fn deadline_gate_runs_before_the_retry_ladder() {
+        // transient faults whose estimated backoff alone (2 ms for one
+        // pending retry) breaches a 1 ms deadline: the gate must exit
+        // side-effect-free — degrading the round WITHOUT consuming a fault,
+        // charging a retry, or advancing the clock for backoff
+        let mut eng = engine_with(|c| {
+            c.demand_deadline_ms = 1;
+            c.fetch_retries = 2;
+        });
+        let mc = *eng.config();
+        eng.inject_faults(plan_all(&mc, |p, l, e| p.fail_transient(l, e, 1)));
+        let tokens = run_rounds(&mut eng, true);
+        assert_eq!(tokens.len(), 3 + 5, "degraded session must still finish");
+        assert!(eng.degraded_tokens() > 0, "no degrade recorded");
+        assert_eq!(
+            eng.fetch_retries_performed(),
+            0,
+            "deadline breach consumed transient faults before the gate"
+        );
     }
 
     #[test]

@@ -162,6 +162,7 @@ pub fn check_decode(
             prefetch: PrefetchConfig::default(),
             transfer_workers: 0,
             profile: crate::sim::hardware::physical()[0],
+            disk: crate::sim::hardware::DiskProfile::default(),
             seed: 0,
             record_trace: true,
             fetch_retries: 2,

@@ -31,6 +31,16 @@
 //!                                          interactive rounds degrade around
 //!                                          an expert stalled past N ms instead
 //!                                          of waiting (0 = never degrade)
+//!              --host-cache-mb N           bound the host RAM tier to N MB;
+//!                                          colder quantized experts spill to
+//!                                          disk and are promoted back on
+//!                                          demand (0 = everything in RAM)
+//!              --disk-read-mbps N          simulated read bandwidth of the
+//!                                          disk tier under host RAM
+//!                                          (0 = SATA-SSD class default)
+//!              --retry-after-s N           Retry-After seconds advertised by
+//!                                          every admission-control 503
+//!                                          (default 1)
 //!              --synthetic                 seeded synthetic weights + native
 //!                                          backend, works from a clean checkout
 //!              POST /generate?stream=1 streams chunked text as it decodes;
@@ -45,7 +55,7 @@ use moe_offload::model::sampler::{Sampler, Sampling};
 use moe_offload::model::tokenizer::Tokenizer;
 use moe_offload::model::Weights;
 use moe_offload::offload::prefetch::PrefetchConfig;
-use moe_offload::offload::store::HostExpertStore;
+use moe_offload::offload::store::{HostExpertStore, HostTierConfig};
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::{artifacts::Artifacts, native::NativeBackend, pjrt::PjrtBackend, Backend};
 use moe_offload::sim::{cachesim, costmodel::CostModel, hardware, tracegen};
@@ -128,18 +138,36 @@ fn engine_from_args(args: &Args, loaded: &Loaded) -> Result<InferenceEngine> {
     let backend = make_backend(&args.str_or("backend", "pjrt"), loaded)?;
     let scheme = Scheme::parse(&args.str_or("quant", "int4"))
         .ok_or_else(|| anyhow::anyhow!("bad --quant (f32|int8|int4)"))?;
-    let store = Arc::new(HostExpertStore::build(&loaded.weights, scheme)?);
     let policy = PolicyKind::parse(&args.str_or("policy", "lru"))
         .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let host_cache_mb = args.usize_or("host-cache-mb", 0)?;
+    let store = if host_cache_mb > 0 {
+        let tier = HostTierConfig {
+            ram_budget_bytes: host_cache_mb << 20,
+            policy,
+            seed,
+            spill_dir: Some(loaded.artifacts.expert_spill_dir()),
+        };
+        Arc::new(HostExpertStore::build_tiered(&loaded.weights, scheme, &tier)?)
+    } else {
+        Arc::new(HostExpertStore::build(&loaded.weights, scheme)?)
+    };
     let profile = hardware::by_name(&args.str_or("profile", "A100"))
         .ok_or_else(|| anyhow::anyhow!("bad --profile (A100|A6000|L40|RTX3090)"))?;
+    let disk_read_mbps = args.usize_or("disk-read-mbps", 0)?;
     let cfg = EngineConfig {
         cache_capacity: args.usize_or("capacity", 4)?,
         policy,
         prefetch: PrefetchConfig { enabled: args.bool("spec"), k: args.usize_or("spec-k", 2)? },
         transfer_workers: EngineConfig::transfer_workers_from(args)?,
         profile,
-        seed: args.usize_or("seed", 0)? as u64,
+        disk: if disk_read_mbps > 0 {
+            hardware::DiskProfile::from_mbps(disk_read_mbps as f64)
+        } else {
+            hardware::DiskProfile::default()
+        },
+        seed,
         record_trace: true,
         fetch_retries: args.usize_or("fetch-retries", 2)?,
         demand_deadline_ms: args.usize_or("demand-deadline-ms", 0)? as u64,

@@ -212,8 +212,12 @@ impl LatencyHisto {
     }
 
     /// Approximate `q`-quantile in ns (upper bound of the rank's bucket);
-    /// 0 when no samples were recorded.
+    /// 0 when no samples were recorded. The top bucket `[2^63, u64::MAX]`
+    /// has no finite power-of-two upper bound, so ranks landing there
+    /// saturate to its lower bound `2^63` — a guaranteed floor — instead
+    /// of serializing a nonsense 1.8e19 sentinel into `/metrics`.
     pub fn percentile_ns(&self, q: f64) -> u64 {
+        const TOP_BUCKET_NS: u64 = 1u64 << 63;
         let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
         let total: u64 = counts.iter().sum();
         if total == 0 {
@@ -224,10 +228,10 @@ impl LatencyHisto {
         for (i, c) in counts.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+                return if i >= 63 { TOP_BUCKET_NS } else { (1u64 << (i + 1)) - 1 };
             }
         }
-        u64::MAX
+        TOP_BUCKET_NS
     }
 }
 
@@ -291,6 +295,39 @@ impl ServeMetrics {
     pub fn rejected_total(&self) -> u64 {
         self.rejected_backpressure.load(Ordering::Relaxed)
             + self.rejected_inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// Host-tier (RAM→disk) counters for the tiered expert store (DESIGN.md
+/// §10): every host access lands in exactly one of `ram_hits` (entry was
+/// resident in the budgeted RAM cache) or `disk_promotions` (entry was
+/// read from the spill file and promoted), so
+/// `ram_hits + disk_promotions == host_accesses` always holds. All zeros
+/// when the store runs unbounded (all-RAM backing).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HostTierStats {
+    /// Host accesses served from the RAM cache.
+    pub ram_hits: u64,
+    /// Host accesses that missed RAM and promoted the entry from disk.
+    pub disk_promotions: u64,
+    /// RAM-cache entries evicted to make room for a promotion.
+    pub ram_evictions: u64,
+    /// Total wallclock nanoseconds spent in disk reads.
+    pub disk_read_ns: u64,
+    /// p99 of individual disk-read latencies (bucketed, see
+    /// [`LatencyHisto::percentile_ns`]).
+    pub disk_read_p99_ns: u64,
+    /// Total host-store accesses (`ram_hits + disk_promotions`).
+    pub host_accesses: u64,
+}
+
+impl HostTierStats {
+    /// Fraction of host accesses served without touching disk (0.0 idle).
+    pub fn ram_hit_rate(&self) -> f64 {
+        if self.host_accesses == 0 {
+            return 0.0;
+        }
+        self.ram_hits as f64 / self.host_accesses as f64
     }
 }
 
@@ -433,7 +470,42 @@ mod tests {
         h.record_ns(u64::MAX);
         assert_eq!(h.count(), 2);
         assert_eq!(h.percentile_ns(0.25), 1); // bucket 0 upper bound
-        assert_eq!(h.percentile_ns(1.0), u64::MAX);
+        // top bucket saturates to its lower bound 2^63, not u64::MAX
+        assert_eq!(h.percentile_ns(1.0), 1u64 << 63);
+    }
+
+    #[test]
+    fn histo_top_bucket_saturates_not_sentinel() {
+        // every sample in the top bucket [2^63, u64::MAX]: all quantiles
+        // must report the bucket's finite floor, never the old u64::MAX
+        // sentinel that serialized as a nonsense 1.8e19 ns gauge
+        let h = LatencyHisto::default();
+        for _ in 0..5 {
+            h.record_ns(1u64 << 63);
+        }
+        h.record_ns(u64::MAX);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.percentile_ns(q), 1u64 << 63, "q={q}");
+        }
+        // one bucket down still reports its exact finite upper bound
+        let h2 = LatencyHisto::default();
+        h2.record_ns((1u64 << 62) + 17);
+        assert_eq!(h2.percentile_ns(1.0), (1u64 << 63) - 1);
+    }
+
+    #[test]
+    fn host_tier_stats_hit_rate_and_invariant() {
+        let s = HostTierStats {
+            ram_hits: 30,
+            disk_promotions: 10,
+            ram_evictions: 4,
+            disk_read_ns: 1_000,
+            disk_read_p99_ns: 200,
+            host_accesses: 40,
+        };
+        assert_eq!(s.ram_hits + s.disk_promotions, s.host_accesses);
+        assert_eq!(s.ram_hit_rate(), 0.75);
+        assert_eq!(HostTierStats::default().ram_hit_rate(), 0.0);
     }
 
     #[test]

@@ -16,6 +16,14 @@
 //! because the PJRT client is not shared across threads; the native backend
 //! takes ownership of the pooled buffers directly, which is what lets the
 //! eviction path recycle them.
+//!
+//! With a tiered store (`HostExpertStore::build_tiered`, DESIGN.md §10) the
+//! disk read stage rides the same two-priority queue for free: a worker's
+//! `fetch_pooled` promotes a RAM-missing expert from the spill file *before*
+//! dequantizing, so demand misses preempt speculative jobs at the disk tier
+//! exactly as they do at the dequant tier, and concurrent workers demanding
+//! the same `(layer, expert)` dedup inside the store's in-flight set (one
+//! pread, everyone else waits on the promoted entry).
 
 use crate::metrics::PipelineStats;
 use crate::offload::store::HostExpertStore;
@@ -543,6 +551,43 @@ mod tests {
         pool.release(b);
         let c = pool.acquire(16);
         assert_eq!(c.len(), 16);
+    }
+
+    #[test]
+    fn tiered_store_under_pipeline_matches_ram_and_dedups_disk_reads() {
+        use crate::offload::store::HostTierConfig;
+        let w = synth_weights(ModelConfig::TINY, |_, i| (i % 5) as f32 * 0.02);
+        let scheme = Scheme::Int8 { block: 16 };
+        let ram = HostExpertStore::build(&w, scheme).unwrap();
+        // RAM budget of 2 entries: the 8-expert sweep churns the tier while
+        // 3 workers race promotions through the spill file
+        let cfg = HostTierConfig::new(2 * ram.expert_transfer_bytes());
+        let tiered = Arc::new(HostExpertStore::build_tiered(&w, scheme, &cfg).unwrap());
+        let mut p = TransferPipeline::spawn(Arc::clone(&tiered), BufferPool::new(), 3);
+        for round in 0..3 {
+            for e in 0..8 {
+                if round % 2 == 0 {
+                    p.submit_prefetch(1, e);
+                } else {
+                    p.submit_demand(1, e);
+                }
+            }
+            for e in 0..8 {
+                let r = p.wait_for(1, e).expect("worker result");
+                let (w1, w3, w2) = ram.fetch(1, e);
+                assert_eq!(r.w1, w1, "round {round} expert {e} w1 diverged");
+                assert_eq!(r.w3, w3);
+                assert_eq!(r.w2, w2);
+            }
+        }
+        let s = tiered.tier_stats();
+        assert_eq!(s.host_accesses, 24, "3 rounds × 8 experts");
+        assert_eq!(
+            s.ram_hits + s.disk_promotions,
+            s.host_accesses,
+            "every access is a hit or a promotion, even under worker races"
+        );
+        assert!(s.ram_evictions > 0, "a 2-entry budget must churn");
     }
 
     #[test]

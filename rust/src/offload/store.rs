@@ -1,15 +1,35 @@
-//! Host expert store — the paper's "experts stored in main memory".
+//! Host expert store — the paper's "experts stored in main memory", with
+//! an optional disk tier underneath (DESIGN.md §10).
 //!
 //! All expert tensors are re-encoded once at startup with the configured
 //! quantization scheme (paper: HQQ 2-bit group-16; here: block-wise int4 /
-//! int8 / f32, DESIGN.md §3) and held in host memory. A cache miss
-//! dequantizes (`fetch` -> f32) and uploads; the quantized byte count is
-//! what crosses the simulated PCIe bus.
+//! int8 / f32, DESIGN.md §3). With the default all-RAM backing every
+//! quantized expert lives in host memory; with [`HostTierConfig`] the
+//! quantized bytes are spilled to disk instead and only a
+//! `--host-cache-mb`-bounded working set is promoted into RAM on demand,
+//! evicted by any online `cache/` policy. A cache miss dequantizes
+//! (`fetch` -> f32) and uploads; the quantized byte count is what crosses
+//! the simulated PCIe bus, and — in tiered mode — what crosses the real
+//! disk first.
+//!
+//! Promotion is concurrency-safe under the multi-worker transfer
+//! pipeline: a per-key loading set dedups in-flight disk reads (the first
+//! thread preads outside the tier lock, later arrivals wait on a condvar
+//! and take the promoted entry as a RAM hit), so demand and speculative
+//! fetches of the same expert never read the spill twice.
 
+use crate::cache::{LayerCache, PolicyKind};
+use crate::metrics::{HostTierStats, LatencyHisto};
 use crate::model::Weights;
 use crate::offload::pipeline::BufferPool;
 use crate::quant::{QTensor, Scheme};
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 pub struct ExpertEntry {
     pub w1: QTensor,
@@ -21,31 +41,157 @@ impl ExpertEntry {
     pub fn storage_bytes(&self) -> usize {
         self.w1.storage_bytes() + self.w3.storage_bytes() + self.w2.storage_bytes()
     }
+
+    /// Spill-file image: the three tensors' [`QTensor::to_bytes`] forms
+    /// back to back (w1, w3, w2). Exactly [`ExpertEntry::storage_bytes`].
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = self.w1.to_bytes();
+        out.extend_from_slice(&self.w3.to_bytes());
+        out.extend_from_slice(&self.w2.to_bytes());
+        out
+    }
+}
+
+/// Configuration for the RAM→disk host tier ([`HostExpertStore::build_tiered`]).
+#[derive(Clone, Debug)]
+pub struct HostTierConfig {
+    /// RAM budget for promoted experts, in bytes (`--host-cache-mb` × 2²⁰).
+    /// Rounded down to whole entries, floor one entry.
+    pub ram_budget_bytes: usize,
+    /// Eviction policy at the host tier — any online `cache/` policy
+    /// (Belady is rejected: the host tier has no future trace).
+    pub policy: PolicyKind,
+    pub seed: u64,
+    /// Directory for the spill file; the system temp dir when `None`. The
+    /// file is unlinked right after opening on unix (private scratch).
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl HostTierConfig {
+    pub fn new(ram_budget_bytes: usize) -> HostTierConfig {
+        HostTierConfig {
+            ram_budget_bytes,
+            policy: PolicyKind::Lru,
+            seed: 0,
+            spill_dir: None,
+        }
+    }
+}
+
+/// Positioned reads over the spill file. One trait so the backing can be
+/// swapped (pread today; an mmap reader would slot in here) and so tests
+/// can fault-inject. `read_at` must be callable concurrently — the
+/// transfer pipeline's workers promote in parallel.
+pub trait ExpertReader: Send + Sync {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()>;
+}
+
+/// pread-backed reader. On unix `read_exact_at` needs no seek state, so
+/// concurrent reads share the bare fd; elsewhere a mutexed seek+read
+/// fallback keeps the same contract.
+pub struct SpillReader {
+    #[cfg(unix)]
+    file: File,
+    #[cfg(not(unix))]
+    file: Mutex<File>,
+}
+
+impl SpillReader {
+    pub fn new(file: File) -> SpillReader {
+        #[cfg(unix)]
+        {
+            SpillReader { file }
+        }
+        #[cfg(not(unix))]
+        {
+            SpillReader { file: Mutex::new(file) }
+        }
+    }
+}
+
+impl ExpertReader for SpillReader {
+    #[cfg(unix)]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        std::os::unix::fs::FileExt::read_exact_at(&self.file, buf, offset)
+    }
+
+    #[cfg(not(unix))]
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        f.read_exact(buf)
+    }
+}
+
+/// RAM cache + loading set. The cache's own `CacheStats` are ignored —
+/// the tier's atomics below are the source of truth (they also count the
+/// waits that resolve as hits after a peer's promotion).
+struct TierState {
+    /// Flattened key `layer * n_experts + expert` → promoted entry.
+    cache: LayerCache<Arc<ExpertEntry>>,
+    /// Keys with a disk read in flight (in-flight join dedup).
+    loading: HashSet<usize>,
+}
+
+struct DiskTier {
+    reader: Box<dyn ExpertReader>,
+    state: Mutex<TierState>,
+    /// Signalled after every promotion completes (or fails over).
+    loaded: Condvar,
+    ram_hits: AtomicU64,
+    disk_promotions: AtomicU64,
+    ram_evictions: AtomicU64,
+    disk_read_ns: AtomicU64,
+    host_accesses: AtomicU64,
+    read_histo: LatencyHisto,
+}
+
+enum Backing {
+    /// Every quantized expert resident (the original unbounded store).
+    Ram(Vec<ExpertEntry>),
+    /// Spill file + budgeted RAM cache.
+    Tiered(DiskTier),
+}
+
+/// Resolved entry for one fetch: a borrow from the RAM backing, or a
+/// promoted (possibly shared) entry pinned for the duration of the fetch.
+enum EntryRef<'a> {
+    Ram(&'a ExpertEntry),
+    Promoted(Arc<ExpertEntry>),
+}
+
+impl EntryRef<'_> {
+    fn get(&self) -> &ExpertEntry {
+        match self {
+            EntryRef::Ram(e) => e,
+            EntryRef::Promoted(a) => a,
+        }
+    }
 }
 
 pub struct HostExpertStore {
     pub scheme: Scheme,
     pub n_layers: usize,
     pub n_experts: usize,
-    /// entries[layer * n_experts + expert]
-    entries: Vec<ExpertEntry>,
+    backing: Backing,
     /// Worst-case dequantization error bound across all experts.
     pub max_error_bound: f32,
+    /// Quantized bytes of one expert (all experts share a shape).
+    entry_bytes: usize,
+    /// f32 element counts of (w1, w3, w2) — reconstructs spill entries.
+    lens: (usize, usize, usize),
 }
 
 impl HostExpertStore {
-    /// Quantize every expert in `weights` into host storage.
+    /// Quantize every expert in `weights` into host storage (all-RAM).
     pub fn build(weights: &Weights, scheme: Scheme) -> Result<HostExpertStore> {
         let c = &weights.config;
         let mut entries = Vec::with_capacity(c.n_layers * c.n_experts);
         let mut max_err = 0.0f32;
         for l in 0..c.n_layers {
             for e in 0..c.n_experts {
-                let entry = ExpertEntry {
-                    w1: QTensor::quantize(weights.expert(l, e, "w1")?, scheme),
-                    w3: QTensor::quantize(weights.expert(l, e, "w3")?, scheme),
-                    w2: QTensor::quantize(weights.expert(l, e, "w2")?, scheme),
-                };
+                let entry = quantize_expert(weights, l, e, scheme)?;
                 max_err = max_err
                     .max(entry.w1.max_abs_error_bound())
                     .max(entry.w3.max_abs_error_bound())
@@ -53,24 +199,190 @@ impl HostExpertStore {
                 entries.push(entry);
             }
         }
+        let entry_bytes = entries.first().map_or(0, |e| e.storage_bytes());
+        let lens = entries
+            .first()
+            .map_or((0, 0, 0), |e| (e.w1.len, e.w3.len, e.w2.len));
         Ok(HostExpertStore {
             scheme,
             n_layers: c.n_layers,
             n_experts: c.n_experts,
-            entries,
+            backing: Backing::Ram(entries),
             max_error_bound: max_err,
+            entry_bytes,
+            lens,
         })
     }
 
-    pub fn entry(&self, layer: usize, expert: usize) -> &ExpertEntry {
-        &self.entries[layer * self.n_experts + expert]
+    /// Quantize every expert straight to a disk spill file and keep only a
+    /// `ram_budget_bytes`-bounded RAM cache, promoted on demand. The spill
+    /// is written expert by expert, so peak build memory is one expert —
+    /// the corpus never lives in RAM.
+    pub fn build_tiered(
+        weights: &Weights,
+        scheme: Scheme,
+        tier: &HostTierConfig,
+    ) -> Result<HostExpertStore> {
+        if matches!(tier.policy, PolicyKind::Belady) {
+            bail!("belady needs the future trace; the host tier evicts online");
+        }
+        let c = &weights.config;
+        let dir = tier.spill_dir.clone().unwrap_or_else(std::env::temp_dir);
+        // pid + sequence: unique across processes AND across stores built
+        // concurrently inside one process (tests build many)
+        static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = dir.join(format!(
+            "moe-experts-{}-{}-{}.spill",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed),
+            scheme.name()
+        ));
+        let mut out = std::io::BufWriter::new(
+            File::create(&path)
+                .with_context(|| format!("create spill file {}", path.display()))?,
+        );
+        let mut max_err = 0.0f32;
+        let mut entry_bytes = 0usize;
+        let mut lens = (0usize, 0usize, 0usize);
+        for l in 0..c.n_layers {
+            for e in 0..c.n_experts {
+                let entry = quantize_expert(weights, l, e, scheme)?;
+                max_err = max_err
+                    .max(entry.w1.max_abs_error_bound())
+                    .max(entry.w3.max_abs_error_bound())
+                    .max(entry.w2.max_abs_error_bound());
+                let bytes = entry.to_bytes();
+                if l == 0 && e == 0 {
+                    entry_bytes = bytes.len();
+                    lens = (entry.w1.len, entry.w3.len, entry.w2.len);
+                } else {
+                    // fixed stride is what makes pread offsets trivial
+                    assert_eq!(bytes.len(), entry_bytes, "expert shapes must match");
+                }
+                out.write_all(&bytes)
+                    .with_context(|| format!("write spill file {}", path.display()))?;
+            }
+        }
+        out.flush()
+            .with_context(|| format!("flush spill file {}", path.display()))?;
+        drop(out);
+        let file = File::open(&path)
+            .with_context(|| format!("reopen spill file {}", path.display()))?;
+        // private scratch: on unix the open fd keeps the data readable
+        // after unlink and the kernel reclaims the space when we exit
+        #[cfg(unix)]
+        let _ = std::fs::remove_file(&path);
+        let capacity = if entry_bytes == 0 {
+            1
+        } else {
+            (tier.ram_budget_bytes / entry_bytes).max(1)
+        };
+        Ok(HostExpertStore {
+            scheme,
+            n_layers: c.n_layers,
+            n_experts: c.n_experts,
+            backing: Backing::Tiered(DiskTier {
+                reader: Box::new(SpillReader::new(file)),
+                state: Mutex::new(TierState {
+                    cache: LayerCache::new(
+                        capacity,
+                        tier.policy.build(tier.seed, None),
+                    ),
+                    loading: HashSet::new(),
+                }),
+                loaded: Condvar::new(),
+                ram_hits: AtomicU64::new(0),
+                disk_promotions: AtomicU64::new(0),
+                ram_evictions: AtomicU64::new(0),
+                disk_read_ns: AtomicU64::new(0),
+                host_accesses: AtomicU64::new(0),
+                read_histo: LatencyHisto::default(),
+            }),
+            max_error_bound: max_err,
+            entry_bytes,
+            lens,
+        })
+    }
+
+    fn resolve(&self, layer: usize, expert: usize) -> EntryRef<'_> {
+        match &self.backing {
+            Backing::Ram(entries) => {
+                EntryRef::Ram(&entries[layer * self.n_experts + expert])
+            }
+            Backing::Tiered(t) => EntryRef::Promoted(self.promote(t, layer, expert)),
+        }
+    }
+
+    /// One host-tier access: RAM hit, in-flight join, or disk promotion.
+    /// Exactly one of `ram_hits`/`disk_promotions` is incremented per call,
+    /// so `ram_hits + disk_promotions == host_accesses` is an invariant.
+    fn promote(&self, t: &DiskTier, layer: usize, expert: usize) -> Arc<ExpertEntry> {
+        let key = layer * self.n_experts + expert;
+        t.host_accesses.fetch_add(1, Ordering::Relaxed);
+        let mut st = t.state.lock().unwrap();
+        loop {
+            if let Some(e) = st.cache.access(key) {
+                t.ram_hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(e);
+            }
+            if st.loading.insert(key) {
+                break; // we are the loader for this key
+            }
+            // a peer is reading this key from disk: wait, then re-check
+            // (usually a hit; a miss means it was already evicted and we
+            // become the next loader)
+            st = t.loaded.wait(st).unwrap();
+        }
+        drop(st); // the pread runs outside the tier lock
+        let mut buf = vec![0u8; self.entry_bytes];
+        let t0 = std::time::Instant::now();
+        let read = t
+            .reader
+            .read_at((key * self.entry_bytes) as u64, &mut buf);
+        let ns = t0.elapsed().as_nanos() as u64;
+        let entry = match read {
+            Ok(()) => Arc::new(self.entry_from_bytes(&buf)),
+            Err(e) => {
+                // unblock waiters before dying: they must not deadlock on
+                // a loader that will never notify
+                let mut st = t.state.lock().unwrap();
+                st.loading.remove(&key);
+                drop(st);
+                t.loaded.notify_all();
+                panic!("spill read (layer {layer}, expert {expert}): {e}");
+            }
+        };
+        t.disk_promotions.fetch_add(1, Ordering::Relaxed);
+        t.disk_read_ns.fetch_add(ns, Ordering::Relaxed);
+        t.read_histo.record_ns(ns);
+        let mut st = t.state.lock().unwrap();
+        if st.cache.insert(key, Arc::clone(&entry)).is_some() {
+            t.ram_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        st.loading.remove(&key);
+        drop(st);
+        t.loaded.notify_all();
+        entry
+    }
+
+    fn entry_from_bytes(&self, bytes: &[u8]) -> ExpertEntry {
+        let (l1, l3, l2) = self.lens;
+        let b1 = self.scheme.storage_bytes(l1);
+        let b3 = self.scheme.storage_bytes(l3);
+        let b2 = self.scheme.storage_bytes(l2);
+        ExpertEntry {
+            w1: QTensor::from_bytes(self.scheme, l1, &bytes[..b1]),
+            w3: QTensor::from_bytes(self.scheme, l3, &bytes[b1..b1 + b3]),
+            w2: QTensor::from_bytes(self.scheme, l2, &bytes[b1 + b3..b1 + b3 + b2]),
+        }
     }
 
     /// Dequantize one expert to f32 (the CPU half of a transfer),
     /// allocating fresh buffers. Prefer [`HostExpertStore::fetch_into`] with
     /// pooled buffers on the hot path.
     pub fn fetch(&self, layer: usize, expert: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let e = self.entry(layer, expert);
+        let r = self.resolve(layer, expert);
+        let e = r.get();
         (e.w1.dequantize(), e.w3.dequantize(), e.w2.dequantize())
     }
 
@@ -78,19 +390,24 @@ impl HostExpertStore {
     /// allocation-free transfer path shared by the synchronous engine, the
     /// pipeline workers, and the benches. The returned buffers go back to
     /// the pool via `release` (or via the cache's eviction path once they
-    /// become an `ExpertHandle::Host`).
+    /// become an `ExpertHandle::Host`). In tiered mode this is where the
+    /// disk read stage runs, ahead of dequant, for whichever worker or
+    /// engine thread got here first.
     pub fn fetch_pooled(
         &self,
         pool: &BufferPool,
         layer: usize,
         expert: usize,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let e = self.entry(layer, expert);
+        let r = self.resolve(layer, expert);
+        let e = r.get();
         let mut w1 = pool.acquire(e.w1.len);
         let mut w3 = pool.acquire(e.w3.len);
         let mut w2 = pool.acquire(e.w2.len);
-        // exact-length pooled buffers make fetch_into's resize a no-op
-        self.fetch_into(layer, expert, &mut w1, &mut w3, &mut w2);
+        // exact-length pooled buffers make the resize a no-op
+        e.w1.dequantize_resize(&mut w1);
+        e.w3.dequantize_resize(&mut w3);
+        e.w2.dequantize_resize(&mut w2);
         (w1, w3, w2)
     }
 
@@ -106,21 +423,80 @@ impl HostExpertStore {
         w3: &mut Vec<f32>,
         w2: &mut Vec<f32>,
     ) {
-        let e = self.entry(layer, expert);
+        let r = self.resolve(layer, expert);
+        let e = r.get();
         e.w1.dequantize_resize(w1);
         e.w3.dequantize_resize(w3);
         e.w2.dequantize_resize(w2);
     }
 
-    /// Quantized bytes of one expert — the unit of PCIe traffic.
+    /// Quantized bytes of one expert — the unit of PCIe traffic (and, in
+    /// tiered mode, of disk traffic).
     pub fn expert_transfer_bytes(&self) -> usize {
-        self.entries.first().map_or(0, |e| e.storage_bytes())
+        self.entry_bytes
     }
 
-    /// Total host memory held by the store.
+    /// Total quantized bytes of the whole corpus — host memory held by the
+    /// all-RAM backing, spill-file size for the tiered one.
     pub fn total_bytes(&self) -> usize {
-        self.entries.iter().map(|e| e.storage_bytes()).sum()
+        self.n_layers * self.n_experts * self.entry_bytes
     }
+
+    /// Whether a disk tier backs this store.
+    pub fn is_tiered(&self) -> bool {
+        matches!(self.backing, Backing::Tiered(_))
+    }
+
+    /// Experts the RAM tier may hold at once (the whole corpus when
+    /// unbounded).
+    pub fn ram_capacity_entries(&self) -> usize {
+        match &self.backing {
+            Backing::Ram(_) => self.n_layers * self.n_experts,
+            Backing::Tiered(t) => t.state.lock().unwrap().cache.capacity(),
+        }
+    }
+
+    /// Side-effect-free residency probe: would fetching `(layer, expert)`
+    /// be served from RAM right now? Always true for the all-RAM backing;
+    /// does not count as an access and never touches disk. The engine uses
+    /// this to charge the sim clock for the disk stage.
+    pub fn ram_resident(&self, layer: usize, expert: usize) -> bool {
+        match &self.backing {
+            Backing::Ram(_) => true,
+            Backing::Tiered(t) => {
+                let key = layer * self.n_experts + expert;
+                t.state.lock().unwrap().cache.peek(key).is_some()
+            }
+        }
+    }
+
+    /// Host-tier counters (all zero for the all-RAM backing).
+    pub fn tier_stats(&self) -> HostTierStats {
+        match &self.backing {
+            Backing::Ram(_) => HostTierStats::default(),
+            Backing::Tiered(t) => HostTierStats {
+                ram_hits: t.ram_hits.load(Ordering::Relaxed),
+                disk_promotions: t.disk_promotions.load(Ordering::Relaxed),
+                ram_evictions: t.ram_evictions.load(Ordering::Relaxed),
+                disk_read_ns: t.disk_read_ns.load(Ordering::Relaxed),
+                disk_read_p99_ns: t.read_histo.percentile_ns(0.99),
+                host_accesses: t.host_accesses.load(Ordering::Relaxed),
+            },
+        }
+    }
+}
+
+fn quantize_expert(
+    weights: &Weights,
+    layer: usize,
+    expert: usize,
+    scheme: Scheme,
+) -> Result<ExpertEntry> {
+    Ok(ExpertEntry {
+        w1: QTensor::quantize(weights.expert(layer, expert, "w1")?, scheme),
+        w3: QTensor::quantize(weights.expert(layer, expert, "w3")?, scheme),
+        w2: QTensor::quantize(weights.expert(layer, expert, "w2")?, scheme),
+    })
 }
 
 #[cfg(test)]
@@ -133,6 +509,12 @@ mod tests {
         synth_weights(ModelConfig::TINY, |name, i| {
             ((name.len() + i) % 13) as f32 * 0.01 - 0.06
         })
+    }
+
+    fn tiered(w: &Weights, scheme: Scheme, budget_entries: usize) -> HostExpertStore {
+        let probe = HostExpertStore::build(w, scheme).unwrap();
+        let cfg = HostTierConfig::new(budget_entries * probe.expert_transfer_bytes());
+        HostExpertStore::build_tiered(w, scheme, &cfg).unwrap()
     }
 
     #[test]
@@ -197,5 +579,126 @@ mod tests {
         let w = weights();
         let s = HostExpertStore::build(&w, Scheme::Int8 { block: 64 }).unwrap();
         assert_eq!(s.total_bytes(), 16 * s.expert_transfer_bytes());
+    }
+
+    #[test]
+    fn tiered_fetch_is_bit_identical_to_ram() {
+        let w = weights();
+        for scheme in [Scheme::F32, Scheme::Int8 { block: 16 }, Scheme::Int4 { block: 16 }] {
+            let ram = HostExpertStore::build(&w, scheme).unwrap();
+            let t = tiered(&w, scheme, 2); // far below the 16-expert corpus
+            assert!(t.is_tiered() && !ram.is_tiered());
+            assert_eq!(t.expert_transfer_bytes(), ram.expert_transfer_bytes());
+            assert_eq!(t.total_bytes(), ram.total_bytes());
+            assert_eq!(t.ram_capacity_entries(), 2);
+            for l in 0..ram.n_layers {
+                for e in 0..ram.n_experts {
+                    let (a1, a3, a2) = ram.fetch(l, e);
+                    let (b1, b3, b2) = t.fetch(l, e);
+                    let same = |x: &[f32], y: &[f32]| {
+                        x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                    };
+                    assert!(
+                        same(&a1, &b1) && same(&a3, &b3) && same(&a2, &b2),
+                        "{scheme:?} ({l},{e}) diverged across tiers"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_counters_obey_access_invariant() {
+        let w = weights();
+        let t = tiered(&w, Scheme::Int8 { block: 16 }, 3);
+        // sweep twice: first pass promotes (with evictions past capacity 3),
+        // second pass mixes hits and re-promotions
+        for _ in 0..2 {
+            for l in 0..t.n_layers {
+                for e in 0..t.n_experts {
+                    let _ = t.fetch(l, e);
+                }
+            }
+        }
+        let s = t.tier_stats();
+        assert_eq!(s.host_accesses, 32);
+        assert_eq!(s.ram_hits + s.disk_promotions, s.host_accesses);
+        assert!(s.disk_promotions >= 16, "cold sweep must touch disk");
+        assert!(s.ram_evictions > 0, "capacity 3 over 16 experts must evict");
+        assert!(s.disk_read_ns > 0);
+        assert!(s.disk_read_p99_ns > 0);
+    }
+
+    #[test]
+    fn residency_probe_is_side_effect_free() {
+        let w = weights();
+        let t = tiered(&w, Scheme::F32, 2);
+        assert!(!t.ram_resident(0, 0));
+        assert_eq!(t.tier_stats().host_accesses, 0, "probe must not count");
+        let _ = t.fetch(0, 0);
+        assert!(t.ram_resident(0, 0));
+        let before = t.tier_stats();
+        assert!(t.ram_resident(0, 0));
+        assert_eq!(t.tier_stats().host_accesses, before.host_accesses);
+    }
+
+    #[test]
+    fn concurrent_promotions_dedup_in_flight() {
+        let w = weights();
+        let t = Arc::new(tiered(&w, Scheme::Int4 { block: 16 }, 16));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let t = Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                for l in 0..t.n_layers {
+                    for e in 0..t.n_experts {
+                        let (w1, _, _) = t.fetch(l, e);
+                        assert_eq!(w1.len(), 32 * 64);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = t.tier_stats();
+        assert_eq!(s.host_accesses, 8 * 32);
+        assert_eq!(s.ram_hits + s.disk_promotions, s.host_accesses);
+        // capacity covers the corpus: each expert reads disk at most once
+        // per loader; in-flight joins + residency make most accesses hits
+        assert_eq!(s.ram_evictions, 0);
+        assert_eq!(s.disk_promotions, 32, "capacity >= corpus: one read each");
+    }
+
+    #[test]
+    fn pathologically_small_budget_still_serves() {
+        let w = weights();
+        // a zero-byte budget floors at one resident entry
+        let t = HostExpertStore::build_tiered(
+            &w,
+            Scheme::Int4 { block: 16 },
+            &HostTierConfig::new(0),
+        )
+        .unwrap();
+        assert_eq!(t.ram_capacity_entries(), 1);
+        let ram = HostExpertStore::build(&w, Scheme::Int4 { block: 16 }).unwrap();
+        for l in 0..t.n_layers {
+            for e in 0..t.n_experts {
+                assert_eq!(t.fetch(l, e).0, ram.fetch(l, e).0);
+            }
+        }
+        let s = t.tier_stats();
+        assert_eq!(s.ram_hits + s.disk_promotions, s.host_accesses);
+    }
+
+    #[test]
+    fn belady_rejected_at_host_tier() {
+        let w = weights();
+        let cfg = HostTierConfig {
+            policy: PolicyKind::Belady,
+            ..HostTierConfig::new(1 << 20)
+        };
+        let err = HostExpertStore::build_tiered(&w, Scheme::F32, &cfg).unwrap_err();
+        assert!(err.to_string().contains("belady"), "{err}");
     }
 }

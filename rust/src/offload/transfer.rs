@@ -129,6 +129,21 @@ impl FaultPlan {
             Some(f) => FaultAction::Proceed { extra_delay_s: f.delay_s },
         }
     }
+
+    /// Transient failures still armed for `(layer, expert)`, WITHOUT
+    /// consuming any. The engine's deadline gate uses this to price the
+    /// retry backoff a fetch would pay before deciding whether to degrade
+    /// — a breach must leave the budget untouched.
+    pub fn pending_transients(&self, layer: usize, expert: usize) -> u32 {
+        self.faults.get(&(layer, expert)).map_or(0, |f| f.transient_fails)
+    }
+
+    /// The virtual stall a proceeding fetch of `(layer, expert)` would be
+    /// charged, without consuming anything. (Permanently-failing experts
+    /// never proceed, so their delay is irrelevant to the estimate.)
+    pub fn peek_delay(&self, layer: usize, expert: usize) -> f64 {
+        self.faults.get(&(layer, expert)).map_or(0.0, |f| f.delay_s)
+    }
 }
 
 pub struct TransferEngine {
@@ -275,6 +290,21 @@ mod tests {
         let mut perm = FaultPlan::seeded(0).fail_permanent(1, 1);
         assert_eq!(perm.check(1, 1), FaultAction::PermanentFail);
         assert_eq!(perm.check(1, 1), FaultAction::PermanentFail);
+    }
+
+    #[test]
+    fn fault_plan_peekers_are_side_effect_free() {
+        let plan = FaultPlan::seeded(1).fail_transient(0, 2, 3).stall_ms(0, 2, 25.0);
+        assert_eq!(plan.pending_transients(0, 2), 3);
+        assert_eq!(plan.pending_transients(0, 2), 3, "peek must not consume");
+        assert!((plan.peek_delay(0, 2) - 0.025).abs() < 1e-12);
+        assert_eq!(plan.pending_transients(5, 5), 0);
+        assert_eq!(plan.peek_delay(5, 5), 0.0);
+        // consuming check() drains what the peekers report
+        let mut plan = plan;
+        let _ = plan.check(0, 2);
+        assert_eq!(plan.pending_transients(0, 2), 2);
+        assert!((plan.peek_delay(0, 2) - 0.025).abs() < 1e-12);
     }
 
     #[test]

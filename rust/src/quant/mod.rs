@@ -185,6 +185,55 @@ impl QTensor {
     pub fn max_abs_error_bound(&self) -> f32 {
         self.params.iter().map(|(s, _)| s / 2.0).fold(0.0, f32::max)
     }
+
+    /// Serialize to the flat on-disk layout used by the tiered store's
+    /// spill file: `codes ++ params (le f32 pairs) ++ raw (le f32s)`.
+    /// Exactly [`QTensor::storage_bytes`] long, and — because f32 bits pass
+    /// through untouched — [`QTensor::from_bytes`] reconstructs a tensor
+    /// whose dequantization is bit-identical to this one's.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.storage_bytes());
+        out.extend_from_slice(&self.codes);
+        for &(scale, zero) in &self.params {
+            out.extend_from_slice(&scale.to_le_bytes());
+            out.extend_from_slice(&zero.to_le_bytes());
+        }
+        for &x in &self.raw {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    /// Rebuild a tensor from [`QTensor::to_bytes`] output. The section
+    /// splits are fully determined by `(scheme, len)`, so no header is
+    /// stored. Panics if `bytes` has the wrong length for the pair.
+    pub fn from_bytes(scheme: Scheme, len: usize, bytes: &[u8]) -> QTensor {
+        let (codes_len, nblocks, raw_len) = match scheme {
+            Scheme::F32 => (0, 0, len),
+            Scheme::Int8 { block } => (len, len.div_ceil(block), 0),
+            Scheme::Int4 { block } => (len.div_ceil(2), len.div_ceil(block), 0),
+        };
+        assert_eq!(
+            bytes.len(),
+            codes_len + nblocks * 8 + raw_len * 4,
+            "byte length does not match scheme {scheme:?} len {len}"
+        );
+        let codes = bytes[..codes_len].to_vec();
+        let mut params = Vec::with_capacity(nblocks);
+        let mut off = codes_len;
+        for _ in 0..nblocks {
+            let scale = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            let zero = f32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+            params.push((scale, zero));
+            off += 8;
+        }
+        let mut raw = Vec::with_capacity(raw_len);
+        for _ in 0..raw_len {
+            raw.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        QTensor { scheme, len, codes, params, raw }
+    }
 }
 
 #[cfg(test)]
@@ -268,6 +317,29 @@ mod tests {
         // predicted == actual
         assert_eq!(i8b, Scheme::Int8 { block: 64 }.storage_bytes(4096));
         assert_eq!(i4b, Scheme::Int4 { block: 16 }.storage_bytes(4096));
+    }
+
+    #[test]
+    fn byte_roundtrip_is_bit_identical_per_scheme() {
+        // odd length exercises the int4 nibble tail and a ragged last block
+        for n in [17usize, 1000, 4096] {
+            let d = data(n, 9);
+            for scheme in
+                [Scheme::F32, Scheme::Int8 { block: 64 }, Scheme::Int4 { block: 16 }]
+            {
+                let q = QTensor::quantize(&d, scheme);
+                let bytes = q.to_bytes();
+                assert_eq!(bytes.len(), q.storage_bytes(), "{scheme:?} n={n}");
+                let back = QTensor::from_bytes(scheme, n, &bytes);
+                // bit-identical reconstruction, not merely close: the tiered
+                // store's transparency guarantee rests on this
+                let (a, b) = (q.dequantize(), back.dequantize());
+                assert!(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{scheme:?} n={n} roundtrip changed bits"
+                );
+            }
+        }
     }
 
     #[test]

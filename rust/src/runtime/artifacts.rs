@@ -91,6 +91,15 @@ impl Artifacts {
             .ok_or_else(|| anyhow::anyhow!("no stage {name:?}"))
     }
 
+    /// Directory for the tiered expert store's spill file
+    /// (`--host-cache-mb`): co-located with the artifacts so the quantized
+    /// spill lives next to the weights it was derived from, on the same
+    /// filesystem budget. The store unlinks the file after opening (unix),
+    /// so nothing persists past the process.
+    pub fn expert_spill_dir(&self) -> PathBuf {
+        self.dir.clone()
+    }
+
     pub fn load_testvec(&self) -> Result<Value> {
         let p = self
             .testvec_path
@@ -139,6 +148,7 @@ mod tests {
         assert_eq!(a.config, ModelConfig::TINY);
         assert_eq!(a.stage("router").unwrap().inputs.len(), 1);
         assert!(a.testvec_path.is_none());
+        assert_eq!(a.expert_spill_dir(), dir);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -307,6 +307,11 @@ pub struct ServeConfig {
     /// dequant + batched FFN pass. `--round-batching off` falls back to
     /// the bit-identical per-session step loop.
     pub round_batching: bool,
+    /// Seconds advertised in the `Retry-After` header of EVERY
+    /// admission-control 503 — backpressure (queue full), in-flight cap,
+    /// and scheduler sheds all quote this one value (`--retry-after-s`),
+    /// so clients see a single consistent back-off policy.
+    pub retry_after: u64,
 }
 
 impl Default for ServeConfig {
@@ -321,6 +326,7 @@ impl Default for ServeConfig {
             prefill_chunk: 0,
             round_budget_tokens: 0,
             round_batching: true,
+            retry_after: RETRY_AFTER_S,
         }
     }
 }
@@ -620,6 +626,18 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
                 ("recall", Value::from(snap.spec.recall())),
             ]),
         ),
+        (
+            "host_tier",
+            Value::obj(vec![
+                ("host_accesses", Value::from(snap.host_tier.host_accesses as f64)),
+                ("ram_hits", Value::from(snap.host_tier.ram_hits as f64)),
+                ("ram_hit_rate", Value::from(snap.host_tier.ram_hit_rate())),
+                ("disk_promotions", Value::from(snap.host_tier.disk_promotions as f64)),
+                ("ram_evictions", Value::from(snap.host_tier.ram_evictions as f64)),
+                ("disk_read_ns", Value::from(snap.host_tier.disk_read_ns as f64)),
+                ("disk_read_p99_ns", Value::from(snap.host_tier.disk_read_p99_ns as f64)),
+            ]),
+        ),
         ("sessions", Value::Arr(sessions)),
     ])
 }
@@ -841,6 +859,9 @@ struct Dispatcher {
     queue: Arc<AdmissionQueue>,
     ctl_tx: Sender<ControlConn>,
     max_inflight: usize,
+    /// `Retry-After` seconds for every admission-control 503 this
+    /// dispatcher's workers write (`ServeConfig.retry_after`).
+    retry_after: u64,
 }
 
 impl Dispatcher {
@@ -861,8 +882,9 @@ impl Dispatcher {
                 let queue = Arc::clone(&self.queue);
                 let ctl_tx = self.ctl_tx.clone();
                 let max_inflight = self.max_inflight;
+                let retry_after = self.retry_after;
                 self.pool.execute(move || {
-                    handle_conn(stream, &metrics, &ctl_tx, &queue, max_inflight);
+                    handle_conn(stream, &metrics, &ctl_tx, &queue, max_inflight, retry_after);
                 });
             }
         }
@@ -1196,6 +1218,7 @@ where
         prefill_chunk: cfg.prefill_chunk,
         round_budget_tokens: cfg.round_budget_tokens,
         round_batching: cfg.round_batching,
+        retry_after: cfg.retry_after,
     };
     let guard = WorkerGuard {
         queue: Arc::clone(&queue),
@@ -1244,6 +1267,7 @@ where
         queue: Arc::clone(&queue),
         ctl_tx: ctl_tx.clone(),
         max_inflight: cfg.max_inflight_sessions.max(1),
+        retry_after: cfg.retry_after,
     };
     let (sniff_tx, sniff_rx) = channel::<TcpStream>();
     let sniffer = spawn_sniffer(sniff_rx, dispatcher.clone());
@@ -1310,6 +1334,7 @@ fn handle_conn(
     ctl_tx: &Sender<ControlConn>,
     queue: &AdmissionQueue,
     max_inflight: usize,
+    retry_after: u64,
 ) {
     let _ = stream.set_read_timeout(Some(CLIENT_IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(CLIENT_IO_TIMEOUT));
@@ -1346,7 +1371,7 @@ fn handle_conn(
                     .unwrap_or_default();
                 admit_generate(
                     stream, prompt, n, sampling, stream_mode, priority, metrics, queue,
-                    max_inflight,
+                    max_inflight, retry_after,
                 );
             }
             Err(msg) => {
@@ -1390,8 +1415,8 @@ fn admit_generate(
     metrics: &ServeMetrics,
     queue: &AdmissionQueue,
     max_inflight: usize,
+    retry_after: u64,
 ) {
-    let retry = [("Retry-After", RETRY_AFTER_S.to_string())];
     // reserve an in-flight slot first (released by the responder after the
     // response is written): the cap bounds queued + decoding +
     // completion-pending work, exactly
@@ -1409,7 +1434,7 @@ fn admit_generate(
             &mut stream,
             503,
             "text/plain",
-            &retry,
+            &retry_headers(Some(retry_after)),
             b"in-flight session cap reached; retry later",
         );
         return;
@@ -1435,32 +1460,47 @@ fn admit_generate(
             reject_reply(
                 req.reply,
                 503,
-                &retry,
+                Some(retry_after),
                 b"queue full (backpressure); retry later",
             );
         }
         Err(PushRejected::Closed(req)) => {
             release_inflight(metrics);
             metrics.errors.fetch_add(1, Ordering::Relaxed);
-            reject_reply(req.reply, 503, &[], b"engine down");
+            // no Retry-After: a closed queue means THIS process's engine is
+            // gone for good (healthz flips red), not transient pressure
+            reject_reply(req.reply, 503, None, b"engine down");
         }
     }
 }
 
+/// Build the `Retry-After` header set for an admission-control rejection —
+/// always from the configured `ServeConfig.retry_after`, never a constant
+/// baked at a call site, so every 503 advertises the same back-off.
+fn retry_headers(retry_after: Option<u64>) -> Vec<(&'static str, String)> {
+    retry_after
+        .map(|s| ("Retry-After", s.to_string()))
+        .into_iter()
+        .collect()
+}
+
 /// Write an admission-time rejection straight to whichever reply shape the
-/// request carried. No chunked framing was started for streamed requests,
-/// so a plain error response is still well-formed on their socket.
-fn reject_reply(reply: ReplyTo, status: u16, extra: &[(&str, String)], body: &[u8]) {
+/// request carried — the ONE exit for every refusal, so the advertised
+/// `Retry-After` cannot diverge between socket, stream, and channel
+/// clients. No chunked framing was started for streamed requests, so a
+/// plain error response is still well-formed on their socket.
+fn reject_reply(reply: ReplyTo, status: u16, retry_after: Option<u64>, body: &[u8]) {
+    let extra = retry_headers(retry_after);
     match reply {
         ReplyTo::Socket(mut stream) => {
             let _ = http::write_response_with_headers(
-                &mut stream, status, "text/plain", extra, body,
+                &mut stream, status, "text/plain", &extra, body,
             );
         }
         ReplyTo::Stream(conn) => {
             let mut stream = conn.stream.lock().unwrap();
             let _ = http::write_response_with_headers(
-                &mut stream, status, "text/plain", extra, body,
+                &mut stream, status, "text/plain", &extra, body,
             );
             conn.state.lock().unwrap().finished = true;
         }
@@ -1468,7 +1508,7 @@ fn reject_reply(reply: ReplyTo, status: u16, extra: &[(&str, String)], body: &[u
             let _ = tx.send(Err(GenError {
                 status,
                 message: String::from_utf8_lossy(body).into_owned(),
-                retry_after: None,
+                retry_after,
             }));
         }
     }
@@ -1480,7 +1520,7 @@ fn reject_reply(reply: ReplyTo, status: u16, extra: &[(&str, String)], body: &[u
 /// the whole serve stack runs from a clean checkout (no artifacts, no
 /// PJRT); without it, artifacts are loaded as in production.
 pub fn cmd_serve(args: &Args) -> Result<()> {
-    use crate::offload::store::HostExpertStore;
+    use crate::offload::store::{HostExpertStore, HostTierConfig};
     use crate::runtime::artifacts::Artifacts;
 
     let port = args.usize_or("port", 7080)?;
@@ -1499,6 +1539,11 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bad --profile"))?;
     let fetch_retries = args.usize_or("fetch-retries", 2)?;
     let demand_deadline_ms = args.usize_or("demand-deadline-ms", 0)? as u64;
+    // tiered expert store: 0 (the default) keeps every quantized expert in
+    // RAM; > 0 bounds RAM to this many MB with the remainder spilled to
+    // disk and promoted on demand (DESIGN.md §10)
+    let host_cache_mb = args.usize_or("host-cache-mb", 0)?;
+    let disk_read_mbps = args.usize_or("disk-read-mbps", 0)?;
     let defaults = ServeConfig::default();
     let serve_cfg = ServeConfig {
         http_workers: args.usize_or("http-workers", defaults.http_workers)?,
@@ -1518,6 +1563,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             args.str_or("round-batching", "on").as_str(),
             "off" | "false" | "0" | "no"
         ),
+        retry_after: args.usize_or("retry-after-s", defaults.retry_after as usize)? as u64,
     };
 
     let listener = TcpListener::bind(("0.0.0.0", port as u16))?;
@@ -1542,13 +1588,26 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 }
                 _ => Box::new(crate::runtime::native::NativeBackend::new(Arc::clone(&weights))),
             };
-            let store = Arc::new(HostExpertStore::build(&weights, quant)?);
+            let store = if host_cache_mb > 0 {
+                let tier = HostTierConfig {
+                    ram_budget_bytes: host_cache_mb << 20,
+                    policy,
+                    seed,
+                    spill_dir: artifacts.as_ref().map(|a| a.expert_spill_dir()),
+                };
+                Arc::new(HostExpertStore::build_tiered(&weights, quant, &tier)?)
+            } else {
+                Arc::new(HostExpertStore::build(&weights, quant)?)
+            };
             let mut cfg = crate::engine::EngineConfig::serving(capacity, policy, spec);
             cfg.transfer_workers = transfer_workers;
             cfg.profile = profile;
             cfg.seed = seed;
             cfg.fetch_retries = fetch_retries;
             cfg.demand_deadline_ms = demand_deadline_ms;
+            if disk_read_mbps > 0 {
+                cfg.disk = crate::sim::hardware::DiskProfile::from_mbps(disk_read_mbps as f64);
+            }
             Ok(crate::engine::InferenceEngine::new(backend, store, cfg))
         },
         serve_cfg,
@@ -1560,7 +1619,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
 mod tests {
     use super::*;
     use crate::metrics::{
-        CacheStats, PipelineStats, PrecisionRecall, RoundBatchStats, SessionTally,
+        CacheStats, HostTierStats, PipelineStats, PrecisionRecall, RoundBatchStats, SessionTally,
     };
     use super::scheduler::SessionView;
 
@@ -1776,6 +1835,14 @@ mod tests {
             },
             degraded_tokens: 2,
             fetch_retries: 3,
+            host_tier: HostTierStats {
+                ram_hits: 30,
+                disk_promotions: 10,
+                ram_evictions: 6,
+                disk_read_ns: 5_000,
+                disk_read_p99_ns: 900,
+                host_accesses: 40,
+            },
             sessions: Vec::new(),
         };
         for id in 1..=2u64 {
@@ -1827,6 +1894,15 @@ mod tests {
         // degrade/robustness counters surface at the top level
         assert_eq!(v.get("degraded_tokens").as_usize(), Some(2));
         assert_eq!(v.get("fetch_retries").as_usize(), Some(3));
+        // tiered-store counters render under one host_tier object
+        let ht = v.get("host_tier");
+        assert_eq!(ht.get("host_accesses").as_usize(), Some(40));
+        assert_eq!(ht.get("ram_hits").as_usize(), Some(30));
+        assert_eq!(ht.get("ram_hit_rate").as_f64(), Some(0.75));
+        assert_eq!(ht.get("disk_promotions").as_usize(), Some(10));
+        assert_eq!(ht.get("ram_evictions").as_usize(), Some(6));
+        assert_eq!(ht.get("disk_read_ns").as_usize(), Some(5_000));
+        assert_eq!(ht.get("disk_read_p99_ns").as_usize(), Some(900));
         assert_eq!(v.get("client_disconnects").as_usize(), Some(0));
         assert_eq!(v.get("write_errors").as_usize(), Some(0));
         assert_eq!(v.get("cancelled_sessions").as_usize(), Some(0));

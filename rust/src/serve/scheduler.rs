@@ -74,7 +74,8 @@
 use crate::engine::batch::Session;
 use crate::engine::{InferenceEngine, RoundWork};
 use crate::metrics::{
-    CacheStats, PipelineStats, PrecisionRecall, RoundBatchStats, ServeMetrics, SessionTally,
+    CacheStats, HostTierStats, PipelineStats, PrecisionRecall, RoundBatchStats, ServeMetrics,
+    SessionTally,
 };
 use crate::model::sampler::Sampler;
 use crate::model::tokenizer::Tokenizer;
@@ -118,6 +119,11 @@ pub struct SchedulerConfig {
     /// off`); both paths produce bit-identical outputs
     /// (`prop_round_batching_bit_identical`).
     pub round_batching: bool,
+    /// Seconds advertised in the `Retry-After` header of every 503 this
+    /// scheduler sheds (`--retry-after-s`); the serve layer's admission
+    /// rejects advertise the same value, so clients see ONE consistent
+    /// back-off policy however their request was refused.
+    pub retry_after: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -128,6 +134,7 @@ impl Default for SchedulerConfig {
             prefill_chunk: 0,
             round_budget_tokens: 0,
             round_batching: true,
+            retry_after: RETRY_AFTER_S,
         }
     }
 }
@@ -211,6 +218,9 @@ pub struct ServeSnapshot {
     /// Demand fetches re-attempted after a transient failure (each retry
     /// pays an exponential virtual backoff first).
     pub fetch_retries: u64,
+    /// Host-tier (RAM-over-disk) counters of the expert store — all zeros
+    /// when serving from an all-RAM store (no `--host-cache-mb`).
+    pub host_tier: HostTierStats,
     pub sessions: Vec<SessionView>,
 }
 
@@ -418,7 +428,7 @@ impl Scheduler {
         // never consume an engine step
         if let Some(t) = self.cfg.queue_timeout {
             for req in self.queue.take_aged(t) {
-                shed(req, &self.active.completions, &self.metrics);
+                shed(req, &self.active.completions, &self.metrics, self.cfg.retry_after);
             }
         }
 
@@ -444,7 +454,7 @@ impl Scheduler {
                 .queue_timeout
                 .is_some_and(|t| req.enqueued.elapsed() > t)
             {
-                shed(req, &self.active.completions, &self.metrics);
+                shed(req, &self.active.completions, &self.metrics, self.cfg.retry_after);
                 continue;
             }
             self.metrics
@@ -979,6 +989,7 @@ impl Scheduler {
         snap.round_batching = self.engine.round_batch_stats();
         snap.degraded_tokens = self.engine.degraded_tokens();
         snap.fetch_retries = self.engine.fetch_retries_performed();
+        snap.host_tier = self.engine.host_tier_stats();
         snap.sessions = views;
     }
 }
@@ -1000,9 +1011,11 @@ pub fn run_scheduler(
     sched.into_engine()
 }
 
-/// Refuse one aged request: 503 + `Retry-After`, `shed_total` incremented,
-/// queue wait recorded — and, by construction, zero engine steps consumed.
-fn shed(req: GenRequest, completions: &Sender<Completion>, metrics: &ServeMetrics) {
+/// Refuse one aged request: 503 + `Retry-After` (the configured
+/// `retry_after` seconds — the same value every other 503 path advertises),
+/// `shed_total` incremented, queue wait recorded — and, by construction,
+/// zero engine steps consumed.
+fn shed(req: GenRequest, completions: &Sender<Completion>, metrics: &ServeMetrics, retry_after: u64) {
     metrics
         .queue_wait
         .record_ns(req.enqueued.elapsed().as_nanos() as u64);
@@ -1011,7 +1024,7 @@ fn shed(req: GenRequest, completions: &Sender<Completion>, metrics: &ServeMetric
         Err(GenError {
             status: 503,
             message: "shed: queued past --queue-timeout-ms; retry later".into(),
-            retry_after: Some(RETRY_AFTER_S),
+            retry_after: Some(retry_after),
         }),
         completions,
     );
@@ -1297,6 +1310,39 @@ mod tests {
         assert_eq!(metrics.shed_total.load(Ordering::Relaxed), 1);
         // both dequeues recorded a queue wait
         assert_eq!(metrics.queue_wait.count(), 2);
+    }
+
+    #[test]
+    fn sheds_advertise_the_configured_retry_after() {
+        // a non-default --retry-after-s must flow through to the shed 503
+        let backdated = Instant::now().checked_sub(Duration::from_secs(120));
+        let Some(backdated) = backdated else {
+            return; // machine uptime too short to backdate; skip
+        };
+        let engine = test_engine(false);
+        let (queue, metrics) = test_queue(8);
+        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let (completions, _completion_rx) = channel();
+
+        let (mut aged, aged_rx) = request("stale request", 4);
+        aged.enqueued = backdated;
+        assert!(queue.try_push(aged).is_ok());
+        queue.close();
+        run_scheduler(
+            engine,
+            queue,
+            completions,
+            SchedulerConfig {
+                queue_timeout: Some(Duration::from_secs(60)),
+                retry_after: 7,
+                ..SchedulerConfig::default()
+            },
+            metrics,
+            snapshot,
+        );
+        let err = aged_rx.recv().unwrap().unwrap_err();
+        assert_eq!(err.status, 503);
+        assert_eq!(err.retry_after, Some(7), "configured Retry-After ignored by shed");
     }
 
     #[test]

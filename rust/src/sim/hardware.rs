@@ -36,6 +36,43 @@ impl HwProfile {
     }
 }
 
+/// The disk tier under host RAM (DESIGN.md §10): the second, ~100×-worse
+/// cliff of the tiered expert store. Same shape as the PCIe model —
+/// fixed per-read latency plus bytes over bandwidth — so the cost model
+/// composes the two cliffs additively: a RAM-missing demand fetch costs
+/// `read_time(bytes) + transfer_time(bytes)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiskProfile {
+    /// Sequential-read bandwidth, bytes/second.
+    pub read_bps: f64,
+    /// Per-read fixed latency, seconds (queue + seek/flash lookup).
+    pub read_latency_s: f64,
+}
+
+impl DiskProfile {
+    /// Time to read `bytes` from disk into host RAM.
+    pub fn read_time(&self, bytes: usize) -> f64 {
+        self.read_latency_s + bytes as f64 / self.read_bps
+    }
+
+    /// Profile from a `--disk-read-mbps` style flag (latency left at the
+    /// NVMe-class default).
+    pub fn from_mbps(mbps: f64) -> DiskProfile {
+        DiskProfile { read_bps: mbps * 1e6, ..DiskProfile::default() }
+    }
+}
+
+impl Default for DiskProfile {
+    /// Edge/consumer SSD defaults: 500 MB/s, 150 µs per read — ~40× worse
+    /// bandwidth and ~7× worse fixed latency than the PCIe profiles above,
+    /// putting a sub-MB expert read one-to-two orders of magnitude past
+    /// its PCIe hop (the tiered store's second cliff). Faster NVMe is one
+    /// `--disk-read-mbps` flag away via [`DiskProfile::from_mbps`].
+    fn default() -> DiskProfile {
+        DiskProfile { read_bps: 0.5e9, read_latency_s: 150e-6 }
+    }
+}
+
 /// Datasheet-plausible profiles (effective, not peak).
 pub fn physical() -> [HwProfile; 4] {
     [
@@ -165,6 +202,20 @@ mod tests {
         // paper: ~2000 MB per offload per 32 layers => ~62 MB/expert
         let mb = m.expert_bytes as f64 / (1 << 20) as f64;
         assert!((55.0..70.0).contains(&mb), "{mb} MB");
+    }
+
+    #[test]
+    fn disk_is_a_worse_cliff_than_pcie() {
+        let d = DiskProfile::default();
+        let p = physical()[0];
+        // per small read (one int4 mini expert ≈ 0.5 MB), disk must cost
+        // at least an order of magnitude more than PCIe
+        let bytes = 512 << 10;
+        assert!(d.read_time(bytes) > 10.0 * p.transfer_time(bytes));
+        assert!(d.read_time(2 * bytes) > d.read_time(bytes));
+        let slow = DiskProfile::from_mbps(100.0);
+        assert_eq!(slow.read_bps, 100.0e6);
+        assert!(slow.read_time(bytes) > d.read_time(bytes));
     }
 
     #[test]

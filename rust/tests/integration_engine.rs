@@ -12,7 +12,7 @@ use moe_offload::model::sampler::{Sampler, Sampling};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
 use moe_offload::offload::prefetch::PrefetchConfig;
-use moe_offload::offload::store::HostExpertStore;
+use moe_offload::offload::store::{HostExpertStore, HostTierConfig};
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::native::NativeBackend;
 use moe_offload::sim::hardware;
@@ -30,6 +30,18 @@ fn run(
 ) -> GenerationOutput {
     let weights = Arc::new(generate_weights(CFG, 42));
     let store = Arc::new(HostExpertStore::build(&weights, scheme).unwrap());
+    run_with_store(store, policy, capacity, spec, transfer_workers, seed)
+}
+
+fn run_with_store(
+    store: Arc<HostExpertStore>,
+    policy: PolicyKind,
+    capacity: usize,
+    spec: bool,
+    transfer_workers: usize,
+    seed: u64,
+) -> GenerationOutput {
+    let weights = Arc::new(generate_weights(CFG, 42));
     let mut engine = InferenceEngine::new(
         Box::new(NativeBackend::new(weights)),
         store,
@@ -39,6 +51,7 @@ fn run(
             prefetch: PrefetchConfig { enabled: spec, k: 2 },
             transfer_workers,
             profile: hardware::by_name("A6000").unwrap(),
+            disk: hardware::DiskProfile::default(),
             seed,
             record_trace: true,
             fetch_retries: 2,
@@ -47,6 +60,16 @@ fn run(
     );
     let mut sampler = Sampler::new(Sampling::Greedy, seed);
     engine.generate(&[1, 5, 9], 8, &mut sampler).unwrap()
+}
+
+/// Tiered store bounded to `budget_entries` RAM slots (rest spilled to disk).
+fn tiered_store(scheme: Scheme, budget_entries: usize) -> Arc<HostExpertStore> {
+    let weights = Arc::new(generate_weights(CFG, 42));
+    let entry_bytes = HostExpertStore::build(&weights, scheme)
+        .unwrap()
+        .expert_transfer_bytes();
+    let tier = HostTierConfig::new(budget_entries * entry_bytes);
+    Arc::new(HostExpertStore::build_tiered(&weights, scheme, &tier).unwrap())
 }
 
 #[test]
@@ -147,6 +170,7 @@ fn sim_clock_slower_on_worse_bandwidth() {
                 prefetch: PrefetchConfig::default(),
                 transfer_workers: 0,
                 profile: hardware::by_name(profile).unwrap(),
+                disk: hardware::DiskProfile::default(),
                 seed: 0,
                 record_trace: false,
                 fetch_retries: 2,
@@ -175,6 +199,50 @@ fn quantized_decode_stays_coherent() {
             }
         }
     }
+}
+
+#[test]
+fn tiered_store_is_bit_identical_to_all_ram() {
+    // A RAM budget below the full expert set (TINY = 16 entries) forces disk
+    // spills + promotions, yet generation must not change by a single token:
+    // the disk tier only moves bytes, it never rewrites them.
+    for scheme in [Scheme::F32, Scheme::Int8 { block: 16 }, Scheme::Int4 { block: 16 }] {
+        let baseline = run(PolicyKind::Lru, 4, scheme, false, 0, 0);
+        for budget_entries in [1, 3] {
+            let out = run_with_store(
+                tiered_store(scheme, budget_entries),
+                PolicyKind::Lru,
+                4,
+                false,
+                0,
+                0,
+            );
+            assert_eq!(
+                out.tokens, baseline.tokens,
+                "{scheme:?} budget={budget_entries} changed generated tokens"
+            );
+            assert_eq!(out.cache_stats.hits, baseline.cache_stats.hits);
+            assert_eq!(out.transfer_bytes, baseline.transfer_bytes);
+            // disk reads only ever slow the simulated clock down
+            assert!(out.throughput.sim_s >= baseline.throughput.sim_s);
+        }
+    }
+}
+
+#[test]
+fn tiered_counters_obey_access_invariant_through_engine() {
+    let store = tiered_store(Scheme::Int8 { block: 16 }, 2);
+    let out = run_with_store(Arc::clone(&store), PolicyKind::Lfu, 4, true, 2, 0);
+    assert_eq!(out.generated.len(), 8);
+    let ht = store.tier_stats();
+    assert!(ht.host_accesses > 0, "engine never touched the host tier");
+    assert_eq!(
+        ht.ram_hits + ht.disk_promotions,
+        ht.host_accesses,
+        "every host access must be a RAM hit or a disk promotion"
+    );
+    assert!(ht.disk_promotions > 0, "budget of 2 entries must spill");
+    assert!(ht.ram_evictions > 0, "16 experts through 2 slots must evict");
 }
 
 #[test]

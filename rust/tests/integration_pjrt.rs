@@ -90,6 +90,7 @@ fn pjrt_engine_decode_with_quantized_store() {
             prefetch: PrefetchConfig { enabled: true, k: 2 },
             transfer_workers: 0,
             profile: hardware::by_name("A100").unwrap(),
+            disk: hardware::DiskProfile::default(),
             seed: 0,
             record_trace: true,
             fetch_retries: 2,

@@ -7,7 +7,7 @@ use moe_offload::metrics::{PrecisionRecall, RoundBatchStats, ServeMetrics};
 use moe_offload::model::sampler::{top_k, Sampler, Sampling};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
-use moe_offload::offload::store::HostExpertStore;
+use moe_offload::offload::store::{HostExpertStore, HostTierConfig};
 use moe_offload::quant::{QTensor, Scheme};
 use moe_offload::runtime::native::NativeBackend;
 use moe_offload::serve::scheduler::{
@@ -172,6 +172,82 @@ fn prop_pipeline_decode_bit_identical_to_sync() {
                     scheme.name()
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiered_store_bit_identical_to_all_ram() {
+    // the disk tier under host RAM moves bytes, it never rewrites them:
+    // across GPU-cache policies × host-tier policies × quantization schemes
+    // × prefetch on/off × worker counts × pathologically small RAM budgets
+    // (down to a single resident entry for 16 experts), a tiered store must
+    // decode bit-identically to the all-RAM store, and its counters must
+    // conserve accesses (ram_hits + disk_promotions == host_accesses).
+    forall(8, |g: &mut Gen| {
+        let seed = g.usize(0..=999) as u64;
+        let scheme = *g.choose(&[
+            Scheme::F32,
+            Scheme::Int8 { block: 16 },
+            Scheme::Int4 { block: 16 },
+        ]);
+        let policy = *g.choose(&PolicyKind::all_online());
+        let host_policy = *g.choose(&PolicyKind::all_online());
+        let prefetch = g.bool();
+        let capacity = g.usize(2..=6);
+        let workers = *g.choose(&[0usize, 2]);
+        let budget_entries = g.usize(1..=4);
+
+        let run = |budget: Option<usize>| {
+            let weights = Arc::new(generate_weights(ModelConfig::TINY, seed));
+            let store = match budget {
+                Some(entries) => {
+                    let entry_bytes = HostExpertStore::build(&weights, scheme)
+                        .unwrap()
+                        .expert_transfer_bytes();
+                    let tier = HostTierConfig {
+                        ram_budget_bytes: entries * entry_bytes,
+                        policy: host_policy,
+                        seed,
+                        spill_dir: None,
+                    };
+                    Arc::new(HostExpertStore::build_tiered(&weights, scheme, &tier).unwrap())
+                }
+                None => Arc::new(HostExpertStore::build(&weights, scheme).unwrap()),
+            };
+            let mut cfg = EngineConfig::serving(capacity, policy, prefetch);
+            cfg.seed = seed;
+            cfg.transfer_workers = workers;
+            let mut engine = InferenceEngine::new(
+                Box::new(NativeBackend::new(weights)),
+                Arc::clone(&store),
+                cfg,
+            );
+            let mut sampler = Sampler::new(Sampling::Greedy, seed);
+            let out = engine.generate(&[1, 5, 9], 7, &mut sampler).unwrap();
+            (out.tokens, store.tier_stats())
+        };
+
+        let (ram_tokens, _) = run(None);
+        let (tokens, ht) = run(Some(budget_entries));
+        if tokens != ram_tokens {
+            return Err(format!(
+                "{}/{}/host={}/prefetch={prefetch}/cap={capacity}/workers={workers}/\
+                 budget={budget_entries}: tiered decode diverged from all-RAM",
+                policy.name(),
+                scheme.name(),
+                host_policy.name()
+            ));
+        }
+        if ht.host_accesses == 0 {
+            return Err("tiered run never touched the host tier".into());
+        }
+        if ht.ram_hits + ht.disk_promotions != ht.host_accesses {
+            return Err(format!(
+                "tier counters leak: {} hits + {} promotions != {} accesses",
+                ht.ram_hits, ht.disk_promotions, ht.host_accesses
+            ));
         }
         Ok(())
     });
