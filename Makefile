@@ -23,11 +23,16 @@ bench:
 # overload rejected/shed counts + queue-wait p99, and mixed long/short
 # TTFT p50/p99 with chunked prefill on vs off (fields asserted below);
 # tiered_store — RAM-budget sweep over the disk tier: per-budget RAM hit
-# rate + disk read p99 (monotonicity and cliff asserted in the bench).
+# rate + disk read p99 (monotonicity and cliff asserted in the bench);
+# predictor — learned cross-layer predictor: per-layer top-k accuracy and
+# learned-eviction hit rate vs LRU/LFU/Belady (learned must beat both
+# online baselines and close part of the LRU→Belady gap, asserted in the
+# bench).
 perf:
 	cargo bench --bench transfer_pipeline
 	cargo bench --bench serve_concurrent
 	cargo bench --bench tiered_store
+	cargo bench --bench predictor
 	@grep -q '"ttft_p50_ns"' BENCH_serve_concurrent.json || \
 		{ echo "BENCH_serve_concurrent.json missing TTFT p50"; exit 1; }
 	@grep -q '"ttft_p99_ns"' BENCH_serve_concurrent.json || \
@@ -36,6 +41,10 @@ perf:
 		{ echo "BENCH_tiered_store.json missing RAM hit rate"; exit 1; }
 	@grep -q '"disk_read_p99_ns"' BENCH_tiered_store.json || \
 		{ echo "BENCH_tiered_store.json missing disk read p99"; exit 1; }
+	@grep -q '"topk_accuracy"' BENCH_predictor.json || \
+		{ echo "BENCH_predictor.json missing top-k accuracy"; exit 1; }
+	@grep -q '"gap_closed_vs_belady"' BENCH_predictor.json || \
+		{ echo "BENCH_predictor.json missing Belady gap fraction"; exit 1; }
 
 figures:
 	cargo run --release -- figures --out-dir results

@@ -1,0 +1,271 @@
+"""Regenerate data/predictor_weights.json without a Rust toolchain.
+
+The canonical generator is the Rust CLI:
+
+    cargo run --release -- train-predictor --out data/predictor_weights.json
+
+This script mirrors that default invocation (synthetic 12-layer, 1024-token
+trace, seed 0, train on the first half) closely enough to produce an
+equivalent-quality artifact in environments that only have Python: the
+PRNG (SplitMix64 + Xoshiro256**) and trace generator are mirrored exactly,
+and the trainer runs the same deterministic SGD in float32. Weights are
+NOT guaranteed bit-identical to the Rust trainer (dot-product summation
+order differs); the file format, dimensions, and predictive quality are
+identical, and the Rust loader validates all of those.
+
+    python3 python/gen_predictor_weights.py [--out data/predictor_weights.json]
+"""
+
+import argparse
+import json
+import math
+import os
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.x = seed & MASK
+
+    def next_u64(self):
+        self.x = (self.x + 0x9E3779B97F4A7C15) & MASK
+        z = self.x
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """Mirror of rust/src/util/rng.rs (Xoshiro256**)."""
+
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        zone = MASK - (MASK % n)
+        while True:
+            v = self.next_u64()
+            if v < zone:
+                return v % n
+
+    def categorical(self, weights):
+        total = 0.0
+        for w in weights:
+            total += w
+        r = self.f64() * total
+        for i, w in enumerate(weights):
+            r -= w
+            if r <= 0.0:
+                return i
+        return len(weights) - 1
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def permutation(self, n):
+        v = list(range(n))
+        self.shuffle(v)
+        return v
+
+
+def zipf_weights(n, alpha):
+    raw = [1.0 / float(i + 1) ** alpha for i in range(n)]
+    s = 0.0
+    for w in raw:
+        s += w
+    return [w / s for w in raw]
+
+
+def layer_skew(n_layers, layer, skew_edge, skew_mid):
+    depth = layer / (max(n_layers, 2) - 1)
+    return skew_edge + (skew_mid - skew_edge) * math.sin(math.pi * depth)
+
+
+def generate_trace(n_layers=12, n_experts=8, top_k=2, n_tokens=1024,
+                   locality=0.3, skew_edge=0.4, skew_mid=1.1, seed=0):
+    """Mirror of rust/src/sim/tracegen.rs::generate."""
+    rng = Rng(seed)
+    stationary = []
+    for l in range(n_layers):
+        zipf = zipf_weights(n_experts, layer_skew(n_layers, l, skew_edge, skew_mid))
+        perm = rng.permutation(n_experts)
+        w = [0.0] * n_experts
+        for rank, e in enumerate(perm):
+            w[e] = zipf[rank]
+        stationary.append(w)
+
+    prev = [[] for _ in range(n_layers)]
+    activated = []  # [token][layer] -> list of expert ids
+    gates = []      # [token][layer] -> np.float32 array
+    for _ in range(n_tokens):
+        tok_a, tok_g = [], []
+        for l in range(n_layers):
+            selected = []
+            for e in prev[l]:
+                if len(selected) < top_k and rng.f64() < locality:
+                    selected.append(e)
+            while len(selected) < top_k:
+                w = list(stationary[l])
+                for e in selected:
+                    w[e] = 0.0
+                selected.append(rng.categorical(w))
+            selected.sort()
+            split = 0.5 + 0.4 * rng.f64()
+            weights = [np.float32(split)]
+            rest = (1.0 - split) / max(top_k - 1, 1)
+            for _ in range(1, top_k):
+                weights.append(np.float32(rest))
+            tok_a.append(selected)
+            tok_g.append(np.array(weights, dtype=np.float32))
+            prev[l] = selected
+        activated.append(tok_a)
+        gates.append(tok_g)
+    return activated, gates
+
+
+FAST = np.float32(0.8)
+SLOW = np.float32(0.98)
+ONE = np.float32(1.0)
+
+
+class Context:
+    def __init__(self, n_layers, n_experts):
+        self.prev = [[] for _ in range(n_layers)]
+        self.hf = np.zeros((n_layers, n_experts), dtype=np.float32)
+        self.hs = np.zeros((n_layers, n_experts), dtype=np.float32)
+
+    def observe(self, layer, act):
+        self.hf[layer] *= FAST
+        self.hs[layer] *= SLOW
+        for e in act:
+            self.hf[layer][e] += ONE - FAST
+            self.hs[layer][e] += ONE - SLOW
+        self.prev[layer] = list(act)
+
+    def reset(self):
+        for p in self.prev:
+            del p[:]
+        self.hf.fill(0.0)
+        self.hs.fill(0.0)
+
+
+def features(ctx, E, tl, act, g, F):
+    feat = np.zeros(F, dtype=np.float32)
+    for i, e in enumerate(act):
+        feat[e] = 1.0
+        feat[E + e] = g[i] if i < len(g) else 0.0
+    for e in ctx.prev[tl]:
+        feat[2 * E + e] = 1.0
+    feat[3 * E:4 * E] = ctx.hf[tl]
+    feat[4 * E:5 * E] = ctx.hs[tl]
+    feat[5 * E] = 1.0
+    return feat
+
+
+def sigmoid32(z):
+    z = np.clip(z, np.float32(-30.0), np.float32(30.0))
+    return ONE / (ONE + np.exp(-z))
+
+
+def train(activated, gates, n_layers, n_experts, epochs=6, lr=0.1):
+    """Mirror of rust/src/offload/learned.rs::train_on_trace (float32 SGD)."""
+    T = len(activated)
+    F = 5 * n_experts + 1
+    lr32 = np.float32(lr)
+    W = np.zeros((n_layers, n_experts, F), dtype=np.float32)
+    ctx = Context(n_layers, n_experts)
+    for _ in range(epochs):
+        ctx.reset()
+        for t in range(T):
+            for l in range(n_layers):
+                tl = (l + 1) % n_layers
+                tt = t + 1 if tl == 0 else t
+                if tt < T:
+                    feat = features(ctx, n_experts, tl, activated[t][l],
+                                    gates[t][l], F)
+                    probs = sigmoid32(W[l] @ feat)
+                    y = np.zeros(n_experts, dtype=np.float32)
+                    for e in activated[tt][tl]:
+                        y[e] = 1.0
+                    g = lr32 * (probs - y)
+                    W[l] -= g[:, None] * feat[None, :]
+                ctx.observe(l, activated[t][l])
+    return W
+
+
+def top2_accuracy(W, activated, gates, n_layers, n_experts, start, end):
+    """Sanity-check: top-2 guess precision over [start, end)."""
+    F = 5 * n_experts + 1
+    ctx = Context(n_layers, n_experts)
+    tp = total = 0
+    for t in range(start, end):
+        for l in range(n_layers):
+            tl = (l + 1) % n_layers
+            tt = t + 1 if tl == 0 else t
+            if tt < end:
+                feat = features(ctx, n_experts, tl, activated[t][l],
+                                gates[t][l], F)
+                probs = sigmoid32(W[l] @ feat)
+                guess = np.argsort(-probs, kind="stable")[:2]
+                tp += sum(1 for e in guess if e in activated[tt][tl])
+                total += 2
+            ctx.observe(l, activated[t][l])
+    return tp / total
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="data/predictor_weights.json")
+    args = ap.parse_args()
+
+    L, E, T = 12, 8, 1024
+    activated, gates = generate_trace(n_layers=L, n_experts=E, n_tokens=T)
+    # same split as `train-predictor` defaults: train on the first half
+    W = train(activated[:T // 2], gates[:T // 2], L, E)
+    acc = top2_accuracy(W, activated, gates, L, E, T // 2, T)
+    print(f"holdout top-2 accuracy: {acc:.3f} (chance 0.25)")
+    assert acc > 0.30, "trained weights do not beat chance — refusing to write"
+    assert np.isfinite(W).all()
+
+    doc = {
+        "format": "moe-predictor-v1",
+        "n_layers": L,
+        "n_experts": E,
+        "fast_decay": float(FAST),
+        "slow_decay": float(SLOW),
+        "weights": [[[float(x) for x in row] for row in layer] for layer in W],
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, separators=(",", ":"))
+        f.write("\n")
+    print(f"weights -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

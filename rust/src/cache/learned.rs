@@ -1,0 +1,204 @@
+//! Learned eviction — an online approximation of Belady driven by the
+//! offline-trained predictor ([`crate::offload::learned`]).
+//!
+//! Belady evicts the resident with the farthest next use. We estimate that
+//! distance for expert `e` from two signals:
+//!
+//! * `p1` — the predictor's probability that `e` activates at this layer's
+//!   *imminent* visit, published by the engine (or sim replay) into a
+//!   shared per-layer [`Scoreboard`] right before the layer runs;
+//! * `rate` — `e`'s long-run activation rate at this layer, measured from
+//!   the policy's own access counts (exactly LFU's frequency signal).
+//!
+//! Expected next-use distance ≈ `(1 − p1) / max(rate, MIN_RATE)`: miss the
+//! imminent visit with probability `1 − p1`, then wait a geometric
+//! `1/rate` visits. The victim is the resident with the largest distance;
+//! exact ties fall through to LFU's `(freq, last_access, index)` key.
+//!
+//! **Exact LFU degradation** (asserted by tests): with no scoreboard — or
+//! one still holding the 0.5 "no information" prior that zero predictor
+//! weights produce — `p1` is constant across residents, so the distance
+//! ordering reduces to the frequency ordering and every tie falls through
+//! to LFU's own tiebreak. The policy then picks bit-for-bit the same
+//! victims as [`super::lfu::Lfu`].
+
+use super::{Expert, Policy};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// `board[layer][expert]` = predicted probability that the expert
+/// activates at that layer's next visit. Shared between the engine (or
+/// replay loop), which writes a layer's row at each layer boundary, and
+/// the per-layer [`LearnedEviction`] policies, which read it at victim
+/// time. A plain mutex: rows are tiny and evictions infrequent.
+pub type Scoreboard = Arc<Mutex<Vec<Vec<f32>>>>;
+
+/// Fresh scoreboard holding the 0.5 no-information prior everywhere (the
+/// LFU-degenerate state).
+pub fn new_scoreboard(n_layers: usize, n_experts: usize) -> Scoreboard {
+    Arc::new(Mutex::new(vec![vec![0.5; n_experts]; n_layers]))
+}
+
+/// Floor on the measured activation rate, so never-seen experts get a
+/// large-but-finite distance instead of a division blowup.
+const MIN_RATE: f64 = 1e-3;
+
+pub struct LearnedEviction {
+    layer: usize,
+    board: Option<Scoreboard>,
+    /// Cumulative access counts, surviving eviction — identical
+    /// bookkeeping to [`super::lfu::Lfu`] by construction.
+    freq: HashMap<Expert, u64>,
+    last_access: HashMap<Expert, u64>,
+    /// Total accesses seen by this layer's policy (the rate denominator,
+    /// shared by all candidates so it never changes their ordering).
+    events: u64,
+}
+
+impl LearnedEviction {
+    /// `board: None` is the weights-absent fallback: pure LFU behavior.
+    pub fn new(layer: usize, board: Option<Scoreboard>) -> Self {
+        LearnedEviction {
+            layer,
+            board,
+            freq: HashMap::new(),
+            last_access: HashMap::new(),
+            events: 0,
+        }
+    }
+}
+
+impl Policy for LearnedEviction {
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+    fn on_hit(&mut self, e: Expert, tick: u64) {
+        *self.freq.entry(e).or_insert(0) += 1;
+        self.last_access.insert(e, tick);
+        self.events += 1;
+    }
+    fn on_insert(&mut self, e: Expert, tick: u64) {
+        *self.freq.entry(e).or_insert(0) += 1;
+        self.last_access.insert(e, tick);
+        self.events += 1;
+    }
+    fn victim(&mut self, resident: &[Expert], _tick: u64) -> Expert {
+        // Snapshot this layer's probability row so the lock isn't held
+        // while ranking.
+        let probs: Option<Vec<f32>> = self
+            .board
+            .as_ref()
+            .map(|b| b.lock().expect("scoreboard poisoned")[self.layer].clone());
+        let visits = self.events.max(1) as f64;
+        let distance = |e: Expert| -> f64 {
+            let p1 = probs
+                .as_ref()
+                .and_then(|p| p.get(e))
+                .copied()
+                .unwrap_or(0.5) as f64;
+            let rate = self.freq.get(&e).copied().unwrap_or(0) as f64 / visits;
+            (1.0 - p1).max(0.0) / rate.max(MIN_RATE)
+        };
+        let lfu_key =
+            |e: Expert| (self.freq.get(&e).copied().unwrap_or(0), self.last_access.get(&e).copied().unwrap_or(0), e);
+        let mut best = resident[0];
+        let mut best_d = distance(best);
+        for &e in &resident[1..] {
+            let d = distance(e);
+            // farthest predicted reuse wins; exact ties fall to LFU's key
+            if d > best_d || (d == best_d && lfu_key(e) < lfu_key(best)) {
+                best = e;
+                best_d = d;
+            }
+        }
+        best
+    }
+    // NOTE: no on_evict cleanup — like LFU, frequency is global history.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lfu::Lfu;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Drive a policy through a pseudo-random access/evict schedule and
+    /// record every victim it picks.
+    fn victim_schedule(p: &mut dyn Policy, seed: u64) -> Vec<Expert> {
+        let mut rng = Rng::new(seed);
+        let mut victims = Vec::new();
+        for tick in 0..400u64 {
+            let e = (rng.f64() * 8.0) as usize;
+            match (rng.f64() * 3.0) as usize {
+                0 => p.on_hit(e, tick),
+                1 => p.on_insert(e, tick),
+                _ => victims.push(p.victim(&[0, 2, 4, 6], tick)),
+            }
+        }
+        victims
+    }
+
+    #[test]
+    fn no_scoreboard_degrades_exactly_to_lfu() {
+        for seed in 0..5 {
+            let mut lfu = Lfu::new();
+            let mut learned = LearnedEviction::new(0, None);
+            assert_eq!(
+                victim_schedule(&mut learned, seed),
+                victim_schedule(&mut lfu, seed),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn uninformative_scoreboard_degrades_exactly_to_lfu() {
+        // the 0.5-everywhere prior is what zero predictor weights produce
+        for seed in 0..5 {
+            let mut lfu = Lfu::new();
+            let mut learned = LearnedEviction::new(1, Some(new_scoreboard(2, 8)));
+            assert_eq!(
+                victim_schedule(&mut learned, seed),
+                victim_schedule(&mut lfu, seed),
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn prediction_breaks_frequency_ties() {
+        let board = new_scoreboard(1, 4);
+        let mut p = LearnedEviction::new(0, Some(board.clone()));
+        p.on_insert(0, 1);
+        p.on_insert(1, 2); // equal frequency
+        board.lock().unwrap()[0] = vec![0.9, 0.1, 0.5, 0.5];
+        // expert 1 is predicted dead -> larger reuse distance -> victim,
+        // even though LFU's recency tiebreak would have evicted 0
+        assert_eq!(p.victim(&[0, 1], 3), 1);
+    }
+
+    #[test]
+    fn prediction_can_overrule_frequency() {
+        // Belady-style call LFU cannot make: evict the historically hot
+        // expert when the predictor says its run is over.
+        let board = new_scoreboard(1, 4);
+        let mut p = LearnedEviction::new(0, Some(board.clone()));
+        for t in 0..10 {
+            p.on_hit(0, t);
+        }
+        p.on_insert(1, 11);
+        board.lock().unwrap()[0] = vec![0.0, 1.0, 0.5, 0.5];
+        // dist(0) = 1.0/(10/11) ≈ 1.1, dist(1) = 0.0/... = 0
+        assert_eq!(p.victim(&[0, 1], 12), 0);
+    }
+
+    #[test]
+    fn out_of_range_expert_gets_prior() {
+        // scoreboard row shorter than the expert id: falls back to 0.5
+        let board = new_scoreboard(1, 2);
+        let mut p = LearnedEviction::new(0, Some(board));
+        p.on_insert(5, 1);
+        p.on_insert(6, 2);
+        assert_eq!(p.victim(&[5, 6], 3), 5); // LFU recency tiebreak
+    }
+}

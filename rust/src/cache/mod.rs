@@ -13,6 +13,8 @@
 //!   unused count"): frequency decayed by time since last use.
 //! * [`fifo`], [`random`] — control baselines.
 //! * [`belady`] — clairvoyant optimal for trace replay (upper bound).
+//! * [`learned`] — predictor-driven reuse-distance eviction (§6.1
+//!   learning-based direction); degrades exactly to LFU without weights.
 //!
 //! The cache is **semantically transparent**: it stores weights, never
 //! activations, so policy/size can never change model outputs — an
@@ -20,6 +22,7 @@
 
 pub mod belady;
 pub mod fifo;
+pub mod learned;
 pub mod lfu;
 pub mod lfu_aged;
 pub mod lru;
@@ -55,6 +58,7 @@ pub enum PolicyKind {
     Fifo,
     Random,
     Belady,
+    Learned,
 }
 
 impl PolicyKind {
@@ -66,6 +70,7 @@ impl PolicyKind {
             "fifo" => Some(PolicyKind::Fifo),
             "random" => Some(PolicyKind::Random),
             "belady" | "oracle" => Some(PolicyKind::Belady),
+            "learned" => Some(PolicyKind::Learned),
             _ => None,
         }
     }
@@ -77,6 +82,7 @@ impl PolicyKind {
             PolicyKind::Fifo => "fifo",
             PolicyKind::Random => "random",
             PolicyKind::Belady => "belady",
+            PolicyKind::Learned => "learned",
         }
     }
     /// Instantiate for one layer. `seed` feeds the random policy; `future`
@@ -91,6 +97,11 @@ impl PolicyKind {
             PolicyKind::Belady => Box::new(belady::Belady::new(
                 future.expect("belady needs the future trace"),
             )),
+            // `build` has no scoreboard to hand over, so this is the
+            // weights-absent LFU-equivalent fallback; predictor-wired
+            // instances come from `ExpertCache::with_policies` with
+            // per-layer `learned::LearnedEviction::new(l, Some(board))`.
+            PolicyKind::Learned => Box::new(learned::LearnedEviction::new(0, None)),
         }
     }
     pub fn all_online() -> [PolicyKind; 5] {
@@ -208,6 +219,14 @@ impl<V> ExpertCache<V> {
         let layers = (0..n_layers)
             .map(|l| LayerCache::new(capacity, kind.build(seed.wrapping_add(l as u64), None)))
             .collect();
+        ExpertCache { layers }
+    }
+
+    /// Build from explicit per-layer policies (one per layer) — the hook
+    /// the learned policy needs, since [`PolicyKind`] is `Copy` and cannot
+    /// carry the shared scoreboard `Arc`.
+    pub fn with_policies(capacity: usize, policies: Vec<Box<dyn Policy>>) -> Self {
+        let layers = policies.into_iter().map(|p| LayerCache::new(capacity, p)).collect();
         ExpertCache { layers }
     }
 

@@ -23,11 +23,14 @@
 pub mod batch;
 pub mod selfcheck;
 
-use crate::cache::{ExpertCache, PolicyKind};
+use crate::cache::learned::{new_scoreboard, LearnedEviction, Scoreboard};
+use crate::cache::{ExpertCache, Policy, PolicyKind};
 use crate::metrics::{PipelineStats, PrecisionRecall, RoundBatchStats, SessionTally, Throughput};
 use crate::model::sampler::{top_k, Sampler};
+use crate::offload::learned::{top_k_stable, LearnedContext, LearnedPredictor};
 use crate::offload::pipeline::{BufferPool, TransferPipeline};
-use crate::offload::prefetch::{PendingPrefetch, PrefetchConfig, TaggedGuess};
+use crate::offload::predictor::MarkovPredictor;
+use crate::offload::prefetch::{PendingPrefetch, PrefetchConfig, PrefetchSource, TaggedGuess};
 use crate::offload::store::HostExpertStore;
 use crate::offload::transfer::{FaultAction, FaultPlan, TransferEngine};
 use crate::runtime::{Backend, ExpertHandle, KvState};
@@ -51,6 +54,12 @@ pub struct EngineConfig {
     pub cache_capacity: usize,
     pub policy: PolicyKind,
     pub prefetch: PrefetchConfig,
+    /// Which signal drives prefetch guesses when `prefetch.enabled`:
+    /// speculative gating (default), the online Markov model, or the
+    /// offline-trained predictor (which needs weights via
+    /// [`InferenceEngine::with_predictor`] — without them the learned
+    /// source issues nothing).
+    pub prefetch_source: PrefetchSource,
     /// Dequant workers in the async transfer pipeline. `0` runs every
     /// transfer synchronously on the engine thread; `>= 1` overlaps
     /// dequantization with compute (demand misses preempt or join
@@ -87,6 +96,7 @@ impl EngineConfig {
             cache_capacity: capacity,
             policy: PolicyKind::Lru,
             prefetch: PrefetchConfig::default(),
+            prefetch_source: PrefetchSource::Gate,
             transfer_workers: 0,
             profile: crate::sim::hardware::physical()[0],
             disk: DiskProfile::default(),
@@ -231,6 +241,31 @@ pub struct InferenceEngine {
     cross_session_prefetch_hits: u64,
     /// Pending speculative guess for the next layer, session-tagged.
     spec_guess: Option<TaggedGuess>,
+    /// Offline-trained cross-layer predictor (None = feature off). Feeds
+    /// the learned prefetch source and the eviction scoreboard; never
+    /// touches the math path, so outputs stay bit-identical with it on.
+    predictor: Option<LearnedPredictor>,
+    /// Rolling activation history the predictor's features read. Shared
+    /// across sessions by design: the cache it protects is shared too.
+    pred_ctx: LearnedContext,
+    /// Online Markov model, instantiated for the markov prefetch source.
+    markov: Option<MarkovPredictor>,
+    /// Per-layer imminent-activation probabilities shared with the
+    /// learned eviction policies (present iff `policy == Learned`).
+    scoreboard: Option<Scoreboard>,
+    /// Predictor guess quality: guesses issued for a layer, settled
+    /// against the truth at that layer's next visit (aggregate, both
+    /// predictor sources; gate speculation keeps its own `spec_pr`).
+    pred_pr: PrecisionRecall,
+    /// Outstanding predictor guess per target layer, settled at that
+    /// layer's next visit.
+    pred_outstanding: Vec<Option<Vec<usize>>>,
+    /// Prefetch hits credited per [`PrefetchSource`] (indexed by `idx()`).
+    prefetch_hits_by_source: [u64; 3],
+    /// Scratch for predictor feature/probability vectors (hot path:
+    /// one forward per layer per token).
+    pred_feat: Vec<f32>,
+    pred_probs: Vec<f32>,
     /// Cumulative round-batching counters over every `step_round` call
     /// (DESIGN.md §8); the legacy per-session path never touches them.
     round_stats: RoundBatchStats,
@@ -251,7 +286,22 @@ impl InferenceEngine {
         store: Arc<HostExpertStore>,
         cfg: EngineConfig,
     ) -> Self {
+        Self::with_predictor(backend, store, cfg, None)
+    }
+
+    /// [`InferenceEngine::new`] plus an offline-trained predictor. A
+    /// predictor whose dimensions do not match the model is dropped (the
+    /// CLI validates loudly before getting here; this is the safety net
+    /// that keeps a stale weights file from panicking the decode loop).
+    pub fn with_predictor(
+        backend: Box<dyn Backend>,
+        store: Arc<HostExpertStore>,
+        cfg: EngineConfig,
+        predictor: Option<LearnedPredictor>,
+    ) -> Self {
         let mc = *backend.config();
+        let predictor = predictor
+            .filter(|p| p.n_layers() == mc.n_layers && p.n_experts() == mc.n_experts);
         let scale = ModelScale {
             name: "live",
             n_layers: mc.n_layers,
@@ -266,7 +316,23 @@ impl InferenceEngine {
         let dense_s_per_layer =
             cfg.profile.compute_time(scale.dense_flops_per_token()) / mc.n_layers as f64;
         let expert_s = cfg.profile.compute_time(scale.expert_flops());
-        let cache = ExpertCache::new(mc.n_layers, cfg.cache_capacity, cfg.policy, cfg.seed);
+        // the learned policy needs the shared scoreboard Arc, which the
+        // Copy `PolicyKind::build` cannot carry — wire it explicitly
+        let scoreboard =
+            (cfg.policy == PolicyKind::Learned).then(|| new_scoreboard(mc.n_layers, mc.n_experts));
+        let cache = match &scoreboard {
+            Some(board) => ExpertCache::with_policies(
+                cfg.cache_capacity,
+                (0..mc.n_layers)
+                    .map(|l| {
+                        Box::new(LearnedEviction::new(l, Some(board.clone()))) as Box<dyn Policy>
+                    })
+                    .collect(),
+            ),
+            None => ExpertCache::new(mc.n_layers, cfg.cache_capacity, cfg.policy, cfg.seed),
+        };
+        let markov = (cfg.prefetch_source == PrefetchSource::Markov)
+            .then(|| MarkovPredictor::new(mc.n_layers, mc.n_experts));
         let pool = BufferPool::new();
         let pipeline = (cfg.transfer_workers > 0).then(|| {
             TransferPipeline::spawn(Arc::clone(&store), Arc::clone(&pool), cfg.transfer_workers)
@@ -289,6 +355,15 @@ impl InferenceEngine {
             prefill_steps: 0,
             cross_session_prefetch_hits: 0,
             spec_guess: None,
+            predictor,
+            pred_ctx: LearnedContext::new(mc.n_layers, mc.n_experts),
+            markov,
+            scoreboard,
+            pred_pr: PrecisionRecall::default(),
+            pred_outstanding: vec![None; mc.n_layers],
+            prefetch_hits_by_source: [0; 3],
+            pred_feat: Vec::new(),
+            pred_probs: Vec::new(),
             round_stats: RoundBatchStats::default(),
             degraded_tokens: 0,
             trace,
@@ -524,6 +599,7 @@ impl InferenceEngine {
             ev.hidden_transfers += 1;
         }
         self.cache.layers[l].stats.prefetch_hits += 1;
+        self.prefetch_hits_by_source[pending.source.idx()] += 1;
         if pending.session != session {
             // another session's speculation paid for this transfer: the
             // shared cache amortized it across sessions
@@ -548,11 +624,13 @@ impl InferenceEngine {
     }
 
     /// Issue speculative prefetches for `next_layer` on behalf of `session`.
+    /// `source` tags the pending records so hits attribute per guesser.
     fn prefetch(
         &mut self,
         session: u64,
         next_layer: usize,
         guesses: &[usize],
+        source: PrefetchSource,
         ev: &mut TokenEvents,
     ) -> Result<()> {
         // a fresh guess round supersedes stale queued guesses for this
@@ -588,6 +666,7 @@ impl InferenceEngine {
                 session,
                 layer: next_layer,
                 expert: e,
+                source,
                 done_at: done,
             });
             match &mut self.pipeline {
@@ -605,6 +684,86 @@ impl InferenceEngine {
                 }
             }
             ev.wasted_prefetches += 1; // provisional; settled below
+        }
+        Ok(())
+    }
+
+    /// Predictor-side work at the end of layer `l`'s routing, shared by
+    /// the per-session and batched paths. In order:
+    ///
+    /// 1. settle the outstanding predictor guess for `l` against the truth
+    ///    (correct guesses were not wasted — mirrors the gate settle);
+    /// 2. run the offline model for the next boundary `(l+1) % L`, publish
+    ///    the probability row to the eviction scoreboard, and (learned
+    ///    source) issue the top-k as a prefetch round;
+    /// 3. (markov source, last layer) issue whole-token guesses for every
+    ///    layer of the next token;
+    /// 4. fold `selected` into the rolling context — strictly AFTER
+    ///    predicting, matching the trainer's sample order, so inference
+    ///    features are distributed like training features.
+    ///
+    /// Everything here warms caches and moves simulated bytes; nothing
+    /// feeds back into hidden states, so decode output stays bit-identical
+    /// with the predictor on or off (property-tested).
+    fn predictor_layer_hook(
+        &mut self,
+        session: u64,
+        l: usize,
+        selected: &[usize],
+        gate_w: &[f32],
+        ev: &mut TokenEvents,
+    ) -> Result<()> {
+        if self.predictor.is_none() && self.markov.is_none() {
+            return Ok(());
+        }
+        let n_layers = self.pred_outstanding.len();
+        if let Some(g) = self.pred_outstanding[l].take() {
+            self.pred_pr.record(&g, selected);
+            let correct = g.iter().filter(|e| selected.contains(e)).count();
+            // a wrap guess (issued at layer L-1 for the next token's layer
+            // 0) settles in the NEXT token's events, where the provisional
+            // wasted count lives in the previous entry — the saturation
+            // keeps the aggregate conservative rather than wrong
+            ev.wasted_prefetches = ev.wasted_prefetches.saturating_sub(correct);
+        }
+        let prefetching = self.cfg.prefetch.enabled;
+        let mut issue: Option<(usize, Vec<usize>)> = None;
+        if let Some(pred) = &self.predictor {
+            // detach the scratch buffers so the &self.predictor borrow and
+            // the &mut buffer borrows never overlap
+            let mut feat = std::mem::take(&mut self.pred_feat);
+            let mut probs = std::mem::take(&mut self.pred_probs);
+            let tl = pred.target_layer(l);
+            pred.features_into(&self.pred_ctx, l, selected, gate_w, &mut feat);
+            pred.forward_into(l, &feat, &mut probs);
+            if let Some(board) = &self.scoreboard {
+                board.lock().expect("scoreboard poisoned")[tl].copy_from_slice(&probs);
+            }
+            if prefetching && self.cfg.prefetch_source == PrefetchSource::Learned {
+                issue = Some((tl, top_k_stable(&probs, self.cfg.prefetch.k)));
+            }
+            self.pred_feat = feat;
+            self.pred_probs = probs;
+        }
+        if let Some((tl, guess)) = issue {
+            self.prefetch(session, tl, &guess, PrefetchSource::Learned, ev)?;
+            self.pred_outstanding[tl] = Some(guess);
+        }
+        self.pred_ctx.observe(l, selected);
+        let mut markov_issue: Vec<(usize, Vec<usize>)> = Vec::new();
+        if let Some(m) = &mut self.markov {
+            m.observe(l, selected);
+            // whole-token lead: the moment the last layer routes, guess
+            // every layer of the next token (the §6.1 trade-off: more lead
+            // time than gating, less accuracy)
+            if prefetching && l + 1 == n_layers {
+                let k = self.cfg.prefetch.k;
+                markov_issue = (0..n_layers).map(|tl| (tl, m.predict(tl, k))).collect();
+            }
+        }
+        for (tl, guess) in markov_issue {
+            self.prefetch(session, tl, &guess, PrefetchSource::Markov, ev)?;
+            self.pred_outstanding[tl] = Some(guess);
         }
         Ok(())
     }
@@ -754,12 +913,18 @@ impl InferenceEngine {
             // speculative guess for layer l+1 from THIS layer's post-attn
             // hidden states (issued before the expert compute so transfers
             // overlap with it)
-            if self.cfg.prefetch.enabled && l + 1 < mc.n_layers {
+            if self.cfg.prefetch.enabled
+                && self.cfg.prefetch_source == PrefetchSource::Gate
+                && l + 1 < mc.n_layers
+            {
                 let spec_probs = self.backend.spec_router(l + 1, &x_res)?;
                 let guesses = top_k(&spec_probs, self.cfg.prefetch.k);
-                self.prefetch(session, l + 1, &guesses, ev)?;
+                self.prefetch(session, l + 1, &guesses, PrefetchSource::Gate, ev)?;
                 self.spec_guess = Some(TaggedGuess { session, layer: l + 1, experts: guesses });
             }
+            // predictor-side settle/publish/prefetch/observe (no-op
+            // without a predictor source or learned policy)
+            self.predictor_layer_hook(session, l, &selected, &gate_w, ev)?;
 
             // expert compute with cache/transfer
             let mut y = vec![0.0f32; mc.hidden_size];
@@ -834,12 +999,16 @@ impl InferenceEngine {
             t.at_mut(token_idx, l).weights = gate_w.clone();
         }
 
-        if self.cfg.prefetch.enabled && l + 1 < mc.n_layers {
+        if self.cfg.prefetch.enabled
+            && self.cfg.prefetch_source == PrefetchSource::Gate
+            && l + 1 < mc.n_layers
+        {
             let spec_probs = self.backend.spec_router(l + 1, &x_res)?;
             let guesses = top_k(&spec_probs, self.cfg.prefetch.k);
-            self.prefetch(session, l + 1, &guesses, ev)?;
+            self.prefetch(session, l + 1, &guesses, PrefetchSource::Gate, ev)?;
             *guess = Some(TaggedGuess { session, layer: l + 1, experts: guesses });
         }
+        self.predictor_layer_hook(session, l, &selected, &gate_w, ev)?;
         Ok((RoutedItem { x_res, h, selected, gate_w }, spec_delta))
     }
 
@@ -1118,6 +1287,18 @@ impl InferenceEngine {
         sampler: &mut Sampler,
     ) -> Result<GenerationOutput> {
         let mc = *self.backend.config();
+        // each generate() call is an independent sequence: record the
+        // boundary in the trace (predictor evaluation resets there — the
+        // accuracy-inflation fix) and reset the online predictor contexts
+        // so history never bleeds across unrelated prompts
+        if let Some(t) = &mut self.trace {
+            t.mark_sequence_boundary();
+        }
+        self.pred_ctx.reset();
+        if let Some(m) = &mut self.markov {
+            m.reset_context();
+        }
+        self.pred_outstanding.iter_mut().for_each(|g| *g = None);
         let mut kv = self.backend.new_kv()?;
         let mut tokens: Vec<u32> = prompt.to_vec();
         let mut generated = Vec::with_capacity(n_gen);
@@ -1204,6 +1385,33 @@ impl InferenceEngine {
     }
     pub fn spec_precision_recall(&self) -> PrecisionRecall {
         self.spec_pr
+    }
+    /// Predictor-source guess quality (markov + learned prefetch guesses,
+    /// settled at each target layer's next visit). Zeros when no predictor
+    /// source ran.
+    pub fn predictor_precision_recall(&self) -> PrecisionRecall {
+        self.pred_pr
+    }
+    /// Prefetch hits attributed to each guess source, `(name, hits)` in
+    /// [`PrefetchSource::ALL`] order — sums to the cache's
+    /// `prefetch_hits` total.
+    pub fn prefetch_hits_by_source(&self) -> [(&'static str, u64); 3] {
+        let mut out = [("", 0); 3];
+        for s in PrefetchSource::ALL {
+            out[s.idx()] = (s.name(), self.prefetch_hits_by_source[s.idx()]);
+        }
+        out
+    }
+    /// Whether an offline-trained predictor is installed (weights loaded
+    /// and dimension-matched).
+    pub fn predictor_active(&self) -> bool {
+        self.predictor.is_some()
+    }
+    /// Malformed records dropped by the online markov predictor's
+    /// `observe` (always 0 for engine-fed activations; nonzero only if a
+    /// trace-driven path feeds it garbage).
+    pub fn predictor_skipped_records(&self) -> u64 {
+        self.markov.as_ref().map_or(0, |m| m.skipped_records())
     }
     /// Engine-lifetime round-batching counters — zeros when the round path
     /// never ran (solo decoding, or `--round-batching off`).

@@ -167,6 +167,7 @@ pub fn check_decode(
             record_trace: true,
             fetch_retries: 2,
             demand_deadline_ms: 0,
+            ..EngineConfig::default()
         },
     );
     let mut sampler = Sampler::new(Sampling::Greedy, 0);

@@ -57,7 +57,7 @@ pub fn prediction_sources(ctx: &FigCtx) -> Result<String> {
     let spec = speculative::score(&spec_trace).pr;
 
     // learned Markov predictor over the same trace
-    let markov = predictor::evaluate_on_trace(&ctx.trace, ctx.trace.top_k);
+    let markov = predictor::evaluate_on_trace(&ctx.trace, ctx.trace.top_k)?.pr;
 
     // frequency prior: guess the 2 most-activated experts so far per layer
     let mut freq_pr = crate::metrics::PrecisionRecall::default();

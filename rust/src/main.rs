@@ -24,6 +24,14 @@
 //!              --http-workers N            parse/admission threads
 //!              --transfer-workers N        async dequant pipeline workers
 //!                                          (0 = sync; legacy --overlap = 1)
+//!              --prefetch-source S         guess stream feeding the prefetcher:
+//!                                          gate | markov | learned (per-source
+//!                                          hit attribution in /metrics)
+//!              --predictor-weights PATH    learned-predictor weights (default
+//!                                          data/predictor_weights.json when the
+//!                                          learned policy/source is active;
+//!                                          absent default degrades to LFU /
+//!                                          idle prefetch)
 //!              --fetch-retries N           bounded retries (with exponential
 //!                                          backoff) on transient expert-fetch
 //!                                          failures (default 2)
@@ -47,6 +55,15 @@
 //!              ?priority=batch (or x-priority: batch) opts into the
 //!              throughput tier
 //!   figures    regenerate every paper table/figure into --out-dir
+//!   train-predictor
+//!              fit the cross-layer expert predictor on an activation
+//!              trace (--trace activations.csv, or a synthetic trace via
+//!              --tokens/--layers/--seed) and write its weights JSON
+//!              (--out, default data/predictor_weights.json); holds out
+//!              the trace tail for the reported precision/recall
+//!              (--holdout fraction, 0 trains on everything).
+//!              Consumers: `--policy learned` (reuse-distance eviction)
+//!              and `--prefetch-source learned|markov|gate`.
 
 use anyhow::{bail, Result};
 use moe_offload::cache::PolicyKind;
@@ -54,12 +71,13 @@ use moe_offload::engine::{selfcheck, EngineConfig, InferenceEngine};
 use moe_offload::model::sampler::{Sampler, Sampling};
 use moe_offload::model::tokenizer::Tokenizer;
 use moe_offload::model::Weights;
-use moe_offload::offload::prefetch::PrefetchConfig;
+use moe_offload::offload::learned::{self, TrainConfig};
+use moe_offload::offload::prefetch::{PrefetchConfig, PrefetchSource};
 use moe_offload::offload::store::{HostExpertStore, HostTierConfig};
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::{artifacts::Artifacts, native::NativeBackend, pjrt::PjrtBackend, Backend};
 use moe_offload::sim::{cachesim, costmodel::CostModel, hardware, tracegen};
-use moe_offload::trace::render;
+use moe_offload::trace::{export, render};
 use moe_offload::util::cliargs::Args;
 use moe_offload::util::stats::Table;
 use std::path::Path;
@@ -81,9 +99,14 @@ fn run(argv: &[String]) -> Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("serve") => moe_offload::serve::cmd_serve(&args),
         Some("figures") => moe_offload::figures::cmd_figures(&args),
-        Some(other) => bail!("unknown command {other:?}; try selfcheck|generate|simulate|serve|figures"),
+        Some("train-predictor") => cmd_train_predictor(&args),
+        Some(other) => bail!(
+            "unknown command {other:?}; try selfcheck|generate|simulate|serve|figures|train-predictor"
+        ),
         None => {
-            println!("usage: moe-offload <selfcheck|generate|simulate|serve|figures> [flags]");
+            println!(
+                "usage: moe-offload <selfcheck|generate|simulate|serve|figures|train-predictor> [flags]"
+            );
             Ok(())
         }
     }
@@ -155,11 +178,14 @@ fn engine_from_args(args: &Args, loaded: &Loaded) -> Result<InferenceEngine> {
     };
     let profile = hardware::by_name(&args.str_or("profile", "A100"))
         .ok_or_else(|| anyhow::anyhow!("bad --profile (A100|A6000|L40|RTX3090)"))?;
+    let prefetch_source = PrefetchSource::parse(&args.str_or("prefetch-source", "gate"))
+        .ok_or_else(|| anyhow::anyhow!("bad --prefetch-source (gate|markov|learned)"))?;
     let disk_read_mbps = args.usize_or("disk-read-mbps", 0)?;
     let cfg = EngineConfig {
         cache_capacity: args.usize_or("capacity", 4)?,
         policy,
         prefetch: PrefetchConfig { enabled: args.bool("spec"), k: args.usize_or("spec-k", 2)? },
+        prefetch_source,
         transfer_workers: EngineConfig::transfer_workers_from(args)?,
         profile,
         disk: if disk_read_mbps > 0 {
@@ -172,7 +198,11 @@ fn engine_from_args(args: &Args, loaded: &Loaded) -> Result<InferenceEngine> {
         fetch_retries: args.usize_or("fetch-retries", 2)?,
         demand_deadline_ms: args.usize_or("demand-deadline-ms", 0)? as u64,
     };
-    Ok(InferenceEngine::new(backend, store, cfg))
+    let mc = *backend.config();
+    let wanted = policy == PolicyKind::Learned || prefetch_source == PrefetchSource::Learned;
+    let predictor =
+        learned::load_optional(args.get("predictor-weights"), wanted, mc.n_layers, mc.n_experts)?;
+    Ok(InferenceEngine::with_predictor(backend, store, cfg, predictor))
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -227,6 +257,24 @@ fn cmd_generate(args: &Args) -> Result<()> {
                 100.0 * spr.precision(),
                 100.0 * spr.recall()
             );
+        }
+        if engine.cfg.prefetch_source != PrefetchSource::Gate {
+            let ppr = engine.predictor_precision_recall();
+            println!(
+                "{} predictor precision {:.1}%  recall {:.1}%  skipped records {}",
+                engine.cfg.prefetch_source.name(),
+                100.0 * ppr.precision(),
+                100.0 * ppr.recall(),
+                engine.predictor_skipped_records()
+            );
+        }
+        if engine.cfg.prefetch.enabled {
+            let by_source: Vec<String> = engine
+                .prefetch_hits_by_source()
+                .iter()
+                .map(|(name, hits)| format!("{name} {hits}"))
+                .collect();
+            println!("prefetch hits by source: {}", by_source.join("  "));
         }
         if args.bool("show-trace") {
             for l in layer_selection(trace.n_layers) {
@@ -300,5 +348,113 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
+
+    // Learned eviction runs the honest protocol: fit the predictor on the
+    // trace head, replay head-blind policies next to it on the tail.
+    if tokens >= 16 {
+        let mut train = trace.clone();
+        let eval = train.split_off(tokens / 2);
+        let trained = learned::train_on_trace(&train, &TrainConfig::default())?;
+        let mut rows =
+            vec![cachesim::replay_learned(&mut eval.clone(), &trained.predictor, capacity)];
+        for p in [PolicyKind::Lru, PolicyKind::Lfu, PolicyKind::Belady] {
+            rows.push(cachesim::replay(&mut eval.clone(), p, capacity, seed));
+        }
+        println!(
+            "\nlearned eviction (predictor fit on first {} tokens, all policies replayed on last {}):",
+            train.n_tokens(),
+            eval.n_tokens()
+        );
+        let mut lt = Table::new(&["policy", "hit-rate", "misses/tok", "evictions"]);
+        for r in &rows {
+            lt.row(&[
+                r.policy.name().to_string(),
+                format!("{:.1}%", 100.0 * r.stats.hit_rate()),
+                format!("{:.1}", r.misses_per_token()),
+                format!("{}", r.stats.evictions),
+            ]);
+        }
+        print!("{}", lt.render());
+    }
+    Ok(())
+}
+
+fn cmd_train_predictor(args: &Args) -> Result<()> {
+    let mut trace = match args.get("trace") {
+        Some(path) => {
+            let trace = export::parse_trace_csv(&std::fs::read_to_string(path)?)?;
+            println!(
+                "trace {}: {} tokens x {} layers ({} experts, top-{})",
+                path,
+                trace.n_tokens(),
+                trace.n_layers,
+                trace.n_experts,
+                trace.top_k
+            );
+            trace
+        }
+        None => {
+            let cfg = tracegen::TraceGenConfig {
+                n_layers: args.usize_or("layers", 12)?,
+                n_tokens: args.usize_or("tokens", 1024)?,
+                locality: args.f64_or("locality", 0.3)?,
+                seed: args.usize_or("seed", 0)? as u64,
+                ..Default::default()
+            };
+            println!(
+                "synthetic trace: {} tokens x {} layers, locality {:.2}, seed {}",
+                cfg.n_tokens, cfg.n_layers, cfg.locality, cfg.seed
+            );
+            tracegen::generate(&cfg)
+        }
+    };
+    let holdout = args.f64_or("holdout", 0.5)?;
+    if !(0.0..1.0).contains(&holdout) {
+        bail!("--holdout must be in [0, 1)");
+    }
+    let eval_trace = if holdout > 0.0 {
+        let split = ((trace.n_tokens() as f64) * (1.0 - holdout)).round() as usize;
+        if split == 0 || split >= trace.n_tokens() {
+            bail!("--holdout {holdout} leaves no tokens to train or evaluate on");
+        }
+        Some(trace.split_off(split))
+    } else {
+        None
+    };
+    let cfg = TrainConfig {
+        epochs: args.usize_or("epochs", TrainConfig::default().epochs)?,
+        lr: args.f64_or("lr", TrainConfig::default().lr as f64)? as f32,
+    };
+    let outcome = learned::train_on_trace(&trace, &cfg)?;
+    println!(
+        "trained on {} tokens: {} samples, {} malformed records skipped ({} epochs, lr {})",
+        trace.n_tokens(),
+        outcome.samples,
+        outcome.skipped_records,
+        cfg.epochs,
+        cfg.lr
+    );
+    if let Some(eval_trace) = &eval_trace {
+        let k = args.usize_or("k", eval_trace.top_k)?;
+        let eval = learned::evaluate_on_trace(&outcome.predictor, eval_trace, k)?;
+        println!(
+            "holdout ({} tokens, top-{k}): precision {:.1}%  recall {:.1}%",
+            eval_trace.n_tokens(),
+            100.0 * eval.overall.precision(),
+            100.0 * eval.overall.recall()
+        );
+        let mut t = Table::new(&["target layer", "precision", "recall"]);
+        for (l, pr) in eval.per_layer.iter().enumerate() {
+            t.row(&[
+                format!("{l}"),
+                format!("{:.1}%", 100.0 * pr.precision()),
+                format!("{:.1}%", 100.0 * pr.recall()),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    let out = args.str_or("out", learned::DEFAULT_WEIGHTS_PATH);
+    outcome.predictor.save(Path::new(&out))?;
+    println!("weights -> {out}");
     Ok(())
 }

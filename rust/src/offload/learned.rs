@@ -1,0 +1,723 @@
+//! Offline-trained cross-layer expert predictor — the paper's §6.1
+//! "learning-based prediction" direction taken past the online Markov
+//! model in [`crate::offload::predictor`].
+//!
+//! One tiny logistic model per layer boundary: the model for source layer
+//! `l` maps features observable the moment `l` finishes routing to
+//! activation probabilities for every expert at the NEXT layer
+//! `(l+1) % n_layers` (the wrap-around boundary `L-1 -> 0` predicts the
+//! next token's first layer). Feature vector (`5E+1` entries):
+//!
+//! | slot          | meaning                                             |
+//! |---------------|-----------------------------------------------------|
+//! | `[0,E)`       | one-hot activated set at the source layer           |
+//! | `[E,2E)`      | renormalized gate weights at the source layer       |
+//! | `[2E,3E)`     | one-hot of the TARGET layer's previous activated set |
+//! | `[3E,4E)`     | fast EWMA (decay 0.8) of target-layer activations   |
+//! | `[4E,5E)`     | slow EWMA (decay 0.98) of target-layer activations  |
+//! | `5E`          | bias                                                |
+//!
+//! The target layer's own recent history carries most of the signal (MoE
+//! routing is strongly self-correlated across tokens, paper §3.1); the
+//! source activation + gates add the cross-layer component that
+//! speculative gating exploits. Training is plain deterministic SGD on
+//! logistic loss — fixed traversal order, f32 arithmetic, no RNG — so two
+//! training runs over the same trace are bit-identical, as are two
+//! inference replays (the determinism property tests rely on this).
+//!
+//! Two consumers share the scores:
+//! - prefetch: top-k of the imminent-activation probabilities becomes a
+//!   [`crate::offload::prefetch::TaggedGuess`] per upcoming layer
+//!   ([`LearnedPredictor::rollout`] chains boundaries for lead time);
+//! - eviction: [`crate::cache::learned`] turns the same probabilities
+//!   into predicted reuse distances to rank victims, approximating
+//!   Belady online.
+
+use crate::metrics::PrecisionRecall;
+use crate::trace::Trace;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Format tag in serialized weight files.
+pub const WEIGHTS_FORMAT: &str = "moe-predictor-v1";
+/// Where committed weights live, relative to the repo root — the default
+/// for `train-predictor --out` and for every `--predictor-weights`-less
+/// entry point that wants a predictor.
+pub const DEFAULT_WEIGHTS_PATH: &str = "data/predictor_weights.json";
+/// Fast-history EWMA decay (per target-layer visit).
+pub const FAST_DECAY: f32 = 0.8;
+/// Slow-history EWMA decay (per target-layer visit).
+pub const SLOW_DECAY: f32 = 0.98;
+
+/// Training hyperparameters (the defaults are the values validated in
+/// EXPERIMENTS.md; they are serialized alongside the weights for
+/// provenance).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { epochs: 6, lr: 0.1 }
+    }
+}
+
+/// Per-boundary logistic models over activation features.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LearnedPredictor {
+    n_layers: usize,
+    n_experts: usize,
+    /// w[src_layer][target_expert][feature].
+    w: Vec<Vec<Vec<f32>>>,
+}
+
+/// Rolling per-layer activation history consumed as model features.
+/// Owned by whoever walks tokens (engine, sim replay, trainer); reset at
+/// sequence boundaries so history never bleeds across unrelated prompts.
+#[derive(Clone, Debug)]
+pub struct LearnedContext {
+    prev: Vec<Vec<usize>>,
+    hf: Vec<Vec<f32>>,
+    hs: Vec<Vec<f32>>,
+}
+
+impl LearnedContext {
+    pub fn new(n_layers: usize, n_experts: usize) -> Self {
+        LearnedContext {
+            prev: vec![Vec::new(); n_layers],
+            hf: vec![vec![0.0; n_experts]; n_layers],
+            hs: vec![vec![0.0; n_experts]; n_layers],
+        }
+    }
+
+    /// Fold one observed activation set into the history for `layer`.
+    pub fn observe(&mut self, layer: usize, activated: &[usize]) {
+        debug_assert!(layer < self.hf.len());
+        for h in self.hf[layer].iter_mut() {
+            *h *= FAST_DECAY;
+        }
+        for h in self.hs[layer].iter_mut() {
+            *h *= SLOW_DECAY;
+        }
+        for &e in activated {
+            self.hf[layer][e] += 1.0 - FAST_DECAY;
+            self.hs[layer][e] += 1.0 - SLOW_DECAY;
+        }
+        self.prev[layer].clear();
+        self.prev[layer].extend_from_slice(activated);
+    }
+
+    /// Forget everything (sequence boundary).
+    pub fn reset(&mut self) {
+        for p in self.prev.iter_mut() {
+            p.clear();
+        }
+        for h in self.hf.iter_mut() {
+            h.fill(0.0);
+        }
+        for h in self.hs.iter_mut() {
+            h.fill(0.0);
+        }
+    }
+}
+
+/// Stable top-k over f32 scores: k-pass argmax with a strictly-greater
+/// comparison over an in-order scan, so exact ties resolve to the lowest
+/// index — predictions never flip on float quantization of near-ties.
+pub fn top_k_stable(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        for e in 0..scores.len() {
+            if out.contains(&e) {
+                continue;
+            }
+            if best == usize::MAX || scores[e] > scores[best] {
+                best = e;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+impl LearnedPredictor {
+    /// A predictor with all-zero weights: every probability is exactly
+    /// 0.5, which downstream consumers treat as "no information" (the
+    /// learned eviction policy degrades to LFU, prefetch to popularity
+    /// order).
+    pub fn new_zeroed(n_layers: usize, n_experts: usize) -> Result<Self> {
+        if n_layers < 2 || n_experts == 0 {
+            bail!("predictor needs >= 2 layers and >= 1 expert, got {n_layers}x{n_experts}");
+        }
+        let f = Self::feature_count(n_experts);
+        Ok(LearnedPredictor {
+            n_layers,
+            n_experts,
+            w: vec![vec![vec![0.0; f]; n_experts]; n_layers],
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+    fn feature_count(n_experts: usize) -> usize {
+        5 * n_experts + 1
+    }
+    /// The layer whose imminent visit source layer `l` predicts.
+    pub fn target_layer(&self, src_layer: usize) -> usize {
+        (src_layer + 1) % self.n_layers
+    }
+
+    /// Assemble the feature vector for the boundary out of `src_layer`
+    /// into `out` (resized as needed).
+    pub fn features_into(
+        &self,
+        ctx: &LearnedContext,
+        src_layer: usize,
+        src_activated: &[usize],
+        src_gates: &[f32],
+        out: &mut Vec<f32>,
+    ) {
+        let e_n = self.n_experts;
+        let tl = self.target_layer(src_layer);
+        out.clear();
+        out.resize(Self::feature_count(e_n), 0.0);
+        for (i, &e) in src_activated.iter().enumerate() {
+            out[e] = 1.0;
+            out[e_n + e] = src_gates.get(i).copied().unwrap_or(0.0);
+        }
+        for &e in &ctx.prev[tl] {
+            out[2 * e_n + e] = 1.0;
+        }
+        out[3 * e_n..4 * e_n].copy_from_slice(&ctx.hf[tl]);
+        out[4 * e_n..5 * e_n].copy_from_slice(&ctx.hs[tl]);
+        out[5 * e_n] = 1.0;
+    }
+
+    /// Logistic forward pass for the boundary out of `src_layer`:
+    /// `probs[e]` = predicted probability that expert `e` activates at the
+    /// target layer's imminent visit.
+    pub fn forward_into(&self, src_layer: usize, features: &[f32], probs: &mut Vec<f32>) {
+        probs.clear();
+        for row in &self.w[src_layer] {
+            let z: f32 = row.iter().zip(features).map(|(w, x)| w * x).sum();
+            probs.push(sigmoid(z));
+        }
+    }
+
+    /// Convenience wrapper: probabilities for the layer after `src_layer`.
+    pub fn predict_probs(
+        &self,
+        ctx: &LearnedContext,
+        src_layer: usize,
+        src_activated: &[usize],
+        src_gates: &[f32],
+    ) -> Vec<f32> {
+        let mut feat = Vec::new();
+        let mut probs = Vec::new();
+        self.features_into(ctx, src_layer, src_activated, src_gates, &mut feat);
+        self.forward_into(src_layer, &feat, &mut probs);
+        probs
+    }
+
+    /// Top-k expert guess for the layer after `src_layer`.
+    pub fn predict_next(
+        &self,
+        ctx: &LearnedContext,
+        src_layer: usize,
+        src_activated: &[usize],
+        src_gates: &[f32],
+        k: usize,
+    ) -> Vec<usize> {
+        top_k_stable(&self.predict_probs(ctx, src_layer, src_activated, src_gates), k)
+    }
+
+    /// Chain boundary models to guess the expert sets of the next `depth`
+    /// layers (wrapping into the next token after layer `L-1`): each step
+    /// feeds the previous step's top-k guess back in as a pseudo-activated
+    /// set with its renormalized probabilities as pseudo-gates. Returns
+    /// `(target_layer, top-k experts)` per step. Accuracy decays with
+    /// depth — that is the lead-time trade-off the prefetch lookahead
+    /// flag exposes.
+    pub fn rollout(
+        &self,
+        ctx: &LearnedContext,
+        src_layer: usize,
+        src_activated: &[usize],
+        src_gates: &[f32],
+        depth: usize,
+        k: usize,
+    ) -> Vec<(usize, Vec<usize>)> {
+        let mut out = Vec::with_capacity(depth);
+        let mut layer = src_layer;
+        let mut act = src_activated.to_vec();
+        let mut gates = src_gates.to_vec();
+        for _ in 0..depth {
+            let probs = self.predict_probs(ctx, layer, &act, &gates);
+            let guess = top_k_stable(&probs, k);
+            let tl = self.target_layer(layer);
+            let wsum: f32 = guess.iter().map(|&e| probs[e]).sum::<f32>().max(1e-6);
+            gates = guess.iter().map(|&e| probs[e] / wsum).collect();
+            act.clone_from(&guess);
+            out.push((tl, guess));
+            layer = tl;
+        }
+        out
+    }
+
+    // -- serialization ------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let weights = Value::Arr(
+            self.w
+                .iter()
+                .map(|layer| {
+                    Value::Arr(
+                        layer
+                            .iter()
+                            .map(|row| {
+                                Value::Arr(
+                                    row.iter().map(|&x| Value::Num(x as f64)).collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        );
+        Value::obj(vec![
+            ("format", WEIGHTS_FORMAT.into()),
+            ("n_layers", self.n_layers.into()),
+            ("n_experts", self.n_experts.into()),
+            ("fast_decay", (FAST_DECAY as f64).into()),
+            ("slow_decay", (SLOW_DECAY as f64).into()),
+            ("weights", weights),
+        ])
+    }
+
+    /// Strict deserialization: format tag, dimensions, and every weight
+    /// (finite numbers only) are validated, so a truncated or mismatched
+    /// weights file is a clean error instead of a panic later.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        match v.get("format").as_str() {
+            Some(WEIGHTS_FORMAT) => {}
+            other => bail!("predictor weights: bad format tag {other:?}"),
+        }
+        let n_layers =
+            v.get("n_layers").as_usize().ok_or_else(|| anyhow!("predictor weights: n_layers"))?;
+        let n_experts =
+            v.get("n_experts").as_usize().ok_or_else(|| anyhow!("predictor weights: n_experts"))?;
+        let mut pred = Self::new_zeroed(n_layers, n_experts)?;
+        let f = Self::feature_count(n_experts);
+        let layers =
+            v.get("weights").as_arr().ok_or_else(|| anyhow!("predictor weights: weights"))?;
+        if layers.len() != n_layers {
+            bail!("predictor weights: {} layer blocks, expected {n_layers}", layers.len());
+        }
+        for (l, block) in layers.iter().enumerate() {
+            let rows = block
+                .as_arr()
+                .ok_or_else(|| anyhow!("predictor weights: layer {l} not an array"))?;
+            if rows.len() != n_experts {
+                bail!("predictor weights: layer {l} has {} rows, expected {n_experts}", rows.len());
+            }
+            for (e, row) in rows.iter().enumerate() {
+                let row = row
+                    .as_f32_vec()
+                    .ok_or_else(|| anyhow!("predictor weights: layer {l} row {e} not numeric"))?;
+                if row.len() != f {
+                    bail!(
+                        "predictor weights: layer {l} row {e} has {} features, expected {f}",
+                        row.len()
+                    );
+                }
+                if row.iter().any(|x| !x.is_finite()) {
+                    bail!("predictor weights: non-finite value in layer {l} row {e}");
+                }
+                pred.w[l][e] = row;
+            }
+        }
+        Ok(pred)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::trace::export::write_file(path, &json::to_string(&self.to_json()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading predictor weights {}: {e}", path.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow!("parsing predictor weights {}: {e}", path.display()))?;
+        Self::from_json(&v)
+    }
+}
+
+/// Resolve an optional `--predictor-weights` value the way every entry
+/// point (CLI and serve) does. An explicit path must load and match
+/// `n_layers`×`n_experts` — a hard error otherwise. Without an explicit
+/// path, [`DEFAULT_WEIGHTS_PATH`] is tried only when `wanted` (the
+/// learned policy or prefetch source is active), and its absence degrades
+/// gracefully with a note on stderr: learned eviction falls back to LFU
+/// ordering, learned prefetch stays idle.
+pub fn load_optional(
+    explicit: Option<&str>,
+    wanted: bool,
+    n_layers: usize,
+    n_experts: usize,
+) -> Result<Option<LearnedPredictor>> {
+    let path = match explicit {
+        Some(p) => Path::new(p).to_path_buf(),
+        None if wanted => Path::new(DEFAULT_WEIGHTS_PATH).to_path_buf(),
+        None => return Ok(None),
+    };
+    if explicit.is_none() && !path.is_file() {
+        eprintln!(
+            "note: {} absent; learned eviction degrades to LFU and learned prefetch is idle \
+             (train weights with `moe-offload train-predictor`)",
+            path.display()
+        );
+        return Ok(None);
+    }
+    let p = LearnedPredictor::load(&path)?;
+    if p.n_layers() != n_layers || p.n_experts() != n_experts {
+        bail!(
+            "predictor weights {} are {}x{} (layers x experts) but the model is {}x{}",
+            path.display(),
+            p.n_layers(),
+            p.n_experts(),
+            n_layers,
+            n_experts
+        );
+    }
+    Ok(Some(p))
+}
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z.clamp(-30.0, 30.0)).exp())
+}
+
+/// Result of [`train_on_trace`].
+pub struct TrainOutcome {
+    pub predictor: LearnedPredictor,
+    /// Boundary samples consumed across all epochs.
+    pub samples: u64,
+    /// Records dropped for out-of-range expert ids (counted once per
+    /// epoch pass that sees them).
+    pub skipped_records: u64,
+}
+
+/// One (source record -> target set) training/eval sample, or the reasons
+/// to skip it. Shared between the trainer and the evaluator so both apply
+/// identical boundary semantics.
+fn target_of(trace: &Trace, t: usize, tl: usize) -> Option<usize> {
+    if tl == 0 {
+        // wrap boundary: target is the next token's first layer — skip at
+        // the trace end and across sequence boundaries.
+        let tt = t + 1;
+        if tt >= trace.n_tokens() || trace.is_sequence_start(tt) {
+            return None;
+        }
+        Some(tt)
+    } else {
+        Some(t)
+    }
+}
+
+fn record_valid(trace: &Trace, t: usize, l: usize) -> bool {
+    trace.at(t, l).activated.iter().all(|&e| e < trace.n_experts)
+}
+
+/// Deterministic offline SGD over every boundary sample in the trace.
+/// Structural problems (an empty or single-layer trace) are an error;
+/// individual records with out-of-range expert ids are skipped and
+/// counted, mirroring [`crate::offload::predictor::MarkovPredictor`].
+pub fn train_on_trace(trace: &Trace, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    if trace.n_tokens() == 0 {
+        bail!("train_on_trace: empty trace");
+    }
+    let mut pred = LearnedPredictor::new_zeroed(trace.n_layers, trace.n_experts)?;
+    let mut ctx = LearnedContext::new(trace.n_layers, trace.n_experts);
+    let mut feat = Vec::new();
+    let mut probs = Vec::new();
+    let mut samples = 0u64;
+    let mut skipped = 0u64;
+    for _ in 0..cfg.epochs {
+        ctx.reset();
+        for t in 0..trace.n_tokens() {
+            if trace.is_sequence_start(t) {
+                ctx.reset();
+            }
+            for l in 0..trace.n_layers {
+                let rec = trace.at(t, l);
+                if !record_valid(trace, t, l) {
+                    skipped += 1;
+                    continue;
+                }
+                let tl = pred.target_layer(l);
+                if let Some(tt) = target_of(trace, t, tl) {
+                    if record_valid(trace, tt, tl) {
+                        pred.features_into(&ctx, l, &rec.activated, &rec.weights, &mut feat);
+                        pred.forward_into(l, &feat, &mut probs);
+                        let target = &trace.at(tt, tl).activated;
+                        for (e, row) in pred.w[l].iter_mut().enumerate() {
+                            let y = if target.contains(&e) { 1.0 } else { 0.0 };
+                            let g = cfg.lr * (probs[e] - y);
+                            for (w, x) in row.iter_mut().zip(&feat) {
+                                *w -= g * x;
+                            }
+                        }
+                        samples += 1;
+                    } else {
+                        skipped += 1;
+                    }
+                }
+                ctx.observe(l, &trace.at(t, l).activated);
+            }
+        }
+    }
+    Ok(TrainOutcome { predictor: pred, samples, skipped_records: skipped })
+}
+
+/// Guess quality of a trained predictor over a trace.
+pub struct LearnedEval {
+    pub overall: PrecisionRecall,
+    /// Indexed by TARGET layer.
+    pub per_layer: Vec<PrecisionRecall>,
+    pub skipped_records: u64,
+}
+
+/// Walk the trace with a fresh context, scoring top-k guesses at every
+/// boundary (same skip rules as training). Errors when the trace and
+/// predictor dimensions disagree — the malformed-imported-trace case.
+pub fn evaluate_on_trace(
+    pred: &LearnedPredictor,
+    trace: &Trace,
+    k: usize,
+) -> Result<LearnedEval> {
+    if trace.n_layers != pred.n_layers() || trace.n_experts != pred.n_experts() {
+        bail!(
+            "evaluate: trace is {}x{} but predictor is {}x{}",
+            trace.n_layers,
+            trace.n_experts,
+            pred.n_layers(),
+            pred.n_experts()
+        );
+    }
+    if trace.n_tokens() == 0 {
+        bail!("evaluate: empty trace");
+    }
+    let mut ctx = LearnedContext::new(trace.n_layers, trace.n_experts);
+    let mut feat = Vec::new();
+    let mut probs = Vec::new();
+    let mut overall = PrecisionRecall::default();
+    let mut per_layer = vec![PrecisionRecall::default(); trace.n_layers];
+    let mut skipped = 0u64;
+    for t in 0..trace.n_tokens() {
+        if trace.is_sequence_start(t) {
+            ctx.reset();
+        }
+        for l in 0..trace.n_layers {
+            let rec = trace.at(t, l);
+            if !record_valid(trace, t, l) {
+                skipped += 1;
+                continue;
+            }
+            let tl = pred.target_layer(l);
+            if let Some(tt) = target_of(trace, t, tl) {
+                if record_valid(trace, tt, tl) {
+                    pred.features_into(&ctx, l, &rec.activated, &rec.weights, &mut feat);
+                    pred.forward_into(l, &feat, &mut probs);
+                    let guess = top_k_stable(&probs, k);
+                    let target = &trace.at(tt, tl).activated;
+                    overall.record(&guess, target);
+                    per_layer[tl].record(&guess, target);
+                } else {
+                    skipped += 1;
+                }
+            }
+            ctx.observe(l, &trace.at(t, l).activated);
+        }
+    }
+    Ok(LearnedEval { overall, per_layer, skipped_records: skipped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::tracegen::{self, TraceGenConfig};
+
+    fn cycle_trace(n_tokens: usize) -> Trace {
+        // layer 1's activated set always equals layer 0's — a perfectly
+        // learnable cross-layer dependency.
+        let mut t = Trace::new(2, 8, 2);
+        for i in 0..n_tokens {
+            let set = if i % 2 == 0 { vec![0, 1] } else { vec![2, 3] };
+            t.push_token(i as u32);
+            for l in 0..2 {
+                let rec = t.at_mut(i, l);
+                rec.activated = set.clone();
+                rec.weights = vec![0.6, 0.4];
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn zero_weights_predict_half_everywhere() {
+        let p = LearnedPredictor::new_zeroed(4, 8).unwrap();
+        let ctx = LearnedContext::new(4, 8);
+        let probs = p.predict_probs(&ctx, 0, &[1, 2], &[0.7, 0.3]);
+        assert_eq!(probs, vec![0.5; 8]);
+        // ties resolve to lowest indices
+        assert_eq!(top_k_stable(&probs, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn learns_copy_dependency_across_layers() {
+        let trace = cycle_trace(64);
+        let out = train_on_trace(&trace, &TrainConfig::default()).unwrap();
+        assert_eq!(out.skipped_records, 0);
+        assert!(out.samples > 0);
+        let ctx = LearnedContext::new(2, 8);
+        // seeing {0,1} at layer 0 must predict {0,1} at layer 1
+        let mut g = out.predictor.predict_next(&ctx, 0, &[0, 1], &[0.6, 0.4], 2);
+        g.sort_unstable();
+        assert_eq!(g, vec![0, 1]);
+        let mut g = out.predictor.predict_next(&ctx, 0, &[2, 3], &[0.6, 0.4], 2);
+        g.sort_unstable();
+        assert_eq!(g, vec![2, 3]);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let trace = tracegen::generate(&TraceGenConfig {
+            n_layers: 3,
+            n_tokens: 50,
+            ..Default::default()
+        });
+        let a = train_on_trace(&trace, &TrainConfig::default()).unwrap();
+        let b = train_on_trace(&trace, &TrainConfig::default()).unwrap();
+        assert_eq!(a.predictor, b.predictor); // bitwise f32 equality
+        assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn beats_chance_on_generated_trace() {
+        let mut trace = tracegen::generate(&TraceGenConfig {
+            n_layers: 4,
+            n_tokens: 400,
+            locality: 0.3,
+            ..Default::default()
+        });
+        let eval_half = trace.records.split_off(200);
+        let mut eval_trace = Trace::new(4, 8, 2);
+        eval_trace.records = eval_half;
+        eval_trace.tokens = trace.tokens.split_off(200);
+        let out = train_on_trace(&trace, &TrainConfig::default()).unwrap();
+        let eval = evaluate_on_trace(&out.predictor, &eval_trace, 2).unwrap();
+        // chance precision for top-2-of-8 = 0.25
+        assert!(eval.overall.precision() > 0.3, "precision {}", eval.overall.precision());
+        assert_eq!(eval.skipped_records, 0);
+        assert_eq!(eval.per_layer.len(), 4);
+    }
+
+    #[test]
+    fn malformed_records_skip_and_count() {
+        let mut trace = cycle_trace(8);
+        trace.at_mut(3, 1).activated = vec![0, 99]; // out of range
+        let out = train_on_trace(&trace, &TrainConfig { epochs: 1, lr: 0.1 }).unwrap();
+        // the bad record is skipped as source AND as target
+        assert!(out.skipped_records >= 2, "skipped {}", out.skipped_records);
+    }
+
+    #[test]
+    fn sequence_boundary_skips_wrap_sample() {
+        let mut trace = cycle_trace(8);
+        trace.seq_breaks = vec![4];
+        let with_break = train_on_trace(&trace, &TrainConfig { epochs: 1, lr: 0.1 }).unwrap();
+        trace.seq_breaks.clear();
+        let without = train_on_trace(&trace, &TrainConfig { epochs: 1, lr: 0.1 }).unwrap();
+        assert_eq!(with_break.samples + 1, without.samples);
+    }
+
+    #[test]
+    fn weights_round_trip_bitwise() {
+        let trace = cycle_trace(32);
+        let out = train_on_trace(&trace, &TrainConfig::default()).unwrap();
+        let text = json::to_string(&out.predictor.to_json());
+        let back = LearnedPredictor::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, out.predictor);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let p = LearnedPredictor::new_zeroed(2, 4).unwrap();
+        let mut v = p.to_json();
+        assert!(LearnedPredictor::from_json(&v).is_ok());
+        // wrong format tag
+        if let Value::Obj(o) = &mut v {
+            o.insert("format".into(), "nope".into());
+        }
+        assert!(LearnedPredictor::from_json(&v).is_err());
+        // truncated weights
+        let mut v = p.to_json();
+        if let Value::Obj(o) = &mut v {
+            o.insert("weights".into(), Value::Arr(vec![]));
+        }
+        assert!(LearnedPredictor::from_json(&v).is_err());
+        // dimension lies
+        let mut v = p.to_json();
+        if let Value::Obj(o) = &mut v {
+            o.insert("n_experts".into(), 8usize.into());
+        }
+        assert!(LearnedPredictor::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn committed_weights_load_and_round_trip() {
+        // the checked-in default weights must parse, match the default
+        // model geometry (12 layers × 8 experts), and survive a
+        // serialize/parse round trip bitwise — CI runs this against the
+        // artifact on every checkout.
+        let path =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_WEIGHTS_PATH);
+        let p = LearnedPredictor::load(&path).expect("committed weights must load");
+        let mc = crate::model::ModelConfig::DEFAULT;
+        assert_eq!(p.n_layers(), mc.n_layers);
+        assert_eq!(p.n_experts(), mc.n_experts);
+        let back = LearnedPredictor::from_json(
+            &json::parse(&json::to_string(&p.to_json())).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, p);
+        // trained weights, not a zeroed placeholder
+        assert!(
+            p.w.iter().flatten().flatten().any(|&x| x != 0.0),
+            "committed weights are all zero"
+        );
+    }
+
+    #[test]
+    fn rollout_covers_requested_depth_and_wraps() {
+        let trace = cycle_trace(32);
+        let out = train_on_trace(&trace, &TrainConfig::default()).unwrap();
+        let ctx = LearnedContext::new(2, 8);
+        let ro = out.predictor.rollout(&ctx, 0, &[0, 1], &[0.6, 0.4], 3, 2);
+        assert_eq!(ro.len(), 3);
+        assert_eq!(ro[0].0, 1); // layer 0 -> 1
+        assert_eq!(ro[1].0, 0); // wrap to next token's layer 0
+        assert_eq!(ro[2].0, 1);
+        for (_, guess) in &ro {
+            assert_eq!(guess.len(), 2);
+        }
+    }
+}

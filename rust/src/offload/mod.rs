@@ -4,6 +4,7 @@
 //! pipeline that overlaps dequantization with compute (§6.1) without
 //! letting speculation compete with demand misses for workers.
 
+pub mod learned;
 pub mod pipeline;
 pub mod predictor;
 pub mod prefetch;

@@ -12,9 +12,11 @@
 //! nearly free but layer-by-layer), the Markov predictor can prefetch for
 //! ALL layers as soon as the previous token finishes — trading accuracy
 //! for lead time. `sim::cachesim`-style replay + the cache explorer use it
-//! to quantify that trade-off.
+//! to quantify that trade-off. The offline-trained cross-layer model lives
+//! in [`crate::offload::learned`]; this one needs no training pass.
 
-use crate::model::sampler::top_k;
+use crate::metrics::PrecisionRecall;
+use anyhow::{bail, Result};
 
 pub struct MarkovPredictor {
     n_layers: usize,
@@ -25,6 +27,12 @@ pub struct MarkovPredictor {
     pop: Vec<Vec<f64>>,
     /// prev[layer] last activated set.
     prev: Vec<Vec<usize>>,
+    /// Scratch score buffer reused across [`Self::predict`] calls (the
+    /// prefetch hot path calls it once per layer per token).
+    scratch: Vec<f64>,
+    /// Records dropped by [`Self::observe`] because their layer or expert
+    /// ids were out of range for this predictor's dimensions.
+    skipped_records: u64,
     /// Blend between transition and popularity terms.
     pub lambda: f64,
     /// Additive smoothing.
@@ -39,14 +47,24 @@ impl MarkovPredictor {
             trans: vec![vec![vec![0.0; n_experts]; n_experts]; n_layers],
             pop: vec![vec![0.0; n_experts]; n_layers],
             prev: vec![Vec::new(); n_layers],
+            scratch: vec![0.0; n_experts],
+            skipped_records: 0,
             lambda: 0.3,
             alpha: 0.5,
         }
     }
 
     /// Observe the activated set at (layer) for the current token.
-    pub fn observe(&mut self, layer: usize, activated: &[usize]) {
-        debug_assert!(layer < self.n_layers, "layer {layer} out of range");
+    ///
+    /// Records with an out-of-range layer or expert id (e.g. from a
+    /// malformed or dimension-mismatched imported trace) are skipped and
+    /// counted in [`Self::skipped_records`] instead of panicking deep in
+    /// `Vec` indexing. Returns whether the record was accepted.
+    pub fn observe(&mut self, layer: usize, activated: &[usize]) -> bool {
+        if layer >= self.n_layers || activated.iter().any(|&e| e >= self.n_experts) {
+            self.skipped_records += 1;
+            return false;
+        }
         for &e in activated {
             self.pop[layer][e] += 1.0;
             for &p in &self.prev[layer] {
@@ -54,11 +72,17 @@ impl MarkovPredictor {
             }
         }
         self.prev[layer] = activated.to_vec();
+        true
     }
 
     /// Predict the top-k experts for the NEXT token at `layer`.
-    pub fn predict(&self, layer: usize, k: usize) -> Vec<usize> {
-        let mut score = vec![0.0f64; self.n_experts];
+    ///
+    /// Selection happens in f64 — the same precision the scores are
+    /// computed in — with a stable lowest-index tiebreak, so near-ties
+    /// never flip on float quantization.
+    pub fn predict(&mut self, layer: usize, k: usize) -> Vec<usize> {
+        let score = &mut self.scratch;
+        score.fill(0.0);
         // popularity term
         let pop_total: f64 = self.pop[layer].iter().sum::<f64>() + self.alpha * self.n_experts as f64;
         for e in 0..self.n_experts {
@@ -75,8 +99,23 @@ impl MarkovPredictor {
                 }
             }
         }
-        let f32s: Vec<f32> = score.iter().map(|&s| s as f32).collect();
-        top_k(&f32s, k)
+        // k-pass argmax: strictly-greater comparison over an in-order scan
+        // gives the lowest index on exact ties, with no extra allocation.
+        let k = k.min(self.n_experts);
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut best = usize::MAX;
+            for e in 0..self.n_experts {
+                if out.contains(&e) {
+                    continue;
+                }
+                if best == usize::MAX || score[e] > score[best] {
+                    best = e;
+                }
+            }
+            out.push(best);
+        }
+        out
     }
 
     pub fn reset_context(&mut self) {
@@ -84,24 +123,55 @@ impl MarkovPredictor {
             p.clear();
         }
     }
+
+    /// How many malformed records [`Self::observe`] has dropped.
+    pub fn skipped_records(&self) -> u64 {
+        self.skipped_records
+    }
+}
+
+/// Outcome of [`evaluate_on_trace`]: guess quality plus how many records
+/// were dropped as malformed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalReport {
+    pub pr: PrecisionRecall,
+    pub skipped_records: u64,
 }
 
 /// Replay a trace through the predictor, measuring prediction quality
 /// (the §6.1 comparison: learned predictor vs speculative gating).
-pub fn evaluate_on_trace(trace: &crate::trace::Trace, k: usize) -> crate::metrics::PrecisionRecall {
+///
+/// The predictor context is reset at every sequence boundary recorded in
+/// the trace, and no guess is scored for a sequence's first token —
+/// without this, transition context bleeds across independent sequences
+/// and inflates measured accuracy. Structural problems (an empty trace)
+/// are an error; individually malformed records are skipped and counted.
+pub fn evaluate_on_trace(trace: &crate::trace::Trace, k: usize) -> Result<EvalReport> {
+    if trace.n_tokens() == 0 || trace.n_layers == 0 || trace.n_experts == 0 {
+        bail!(
+            "evaluate_on_trace: empty trace ({} tokens, {} layers, {} experts)",
+            trace.n_tokens(),
+            trace.n_layers,
+            trace.n_experts
+        );
+    }
     let mut pred = MarkovPredictor::new(trace.n_layers, trace.n_experts);
-    let mut pr = crate::metrics::PrecisionRecall::default();
+    let mut pr = PrecisionRecall::default();
     for t in 0..trace.n_tokens() {
+        let seq_start = trace.is_sequence_start(t);
+        if seq_start {
+            pred.reset_context();
+        }
         for l in 0..trace.n_layers {
             let activated = &trace.at(t, l).activated;
-            if t > 0 {
+            if !seq_start {
                 let guess = pred.predict(l, k);
                 pr.record(&guess, activated);
             }
             pred.observe(l, activated);
         }
     }
-    pr
+    Ok(EvalReport { pr, skipped_records: pred.skipped_records() })
 }
 
 #[cfg(test)]
@@ -130,22 +200,31 @@ mod tests {
             n_tokens: 300,
             ..Default::default()
         });
-        let pr = evaluate_on_trace(&trace, 2);
+        let report = evaluate_on_trace(&trace, 2).unwrap();
         // chance precision for top-2-of-8 = 0.25
-        assert!(pr.precision() > 0.3, "precision {}", pr.precision());
+        assert!(report.pr.precision() > 0.3, "precision {}", report.pr.precision());
         // equal-cardinality identity holds here too
-        assert_eq!(pr.fp, pr.fn_);
+        assert_eq!(report.pr.fp, report.pr.fn_);
+        assert_eq!(report.skipped_records, 0);
     }
 
     #[test]
     fn prediction_is_valid_topk() {
-        let p = MarkovPredictor::new(2, 8);
+        let mut p = MarkovPredictor::new(2, 8);
         let g = p.predict(1, 3); // cold start: pure smoothed popularity
         assert_eq!(g.len(), 3);
         let mut s = g.clone();
         s.sort_unstable();
         s.dedup();
         assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn cold_start_ties_resolve_to_lowest_indices() {
+        // with no history every expert scores exactly alpha-smoothed
+        // uniform in f64; the documented tiebreak must pick 0,1,2.
+        let mut p = MarkovPredictor::new(1, 8);
+        assert_eq!(p.predict(0, 3), vec![0, 1, 2]);
     }
 
     #[test]
@@ -157,5 +236,57 @@ mod tests {
         p.reset_context();
         // popularity survives: 3 should still rank first
         assert_eq!(p.predict(0, 1), vec![3]);
+    }
+
+    #[test]
+    fn malformed_records_are_skipped_and_counted() {
+        let mut p = MarkovPredictor::new(2, 4);
+        assert!(p.observe(0, &[0, 1]));
+        assert!(!p.observe(0, &[0, 4])); // expert out of range
+        assert!(!p.observe(2, &[0])); // layer out of range
+        assert_eq!(p.skipped_records(), 2);
+        // the bad records left no trace in the counts: context is still {0,1}
+        let mut g = p.predict(0, 2);
+        g.sort_unstable();
+        assert_eq!(g, vec![0, 1]);
+    }
+
+    #[test]
+    fn evaluate_errors_on_empty_trace() {
+        let trace = crate::trace::Trace::new(2, 4, 2);
+        assert!(evaluate_on_trace(&trace, 2).is_err());
+    }
+
+    #[test]
+    fn sequence_boundary_reset_deflates_accuracy() {
+        // Two concatenated sequences continuing the same {0,1}<->{2,3}
+        // cycle in phase. Without boundaries the predictor scores a
+        // "correct" guess across the seam that it had no right to make;
+        // with boundaries that guess is excluded and the context reset.
+        let mut trace = crate::trace::Trace::new(1, 8, 2);
+        let mut push = |trace: &mut crate::trace::Trace, phase: usize| {
+            let set = if phase % 2 == 0 { vec![0, 1] } else { vec![2, 3] };
+            trace.push_token(phase as u32);
+            trace.at_mut(trace.n_tokens() - 1, 0).activated = set;
+        };
+        for t in 0..8 {
+            push(&mut trace, t);
+        }
+        let mut with_boundary = trace.clone();
+        with_boundary.mark_sequence_boundary();
+        for t in 0..8 {
+            push(&mut trace, t);
+            push(&mut with_boundary, t);
+        }
+        let inflated = evaluate_on_trace(&trace, 2).unwrap().pr;
+        let corrected = evaluate_on_trace(&with_boundary, 2).unwrap().pr;
+        // one token's guesses (k=2) are excluded, and they were "correct"
+        assert_eq!(corrected.tp + 2, inflated.tp);
+        assert!(
+            corrected.precision() < inflated.precision(),
+            "corrected {} !< inflated {}",
+            corrected.precision(),
+            inflated.precision()
+        );
     }
 }

@@ -20,6 +20,52 @@ pub struct PrefetchConfig {
     pub k: usize,
 }
 
+/// Which signal drives prefetch guesses (`--prefetch-source`). All three
+/// feed the same issue/settle pipeline and the same pending-transfer
+/// records, so their hit rates are directly comparable in `/metrics`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefetchSource {
+    /// Speculative gating (paper §3.2): apply layer *l+1*'s gate to layer
+    /// *l*'s hidden states. Most accurate, one layer of lead.
+    Gate,
+    /// Online first-order Markov model ([`crate::offload::predictor`]):
+    /// whole-token lead, no model access, learns as it serves.
+    Markov,
+    /// Offline-trained cross-layer model ([`crate::offload::learned`]):
+    /// whole-token lead from committed weights, shared with the learned
+    /// eviction policy's scoreboard.
+    Learned,
+}
+
+impl PrefetchSource {
+    pub const ALL: [PrefetchSource; 3] =
+        [PrefetchSource::Gate, PrefetchSource::Markov, PrefetchSource::Learned];
+
+    pub fn parse(s: &str) -> Option<PrefetchSource> {
+        match s.to_ascii_lowercase().as_str() {
+            "gate" | "spec" | "speculative" => Some(PrefetchSource::Gate),
+            "markov" => Some(PrefetchSource::Markov),
+            "learned" => Some(PrefetchSource::Learned),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefetchSource::Gate => "gate",
+            PrefetchSource::Markov => "markov",
+            PrefetchSource::Learned => "learned",
+        }
+    }
+    /// Dense index for per-source counter arrays.
+    pub fn idx(&self) -> usize {
+        match self {
+            PrefetchSource::Gate => 0,
+            PrefetchSource::Markov => 1,
+            PrefetchSource::Learned => 2,
+        }
+    }
+}
+
 /// A speculative guess tagged with the decode session that issued it.
 ///
 /// Under concurrent serving, tokens from different sessions interleave on
@@ -43,6 +89,9 @@ pub struct PendingPrefetch {
     pub session: u64,
     pub layer: usize,
     pub expert: usize,
+    /// Which guesser paid for this transfer — per-source hit attribution
+    /// in `/metrics` rides on the tag surviving until the hit lands.
+    pub source: PrefetchSource,
     /// Simulated completion time on the bus.
     pub done_at: f64,
 }
@@ -109,6 +158,19 @@ mod tests {
         let direct = top_k(&probs, 2);
         let guessed = guess_next_layer(&be, 1, &x, 2).unwrap();
         assert_eq!(direct, guessed);
+    }
+
+    #[test]
+    fn source_parse_and_names() {
+        assert_eq!(PrefetchSource::parse("GATE"), Some(PrefetchSource::Gate));
+        assert_eq!(PrefetchSource::parse("speculative"), Some(PrefetchSource::Gate));
+        assert_eq!(PrefetchSource::parse("markov"), Some(PrefetchSource::Markov));
+        assert_eq!(PrefetchSource::parse("learned"), Some(PrefetchSource::Learned));
+        assert_eq!(PrefetchSource::parse("psychic"), None);
+        for (i, s) in PrefetchSource::ALL.iter().enumerate() {
+            assert_eq!(s.idx(), i);
+            assert_eq!(PrefetchSource::parse(s.name()), Some(*s));
+        }
     }
 
     #[test]

@@ -627,6 +627,29 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
             ]),
         ),
         (
+            "predictor",
+            Value::obj(vec![
+                ("active", Value::from(snap.predictor_active)),
+                ("tp", Value::from(snap.predictor.tp as f64)),
+                ("fp", Value::from(snap.predictor.fp as f64)),
+                ("fn", Value::from(snap.predictor.fn_ as f64)),
+                ("precision", Value::from(snap.predictor.precision())),
+                ("recall", Value::from(snap.predictor.recall())),
+                (
+                    "skipped_records",
+                    Value::from(snap.predictor_skipped_records as f64),
+                ),
+                (
+                    "prefetch_hits_by_source",
+                    Value::obj(vec![
+                        ("gate", Value::from(snap.prefetch_hits_by_source[0] as f64)),
+                        ("markov", Value::from(snap.prefetch_hits_by_source[1] as f64)),
+                        ("learned", Value::from(snap.prefetch_hits_by_source[2] as f64)),
+                    ]),
+                ),
+            ]),
+        ),
+        (
             "host_tier",
             Value::obj(vec![
                 ("host_accesses", Value::from(snap.host_tier.host_accesses as f64)),
@@ -1532,6 +1555,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let quant = crate::quant::Scheme::parse(&args.str_or("quant", "int4"))
         .ok_or_else(|| anyhow::anyhow!("bad --quant"))?;
     let spec = args.bool("spec");
+    let prefetch_source =
+        crate::offload::prefetch::PrefetchSource::parse(&args.str_or("prefetch-source", "gate"))
+            .ok_or_else(|| anyhow::anyhow!("bad --prefetch-source (gate|markov|learned)"))?;
+    let predictor_weights = args.get("predictor-weights").map(|s| s.to_string());
     let transfer_workers = crate::engine::EngineConfig::transfer_workers_from(args)?;
     let synthetic = args.bool("synthetic");
     let seed = args.usize_or("seed", 0)? as u64;
@@ -1605,10 +1632,20 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             cfg.seed = seed;
             cfg.fetch_retries = fetch_retries;
             cfg.demand_deadline_ms = demand_deadline_ms;
+            cfg.prefetch_source = prefetch_source;
             if disk_read_mbps > 0 {
                 cfg.disk = crate::sim::hardware::DiskProfile::from_mbps(disk_read_mbps as f64);
             }
-            Ok(crate::engine::InferenceEngine::new(backend, store, cfg))
+            let mc = *backend.config();
+            let wanted = policy == crate::cache::PolicyKind::Learned
+                || prefetch_source == crate::offload::prefetch::PrefetchSource::Learned;
+            let predictor = crate::offload::learned::load_optional(
+                predictor_weights.as_deref(),
+                wanted,
+                mc.n_layers,
+                mc.n_experts,
+            )?;
+            Ok(crate::engine::InferenceEngine::with_predictor(backend, store, cfg, predictor))
         },
         serve_cfg,
         shutdown,
@@ -1819,6 +1856,10 @@ mod tests {
             cache: CacheStats { hits: 90, misses: 10, ..Default::default() },
             spec: PrecisionRecall { tp: 8, fp: 2, fn_: 2 },
             cross_session_prefetch_hits: 3,
+            predictor_active: true,
+            predictor: PrecisionRecall { tp: 6, fp: 2, fn_: 4 },
+            predictor_skipped_records: 7,
+            prefetch_hits_by_source: [5, 4, 3],
             pipeline: PipelineStats {
                 workers: 2,
                 demand_joined_prefetch: 4,
@@ -1891,6 +1932,15 @@ mod tests {
         assert_eq!(rb.get("dedup_joins").as_usize(), Some(10));
         assert_eq!(rb.get("batched_rows").as_usize(), Some(30));
         assert!((rb.get("join_rate").as_f64().unwrap() - 10.0 / 30.0).abs() < 1e-12);
+        // predictor observability: settled guess quality + per-source hits
+        let pred = v.get("predictor");
+        assert_eq!(pred.get("active").as_bool(), Some(true));
+        assert_eq!(pred.get("precision").as_f64(), Some(0.75));
+        assert_eq!(pred.get("skipped_records").as_usize(), Some(7));
+        let by = pred.get("prefetch_hits_by_source");
+        assert_eq!(by.get("gate").as_usize(), Some(5));
+        assert_eq!(by.get("markov").as_usize(), Some(4));
+        assert_eq!(by.get("learned").as_usize(), Some(3));
         // degrade/robustness counters surface at the top level
         assert_eq!(v.get("degraded_tokens").as_usize(), Some(2));
         assert_eq!(v.get("fetch_retries").as_usize(), Some(3));

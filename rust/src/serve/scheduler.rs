@@ -203,6 +203,19 @@ pub struct ServeSnapshot {
     pub cache: CacheStats,
     pub spec: PrecisionRecall,
     pub cross_session_prefetch_hits: u64,
+    /// Whether the engine holds loaded cross-layer predictor weights.
+    pub predictor_active: bool,
+    /// Predictor-driven guess quality (markov/learned prefetch sources):
+    /// guesses settled against the layer visits they targeted. All-zero
+    /// under the default gate source.
+    pub predictor: PrecisionRecall,
+    /// Trace records the online Markov predictor skipped for out-of-range
+    /// expert ids (0 unless `--prefetch-source markov`).
+    pub predictor_skipped_records: u64,
+    /// Prefetch hits attributed to each source, indexed like
+    /// [`crate::offload::prefetch::PrefetchSource::ALL`]:
+    /// `[gate, markov, learned]`.
+    pub prefetch_hits_by_source: [u64; 3],
     /// Transfer-pipeline queue + buffer-pool counters (workers == 0 when
     /// the engine runs transfers synchronously).
     pub pipeline: PipelineStats,
@@ -985,6 +998,14 @@ impl Scheduler {
         snap.cache = self.engine.cache_stats();
         snap.spec = self.engine.spec_precision_recall();
         snap.cross_session_prefetch_hits = self.engine.cross_session_prefetch_hits();
+        snap.predictor_active = self.engine.predictor_active();
+        snap.predictor = self.engine.predictor_precision_recall();
+        snap.predictor_skipped_records = self.engine.predictor_skipped_records();
+        let mut by_source = [0u64; 3];
+        for (i, (_, hits)) in self.engine.prefetch_hits_by_source().iter().enumerate() {
+            by_source[i] = *hits;
+        }
+        snap.prefetch_hits_by_source = by_source;
         snap.pipeline = self.engine.pipeline_stats();
         snap.round_batching = self.engine.round_batch_stats();
         snap.degraded_tokens = self.engine.degraded_tokens();

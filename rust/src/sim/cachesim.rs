@@ -7,8 +7,10 @@
 //! (`cached_before`), so a replayed trace renders directly as the paper's
 //! Figures 1–6 / 8–12.
 
+use crate::cache::learned::{new_scoreboard, LearnedEviction};
 use crate::cache::{belady::Belady, LayerCache, Policy, PolicyKind};
 use crate::metrics::{CacheStats, HostTierStats, PrecisionRecall};
+use crate::offload::learned::{LearnedContext, LearnedPredictor};
 use crate::sim::costmodel::TokenEvents;
 use crate::sim::hardware::DiskProfile;
 use crate::trace::Trace;
@@ -222,6 +224,72 @@ pub fn compare(
         .collect()
 }
 
+/// Replay `trace` under the learned eviction policy, mirroring the live
+/// engine's predict → publish → observe loop: right after layer `l`'s
+/// accesses, the predictor's probabilities for layer `(l+1) % L` are
+/// written into the shared scoreboard, so by the time any layer evicts,
+/// its row reflects the prediction made one boundary earlier (for layer 0,
+/// at the previous token's last layer). The context resets at sequence
+/// boundaries, matching training.
+///
+/// `predictor` dims must match the trace (callers validate loudly; the
+/// CLI bails before getting here).
+pub fn replay_learned(
+    trace: &mut Trace,
+    predictor: &LearnedPredictor,
+    capacity: usize,
+) -> ReplayResult {
+    assert_eq!(predictor.n_layers(), trace.n_layers, "predictor/trace layer mismatch");
+    assert_eq!(predictor.n_experts(), trace.n_experts, "predictor/trace expert mismatch");
+    let n_layers = trace.n_layers;
+    let board = new_scoreboard(n_layers, trace.n_experts);
+    let mut caches: Vec<LayerCache<()>> = (0..n_layers)
+        .map(|l| {
+            LayerCache::new(capacity, Box::new(LearnedEviction::new(l, Some(board.clone()))))
+        })
+        .collect();
+    let mut ctx = LearnedContext::new(n_layers, trace.n_experts);
+    let mut feat = Vec::new();
+    let mut probs = Vec::new();
+
+    let mut pr = PrecisionRecall::default();
+    let mut events = Vec::with_capacity(trace.n_tokens());
+    for t in 0..trace.n_tokens() {
+        if trace.is_sequence_start(t) {
+            ctx.reset();
+        }
+        let mut ev = TokenEvents::default();
+        for l in 0..n_layers {
+            let activated = trace.at(t, l).activated.clone();
+            ev.activations += activated.len();
+            let snapshot = caches[l].resident();
+            pr.record(&snapshot, &activated);
+            trace.at_mut(t, l).cached_before = snapshot;
+            for &e in &activated {
+                if caches[l].access(e).is_none() {
+                    ev.misses += 1;
+                    caches[l].insert(e, ());
+                }
+            }
+            // boundary out of layer l: publish the target layer's row,
+            // then fold l's activations into the context (same order as
+            // training and the live engine)
+            let gates = &trace.at(t, l).weights;
+            predictor.features_into(&ctx, l, &activated, gates, &mut feat);
+            predictor.forward_into(l, &feat, &mut probs);
+            board.lock().expect("scoreboard poisoned")[predictor.target_layer(l)]
+                .copy_from_slice(&probs);
+            ctx.observe(l, &activated);
+        }
+        events.push(ev);
+    }
+    let mut stats = CacheStats::default();
+    for c in &caches {
+        stats.merge(&c.stats);
+    }
+    ReplayResult { policy: PolicyKind::Learned, capacity, stats, pr, events }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +430,60 @@ mod tests {
         );
         assert!(r.host.disk_promotions <= 32);
         assert_eq!(r.host.ram_evictions, 0);
+    }
+
+    #[test]
+    fn learned_replay_with_zero_weights_matches_lfu() {
+        // 0.5-everywhere predictions are the LFU-degenerate state; the
+        // whole replay must then be bit-identical to the LFU replay,
+        // snapshots included.
+        let trace = mk_trace(60, 3);
+        let pred = LearnedPredictor::new_zeroed(4, trace.n_experts).unwrap();
+        let mut t1 = trace.clone();
+        let mut t2 = trace.clone();
+        let learned = replay_learned(&mut t1, &pred, 4);
+        let lfu = replay(&mut t2, PolicyKind::Lfu, 4, 0);
+        assert_eq!(learned.stats.hits, lfu.stats.hits);
+        assert_eq!(learned.stats.misses, lfu.stats.misses);
+        assert_eq!(learned.stats.evictions, lfu.stats.evictions);
+        for tok in 0..60 {
+            for l in 0..4 {
+                assert_eq!(t1.at(tok, l).cached_before, t2.at(tok, l).cached_before);
+            }
+        }
+    }
+
+    #[test]
+    fn learned_replay_with_trained_weights_beats_lru_and_lfu() {
+        // the frozen validation protocol in miniature: train on the first
+        // half, replay policies on the second half
+        let mut full = tracegen::generate(&TraceGenConfig {
+            n_tokens: 1024,
+            n_layers: 12,
+            seed: 0,
+            ..Default::default()
+        });
+        let eval = full.split_off(512);
+        let trained = crate::offload::learned::train_on_trace(
+            &full,
+            &crate::offload::learned::TrainConfig::default(),
+        )
+        .unwrap();
+        let learned = replay_learned(&mut eval.clone(), &trained.predictor, 4);
+        let lru = replay(&mut eval.clone(), PolicyKind::Lru, 4, 0);
+        let lfu = replay(&mut eval.clone(), PolicyKind::Lfu, 4, 0);
+        assert!(
+            learned.stats.hit_rate() > lru.stats.hit_rate(),
+            "learned {:.4} <= lru {:.4}",
+            learned.stats.hit_rate(),
+            lru.stats.hit_rate()
+        );
+        assert!(
+            learned.stats.hit_rate() > lfu.stats.hit_rate(),
+            "learned {:.4} <= lfu {:.4}",
+            learned.stats.hit_rate(),
+            lfu.stats.hit_rate()
+        );
     }
 
     #[test]

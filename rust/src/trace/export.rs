@@ -1,13 +1,24 @@
-//! CSV export of traces (for external plotting of the paper's figures).
+//! CSV export/import of traces (for external plotting of the paper's
+//! figures, and for feeding recorded activations back into the
+//! `train-predictor` subcommand).
 
 use super::Trace;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::io::Write;
 use std::path::Path;
 
+const HEADER: &str = "token,layer,expert,activated,weight,cached,spec_guessed";
+
 /// One row per (token, layer, expert) with activation/cache/spec flags.
+/// Sequence boundaries are emitted as `#boundary,<token>` directive lines
+/// right after the header so a round-trip through [`parse_trace_csv`]
+/// preserves them.
 pub fn trace_csv(trace: &Trace) -> String {
-    let mut out = String::from("token,layer,expert,activated,weight,cached,spec_guessed\n");
+    let mut out = String::from(HEADER);
+    out.push('\n');
+    for &b in &trace.seq_breaks {
+        out.push_str(&format!("#boundary,{b}\n"));
+    }
     for t in 0..trace.n_tokens() {
         for l in 0..trace.n_layers {
             let rec = trace.at(t, l);
@@ -47,6 +58,126 @@ pub fn write_file(path: &Path, content: &str) -> Result<()> {
     Ok(())
 }
 
+/// Parse a CSV produced by [`trace_csv`] (or an external exporter using the
+/// same schema) back into a [`Trace`].
+///
+/// Structural problems — a wrong header, a short row, an unparsable number,
+/// out-of-order rows — are real errors, not panics: this is the entry point
+/// for user-supplied trace files (`train-predictor --trace <csv>`).
+/// Dimensions are inferred from the data (every expert cell is present in
+/// the export format, so the max indices are exact); activated lists come
+/// back sorted by expert id with their weights kept parallel.
+pub fn parse_trace_csv(input: &str) -> Result<Trace> {
+    let mut lines = input.lines().enumerate();
+    match lines.next() {
+        Some((_, h)) if h.trim() == HEADER => {}
+        Some((_, h)) => bail!("trace csv: expected header {HEADER:?}, got {h:?}"),
+        None => bail!("trace csv: empty input"),
+    }
+    // (token, layer, expert, activated, weight, cached, spec)
+    type Row = (usize, usize, usize, bool, f32, bool, bool);
+    let mut boundaries: Vec<usize> = Vec::new();
+    let mut rows: Vec<Row> = Vec::new();
+    let mut n_layers = 0usize;
+    let mut n_experts = 0usize;
+    for (idx, line) in lines {
+        let lineno = idx + 1;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(b) = rest.strip_prefix("boundary,") {
+                let b: usize = b
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("trace csv line {lineno}: bad boundary {b:?}"))?;
+                boundaries.push(b);
+            }
+            continue; // unknown directives / comments are skipped
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 7 {
+            bail!("trace csv line {lineno}: expected 7 columns, got {}", cols.len());
+        }
+        let num = |i: usize| -> Result<usize> {
+            cols[i]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("trace csv line {lineno}: bad field {:?}", cols[i]))
+        };
+        let flag = |i: usize| -> Result<bool> {
+            match cols[i] {
+                "0" => Ok(false),
+                "1" => Ok(true),
+                other => bail!("trace csv line {lineno}: expected 0/1, got {other:?}"),
+            }
+        };
+        let (t, l, e) = (num(0)?, num(1)?, num(2)?);
+        let activated = flag(3)?;
+        let weight = if cols[4].is_empty() {
+            0.0
+        } else {
+            cols[4]
+                .parse::<f32>()
+                .map_err(|_| anyhow::anyhow!("trace csv line {lineno}: bad weight {:?}", cols[4]))?
+        };
+        n_layers = n_layers.max(l + 1);
+        n_experts = n_experts.max(e + 1);
+        rows.push((t, l, e, activated, weight, flag(5)?, flag(6)?));
+    }
+    if rows.is_empty() {
+        bail!("trace csv: no data rows");
+    }
+    let n_tokens = rows.iter().map(|r| r.0 + 1).max().unwrap_or(0);
+    if rows.len() != n_tokens * n_layers * n_experts {
+        bail!(
+            "trace csv: {} rows but dimensions {n_tokens}x{n_layers}x{n_experts} need {}",
+            rows.len(),
+            n_tokens * n_layers * n_experts
+        );
+    }
+    let mut top_k = 0usize;
+    let mut trace = Trace::new(n_layers, n_experts, 0);
+    for t in 0..n_tokens {
+        trace.push_token(t as u32);
+    }
+    for (i, &(t, l, e, activated, weight, cached, spec)) in rows.iter().enumerate() {
+        let expect = (
+            i / (n_layers * n_experts),
+            (i / n_experts) % n_layers,
+            i % n_experts,
+        );
+        if (t, l, e) != expect {
+            bail!("trace csv: row {} out of order: got ({t},{l},{e}), expected {expect:?}", i + 1);
+        }
+        let rec = trace.at_mut(t, l);
+        if activated {
+            rec.activated.push(e);
+            rec.weights.push(weight);
+            top_k = top_k.max(rec.activated.len());
+        }
+        if cached {
+            rec.cached_before.push(e);
+        }
+        if spec {
+            match &mut rec.spec_guess {
+                Some(g) => g.push(e),
+                None => rec.spec_guess = Some(vec![e]),
+            }
+        }
+    }
+    trace.top_k = top_k;
+    boundaries.sort_unstable();
+    boundaries.dedup();
+    if let Some(&b) = boundaries.last() {
+        if b >= n_tokens {
+            bail!("trace csv: boundary {b} out of range (trace has {n_tokens} tokens)");
+        }
+    }
+    trace.seq_breaks = boundaries.into_iter().filter(|&b| b > 0).collect();
+    Ok(trace)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +204,48 @@ mod tests {
         let csv = histogram_csv(&t);
         assert_eq!(csv.lines().count(), 1 + 6);
         assert!(csv.ends_with("2,1,1\n"));
+    }
+
+    #[test]
+    fn csv_round_trips_records_and_boundaries() {
+        let mut t = Trace::new(2, 4, 2);
+        t.push_token(7);
+        t.at_mut(0, 0).activated = vec![1, 2];
+        t.at_mut(0, 0).weights = vec![0.75, 0.25];
+        t.at_mut(0, 1).activated = vec![0, 3];
+        t.at_mut(0, 1).weights = vec![0.5, 0.5];
+        t.at_mut(0, 1).cached_before = vec![0];
+        t.at_mut(0, 1).spec_guess = Some(vec![0, 1]);
+        t.mark_sequence_boundary();
+        t.push_token(8);
+        t.at_mut(1, 0).activated = vec![2, 3];
+        t.at_mut(1, 0).weights = vec![0.9, 0.1];
+        t.at_mut(1, 1).activated = vec![0, 1];
+        t.at_mut(1, 1).weights = vec![0.6, 0.4];
+        let parsed = parse_trace_csv(&trace_csv(&t)).unwrap();
+        assert_eq!(parsed.n_layers, 2);
+        assert_eq!(parsed.n_experts, 4);
+        assert_eq!(parsed.top_k, 2);
+        assert_eq!(parsed.n_tokens(), 2);
+        assert_eq!(parsed.seq_breaks, vec![1]);
+        assert_eq!(parsed.at(0, 0).activated, vec![1, 2]);
+        assert_eq!(parsed.at(0, 1).cached_before, vec![0]);
+        assert_eq!(parsed.at(0, 1).spec_guess, Some(vec![0, 1]));
+        assert_eq!(parsed.at(1, 0).activated, vec![2, 3]);
+        // weights survive at export precision
+        assert!((parsed.at(1, 0).weights[0] - 0.9).abs() < 1e-4);
+    }
+
+    #[test]
+    fn csv_parse_rejects_garbage() {
+        assert!(parse_trace_csv("").is_err());
+        assert!(parse_trace_csv("not,the,header\n").is_err());
+        let hdr = "token,layer,expert,activated,weight,cached,spec_guessed\n";
+        assert!(parse_trace_csv(hdr).is_err()); // no data rows
+        assert!(parse_trace_csv(&format!("{hdr}0,0,0,1,,0\n")).is_err()); // short row
+        assert!(parse_trace_csv(&format!("{hdr}0,0,x,1,,0,0\n")).is_err()); // bad number
+        assert!(parse_trace_csv(&format!("{hdr}0,0,0,2,,0,0\n")).is_err()); // bad flag
+        let past_end = format!("{hdr}#boundary,5\n0,0,0,1,,0,0\n");
+        assert!(parse_trace_csv(&past_end).is_err());
     }
 }

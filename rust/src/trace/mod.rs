@@ -31,11 +31,23 @@ pub struct Trace {
     pub records: Vec<Vec<LayerTokenRecord>>,
     /// Token ids, parallel to `records` (for labeling figures).
     pub tokens: Vec<u32>,
+    /// Token indices at which a new independent sequence begins (sorted,
+    /// deduplicated). Token 0 is always an implicit sequence start.
+    /// Predictor evaluation resets its context at these points so
+    /// transition history never bleeds across unrelated prompts.
+    pub seq_breaks: Vec<usize>,
 }
 
 impl Trace {
     pub fn new(n_layers: usize, n_experts: usize, top_k: usize) -> Self {
-        Trace { n_layers, n_experts, top_k, records: Vec::new(), tokens: Vec::new() }
+        Trace {
+            n_layers,
+            n_experts,
+            top_k,
+            records: Vec::new(),
+            tokens: Vec::new(),
+            seq_breaks: Vec::new(),
+        }
     }
 
     pub fn n_tokens(&self) -> usize {
@@ -47,6 +59,37 @@ impl Trace {
         self.tokens.push(tok);
         self.records
             .push((0..self.n_layers).map(|_| LayerTokenRecord::default()).collect());
+    }
+
+    /// Mark that the NEXT pushed token starts a new independent sequence.
+    pub fn mark_sequence_boundary(&mut self) {
+        let at = self.records.len();
+        if at > 0 && self.seq_breaks.last() != Some(&at) {
+            self.seq_breaks.push(at);
+        }
+    }
+
+    /// Does token `t` begin a new sequence? (Token 0 always does.)
+    pub fn is_sequence_start(&self, t: usize) -> bool {
+        t == 0 || self.seq_breaks.binary_search(&t).is_ok()
+    }
+
+    /// Split at token `t`: `self` keeps `[0, t)`, the returned trace gets
+    /// `[t, end)` rebased to token 0 (implicitly a sequence start).
+    /// Train/eval splits for the learned predictor ride on this.
+    pub fn split_off(&mut self, t: usize) -> Trace {
+        let records = self.records.split_off(t);
+        let tokens = self.tokens.split_off(t);
+        let seq_breaks = self.seq_breaks.iter().filter(|&&b| b > t).map(|&b| b - t).collect();
+        self.seq_breaks.retain(|&b| b < t);
+        Trace {
+            n_layers: self.n_layers,
+            n_experts: self.n_experts,
+            top_k: self.top_k,
+            records,
+            tokens,
+            seq_breaks,
+        }
     }
 
     pub fn at_mut(&mut self, token: usize, layer: usize) -> &mut LayerTokenRecord {
@@ -198,5 +241,38 @@ mod tests {
         let t = sample_trace();
         assert_eq!(t.layer_imbalance(1), 0.0);
         assert!(t.layer_imbalance(0) > 0.0);
+    }
+
+    #[test]
+    fn sequence_boundaries_dedup_and_query() {
+        let mut t = Trace::new(1, 4, 2);
+        t.mark_sequence_boundary(); // before any token: implicit, not recorded
+        t.push_token(1);
+        t.mark_sequence_boundary();
+        t.mark_sequence_boundary(); // duplicate collapses
+        t.push_token(2);
+        t.push_token(3);
+        assert_eq!(t.seq_breaks, vec![1]);
+        assert!(t.is_sequence_start(0));
+        assert!(t.is_sequence_start(1));
+        assert!(!t.is_sequence_start(2));
+    }
+
+    #[test]
+    fn split_off_rebases_boundaries() {
+        let mut t = Trace::new(1, 4, 2);
+        for i in 0..6 {
+            t.push_token(i);
+            if i == 1 || i == 3 {
+                t.mark_sequence_boundary();
+            }
+        }
+        let tail = t.split_off(3);
+        assert_eq!(t.n_tokens(), 3);
+        assert_eq!(tail.n_tokens(), 3);
+        assert_eq!(t.seq_breaks, vec![2]);
+        assert_eq!(tail.seq_breaks, vec![1]); // old break at 4 rebased
+        assert!(tail.is_sequence_start(0));
+        assert_eq!(tail.tokens, vec![3, 4, 5]);
     }
 }

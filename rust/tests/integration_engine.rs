@@ -56,6 +56,7 @@ fn run_with_store(
             record_trace: true,
             fetch_retries: 2,
             demand_deadline_ms: 0,
+            ..EngineConfig::default()
         },
     );
     let mut sampler = Sampler::new(Sampling::Greedy, seed);
@@ -175,6 +176,7 @@ fn sim_clock_slower_on_worse_bandwidth() {
                 record_trace: false,
                 fetch_retries: 2,
                 demand_deadline_ms: 0,
+                ..EngineConfig::default()
             },
         );
         let mut sampler = Sampler::new(Sampling::Greedy, 0);

@@ -95,6 +95,7 @@ fn pjrt_engine_decode_with_quantized_store() {
             record_trace: true,
             fetch_retries: 2,
             demand_deadline_ms: 0,
+            ..EngineConfig::default()
         },
     );
     let mut sampler = Sampler::new(Sampling::Greedy, 0);

@@ -7,6 +7,8 @@ use moe_offload::metrics::{PrecisionRecall, RoundBatchStats, ServeMetrics};
 use moe_offload::model::sampler::{top_k, Sampler, Sampling};
 use moe_offload::model::weights::generate_weights;
 use moe_offload::model::ModelConfig;
+use moe_offload::offload::learned::{self, LearnedPredictor, TrainConfig};
+use moe_offload::offload::prefetch::PrefetchSource;
 use moe_offload::offload::store::{HostExpertStore, HostTierConfig};
 use moe_offload::quant::{QTensor, Scheme};
 use moe_offload::runtime::native::NativeBackend;
@@ -124,10 +126,11 @@ fn prop_belady_dominates_all_online_policies() {
 
 #[test]
 fn prop_pipeline_decode_bit_identical_to_sync() {
-    // cache transparency must survive concurrency: across policies ×
-    // quantization schemes × prefetch on/off, the async transfer pipeline
-    // (any worker count) produces bit-identical decodes to the synchronous
-    // fetch path — same tokens, same per-token logits.
+    // cache transparency must survive concurrency: across policies
+    // (including learned eviction) × quantization schemes × prefetch
+    // sources × prefetch on/off, the async transfer pipeline (any worker
+    // count) produces bit-identical decodes to the synchronous fetch
+    // path — same tokens, same per-token logits.
     forall(10, |g: &mut Gen| {
         let seed = g.usize(0..=999) as u64;
         let scheme = *g.choose(&[
@@ -135,17 +138,38 @@ fn prop_pipeline_decode_bit_identical_to_sync() {
             Scheme::Int8 { block: 16 },
             Scheme::Int4 { block: 16 },
         ]);
-        let policy = *g.choose(&PolicyKind::all_online());
+        let mut policies = PolicyKind::all_online().to_vec();
+        policies.push(PolicyKind::Learned);
+        let policy = *g.choose(&policies);
+        let source = *g.choose(&PrefetchSource::ALL);
         let prefetch = g.bool();
         let capacity = g.usize(2..=6);
+        // a predictor trained on a small synthetic trace with the TINY
+        // model's geometry, exercised by the learned policy/source paths
+        let predictor = (policy == PolicyKind::Learned || source == PrefetchSource::Learned)
+            .then(|| {
+                let trace = tracegen::generate(&tracegen::TraceGenConfig {
+                    n_layers: ModelConfig::TINY.n_layers,
+                    n_tokens: 64,
+                    seed,
+                    ..Default::default()
+                });
+                let cfg = TrainConfig { epochs: 2, lr: 0.1 };
+                learned::train_on_trace(&trace, &cfg).unwrap().predictor
+            });
         let run = |workers: usize| {
             let weights = Arc::new(generate_weights(ModelConfig::TINY, seed));
             let store = Arc::new(HostExpertStore::build(&weights, scheme).unwrap());
             let mut cfg = EngineConfig::serving(capacity, policy, prefetch);
             cfg.seed = seed;
             cfg.transfer_workers = workers;
-            let mut engine =
-                InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg);
+            cfg.prefetch_source = source;
+            let mut engine = InferenceEngine::with_predictor(
+                Box::new(NativeBackend::new(weights)),
+                store,
+                cfg,
+                predictor.clone(),
+            );
             let mut sampler = Sampler::new(Sampling::Greedy, seed);
             let out = engine.generate(&[1, 5, 9], 7, &mut sampler).unwrap();
             // decode outputs + the exact logits of one extra step
@@ -159,19 +183,101 @@ fn prop_pipeline_decode_bit_identical_to_sync() {
             let (tokens, logits) = run(workers);
             if tokens != sync_tokens {
                 return Err(format!(
-                    "{}/{}/prefetch={prefetch}/cap={capacity}/workers={workers}: \
+                    "{}/{}/{}/prefetch={prefetch}/cap={capacity}/workers={workers}: \
                      tokens diverged from sync path",
                     policy.name(),
-                    scheme.name()
+                    scheme.name(),
+                    source.name()
                 ));
             }
             if logits != sync_logits {
                 return Err(format!(
-                    "{}/{}/workers={workers}: logits not bit-identical",
+                    "{}/{}/{}/workers={workers}: logits not bit-identical",
                     policy.name(),
-                    scheme.name()
+                    scheme.name(),
+                    source.name()
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_predictor_decode_bit_identical_and_deterministic() {
+    // the learned predictor only warms the cache and ranks victims — it
+    // must never change what the model computes. Decodes with learned
+    // prefetch + learned eviction are bit-identical to a predictor-free
+    // LRU baseline, and two identical learned runs agree exactly (tokens,
+    // logits, cache counters, predictor precision/recall).
+    forall(8, |g: &mut Gen| {
+        let seed = g.usize(0..=999) as u64;
+        let scheme = *g.choose(&[Scheme::F32, Scheme::Int8 { block: 16 }]);
+        let capacity = g.usize(2..=6);
+        let workers = *g.choose(&[0usize, 2]);
+        let source = *g.choose(&[PrefetchSource::Markov, PrefetchSource::Learned]);
+        let trace = tracegen::generate(&tracegen::TraceGenConfig {
+            n_layers: ModelConfig::TINY.n_layers,
+            n_tokens: 96,
+            seed,
+            ..Default::default()
+        });
+        let cfg = TrainConfig { epochs: 2, lr: 0.1 };
+        let predictor = learned::train_on_trace(&trace, &cfg).unwrap().predictor;
+        let run = |policy: PolicyKind, src: PrefetchSource, pred: Option<LearnedPredictor>| {
+            let weights = Arc::new(generate_weights(ModelConfig::TINY, seed));
+            let store = Arc::new(HostExpertStore::build(&weights, scheme).unwrap());
+            let mut cfg = EngineConfig::serving(capacity, policy, true);
+            cfg.seed = seed;
+            cfg.transfer_workers = workers;
+            cfg.prefetch_source = src;
+            let mut engine = InferenceEngine::with_predictor(
+                Box::new(NativeBackend::new(weights)),
+                store,
+                cfg,
+                pred,
+            );
+            let mut sampler = Sampler::new(Sampling::Greedy, seed);
+            let out = engine.generate(&[2, 7], 6, &mut sampler).unwrap();
+            let mut kv = moe_offload::runtime::KvState::zeros(engine.config());
+            let mut ev = moe_offload::sim::costmodel::TokenEvents::default();
+            let logits = engine.step(out.tokens[0], &mut kv, 0, &mut ev).unwrap();
+            let stats = engine.cache_stats();
+            let pr = engine.predictor_precision_recall();
+            (out.tokens, logits, (stats.hits, stats.misses, stats.evictions), pr)
+        };
+        let (base_tokens, base_logits, _, _) = run(PolicyKind::Lru, PrefetchSource::Gate, None);
+        let (tokens, logits, counters, pr) =
+            run(PolicyKind::Learned, source, Some(predictor.clone()));
+        if tokens != base_tokens {
+            return Err(format!(
+                "{}/{}/cap={capacity}/workers={workers}: learned run changed tokens",
+                scheme.name(),
+                source.name()
+            ));
+        }
+        if logits != base_logits {
+            return Err(format!(
+                "{}/{}: learned run changed logits",
+                scheme.name(),
+                source.name()
+            ));
+        }
+        let (tokens2, logits2, counters2, pr2) =
+            run(PolicyKind::Learned, source, Some(predictor.clone()));
+        if tokens2 != tokens || logits2 != logits || counters2 != counters {
+            return Err(format!(
+                "{}/{}: learned run is not deterministic (counters {counters:?} vs {counters2:?})",
+                scheme.name(),
+                source.name()
+            ));
+        }
+        if (pr2.tp, pr2.fp, pr2.fn_) != (pr.tp, pr.fp, pr.fn_) {
+            return Err(format!(
+                "{}/{}: predictor precision/recall not deterministic",
+                scheme.name(),
+                source.name()
+            ));
         }
         Ok(())
     });
