@@ -11,13 +11,17 @@
 //! (scheduler-driven cancels) and records `cancelled_sessions`, the
 //! reclaimed-round fraction, the interactive-vs-batch TTFT p99 split, and
 //! the churn-vs-no-churn engine throughput; a faulted pass stalls every
-//! expert past a demand deadline and records `degraded_tokens`.
+//! expert past a demand deadline and records `degraded_tokens`. A
+//! `replica_scaling` section drains one fixed burst through N = 1, 2, 4
+//! engine replicas (own scheduler loop + device cache each, ONE shared
+//! admission queue and host store) and records tokens/s plus the
+//! per-replica session counts from the router.
 //!
 //!     cargo bench --bench serve_concurrent [-- --smoke]
 
 use moe_offload::bench_harness::Bencher;
 use moe_offload::cache::PolicyKind;
-use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::engine::{EngineConfig, EngineReplica, InferenceEngine};
 use moe_offload::metrics::ServeMetrics;
 use moe_offload::model::sampler::Sampling;
 use moe_offload::model::weights::generate_weights;
@@ -26,8 +30,10 @@ use moe_offload::offload::store::HostExpertStore;
 use moe_offload::offload::transfer::FaultPlan;
 use moe_offload::quant::Scheme;
 use moe_offload::runtime::native::NativeBackend;
-use moe_offload::serve::scheduler::{run_scheduler, Scheduler, SchedulerConfig, ServeSnapshot};
-use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, Priority, ReplyTo};
+use moe_offload::serve::scheduler::{
+    run_replica, run_scheduler, Scheduler, SchedulerConfig, ServeSnapshot,
+};
+use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, Priority, ReplicaRouter, ReplyTo};
 use moe_offload::util::json::{self, Value};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver};
@@ -74,6 +80,7 @@ fn push_request_pri(
         priority,
         reply: ReplyTo::Channel(tx),
         enqueued,
+        affinity: None,
     };
     queue.try_push(req).ok().map(|_| rx)
 }
@@ -469,6 +476,72 @@ fn main() {
         snapshot.lock().unwrap().degraded_tokens
     };
 
+    // --- replica scaling: the SAME burst drained by N = 1, 2, 4 engine
+    // replicas. Each replica owns its scheduler loop and device cache;
+    // all of them pull unpinned requests least-loaded from ONE admission
+    // queue and fetch through ONE shared host store, so tokens/s should
+    // scale near-linearly while N fits the machine.
+    let n_scale_sessions = if smoke { 8usize } else { 16 };
+    let scale_tokens = if smoke { 8usize } else { 16 };
+    let run_replicated = |n_replicas: usize| -> (f64, Vec<u64>) {
+        let metrics = Arc::new(ServeMetrics::default());
+        let queue = AdmissionQueue::new(n_scale_sessions, Arc::clone(&metrics));
+        let router = ReplicaRouter::new(n_replicas);
+        let (completions, _completion_rx) = channel();
+        let mut rxs = Vec::new();
+        for i in 0..n_scale_sessions {
+            rxs.push(
+                push_request(
+                    &queue,
+                    format!("replica scaling {i}"),
+                    scale_tokens,
+                    Instant::now(),
+                )
+                .expect("queue sized for the burst"),
+            );
+        }
+        queue.close();
+        let t0 = Instant::now();
+        let workers: Vec<_> = (0..n_replicas)
+            .map(|r| {
+                let weights = Arc::clone(&weights);
+                let store = Arc::clone(&store);
+                let queue = Arc::clone(&queue);
+                let completions = completions.clone();
+                let metrics = Arc::clone(&metrics);
+                let router = Arc::clone(&router);
+                std::thread::spawn(move || {
+                    run_replica(
+                        EngineReplica::new(r, make_engine(&weights, &store)),
+                        queue,
+                        completions,
+                        SchedulerConfig { max_sessions: 4, ..SchedulerConfig::default() },
+                        metrics,
+                        Arc::new(Mutex::new(ServeSnapshot::default())),
+                        router,
+                    );
+                })
+            })
+            .collect();
+        drop(completions);
+        for w in workers {
+            w.join().expect("replica thread");
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut tokens = 0u64;
+        for rx in rxs {
+            let r = rx.recv().unwrap().expect("replicated generation ok");
+            assert_eq!(r.n_generated, scale_tokens);
+            tokens += (r.n_prompt + r.n_generated) as u64;
+        }
+        (tokens as f64 / wall_s.max(1e-12), router.admitted_counts())
+    };
+    let (scale_tps_1, scale_counts_1) = run_replicated(1);
+    let (scale_tps_2, scale_counts_2) = run_replicated(2);
+    let (scale_tps_4, scale_counts_4) = run_replicated(4);
+    let speedup_2x = scale_tps_2 / scale_tps_1.max(1e-12);
+    let speedup_4x = scale_tps_4 / scale_tps_1.max(1e-12);
+
     println!("{}", b.render());
     println!("shared-cache amortization (misses per stepped token):");
     for (n, _, mr) in &amortization {
@@ -523,6 +596,12 @@ fn main() {
     println!(
         "degraded pass (every expert stalled past the demand deadline): \
          degraded_tokens {degraded_tokens}"
+    );
+    println!(
+        "replica scaling ({n_scale_sessions} sessions x {scale_tokens} tok, one shared \
+         queue + host store): N=1 {scale_tps_1:.1} tok/s, N=2 {scale_tps_2:.1} tok/s \
+         ({speedup_2x:.2}x), N=4 {scale_tps_4:.1} tok/s ({speedup_4x:.2}x); \
+         sessions per replica N=2 {scale_counts_2:?}, N=4 {scale_counts_4:?}"
     );
 
     // --- artifact
@@ -621,6 +700,39 @@ fn main() {
             ]),
         ),
         ("degraded_tokens", Value::from(degraded_tokens as f64)),
+        (
+            "replica_scaling",
+            Value::obj(vec![
+                ("sessions", Value::from(n_scale_sessions)),
+                ("n_tokens", Value::from(scale_tokens)),
+                (
+                    "runs",
+                    Value::Arr(
+                        [
+                            (1usize, scale_tps_1, &scale_counts_1),
+                            (2, scale_tps_2, &scale_counts_2),
+                            (4, scale_tps_4, &scale_counts_4),
+                        ]
+                        .iter()
+                        .map(|(n, tps, counts)| {
+                            Value::obj(vec![
+                                ("replicas", Value::from(*n)),
+                                ("tokens_per_s", Value::from(*tps)),
+                                (
+                                    "sessions_per_replica",
+                                    Value::Arr(
+                                        counts.iter().map(|&c| Value::from(c as f64)).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                    ),
+                ),
+                ("speedup_2x", Value::from(speedup_2x)),
+                ("speedup_4x", Value::from(speedup_4x)),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_serve_concurrent.json", json::to_string(&artifact))
         .expect("write BENCH_serve_concurrent.json");
@@ -659,4 +771,28 @@ fn main() {
     );
     assert!(churned.reclaimed_round_fraction > 0.0);
     assert!(degraded_tokens > 0, "stalled experts never tripped the degrade path");
+    for (n, counts) in
+        [(1usize, &scale_counts_1), (2, &scale_counts_2), (4, &scale_counts_4)]
+    {
+        assert_eq!(counts.len(), n, "router reports one count per replica");
+        assert_eq!(
+            counts.iter().sum::<u64>(),
+            n_scale_sessions as u64,
+            "every session of the burst admitted by exactly one replica at N={n}"
+        );
+    }
+    // the scaling gate needs real cores under the replica threads — skip
+    // it (but still record the artifact) on a starved machine
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if cores >= 2 {
+        assert!(
+            scale_counts_2.iter().all(|&c| c > 0),
+            "both replicas must claim work at N=2: {scale_counts_2:?}"
+        );
+        assert!(
+            speedup_2x >= 1.6,
+            "two replicas must reach 1.6x one replica's tokens/s: \
+             {scale_tps_2:.1} vs {scale_tps_1:.1} ({speedup_2x:.2}x)"
+        );
+    }
 }

@@ -11,7 +11,8 @@
 //! Flags: --requests N       total requests              (default 8)
 //!        --concurrency C    concurrent client threads   (default 4)
 //!        --n T              tokens per request          (default 12)
-//!        --max-sessions S   scheduler concurrency       (default = C)
+//!        --max-sessions S   scheduler concurrency (per replica, default = C)
+//!        --engine-workers R engine replicas over one shared host store (default 1)
 //!        --artifacts DIR    use real artifacts instead of synthetic weights
 //!        --backend pjrt     with --artifacts: the AOT PJRT backend
 
@@ -47,6 +48,7 @@ fn main() -> Result<()> {
     let concurrency = args.usize_or("concurrency", 4)?.max(1);
     let n_tokens = args.usize_or("n", 12)?;
     let max_sessions = args.usize_or("max-sessions", concurrency)?;
+    let engine_workers = args.usize_or("engine-workers", 1)?.max(1);
     let backend_kind = args.str_or("backend", "native");
     let artifacts_dir = args.get("artifacts").map(|s| s.to_string());
 
@@ -55,33 +57,37 @@ fn main() -> Result<()> {
     let addr = listener.local_addr()?;
     let shutdown = Arc::new(AtomicBool::new(false));
     let sd = Arc::clone(&shutdown);
-    let server = std::thread::spawn(move || {
-        let make = move || -> Result<InferenceEngine> {
-            let (weights, artifacts) = match &artifacts_dir {
-                Some(dir) => {
-                    let a = Artifacts::load(Path::new(dir))?;
-                    let w = Arc::new(Weights::load(&a.weights_path)?);
-                    (w, Some(a))
-                }
-                None => (Arc::new(generate_weights(ModelConfig::DEFAULT, 42)), None),
-            };
+    let server = std::thread::spawn(move || -> Result<()> {
+        // weights + the host expert store are shared: every replica gets
+        // the SAME Arc, so the RAM budget and disk tier stay global
+        let (weights, artifacts) = match &artifacts_dir {
+            Some(dir) => {
+                let a = Artifacts::load(Path::new(dir))?;
+                let w = Arc::new(Weights::load(&a.weights_path)?);
+                (w, Some(a))
+            }
+            None => (Arc::new(generate_weights(ModelConfig::DEFAULT, 42)), None),
+        };
+        let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 })?);
+        let make = move |_replica: usize| -> Result<InferenceEngine> {
             let backend: Box<dyn Backend> = match (&artifacts, backend_kind.as_str()) {
                 (Some(a), "pjrt") => Box::new(PjrtBackend::new(a, &weights)?),
                 _ => Box::new(NativeBackend::new(Arc::clone(&weights))),
             };
-            let store = Arc::new(HostExpertStore::build(&weights, Scheme::Int4 { block: 16 })?);
             Ok(InferenceEngine::new(
                 backend,
-                store,
+                Arc::clone(&store),
                 EngineConfig::serving(4, PolicyKind::Lfu, true),
             ))
         };
         let cfg = ServeConfig {
             http_workers: concurrency.max(4),
             max_sessions,
+            engine_workers,
             ..ServeConfig::default()
         };
         let _ = serve::serve(listener, make, cfg, sd);
+        Ok(())
     });
 
     // wait for health

@@ -211,6 +211,29 @@ struct RoutedItem {
     gate_w: Vec<f32>,
 }
 
+/// One engine replica in a multi-worker serve deployment: an
+/// [`InferenceEngine`] plus its replica identity. The engine owns the
+/// replica-private state (device `ExpertCache`, KV, transfer pipeline,
+/// session tallies); the process-wide `HostExpertStore` is shared across
+/// replicas through the engine's `Arc` (see [`InferenceEngine::store`]).
+/// The serve layer's `ReplicaRouter` assigns sessions to replicas; the
+/// `id` is this replica's slot in that router.
+pub struct EngineReplica {
+    pub id: usize,
+    pub engine: InferenceEngine,
+}
+
+impl EngineReplica {
+    pub fn new(id: usize, engine: InferenceEngine) -> EngineReplica {
+        EngineReplica { id, engine }
+    }
+
+    /// The single-replica wrapper legacy callers get: replica 0 of 1.
+    pub fn solo(engine: InferenceEngine) -> EngineReplica {
+        EngineReplica::new(0, engine)
+    }
+}
+
 pub struct InferenceEngine {
     pub backend: Box<dyn Backend>,
     pub cfg: EngineConfig,
@@ -375,6 +398,14 @@ impl InferenceEngine {
 
     pub fn config(&self) -> &crate::model::ModelConfig {
         self.backend.config()
+    }
+
+    /// The host expert store behind this engine. Under multi-replica
+    /// serving every replica's engine holds the SAME `Arc` (one process-
+    /// wide RAM budget and disk tier); `Arc::ptr_eq` over these is the
+    /// sharing assertion the serve tests use.
+    pub fn store(&self) -> &Arc<HostExpertStore> {
+        &self.store
     }
 
     /// Simulated transfer duration of one expert.

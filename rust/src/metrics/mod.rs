@@ -182,6 +182,23 @@ impl PipelineStats {
         }
         self.pool_reuses as f64 / total as f64
     }
+
+    /// Fold another replica's pipeline counters in (multi-replica serving:
+    /// each engine replica spawns its own worker set and buffer pool over
+    /// the shared host store, so counters sum). `peak_in_flight` takes the
+    /// max — summing per-replica high-water marks would report a peak no
+    /// moment in time ever had.
+    pub fn merge(&mut self, o: &PipelineStats) {
+        self.workers += o.workers;
+        self.submitted_demand += o.submitted_demand;
+        self.submitted_prefetch += o.submitted_prefetch;
+        self.completed += o.completed;
+        self.demand_joined_prefetch += o.demand_joined_prefetch;
+        self.cancelled_prefetches += o.cancelled_prefetches;
+        self.peak_in_flight = self.peak_in_flight.max(o.peak_in_flight);
+        self.pool_allocs += o.pool_allocs;
+        self.pool_reuses += o.pool_reuses;
+    }
 }
 
 /// Lock-free log₂-bucketed latency histogram over nanosecond samples.
@@ -287,6 +304,10 @@ pub struct ServeMetrics {
     pub ttft_interactive: LatencyHisto,
     /// TTFT of `batch`-priority requests (see `ttft_interactive`).
     pub ttft_batch: LatencyHisto,
+    /// Engine replicas still serving (gauge; starts at `--engine-workers`).
+    /// A replica that exits or panics quarantines itself and decrements
+    /// this; the admission queue only closes when it reaches zero.
+    pub engine_replicas_alive: AtomicU64,
 }
 
 impl ServeMetrics {
@@ -521,6 +542,41 @@ mod tests {
         assert_eq!(a.batched_rows - a.distinct_experts, a.dedup_joins);
         assert_eq!(a.join_rate(), 0.5);
         assert_eq!(RoundBatchStats::default().join_rate(), 0.0);
+    }
+
+    #[test]
+    fn pipeline_stats_merge_sums_counters_maxes_peak() {
+        let mut a = PipelineStats {
+            workers: 2,
+            submitted_demand: 10,
+            submitted_prefetch: 4,
+            completed: 14,
+            demand_joined_prefetch: 1,
+            cancelled_prefetches: 2,
+            peak_in_flight: 5,
+            pool_allocs: 3,
+            pool_reuses: 7,
+        };
+        let b = PipelineStats {
+            workers: 2,
+            submitted_demand: 6,
+            submitted_prefetch: 2,
+            completed: 8,
+            demand_joined_prefetch: 3,
+            cancelled_prefetches: 0,
+            peak_in_flight: 9,
+            pool_allocs: 1,
+            pool_reuses: 9,
+        };
+        a.merge(&b);
+        assert_eq!(a.workers, 4);
+        assert_eq!(a.submitted_demand, 16);
+        assert_eq!(a.completed, 22);
+        assert_eq!(a.demand_joined_prefetch, 4);
+        assert_eq!(a.peak_in_flight, 9, "peaks max, not sum");
+        assert_eq!(a.pool_allocs, 4);
+        assert_eq!(a.pool_reuses, 16);
+        assert_eq!(a.pool_reuse_rate(), 0.8);
     }
 
     #[test]

@@ -1,18 +1,27 @@
 //! HTTP serving front: completion-routed request flow with real admission
-//! control over one engine worker.
+//! control over N engine replicas.
 //!
-//! Architecture (DESIGN.md §6): HTTP workers only parse, admission-check,
-//! and enqueue — they never block on a decode. An accepted `/generate`
-//! carries its client socket through the bounded [`AdmissionQueue`] into
-//! the scheduler ([`scheduler`]), which continuously batches up to
-//! `max_sessions` sessions on the ONE engine worker that owns the
-//! (non-`Send`) backend and the shared expert cache — per round at most
-//! one decode token per session plus at most one prefill chunk
-//! (`--prefill-chunk`), under an optional total-token round budget
-//! (`--round-budget-tokens`) with deficit carry-over. Finished generations
-//! are posted to a completion channel and a small responder set writes the
-//! HTTP responses, so a worker is freed the moment a request is admitted
-//! and `queue_depth` is the true bound on buffered work.
+//! Architecture (DESIGN.md §6, §12): HTTP workers only parse,
+//! admission-check, and enqueue — they never block on a decode. An
+//! accepted `/generate` carries its client socket through the bounded
+//! [`AdmissionQueue`] into a scheduler ([`scheduler`]): with
+//! `--engine-workers N` the server runs N engine replicas, each owning
+//! its own scheduler loop, (non-`Send`) backend, device expert cache, and
+//! KV, all pulling from the ONE admission queue through a
+//! [`ReplicaRouter`] that assigns sessions to the least-loaded alive
+//! replica (with optional client-pinned session affinity) while every
+//! replica shares the ONE `HostExpertStore` — disk promotions and the
+//! host RAM budget stay global. Each scheduler continuously batches up to
+//! `max_sessions` sessions on its replica — per round at most one decode
+//! token per session plus at most one prefill chunk (`--prefill-chunk`),
+//! under an optional total-token round budget (`--round-budget-tokens`)
+//! with deficit carry-over. Finished generations are posted to a
+//! completion channel and a small responder set writes the HTTP
+//! responses, so a worker is freed the moment a request is admitted and
+//! `queue_depth` is the true bound on buffered work. A replica that exits
+//! or panics quarantines only itself (its in-flight sessions answer 500,
+//! `engine_replicas_alive` decrements, the queue stays open); the queue
+//! closes when the LAST replica dies.
 //!
 //! Admission control, in the order a request meets it:
 //!   1. in-flight session cap (`--max-inflight-sessions`): accepted but
@@ -51,7 +60,7 @@ use anyhow::Result;
 use self::scheduler::{run_scheduler, SchedulerConfig, ServeSnapshot};
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -237,6 +246,11 @@ pub struct GenRequest {
     pub sampling: Sampling,
     pub priority: Priority,
     pub reply: ReplyTo,
+    /// Session-affinity key (`?affinity=` / `x-session-affinity`): requests
+    /// with the same key decode on the same engine replica while it stays
+    /// alive (KV/cache warmth for conversation-style clients). `None`
+    /// routes by least load.
+    pub affinity: Option<u64>,
     /// When the request entered the admission queue; queue-age shedding
     /// and the queue-wait percentiles both measure from here.
     pub enqueued: Instant,
@@ -312,6 +326,11 @@ pub struct ServeConfig {
     /// and scheduler sheds all quote this one value (`--retry-after-s`),
     /// so clients see a single consistent back-off policy.
     pub retry_after: u64,
+    /// Engine replicas (`--engine-workers`): each runs its own scheduler
+    /// loop, backend, device expert cache, and KV over the shared
+    /// admission queue and the ONE shared host expert store.
+    /// `max_sessions` is per replica.
+    pub engine_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -327,6 +346,123 @@ impl Default for ServeConfig {
             round_budget_tokens: 0,
             round_batching: true,
             retry_after: RETRY_AFTER_S,
+            engine_workers: 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replica router
+// ---------------------------------------------------------------------------
+
+/// Assigns sessions to engine replicas (DESIGN.md §12). One slot per
+/// replica tracks liveness, current load (active sessions, reported by the
+/// replica's scheduler), and lifetime admissions. Routing is evaluated at
+/// claim time under the admission queue's lock
+/// ([`AdmissionQueue::pop_routed`]):
+///
+/// * a request with an affinity key is claimable only by the ONE alive
+///   replica the key pins to ([`ReplicaRouter::affinity_target`]);
+/// * a request without one is claimable by any alive replica at minimum
+///   load — ties mean whoever takes the queue lock first wins.
+///
+/// Liveness: an idle replica (zero active sessions) is always at minimum
+/// load, so an eligible claimant exists for every unpinned request while
+/// any replica lives; affinity keys remap over the alive set when a
+/// replica dies, so no request can pin to a corpse.
+pub struct ReplicaRouter {
+    slots: Vec<ReplicaSlot>,
+}
+
+struct ReplicaSlot {
+    alive: AtomicBool,
+    /// Sessions currently decoding on the replica (scheduler-reported).
+    active: AtomicUsize,
+    /// Sessions the replica has admitted over its lifetime.
+    admitted: AtomicU64,
+}
+
+impl ReplicaRouter {
+    pub fn new(n: usize) -> Arc<ReplicaRouter> {
+        Arc::new(ReplicaRouter {
+            slots: (0..n.max(1))
+                .map(|_| ReplicaSlot {
+                    alive: AtomicBool::new(true),
+                    active: AtomicUsize::new(0),
+                    admitted: AtomicU64::new(0),
+                })
+                .collect(),
+        })
+    }
+
+    /// Configured replica count (alive or not).
+    pub fn n(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.alive.load(Ordering::Relaxed)).count()
+    }
+
+    pub fn is_alive(&self, id: usize) -> bool {
+        self.slots[id].alive.load(Ordering::Relaxed)
+    }
+
+    /// Quarantine `id`; returns how many replicas remain alive. Idempotent
+    /// — a clean scheduler exit and the worker guard both land here.
+    pub fn mark_dead(&self, id: usize) -> usize {
+        self.slots[id].alive.store(false, Ordering::Relaxed);
+        self.alive_count()
+    }
+
+    /// Load report: replica `id` currently decodes `active` sessions. An
+    /// absolute store (not a delta) so the gauge cannot drift.
+    pub fn set_active(&self, id: usize, active: usize) {
+        self.slots[id].active.store(active, Ordering::Relaxed);
+    }
+
+    pub fn note_admitted(&self, id: usize) {
+        self.slots[id].admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lifetime sessions admitted per replica (`/metrics` `replicas[*]`,
+    /// and the bench's per-replica session counts).
+    pub fn admitted_counts(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.admitted.load(Ordering::Relaxed)).collect()
+    }
+
+    /// May replica `id` claim a request carrying `affinity`? Pinned
+    /// requests route to their target; unpinned ones to any alive replica
+    /// at minimum load.
+    pub fn routes_to(&self, id: usize, affinity: Option<u64>) -> bool {
+        if !self.is_alive(id) {
+            return false;
+        }
+        match affinity {
+            Some(k) => self.affinity_target(k) == Some(id),
+            None => {
+                let mine = self.slots[id].active.load(Ordering::Relaxed);
+                self.slots
+                    .iter()
+                    .filter(|s| s.alive.load(Ordering::Relaxed))
+                    .map(|s| s.active.load(Ordering::Relaxed))
+                    .min()
+                    .is_some_and(|least| mine <= least)
+            }
+        }
+    }
+
+    /// The alive replica an affinity key pins to: position `key mod
+    /// alive_count` of the alive set — stable while membership is stable,
+    /// remapped automatically when a replica dies. `None` only when no
+    /// replica lives (the queue is closing anyway).
+    pub fn affinity_target(&self, key: u64) -> Option<usize> {
+        let alive: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.is_alive(i)).collect();
+        if alive.is_empty() {
+            None
+        } else {
+            Some(alive[(key % alive.len() as u64) as usize])
         }
     }
 }
@@ -404,7 +540,11 @@ impl AdmissionQueue {
         }
         st.q.push_back(req);
         self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
-        self.available.notify_one();
+        // notify_all, not notify_one: consumers are *selective* under
+        // multi-replica routing (an affinity-pinned request is claimable by
+        // exactly one replica), so waking one arbitrary sleeper could wake
+        // a replica that must leave this request in place.
+        self.available.notify_all();
         Ok(())
     }
 
@@ -454,6 +594,71 @@ impl AdmissionQueue {
             self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
         }
         out
+    }
+
+    /// Pop the oldest request routable to `replica`, interactive class
+    /// first ([`AdmissionQueue::pop`]'s SLO tiering), *after* removing
+    /// every aged request — claim and shed are decided under ONE
+    /// acquisition of the queue lock, so with N schedulers popping
+    /// concurrently a request can never be both claimed by one replica
+    /// and shed by another (the exactly-once invariant).
+    ///
+    /// Returns the claim outcome plus the aged requests this sweep
+    /// removed; the caller owns shedding them. On `(Popped::Empty, aged)`
+    /// with a non-empty `aged` a blocking caller gets control back to
+    /// shed before re-blocking, so sheds are never delayed behind a wait.
+    pub fn pop_routed(
+        &self,
+        replica: usize,
+        router: &ReplicaRouter,
+        block: bool,
+        max_age: Option<Duration>,
+    ) -> (Popped, Vec<GenRequest>) {
+        let mut st = self.state.lock().unwrap();
+        let mut aged = Vec::new();
+        if let Some(max_age) = max_age {
+            let mut i = 0;
+            while i < st.q.len() {
+                if st.q[i].enqueued.elapsed() > max_age {
+                    aged.push(st.q.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        loop {
+            let eligible = |r: &GenRequest| router.routes_to(replica, r.affinity);
+            let idx = st
+                .q
+                .iter()
+                .position(|r| r.priority == Priority::Interactive && eligible(r))
+                .or_else(|| st.q.iter().position(eligible));
+            if let Some(i) = idx {
+                let r = st.q.remove(i).unwrap();
+                self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+                return (Popped::Req(r), aged);
+            }
+            if !aged.is_empty() {
+                self.metrics.queue_depth.store(st.q.len() as u64, Ordering::Relaxed);
+                return (Popped::Empty, aged);
+            }
+            if st.closed {
+                return (Popped::Closed, aged);
+            }
+            if !block {
+                return (Popped::Empty, aged);
+            }
+            st = self.available.wait(st).unwrap();
+        }
+    }
+
+    /// Wake every blocked consumer so it re-evaluates routing — called
+    /// when replica membership changes (a death remaps affinity targets,
+    /// making requests claimable by survivors that previously had to
+    /// leave them in place).
+    pub fn wake_all(&self) {
+        let _st = self.state.lock().unwrap();
+        self.available.notify_all();
     }
 
     /// Close the queue: pending requests can still be popped, new pushes
@@ -529,6 +734,10 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
         (
             "inflight_sessions",
             Value::from(metrics.inflight_sessions.load(Ordering::Relaxed) as f64),
+        ),
+        (
+            "engine_replicas_alive",
+            Value::from(metrics.engine_replicas_alive.load(Ordering::Relaxed) as f64),
         ),
         (
             "queue_wait_ns",
@@ -665,6 +874,42 @@ pub fn metrics_json(metrics: &ServeMetrics, snap: &ServeSnapshot) -> Value {
     ])
 }
 
+/// Render `/metrics` for a replicated engine: the per-replica snapshots
+/// are merged ([`ServeSnapshot::merged`] — shared-store stats taken once,
+/// per-replica stats summed) and rendered through [`metrics_json`], then
+/// a `replicas` array with per-replica liveness, admissions, and cache
+/// traffic is appended so operators can see skew, not just totals.
+pub fn metrics_json_replicated(
+    metrics: &ServeMetrics,
+    snaps: &[ServeSnapshot],
+    router: &ReplicaRouter,
+) -> Value {
+    let merged = ServeSnapshot::merged(snaps);
+    let mut v = metrics_json(metrics, &merged);
+    let admitted = router.admitted_counts();
+    let replicas: Vec<Value> = snaps
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            Value::obj(vec![
+                ("id", Value::from(i as f64)),
+                ("alive", Value::from(router.is_alive(i))),
+                ("admitted", Value::from(admitted.get(i).copied().unwrap_or(0) as f64)),
+                ("active_sessions", Value::from(s.active_sessions)),
+                ("completed_sessions", Value::from(s.completed_sessions as f64)),
+                ("failed_sessions", Value::from(s.failed_sessions as f64)),
+                ("cache_hits", Value::from(s.cache.hits as f64)),
+                ("cache_misses", Value::from(s.cache.misses as f64)),
+                ("cache_hit_rate", Value::from(s.cache.hit_rate())),
+            ])
+        })
+        .collect();
+    if let Value::Obj(map) = &mut v {
+        map.insert("replicas".to_string(), Value::Arr(replicas));
+    }
+    v
+}
+
 /// Parse the /generate request body.
 pub fn parse_gen_request(body: &[u8]) -> std::result::Result<(String, usize, Sampling), String> {
     let v = json::parse(std::str::from_utf8(body).map_err(|e| e.to_string())?)
@@ -752,7 +997,8 @@ const CONTROL_THREADS: usize = 2;
 fn spawn_control_plane(
     rx: Receiver<ControlConn>,
     metrics: Arc<ServeMetrics>,
-    snapshot: Arc<Mutex<ServeSnapshot>>,
+    snapshots: Arc<Vec<Arc<Mutex<ServeSnapshot>>>>,
+    router: Arc<ReplicaRouter>,
     engine_up: Arc<AtomicBool>,
 ) -> Vec<std::thread::JoinHandle<()>> {
     let rx = Arc::new(Mutex::new(rx));
@@ -760,7 +1006,8 @@ fn spawn_control_plane(
         .map(|i| {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
-            let snapshot = Arc::clone(&snapshot);
+            let snapshots = Arc::clone(&snapshots);
+            let router = Arc::clone(&router);
             let engine_up = Arc::clone(&engine_up);
             std::thread::Builder::new()
                 .name(format!("control-plane-{i}"))
@@ -769,7 +1016,7 @@ fn spawn_control_plane(
                         Ok(c) => c,
                         Err(_) => break, // every sender gone: shutdown
                     };
-                    serve_control(conn, &metrics, &snapshot, &engine_up);
+                    serve_control(conn, &metrics, &snapshots, &router, &engine_up);
                 })
                 .expect("spawn control plane")
         })
@@ -779,7 +1026,8 @@ fn spawn_control_plane(
 fn serve_control(
     conn: ControlConn,
     metrics: &ServeMetrics,
-    snapshot: &Mutex<ServeSnapshot>,
+    snapshots: &[Arc<Mutex<ServeSnapshot>>],
+    router: &ReplicaRouter,
     engine_up: &AtomicBool,
 ) {
     let mut stream = conn.stream;
@@ -807,8 +1055,11 @@ fn serve_control(
             }
         }
         ControlPath::Metrics => {
-            let snap = snapshot.lock().unwrap().clone();
-            let body = json::to_string(&metrics_json(metrics, &snap));
+            // clone each replica's snapshot under its own lock (no lock is
+            // held across the render), then merge + render
+            let snaps: Vec<ServeSnapshot> =
+                snapshots.iter().map(|s| s.lock().unwrap().clone()).collect();
+            let body = json::to_string(&metrics_json_replicated(metrics, &snaps, router));
             let _ = http::write_response(&mut stream, 200, "application/json", body.as_bytes());
         }
     }
@@ -1168,22 +1419,63 @@ fn release_inflight(metrics: &ServeMetrics) {
 }
 
 /// Engine-worker exit guard. Runs on every exit path — clean scheduler
-/// return, engine-init failure, or a panic unwinding out of the scheduler
-/// — and (idempotently) closes the admission queue, flips `/healthz` to
-/// down, and answers every still-queued request with 503 so no client is
-/// left hanging on a dead engine. The refused requests are counted in
-/// `errors` (they are server-side failures, unlike the admission-control
-/// 503s with their own counters), keeping the per-request accounting
-/// exhaustive even on the panic path.
+/// return, engine-init failure, or a panic unwinding out of the scheduler.
+///
+/// With replicas the guard is a *quarantine*, not a shutdown: it marks
+/// only its own replica dead in the [`ReplicaRouter`] (in-flight sessions
+/// were already shed with 500s by `ActiveSet`'s own drop, which unwinds
+/// first), updates the `engine_replicas_alive` gauge, and wakes blocked
+/// survivors so affinity keys remap onto them. The queue stays open —
+/// surviving replicas keep admitting. Only the LAST replica's guard
+/// closes the admission queue, flips `/healthz` to down, and answers
+/// every still-queued request with 503 so no client is left hanging on a
+/// dead engine. The refused requests are counted in `errors` (they are
+/// server-side failures, unlike the admission-control 503s with their own
+/// counters), keeping the per-request accounting exhaustive even on the
+/// panic path.
 struct WorkerGuard {
+    replica: usize,
+    router: Arc<ReplicaRouter>,
     queue: Arc<AdmissionQueue>,
     completions: Sender<Completion>,
     up: Arc<AtomicBool>,
     metrics: Arc<ServeMetrics>,
+    snapshot: Arc<Mutex<ServeSnapshot>>,
 }
 
 impl Drop for WorkerGuard {
     fn drop(&mut self) {
+        // the dying replica's published snapshot must not advertise its
+        // in-flight sessions as active forever: the scheduler unwind is
+        // 500-ing them right now, so fold them into `failed` and zero the
+        // live gauges (lock via into_inner: a panic can leave it poisoned)
+        {
+            let mut snap = self
+                .snapshot
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            let mut failed = 0u64;
+            for s in &mut snap.sessions {
+                if s.state == "active" {
+                    s.state = "failed";
+                    failed += 1;
+                }
+            }
+            snap.failed_sessions += failed;
+            snap.active_sessions = 0;
+            snap.prefill_backlog = 0;
+        }
+        let remaining = self.router.mark_dead(self.replica);
+        self.metrics
+            .engine_replicas_alive
+            .store(remaining as u64, Ordering::Relaxed);
+        if remaining > 0 {
+            // Quarantined, not dead: survivors re-evaluate routing (this
+            // replica's affinity keys now map to them) and the queue
+            // stays open at reduced capacity.
+            self.queue.wake_all();
+            return;
+        }
         self.up.store(false, Ordering::Relaxed);
         self.queue.close();
         while let Popped::Req(r) = self.queue.pop(false) {
@@ -1205,7 +1497,11 @@ impl Drop for WorkerGuard {
 // ---------------------------------------------------------------------------
 
 /// Run the server until `shutdown` flips (or forever). Engine construction
-/// is deferred to the worker thread because the PJRT backend is not `Send`.
+/// is deferred to the worker threads because the PJRT backend is not
+/// `Send`; `make_engine` is called once per replica with the replica id
+/// and must hand every replica the SAME `Arc<HostExpertStore>` for the
+/// shared-host-tier guarantees to hold (a per-call store still works, but
+/// each replica then budgets its RAM independently).
 pub fn serve<F>(
     listener: TcpListener,
     make_engine: F,
@@ -1213,27 +1509,35 @@ pub fn serve<F>(
     shutdown: Arc<AtomicBool>,
 ) -> Result<()>
 where
-    F: FnOnce() -> Result<crate::engine::InferenceEngine> + Send + 'static,
+    F: Fn(usize) -> Result<crate::engine::InferenceEngine> + Send + Sync + 'static,
 {
     let metrics = Arc::new(ServeMetrics::default());
-    let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+    let n_replicas = cfg.engine_workers.max(1);
+    let router = ReplicaRouter::new(n_replicas);
+    metrics.engine_replicas_alive.store(n_replicas as u64, Ordering::Relaxed);
+    // one snapshot slot per replica; /metrics merges them at render time
+    // (shared-store stats read once, per-replica stats summed)
+    let snapshots: Arc<Vec<Arc<Mutex<ServeSnapshot>>>> = Arc::new(
+        (0..n_replicas)
+            .map(|_| Arc::new(Mutex::new(ServeSnapshot::default())))
+            .collect(),
+    );
     let queue = AdmissionQueue::new(cfg.queue_depth, Arc::clone(&metrics));
     let (completion_tx, completion_rx) = channel::<Completion>();
-    // liveness for /healthz: flips false when the engine worker exits
+    // liveness for /healthz: flips false when the LAST engine worker exits
     // (init failure or retirement) so orchestrators stop routing traffic
     // to a server that can only answer 503
     let engine_up = Arc::new(AtomicBool::new(true));
 
-    // engine worker: owns the engine, runs the session scheduler, posts
-    // completions; its senders are the ONLY completion senders, so
-    // responders exit exactly when the worker does (after every
-    // completion drained). The WorkerGuard runs on EVERY exit — clean
-    // return, init failure, or panic inside the scheduler — closing the
-    // queue and refusing whatever is still in it, so clients can never be
-    // left hanging on a dead engine.
-    let worker_metrics = Arc::clone(&metrics);
-    let worker_snapshot = Arc::clone(&snapshot);
-    let worker_queue = Arc::clone(&queue);
+    // engine workers: each owns one replica (engine + scheduler loop),
+    // pulls routed work from the shared admission queue, posts
+    // completions; their senders are the ONLY completion senders once
+    // serve() drops its own below, so responders exit exactly when the
+    // last worker does (after every completion drained). A WorkerGuard
+    // runs on EVERY worker exit — clean return, init failure, or panic
+    // inside the scheduler — quarantining that replica, and closing the
+    // queue only at the last death so clients can never be left hanging
+    // on a dead engine.
     let sched_cfg = SchedulerConfig {
         max_sessions: cfg.max_sessions,
         queue_timeout: (cfg.queue_timeout_ms > 0)
@@ -1243,32 +1547,50 @@ where
         round_batching: cfg.round_batching,
         retry_after: cfg.retry_after,
     };
-    let guard = WorkerGuard {
-        queue: Arc::clone(&queue),
-        completions: completion_tx.clone(),
-        up: Arc::clone(&engine_up),
-        metrics: Arc::clone(&metrics),
-    };
-    let engine_worker = std::thread::Builder::new()
-        .name("engine-worker".into())
-        .spawn(move || {
-            let _guard = guard;
-            let engine = match make_engine() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("engine init failed: {e:#}");
-                    return; // guard refuses queued + future requests
-                }
-            };
-            let _ = run_scheduler(
-                engine,
-                worker_queue,
-                completion_tx,
-                sched_cfg,
-                worker_metrics,
-                worker_snapshot,
-            );
-        })?;
+    let make_engine = Arc::new(make_engine);
+    let mut engine_workers = Vec::with_capacity(n_replicas);
+    for r in 0..n_replicas {
+        let make_engine = Arc::clone(&make_engine);
+        let worker_metrics = Arc::clone(&metrics);
+        let worker_snapshot = Arc::clone(&snapshots[r]);
+        let worker_queue = Arc::clone(&queue);
+        let worker_router = Arc::clone(&router);
+        let worker_completions = completion_tx.clone();
+        let guard = WorkerGuard {
+            replica: r,
+            router: Arc::clone(&router),
+            queue: Arc::clone(&queue),
+            completions: completion_tx.clone(),
+            up: Arc::clone(&engine_up),
+            metrics: Arc::clone(&metrics),
+            snapshot: Arc::clone(&snapshots[r]),
+        };
+        engine_workers.push(
+            std::thread::Builder::new()
+                .name(format!("engine-worker-{r}"))
+                .spawn(move || {
+                    let _guard = guard;
+                    let engine = match make_engine(r) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            eprintln!("engine replica {r} init failed: {e:#}");
+                            return; // guard quarantines this replica
+                        }
+                    };
+                    let _ = run_replica(
+                        crate::engine::EngineReplica::new(r, engine),
+                        worker_queue,
+                        worker_completions,
+                        sched_cfg,
+                        worker_metrics,
+                        worker_snapshot,
+                        worker_router,
+                    );
+                })?,
+        );
+    }
+    // the workers' senders (threads + guards) are now the only ones
+    drop(completion_tx);
 
     let responders = spawn_responders(cfg.responders, completion_rx, Arc::clone(&metrics));
 
@@ -1277,7 +1599,8 @@ where
     let control_plane = spawn_control_plane(
         ctl_rx,
         Arc::clone(&metrics),
-        Arc::clone(&snapshot),
+        Arc::clone(&snapshots),
+        Arc::clone(&router),
         Arc::clone(&engine_up),
     );
 
@@ -1339,8 +1662,10 @@ where
     let _ = sniffer.join();
     drop(dispatcher); // releases its pool handle and control sender
     drop(pool); // last pool ref: joins HTTP workers, no more pushes
-    queue.close(); // scheduler drains the remaining queue and exits
-    let _ = engine_worker.join(); // drops the completion senders
+    queue.close(); // schedulers drain the remaining queue and exit
+    for w in engine_workers {
+        let _ = w.join(); // drops the completion senders
+    }
     for r in responders {
         let _ = r.join(); // responders drained every completion
     }
@@ -1392,9 +1717,19 @@ fn handle_conn(
                         req.headers.get("x-priority").and_then(|v| Priority::parse(v))
                     })
                     .unwrap_or_default();
+                // session affinity (`?affinity=` / `x-session-affinity`):
+                // same key → same engine replica while that replica lives,
+                // keeping a client's follow-up turns on the replica whose
+                // device cache its experts already warmed
+                let affinity = query
+                    .split('&')
+                    .find_map(|kv| kv.strip_prefix("affinity="))
+                    .map(str::to_string)
+                    .or_else(|| req.headers.get("x-session-affinity").cloned())
+                    .map(|v| affinity_key(&v));
                 admit_generate(
-                    stream, prompt, n, sampling, stream_mode, priority, metrics, queue,
-                    max_inflight, retry_after,
+                    stream, prompt, n, sampling, stream_mode, priority, affinity, metrics,
+                    queue, max_inflight, retry_after,
                 );
             }
             Err(msg) => {
@@ -1423,6 +1758,25 @@ fn route_control(stream: TcpStream, path: ControlPath, ctl_tx: &Sender<ControlCo
     }
 }
 
+/// Map a client affinity value to a routing key: all-digit values parse
+/// verbatim (so `affinity=1` pins deterministically to alive replica
+/// `1 mod alive_count` — tests and benches rely on this), anything else
+/// is FNV-1a–hashed.
+fn affinity_key(v: &str) -> u64 {
+    if !v.is_empty() && v.bytes().all(|b| b.is_ascii_digit()) {
+        if let Ok(k) = v.parse::<u64>() {
+            return k;
+        }
+    }
+    // FNV-1a, 64-bit
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in v.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Admission-check a parsed `/generate` and either enqueue it (handing the
 /// socket to the scheduler → responder path) or answer 503 right here.
 /// Either way the HTTP worker returns immediately — it never waits on a
@@ -1435,6 +1789,7 @@ fn admit_generate(
     sampling: Sampling,
     stream_mode: bool,
     priority: Priority,
+    affinity: Option<u64>,
     metrics: &ServeMetrics,
     queue: &AdmissionQueue,
     max_inflight: usize,
@@ -1472,6 +1827,7 @@ fn admit_generate(
         n_tokens,
         sampling,
         priority,
+        affinity,
         reply,
         enqueued: Instant::now(),
     };
@@ -1591,40 +1947,49 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             "off" | "false" | "0" | "no"
         ),
         retry_after: args.usize_or("retry-after-s", defaults.retry_after as usize)? as u64,
+        engine_workers: args.usize_or("engine-workers", defaults.engine_workers)?,
+    };
+
+    // weights and the host expert store are built ONCE, outside the
+    // per-replica closure: every replica decodes the same weights and —
+    // critically — shares ONE `HostExpertStore`, so the RAM budget and
+    // disk tier are process-global however many replicas run (per-replica
+    // device caches over a shared host tier; DESIGN.md §12). Backends are
+    // still built per replica, on the replica's own thread, because the
+    // PJRT backend is not `Send`.
+    let (weights, artifacts) = if synthetic {
+        let w = Arc::new(crate::model::weights::generate_weights(
+            crate::model::ModelConfig::DEFAULT,
+            seed,
+        ));
+        (w, None)
+    } else {
+        let a = Artifacts::load(std::path::Path::new(&dir))?;
+        let w = Arc::new(crate::model::Weights::load(&a.weights_path)?);
+        (w, Some(a))
+    };
+    let store = if host_cache_mb > 0 {
+        let tier = HostTierConfig {
+            ram_budget_bytes: host_cache_mb << 20,
+            policy,
+            seed,
+            spill_dir: artifacts.as_ref().map(|a| a.expert_spill_dir()),
+        };
+        Arc::new(HostExpertStore::build_tiered(&weights, quant, &tier)?)
+    } else {
+        Arc::new(HostExpertStore::build(&weights, quant)?)
     };
 
     let listener = TcpListener::bind(("0.0.0.0", port as u16))?;
     let shutdown = Arc::new(AtomicBool::new(false));
     serve(
         listener,
-        move || {
-            let (weights, artifacts) = if synthetic {
-                let w = Arc::new(crate::model::weights::generate_weights(
-                    crate::model::ModelConfig::DEFAULT,
-                    seed,
-                ));
-                (w, None)
-            } else {
-                let a = Artifacts::load(std::path::Path::new(&dir))?;
-                let w = Arc::new(crate::model::Weights::load(&a.weights_path)?);
-                (w, Some(a))
-            };
+        move |_replica| {
             let backend: Box<dyn crate::runtime::Backend> = match &artifacts {
                 Some(a) if backend_kind != "native" => {
                     Box::new(crate::runtime::pjrt::PjrtBackend::new(a, &weights)?)
                 }
                 _ => Box::new(crate::runtime::native::NativeBackend::new(Arc::clone(&weights))),
-            };
-            let store = if host_cache_mb > 0 {
-                let tier = HostTierConfig {
-                    ram_budget_bytes: host_cache_mb << 20,
-                    policy,
-                    seed,
-                    spill_dir: artifacts.as_ref().map(|a| a.expert_spill_dir()),
-                };
-                Arc::new(HostExpertStore::build_tiered(&weights, quant, &tier)?)
-            } else {
-                Arc::new(HostExpertStore::build(&weights, quant)?)
             };
             let mut cfg = crate::engine::EngineConfig::serving(capacity, policy, spec);
             cfg.transfer_workers = transfer_workers;
@@ -1645,7 +2010,12 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
                 mc.n_layers,
                 mc.n_experts,
             )?;
-            Ok(crate::engine::InferenceEngine::with_predictor(backend, store, cfg, predictor))
+            Ok(crate::engine::InferenceEngine::with_predictor(
+                backend,
+                Arc::clone(&store),
+                cfg,
+                predictor,
+            ))
         },
         serve_cfg,
         shutdown,
@@ -1715,6 +2085,7 @@ mod tests {
                 n_tokens,
                 sampling: Sampling::Greedy,
                 priority: Priority::Interactive,
+                affinity: None,
                 reply: ReplyTo::Channel(tx),
                 enqueued: Instant::now(),
             },
@@ -2016,6 +2387,163 @@ mod tests {
             _ => panic!("expected request"),
         }
         q.close();
+    }
+
+    #[test]
+    fn replica_router_routes_by_load_and_affinity() {
+        let router = ReplicaRouter::new(2);
+        assert_eq!(router.n(), 2);
+        assert_eq!(router.alive_count(), 2);
+        // both idle: both at minimum load, either may claim unpinned work
+        assert!(router.routes_to(0, None));
+        assert!(router.routes_to(1, None));
+        // load imbalance: only the least-loaded replica claims
+        router.set_active(0, 3);
+        router.set_active(1, 1);
+        assert!(!router.routes_to(0, None));
+        assert!(router.routes_to(1, None));
+        // affinity pins regardless of load: key k → alive slot k mod 2
+        assert!(router.routes_to(0, Some(0)));
+        assert!(!router.routes_to(1, Some(0)));
+        assert!(router.routes_to(1, Some(1)));
+        assert!(router.routes_to(0, Some(2)));
+        // death quarantines the replica and remaps its keys to survivors
+        assert_eq!(router.mark_dead(0), 1);
+        assert!(!router.routes_to(0, None));
+        assert!(!router.routes_to(0, Some(0)));
+        assert!(router.routes_to(1, Some(0)));
+        assert_eq!(router.affinity_target(17), Some(1));
+        assert_eq!(router.mark_dead(1), 0);
+        assert_eq!(router.affinity_target(0), None);
+    }
+
+    #[test]
+    fn pop_routed_claims_only_eligible_and_sheds_atomically() {
+        let metrics = Arc::new(ServeMetrics::default());
+        let q = AdmissionQueue::new(8, Arc::clone(&metrics));
+        let router = ReplicaRouter::new(2);
+        let mk = |n: usize, aff: Option<u64>| {
+            let (mut r, _rx) = request_with_reply(n);
+            r.affinity = aff;
+            r
+        };
+        assert!(q.try_push(mk(1, Some(0))).is_ok()); // pinned to replica 0
+        assert!(q.try_push(mk(2, Some(1))).is_ok()); // pinned to replica 1
+        assert!(q.try_push(mk(3, None)).is_ok());
+        // replica 1 skips replica 0's pinned request and claims its own
+        match q.pop_routed(1, &router, false, None) {
+            (Popped::Req(r), aged) => {
+                assert_eq!(r.n_tokens, 2);
+                assert!(aged.is_empty());
+            }
+            _ => panic!("expected request"),
+        }
+        // replica 0 drains FIFO among its eligible requests
+        match q.pop_routed(0, &router, false, None) {
+            (Popped::Req(r), _) => assert_eq!(r.n_tokens, 1),
+            _ => panic!("expected request"),
+        }
+        match q.pop_routed(0, &router, false, None) {
+            (Popped::Req(r), _) => assert_eq!(r.n_tokens, 3),
+            _ => panic!("expected request"),
+        }
+        // claim-then-shed under ONE lock acquisition: the same call sheds
+        // the aged request and claims the fresh one
+        let (mut old, _rx_old) = request_with_reply(7);
+        if let Some(t) = Instant::now().checked_sub(Duration::from_secs(60)) {
+            old.enqueued = t;
+        } else {
+            return; // machine uptime < backdate window; nothing to test
+        }
+        q.try_push(old).ok().unwrap();
+        q.try_push(mk(8, None)).ok().unwrap();
+        match q.pop_routed(0, &router, false, Some(Duration::from_secs(1))) {
+            (Popped::Req(r), aged) => {
+                assert_eq!(r.n_tokens, 8);
+                assert_eq!(aged.len(), 1);
+                assert_eq!(aged[0].n_tokens, 7);
+            }
+            _ => panic!("expected request"),
+        }
+        assert_eq!(metrics.queue_depth.load(Ordering::Relaxed), 0);
+        // a dead replica claims nothing even with unpinned work queued
+        q.try_push(mk(9, None)).ok().unwrap();
+        router.mark_dead(0);
+        assert!(matches!(q.pop_routed(0, &router, false, None), (Popped::Empty, _)));
+        match q.pop_routed(1, &router, false, None) {
+            (Popped::Req(r), _) => assert_eq!(r.n_tokens, 9),
+            _ => panic!("expected request"),
+        }
+        q.close();
+        assert!(matches!(q.pop_routed(1, &router, false, None), (Popped::Closed, _)));
+    }
+
+    #[test]
+    fn affinity_key_numeric_verbatim_else_hashed() {
+        assert_eq!(affinity_key("0"), 0);
+        assert_eq!(affinity_key("42"), 42);
+        assert_eq!(affinity_key("user-abc"), affinity_key("user-abc"));
+        assert_ne!(affinity_key("user-abc"), affinity_key("user-abd"));
+        assert_ne!(affinity_key(""), affinity_key("x"));
+    }
+
+    #[test]
+    fn metrics_json_replicated_merges_and_reports_replicas() {
+        let metrics = ServeMetrics::default();
+        metrics.engine_replicas_alive.store(2, Ordering::Relaxed);
+        let a = ServeSnapshot {
+            completed_sessions: 3,
+            cache: CacheStats { hits: 10, misses: 2, ..Default::default() },
+            round_batching: RoundBatchStats {
+                rounds: 2,
+                distinct_experts: 5,
+                dedup_joins: 3,
+                batched_rows: 8,
+            },
+            host_tier: HostTierStats { host_accesses: 50, ram_hits: 40, ..Default::default() },
+            ..Default::default()
+        };
+        let b = ServeSnapshot {
+            completed_sessions: 4,
+            cache: CacheStats { hits: 20, misses: 5, ..Default::default() },
+            round_batching: RoundBatchStats {
+                rounds: 3,
+                distinct_experts: 7,
+                dedup_joins: 4,
+                batched_rows: 11,
+            },
+            // the SAME shared store, read later by replica b (more
+            // accesses accumulated) — must be taken once, never summed
+            host_tier: HostTierStats { host_accesses: 90, ram_hits: 70, ..Default::default() },
+            ..Default::default()
+        };
+        let router = ReplicaRouter::new(2);
+        router.note_admitted(0);
+        router.note_admitted(1);
+        router.note_admitted(1);
+        let v = metrics_json_replicated(&metrics, &[a, b], &router);
+        assert_eq!(v.get("engine_replicas_alive").as_usize(), Some(2));
+        // per-replica counters sum across replicas
+        assert_eq!(v.get("completed_sessions").as_usize(), Some(7));
+        let cache = v.get("shared_cache");
+        assert_eq!(cache.get("hits").as_usize(), Some(30));
+        assert_eq!(cache.get("misses").as_usize(), Some(7));
+        // the dedup identity batched_rows − distinct_experts == dedup_joins
+        // survives the merge
+        let rb = v.get("round_batching");
+        assert_eq!(rb.get("batched_rows").as_usize(), Some(19));
+        assert_eq!(rb.get("distinct_experts").as_usize(), Some(12));
+        assert_eq!(rb.get("dedup_joins").as_usize(), Some(7));
+        // shared-store stats come from the freshest reader, not a sum
+        let ht = v.get("host_tier");
+        assert_eq!(ht.get("host_accesses").as_usize(), Some(90));
+        assert_eq!(ht.get("ram_hits").as_usize(), Some(70));
+        let replicas = v.get("replicas").as_arr().unwrap();
+        assert_eq!(replicas.len(), 2);
+        assert_eq!(replicas[0].get("admitted").as_usize(), Some(1));
+        assert_eq!(replicas[1].get("admitted").as_usize(), Some(2));
+        assert_eq!(replicas[1].get("alive").as_bool(), Some(true));
+        assert_eq!(replicas[1].get("completed_sessions").as_usize(), Some(4));
     }
 
     /// Loopback socket pair for exercising StreamConn against a real TCP

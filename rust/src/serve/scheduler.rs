@@ -72,7 +72,7 @@
 //!   `2·max_sessions + 2` rounds even under saturating interactive load.
 
 use crate::engine::batch::Session;
-use crate::engine::{InferenceEngine, RoundWork};
+use crate::engine::{EngineReplica, InferenceEngine, RoundWork};
 use crate::metrics::{
     CacheStats, HostTierStats, PipelineStats, PrecisionRecall, RoundBatchStats, ServeMetrics,
     SessionTally,
@@ -81,7 +81,7 @@ use crate::model::sampler::Sampler;
 use crate::model::tokenizer::Tokenizer;
 use crate::serve::{
     release_inflight, AdmissionQueue, Completion, GenError, GenRequest, GenResponse, Popped,
-    Priority, ReplyTo, RETRY_AFTER_S,
+    Priority, ReplicaRouter, ReplyTo, RETRY_AFTER_S,
 };
 use crate::sim::costmodel::TokenEvents;
 use std::collections::VecDeque;
@@ -237,6 +237,65 @@ pub struct ServeSnapshot {
     pub sessions: Vec<SessionView>,
 }
 
+impl ServeSnapshot {
+    /// Merge per-replica snapshots into the process-wide `/metrics` view.
+    ///
+    /// Sources split into two classes (the multi-replica aggregation
+    /// fix): **per-replica** stats — each replica's own scheduler
+    /// counters, device `ExpertCache`, transfer pipeline + buffer pool,
+    /// speculation, predictor, and round batching — are summed/merged
+    /// across replicas. **Shared-store** stats (`host_tier`: ONE
+    /// `HostExpertStore` behind every replica) are taken ONCE, from the
+    /// replica that has observed the most store accesses — the counters
+    /// are process-global and monotonic, so `max(host_accesses)` picks
+    /// the freshest read; summing them would count the same accesses once
+    /// per replica.
+    pub fn merged(snaps: &[ServeSnapshot]) -> ServeSnapshot {
+        let Some(first) = snaps.first() else {
+            return ServeSnapshot::default();
+        };
+        let mut out = ServeSnapshot {
+            policy: first.policy.clone(),
+            capacity_per_layer: first.capacity_per_layer,
+            n_layers: first.n_layers,
+            ..ServeSnapshot::default()
+        };
+        for s in snaps {
+            out.active_sessions += s.active_sessions;
+            out.completed_sessions += s.completed_sessions;
+            out.failed_sessions += s.failed_sessions;
+            out.prefill_backlog += s.prefill_backlog;
+            out.cache.merge(&s.cache);
+            out.spec.merge(&s.spec);
+            out.cross_session_prefetch_hits += s.cross_session_prefetch_hits;
+            out.predictor_active |= s.predictor_active;
+            out.predictor.merge(&s.predictor);
+            out.predictor_skipped_records += s.predictor_skipped_records;
+            for (o, v) in out.prefetch_hits_by_source.iter_mut().zip(s.prefetch_hits_by_source) {
+                *o += v;
+            }
+            out.pipeline.merge(&s.pipeline);
+            out.round_batching.merge(&s.round_batching);
+            out.degraded_tokens += s.degraded_tokens;
+            out.fetch_retries += s.fetch_retries;
+            out.sessions.extend(s.sessions.iter().cloned());
+        }
+        out.host_tier = snaps
+            .iter()
+            .max_by_key(|s| s.host_tier.host_accesses)
+            .map(|s| s.host_tier)
+            .unwrap_or_default();
+        // the dedup accounting identity holds per replica and is
+        // preserved by summation — check it on the merged view
+        debug_assert_eq!(
+            out.round_batching.batched_rows,
+            out.round_batching.distinct_experts + out.round_batching.dedup_joins,
+            "dedup identity must survive the merge"
+        );
+        out
+    }
+}
+
 struct ActiveSession {
     inner: Session,
     started: Instant,
@@ -371,6 +430,16 @@ fn stream_progress(
 /// [`run_scheduler`] is the production loop over it.
 pub struct Scheduler {
     engine: InferenceEngine,
+    /// Which engine replica this scheduler drives (0 of 1 in
+    /// single-replica runs) — its slot in the [`ReplicaRouter`] and the
+    /// offset of its session-id stride.
+    replica_id: usize,
+    router: Arc<ReplicaRouter>,
+    /// Session ids advance by this much per admission (the router's
+    /// replica count): replica r issues r+1, r+1+N, r+1+2N, … so ids are
+    /// process-unique without cross-replica coordination. Degenerates to
+    /// the historical 1, 2, 3, … at N=1.
+    id_stride: u64,
     tk: Tokenizer,
     queue: Arc<AdmissionQueue>,
     cfg: SchedulerConfig,
@@ -399,6 +468,31 @@ impl Scheduler {
         metrics: Arc<ServeMetrics>,
         snapshot: Arc<Mutex<ServeSnapshot>>,
     ) -> Scheduler {
+        Scheduler::for_replica(
+            EngineReplica::solo(engine),
+            queue,
+            completions,
+            cfg,
+            metrics,
+            snapshot,
+            ReplicaRouter::new(1),
+        )
+    }
+
+    /// Build the scheduler for one replica of a multi-replica server: it
+    /// claims work through `router` (affinity + least-loaded eligibility,
+    /// atomically with the shed sweep) and issues session ids on its own
+    /// stride.
+    pub fn for_replica(
+        replica: EngineReplica,
+        queue: Arc<AdmissionQueue>,
+        completions: Sender<Completion>,
+        cfg: SchedulerConfig,
+        metrics: Arc<ServeMetrics>,
+        snapshot: Arc<Mutex<ServeSnapshot>>,
+        router: Arc<ReplicaRouter>,
+    ) -> Scheduler {
+        let EngineReplica { id: replica_id, engine } = replica;
         let tk = Tokenizer::new(engine.config().vocab_size);
         {
             let mut snap = snapshot.lock().unwrap();
@@ -417,9 +511,12 @@ impl Scheduler {
             recent: VecDeque::new(),
             completed: 0,
             failed_sessions: 0,
-            next_id: 1,
+            next_id: replica_id as u64 + 1,
+            id_stride: router.n() as u64,
             round: 0,
             prefill_last_round: 0,
+            replica_id,
+            router,
             engine,
         }
     }
@@ -436,40 +533,52 @@ impl Scheduler {
     /// Returns `None` exactly once — when the queue is closed and drained
     /// and no session remains (the run is over).
     pub fn turn(&mut self) -> Option<RoundReport> {
-        // --- shed sweep: requests past their queue deadline answer 503 +
-        // Retry-After *before* admission — they never become sessions and
-        // never consume an engine step
-        if let Some(t) = self.cfg.queue_timeout {
-            for req in self.queue.take_aged(t) {
-                shed(req, &self.active.completions, &self.metrics, self.cfg.retry_after);
+        // --- shed sweep for turns with no admission capacity: requests
+        // past their queue deadline answer 503 + Retry-After without ever
+        // becoming sessions. When there IS capacity, shedding happens
+        // inside `pop_routed` below, atomically with each claim.
+        if self.active.sessions.len() >= self.max_sessions {
+            if let Some(t) = self.cfg.queue_timeout {
+                for req in self.queue.take_aged(t) {
+                    shed(req, &self.active.completions, &self.metrics, self.cfg.retry_after);
+                }
             }
         }
 
         // --- admission: block when idle, drain opportunistically when
-        // busy — sessions join mid-flight, between rounds, never barriers
+        // busy — sessions join mid-flight, between rounds, never barriers.
+        // Claim-or-shed is decided under ONE queue-lock acquisition
+        // (`pop_routed`), so with N replica schedulers popping
+        // concurrently a request is claimed XOR shed, never both — and a
+        // claimed request was within its deadline at the claim itself.
         while self.active.sessions.len() < self.max_sessions {
-            let req = match self.queue.pop(self.active.sessions.is_empty()) {
+            let block = self.active.sessions.is_empty();
+            let (popped, aged) =
+                self.queue
+                    .pop_routed(self.replica_id, &self.router, block, self.cfg.queue_timeout);
+            let had_aged = !aged.is_empty();
+            for req in aged {
+                shed(req, &self.active.completions, &self.metrics, self.cfg.retry_after);
+            }
+            let req = match popped {
                 Popped::Req(r) => r,
-                Popped::Empty => break,
+                Popped::Empty => {
+                    if block && had_aged {
+                        // got control back to shed before re-blocking;
+                        // still idle, so wait for work again
+                        continue;
+                    }
+                    break;
+                }
                 Popped::Closed => {
                     if self.active.sessions.is_empty() {
+                        self.router.set_active(self.replica_id, 0);
                         self.publish(); // final state for /metrics
                         return None; // closed, drained, nothing active
                     }
                     break;
                 }
             };
-            // a request can age past its deadline between the sweep and
-            // this pop (e.g. while the scheduler blocked idle): re-check,
-            // so "admitted" always implies "within deadline at admission"
-            if self
-                .cfg
-                .queue_timeout
-                .is_some_and(|t| req.enqueued.elapsed() > t)
-            {
-                shed(req, &self.active.completions, &self.metrics, self.cfg.retry_after);
-                continue;
-            }
             self.metrics
                 .queue_wait
                 .record_ns(req.enqueued.elapsed().as_nanos() as u64);
@@ -484,7 +593,11 @@ impl Scheduler {
                 &self.active.completions,
             ) {
                 self.active.sessions.push(sess);
-                self.next_id += 1;
+                self.router.note_admitted(self.replica_id);
+                // publish load as it rises so concurrent routing spreads
+                // the drain across replicas, not just after the round
+                self.router.set_active(self.replica_id, self.active.sessions.len());
+                self.next_id += self.id_stride;
             }
         }
 
@@ -504,6 +617,7 @@ impl Scheduler {
 
         let report = self.round_pass();
         self.retire();
+        self.router.set_active(self.replica_id, self.active.sessions.len());
         self.publish();
         Some(report)
     }
@@ -1019,6 +1133,7 @@ impl Scheduler {
 /// sessions remain. Owns the engine for its entire lifetime and returns it
 /// so callers can inspect post-run engine state (e.g.
 /// [`InferenceEngine::total_steps`] — the shed-consumes-nothing proof).
+/// Single-replica wrapper over [`run_replica`].
 pub fn run_scheduler(
     engine: InferenceEngine,
     queue: Arc<AdmissionQueue>,
@@ -1027,7 +1142,33 @@ pub fn run_scheduler(
     metrics: Arc<ServeMetrics>,
     snapshot: Arc<Mutex<ServeSnapshot>>,
 ) -> InferenceEngine {
-    let mut sched = Scheduler::new(engine, queue, completions, cfg, metrics, snapshot);
+    run_replica(
+        EngineReplica::solo(engine),
+        queue,
+        completions,
+        cfg,
+        metrics,
+        snapshot,
+        ReplicaRouter::new(1),
+    )
+}
+
+/// Run one replica's scheduler loop of a multi-replica server: claims
+/// work from the shared admission queue through `router` until the queue
+/// closes and drains and no session remains. Returns the replica's engine
+/// for post-run inspection (its `total_steps` sum across replicas is the
+/// exactly-once proof at N > 1).
+pub fn run_replica(
+    replica: EngineReplica,
+    queue: Arc<AdmissionQueue>,
+    completions: Sender<Completion>,
+    cfg: SchedulerConfig,
+    metrics: Arc<ServeMetrics>,
+    snapshot: Arc<Mutex<ServeSnapshot>>,
+    router: Arc<ReplicaRouter>,
+) -> InferenceEngine {
+    let mut sched =
+        Scheduler::for_replica(replica, queue, completions, cfg, metrics, snapshot, router);
     while sched.turn().is_some() {}
     sched.into_engine()
 }
@@ -1149,6 +1290,7 @@ mod tests {
                 n_tokens: n,
                 sampling: Sampling::Greedy,
                 priority: Priority::Interactive,
+                affinity: None,
                 reply: ReplyTo::Channel(tx),
                 enqueued: Instant::now(),
             },

@@ -363,12 +363,142 @@ pub fn paced_engine(
     pace: Arc<Pace>,
     transfer_workers: usize,
 ) -> anyhow::Result<InferenceEngine> {
+    let store = serve_store()?;
+    paced_engine_with_store(pace, transfer_workers, store)
+}
+
+/// The host expert store the paced serve harness uses (seed 42, F32).
+/// Build it ONCE and pass the same `Arc` to several
+/// [`paced_engine_with_store`] calls to get the multi-replica topology:
+/// per-replica engines/device caches over one shared host store.
+pub fn serve_store() -> anyhow::Result<Arc<HostExpertStore>> {
     let weights = Arc::new(generate_weights(serve_model_config(), 42));
-    let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32)?);
+    Ok(Arc::new(HostExpertStore::build(&weights, Scheme::F32)?))
+}
+
+/// [`paced_engine`] over a caller-provided host store (shared-store
+/// multi-replica tests pass the same `Arc` to every replica's engine).
+pub fn paced_engine_with_store(
+    pace: Arc<Pace>,
+    transfer_workers: usize,
+    store: Arc<HostExpertStore>,
+) -> anyhow::Result<InferenceEngine> {
+    let weights = Arc::new(generate_weights(serve_model_config(), 42));
     let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
     cfg.transfer_workers = transfer_workers;
     Ok(InferenceEngine::new(
         Box::new(PacedBackend { inner: NativeBackend::new(weights), pace }),
+        store,
+        cfg,
+    ))
+}
+
+/// Remote kill switch for replica-death tests: once flipped, the paired
+/// [`KillablePacedBackend`] panics at its next per-token step — modelling
+/// an engine worker dying mid-decode. The panic unwinds through the
+/// scheduler loop (its `ActiveSet` answers in-flight sessions with 500s)
+/// into the serve worker guard (which quarantines the replica).
+#[derive(Clone, Default)]
+pub struct KillSwitch(Arc<std::sync::atomic::AtomicBool>);
+
+impl KillSwitch {
+    pub fn new() -> KillSwitch {
+        KillSwitch::default()
+    }
+
+    pub fn kill(&self) {
+        self.0.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.0.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+/// A [`PacedBackend`] that panics at the next token step once its
+/// [`KillSwitch`] flips. The kill check runs BEFORE the pace gate so a
+/// killed replica dies even when no permits are outstanding.
+pub struct KillablePacedBackend {
+    inner: PacedBackend,
+    kill: KillSwitch,
+}
+
+impl Backend for KillablePacedBackend {
+    fn config(&self) -> &ModelConfig {
+        self.inner.config()
+    }
+    fn new_kv(&self) -> anyhow::Result<KvState> {
+        self.inner.new_kv()
+    }
+    fn embed(&self, tok: u32) -> anyhow::Result<Vec<f32>> {
+        if self.kill.is_killed() {
+            panic!("injected replica kill");
+        }
+        self.inner.embed(tok)
+    }
+    fn attn(
+        &self,
+        layer: usize,
+        x: &[f32],
+        kv: &mut KvState,
+        pos: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        self.inner.attn(layer, x, kv, pos)
+    }
+    fn router(&self, layer: usize, x_res: &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        self.inner.router(layer, x_res)
+    }
+    fn spec_router(&self, layer: usize, x_res: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.spec_router(layer, x_res)
+    }
+    fn expert(&self, h: &[f32], handle: &ExpertHandle) -> anyhow::Result<Vec<f32>> {
+        self.inner.expert(h, handle)
+    }
+    fn begin_round(&self) {
+        self.inner.begin_round()
+    }
+    fn expert_multi(
+        &self,
+        layer: usize,
+        expert: usize,
+        sessions: &[u64],
+        hs: &[&[f32]],
+        handle: &ExpertHandle,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.inner.expert_multi(layer, expert, sessions, hs, handle)
+    }
+    fn upload_expert(
+        &self,
+        w1: Vec<f32>,
+        w3: Vec<f32>,
+        w2: Vec<f32>,
+    ) -> anyhow::Result<ExpertHandle> {
+        self.inner.upload_expert(w1, w3, w2)
+    }
+    fn final_logits(&self, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.inner.final_logits(x)
+    }
+    fn name(&self) -> &'static str {
+        "native-paced-killable"
+    }
+}
+
+/// [`paced_engine_with_store`] whose backend dies when `kill` flips —
+/// the replica-kill fault harness.
+pub fn killable_paced_engine(
+    pace: Arc<Pace>,
+    transfer_workers: usize,
+    store: Arc<HostExpertStore>,
+    kill: KillSwitch,
+) -> anyhow::Result<InferenceEngine> {
+    let weights = Arc::new(generate_weights(serve_model_config(), 42));
+    let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
+    cfg.transfer_workers = transfer_workers;
+    Ok(InferenceEngine::new(
+        Box::new(KillablePacedBackend {
+            inner: PacedBackend { inner: NativeBackend::new(weights), pace },
+            kill,
+        }),
         store,
         cfg,
     ))

@@ -30,7 +30,10 @@
 
 mod common;
 
-use common::{faulty_engine, paced_engine, wait_until, Pace};
+use common::{
+    faulty_engine, killable_paced_engine, paced_engine, paced_engine_with_store, serve_store,
+    wait_until, KillSwitch, Pace,
+};
 use moe_offload::cache::PolicyKind;
 use moe_offload::engine::{EngineConfig, InferenceEngine};
 use moe_offload::model::weights::generate_weights;
@@ -144,12 +147,14 @@ struct Server {
 
 impl Server {
     fn start(cfg: ServeConfig, spec: bool) -> Server {
-        Server::start_with(cfg, move || make_engine(spec))
+        Server::start_with(cfg, move |_replica| make_engine(spec))
     }
 
+    /// `make` is called once per engine replica (`cfg.engine_workers`
+    /// times) with the replica id, so it must be `Fn`, not `FnOnce`.
     fn start_with<F>(cfg: ServeConfig, make: F) -> Server
     where
-        F: FnOnce() -> anyhow::Result<InferenceEngine> + Send + 'static,
+        F: Fn(usize) -> anyhow::Result<InferenceEngine> + Send + Sync + 'static,
     {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -339,16 +344,26 @@ fn bounded_queue_applies_backpressure() {
 #[test]
 fn overload_at_default_config_rejects_and_completes() {
     for transfer_workers in [0usize, 1, 3] {
-        overload_run(transfer_workers);
+        overload_run(transfer_workers, 1);
     }
 }
 
-fn overload_run(transfer_workers: usize) {
-    let cfg = ServeConfig::default();
+/// The same overload flood against TWO engine replicas: exactly-once
+/// completion (ok + rejected == clients, every 200 fully decoded) must
+/// hold when N schedulers race to claim from the one admission queue,
+/// and the per-replica admission counts in `/metrics` must partition the
+/// merged total — both replicas demonstrably took work.
+#[test]
+fn overload_at_two_replicas_completes_exactly_once() {
+    overload_run(0, 2);
+}
+
+fn overload_run(transfer_workers: usize, engine_workers: usize) {
+    let cfg = ServeConfig { engine_workers, ..ServeConfig::default() };
     let bound = cfg.queue_depth;
     let n_clients = 90usize; // > queue_depth + max_sessions: overflow is structural
     let n_tokens = 6usize;
-    let server = Server::start_with(cfg, move || {
+    let server = Server::start_with(cfg, move |_replica| {
         make_slow_engine(Duration::from_millis(2), transfer_workers)
     });
     let addr = server.addr;
@@ -453,6 +468,29 @@ fn overload_run(transfer_workers: usize) {
     assert_eq!(m.get("tokens_generated").as_usize(), Some(ok * n_tokens));
     assert_eq!(m.get("shed_total").as_usize(), Some(0), "no shedding at default config");
     assert_eq!(m.get("failed_sessions").as_usize(), Some(0));
+
+    // replica accounting: the per-replica rows partition the merged totals
+    assert_eq!(m.get("engine_replicas_alive").as_usize(), Some(engine_workers));
+    let replicas = m.get("replicas").as_arr().unwrap();
+    assert_eq!(replicas.len(), engine_workers);
+    let completed_by_replica: usize = replicas
+        .iter()
+        .map(|r| r.get("completed_sessions").as_usize().unwrap())
+        .sum();
+    assert_eq!(completed_by_replica, ok, "per-replica completions must partition the total");
+    let admitted_by_replica: usize =
+        replicas.iter().map(|r| r.get("admitted").as_usize().unwrap()).sum();
+    assert_eq!(admitted_by_replica, ok, "every admitted session completed exactly once");
+    if engine_workers > 1 {
+        // least-loaded routing under a 90-client flood: an idle replica is
+        // always at minimum load, so both MUST have claimed work
+        for r in replicas {
+            assert!(
+                r.get("admitted").as_usize().unwrap() >= 1,
+                "a replica sat out the flood: {m:?}"
+            );
+        }
+    }
 }
 
 /// Queue-age shedding, deterministically: the single decode slot is held
@@ -473,7 +511,7 @@ fn queue_timeout_sheds_with_retry_after() {
             queue_timeout_ms: 75,
             ..ServeConfig::default()
         },
-        move || paced_engine(pace_engine, 0),
+        move |_replica| paced_engine(Arc::clone(&pace_engine), 0),
     );
     // declared after `server`: drops first on any unwind, releasing the
     // engine so the server's own drop can join its threads
@@ -593,7 +631,7 @@ fn short_first_tokens_land_during_long_prefill() {
             round_budget_tokens: 6,
             ..ServeConfig::default()
         },
-        move || paced_engine(pace_engine, 0),
+        move |_replica| paced_engine(Arc::clone(&pace_engine), 0),
     );
     let _open = Pace::open_on_drop(&pace);
     let addr = server.addr;
@@ -691,7 +729,7 @@ fn round_batching_dedup_accounting_is_exact() {
     let pace_engine = Arc::clone(&pace);
     let server = Server::start_with(
         ServeConfig { max_sessions: 8, queue_depth: 16, ..ServeConfig::default() },
-        move || paced_engine(pace_engine, 0),
+        move |_replica| paced_engine(Arc::clone(&pace_engine), 0),
     );
     let _open = Pace::open_on_drop(&pace);
     let addr = server.addr;
@@ -828,7 +866,7 @@ fn control_plane_responds_during_decode_saturation() {
             queue_depth: 8,
             ..ServeConfig::default()
         },
-        || make_slow_engine(Duration::from_millis(5), 0),
+        |_replica| make_slow_engine(Duration::from_millis(5), 0),
     );
     let addr = server.addr;
 
@@ -1010,7 +1048,7 @@ fn mid_decode_disconnect_frees_resources_while_survivors_finish() {
     let survivor_tokens = 8usize;
     let server = Server::start_with(
         ServeConfig { max_sessions: 4, queue_depth: 8, ..ServeConfig::default() },
-        || make_slow_engine(Duration::from_millis(2), 0),
+        |_replica| make_slow_engine(Duration::from_millis(2), 0),
     );
     let addr = server.addr;
 
@@ -1116,8 +1154,8 @@ fn transient_fetch_faults_are_retried_end_to_end() {
             plan = plan.fail_transient(l, e, 1);
         }
     }
-    let server = Server::start_with(ServeConfig::default(), move || {
-        faulty_engine(plan, 0, |c| c.fetch_retries = 2)
+    let server = Server::start_with(ServeConfig::default(), move |_replica| {
+        faulty_engine(plan.clone(), 0, |c| c.fetch_retries = 2)
     });
     let (status, resp) = http_post(server.addr, "/generate", body).unwrap();
     assert_eq!(status, 200, "{resp}");
@@ -1152,8 +1190,8 @@ fn deadline_breach_degrades_interactive_sessions_to_completion() {
             plan = plan.stall_ms(l, e, 1000.0);
         }
     }
-    let server = Server::start_with(ServeConfig::default(), move || {
-        faulty_engine(plan, 0, |c| c.demand_deadline_ms = 1)
+    let server = Server::start_with(ServeConfig::default(), move |_replica| {
+        faulty_engine(plan.clone(), 0, |c| c.demand_deadline_ms = 1)
     });
     let addr = server.addr;
     let body = r#"{"prompt":"degrade","n_tokens":12,"greedy":true}"#;
@@ -1176,4 +1214,447 @@ fn deadline_breach_degrades_interactive_sessions_to_completion() {
     assert_eq!(m.get("completed_sessions").as_usize(), Some(2));
     assert_eq!(m.get("failed_sessions").as_usize(), Some(0));
     assert_eq!(m.get("cancelled_sessions").as_usize(), Some(0));
+}
+
+// ---------------------------------------------------------------------------
+// Multi-replica suite: N engine workers over ONE admission queue and ONE
+// shared host store (DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// [`round_batching_dedup_accounting_is_exact`] on a 2-replica server:
+/// the same deterministic script runs pinned to replica 0 (its own
+/// `Pace`), with replica 1 idle — every merged `/metrics` assertion from
+/// the single-replica test must hold unchanged, because an idle replica
+/// contributes zeros to the merge. Then a session pinned to replica 1
+/// decodes too, and the merged dedup identity, the session-tally
+/// partition, and the per-replica admission counts must all stay exact.
+#[test]
+fn round_batching_dedup_stays_exact_across_two_replicas() {
+    let store = serve_store().unwrap();
+    let pace0 = Pace::new();
+    let pace1 = Pace::new();
+    let paces = [Arc::clone(&pace0), Arc::clone(&pace1)];
+    let server = Server::start_with(
+        ServeConfig {
+            engine_workers: 2,
+            max_sessions: 8,
+            queue_depth: 16,
+            ..ServeConfig::default()
+        },
+        move |replica| paced_engine_with_store(Arc::clone(&paces[replica]), 0, Arc::clone(&store)),
+    );
+    let _open0 = Pace::open_on_drop(&pace0);
+    pace1.open(); // replica 1 free-runs; it only gets work in the last phase
+    let addr = server.addr;
+
+    let rb = |m: &Value, k: &str| m.get("round_batching").get(k).as_usize().unwrap();
+
+    // --- phase 1: session A alone on replica 0
+    let a_client = std::thread::spawn(move || {
+        http_post(addr, "/generate?affinity=0", r#"{"prompt":"x","n_tokens":1,"greedy":true}"#)
+            .unwrap()
+    });
+    pace0.grant(1); // round 1: A's BOS token, alone by construction
+    assert!(
+        wait_until(|| rb(&fetch_metrics(addr), "rounds") == 1, Duration::from_secs(10)),
+        "first round never published"
+    );
+    let s0 = fetch_metrics(addr);
+    assert_eq!(rb(&s0, "dedup_joins"), 0, "a single-session round cannot join");
+    let d0 = rb(&s0, "distinct_experts");
+    assert!(d0 > 0, "round executed no experts");
+    assert_eq!(rb(&s0, "batched_rows"), d0, "one row per group when alone");
+
+    // --- phase 2: three identical twins, all pinned to replica 0, queue
+    // while its engine is blocked mid-round; the IDLE replica 1 wakes on
+    // every push but must leave them in place — a pinned request is
+    // claimable only by its affinity target
+    let twins: Vec<_> = (0..3)
+        .map(|_| {
+            std::thread::spawn(move || {
+                http_post(
+                    addr,
+                    "/generate?affinity=0",
+                    r#"{"prompt":"tw","n_tokens":5,"greedy":true}"#,
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("queue_depth").as_usize() == Some(3),
+            Duration::from_secs(10)
+        ),
+        "twins claimed early — or by the wrong replica"
+    );
+    // round 2: A alone (1 permit); round 3: A's last token + the twins'
+    // first (4 permits) — then A retires and replica 0 blocks again
+    pace0.grant(5);
+    assert!(
+        wait_until(
+            || {
+                let m = fetch_metrics(addr);
+                m.get("completed_sessions").as_usize() == Some(1) && rb(&m, "rounds") == 3
+            },
+            Duration::from_secs(10)
+        ),
+        "phase boundary never quiesced"
+    );
+    let s1 = fetch_metrics(addr);
+    let aligned = s1
+        .get("sessions")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|s| s.get("state").as_str() == Some("active"))
+        .map(|s| s.get("tokens").as_usize().unwrap())
+        .collect::<Vec<_>>();
+    assert_eq!(aligned, vec![1, 1, 1], "twins not admitted in one drain");
+
+    pace0.open();
+    assert!(
+        wait_until(
+            || {
+                let m = fetch_metrics(addr);
+                m.get("sessions").as_arr().is_some_and(|ss| {
+                    ss.len() == 4 && ss.iter().all(|s| s.get("state").as_str() == Some("done"))
+                })
+            },
+            Duration::from_secs(10)
+        ),
+        "twins never completed"
+    );
+    for t in twins {
+        let (status, body) = t.join().unwrap();
+        assert_eq!(status, 200, "{body}");
+    }
+    let (status, _) = a_client.join().unwrap();
+    assert_eq!(status, 200);
+
+    let s2 = fetch_metrics(addr);
+    let d_distinct = rb(&s2, "distinct_experts") - rb(&s1, "distinct_experts");
+    let d_joins = rb(&s2, "dedup_joins") - rb(&s1, "dedup_joins");
+    let d_rows = rb(&s2, "batched_rows") - rb(&s1, "batched_rows");
+    assert!(d_distinct > 0, "twin rounds executed no experts");
+    assert_eq!(d_rows, 3 * d_distinct, "each group must carry one row per twin");
+    assert_eq!(d_joins, 2 * d_distinct, "each group must pay 1 fetch + N-1 joins");
+
+    // --- phase 3: one session pinned to replica 1. Replica 0 issues odd
+    // session ids (1,3,5,7 — start 1, stride 2), replica 1 even (2,4,…):
+    // id spaces never collide across replicas
+    let (status, body) = http_post(
+        addr,
+        "/generate?affinity=1",
+        r#"{"prompt":"cross","n_tokens":4,"greedy":true}"#,
+    )
+    .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("session_id").as_usize(), Some(2), "replica 1 strides even ids");
+
+    let m = fetch_metrics(addr);
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(5));
+    assert_eq!(m.get("engine_replicas_alive").as_usize(), Some(2));
+    // the dedup identity survives the merge across BOTH replicas' stats
+    assert_eq!(
+        rb(&m, "batched_rows") - rb(&m, "distinct_experts"),
+        rb(&m, "dedup_joins"),
+        "dedup identity broke on the merged snapshot"
+    );
+    // per-session tallies across both replicas partition the merged totals
+    let cache = m.get("shared_cache");
+    let total = cache.get("hits").as_usize().unwrap() + cache.get("misses").as_usize().unwrap();
+    let part: usize = m
+        .get("sessions")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.get("hits").as_usize().unwrap() + s.get("misses").as_usize().unwrap())
+        .sum();
+    assert_eq!(part, total, "the merge must not double- or under-count tallies");
+    let replicas = m.get("replicas").as_arr().unwrap();
+    assert_eq!(replicas[0].get("admitted").as_usize(), Some(4));
+    assert_eq!(replicas[1].get("admitted").as_usize(), Some(1));
+}
+
+/// [`mid_decode_disconnect_frees_resources_while_survivors_finish`] on a
+/// 2-replica server: the doomed streamed session decodes on permit-gated
+/// replica 0, the survivor on free-running replica 1. The hang-up must
+/// cancel ONLY the doomed session — never its neighbor — and the
+/// per-replica admission counts prove the two really were sharded.
+#[test]
+fn mid_decode_disconnect_on_one_replica_leaves_the_other_untouched() {
+    let doomed_tokens = 60usize;
+    let survivor_tokens = 8usize;
+    let store = serve_store().unwrap();
+    let pace0 = Pace::new();
+    let pace1 = Pace::new();
+    let paces = [Arc::clone(&pace0), Arc::clone(&pace1)];
+    let server = Server::start_with(
+        ServeConfig {
+            engine_workers: 2,
+            max_sessions: 4,
+            queue_depth: 8,
+            ..ServeConfig::default()
+        },
+        move |replica| paced_engine_with_store(Arc::clone(&paces[replica]), 0, Arc::clone(&store)),
+    );
+    let _open0 = Pace::open_on_drop(&pace0);
+    pace1.open();
+    let addr = server.addr;
+
+    // doomed: a raw streamed connection pinned to replica 0
+    let mut doomed = TcpStream::connect(addr).unwrap();
+    let body = format!(r#"{{"prompt":"doomed","n_tokens":{doomed_tokens},"greedy":true}}"#);
+    write!(
+        doomed,
+        "POST /generate?stream=1&affinity=0 HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    doomed.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+
+    // survivor: pinned to free-running replica 1 — it completes no matter
+    // what happens to its neighbor's session
+    let survivor = std::thread::spawn(move || {
+        let body =
+            format!(r#"{{"prompt":"survivor","n_tokens":{survivor_tokens},"greedy":true}}"#);
+        http_post(addr, "/generate?affinity=1", &body).unwrap()
+    });
+
+    // drip permits to replica 0 until the doomed stream's first chunk
+    // lands (prefill + ≥ 1 decoded token), interleaving timed reads
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 256];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !first_chunk_received(&buf) {
+        assert!(Instant::now() < deadline, "no first chunk before deadline");
+        pace0.grant(1);
+        match doomed.read(&mut tmp) {
+            Ok(n) => {
+                assert!(n > 0, "server closed the stream early");
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => panic!("doomed stream read failed: {e}"),
+        }
+    }
+    let head = String::from_utf8_lossy(&buf).to_string();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    drop(doomed); // hang up mid-stream
+
+    // keep replica 0's rounds cycling so its disconnect sweep runs
+    assert!(
+        wait_until(
+            || {
+                pace0.grant(1);
+                fetch_metrics(addr).get("cancelled_sessions").as_usize() == Some(1)
+            },
+            Duration::from_secs(10)
+        ),
+        "disconnect never cancelled the doomed session"
+    );
+
+    let (status, body) = survivor.join().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("n_generated").as_usize(), Some(survivor_tokens));
+    assert_eq!(v.get("session_id").as_usize(), Some(2), "survivor decoded on replica 1");
+
+    assert!(
+        wait_until(
+            || fetch_metrics(addr).get("inflight_sessions").as_usize() == Some(0),
+            Duration::from_secs(10)
+        ),
+        "cancelled session never released its in-flight slot"
+    );
+    let m = fetch_metrics(addr);
+    assert_eq!(m.get("cancelled_sessions").as_usize(), Some(1));
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(1));
+    assert_eq!(m.get("failed_sessions").as_usize(), Some(0));
+    assert_eq!(
+        m.get("engine_replicas_alive").as_usize(),
+        Some(2),
+        "a client hang-up is not a replica death"
+    );
+    let replicas = m.get("replicas").as_arr().unwrap();
+    assert_eq!(replicas[0].get("admitted").as_usize(), Some(1));
+    assert_eq!(replicas[1].get("admitted").as_usize(), Some(1));
+    assert_eq!(replicas[1].get("completed_sessions").as_usize(), Some(1));
+}
+
+/// Kill replica 0 mid-stream (injected backend panic) and prove the blast
+/// radius is exactly one replica: its in-flight session is 500'd (stream
+/// cut unterminated), `engine_replicas_alive` drops to 1, the admission
+/// queue STAYS open, a survivor mid-decode on replica 1 finishes with
+/// text bit-identical to a single-replica control run, and affinity keys
+/// that pinned to the dead replica remap onto the alive set.
+#[test]
+fn replica_death_quarantines_itself_and_survivors_finish_bit_identical() {
+    let survivor_body = r#"{"prompt":"survivor","n_tokens":12,"greedy":true}"#;
+    // control: the same greedy request on a plain single-replica server
+    let control_text = {
+        let control = Server::start(ServeConfig::default(), false);
+        let (status, resp) = http_post(control.addr, "/generate", survivor_body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        json::parse(&resp).unwrap().get("text").as_str().unwrap().to_string()
+    };
+
+    let store = serve_store().unwrap();
+    let pace0 = Pace::new();
+    let pace1 = Pace::new();
+    let kill = KillSwitch::new();
+    let (mk_pace0, mk_pace1, mk_kill, mk_store) =
+        (Arc::clone(&pace0), Arc::clone(&pace1), kill.clone(), Arc::clone(&store));
+    let server = Server::start_with(
+        ServeConfig {
+            engine_workers: 2,
+            max_sessions: 4,
+            queue_depth: 8,
+            ..ServeConfig::default()
+        },
+        move |replica| {
+            if replica == 0 {
+                killable_paced_engine(
+                    Arc::clone(&mk_pace0),
+                    0,
+                    Arc::clone(&mk_store),
+                    mk_kill.clone(),
+                )
+            } else {
+                paced_engine_with_store(Arc::clone(&mk_pace1), 0, Arc::clone(&mk_store))
+            }
+        },
+    );
+    let _open0 = Pace::open_on_drop(&pace0);
+    let _open1 = Pace::open_on_drop(&pace1);
+    let addr = server.addr;
+
+    // victim: streamed, pinned to replica 0, held mid-decode by its pace
+    let mut victim = TcpStream::connect(addr).unwrap();
+    let body = r#"{"prompt":"victim","n_tokens":40,"greedy":true}"#;
+    write!(
+        victim,
+        "POST /generate?stream=1&affinity=0 HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .unwrap();
+    victim.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 256];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !first_chunk_received(&buf) {
+        assert!(Instant::now() < deadline, "victim never reached mid-stream");
+        pace0.grant(1);
+        match victim.read(&mut tmp) {
+            Ok(n) => {
+                assert!(n > 0, "server closed the victim stream before the kill");
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => panic!("victim read failed: {e}"),
+        }
+    }
+
+    // survivor: admitted on replica 1 BEFORE the kill, held mid-decode by
+    // ITS pace — it must ride out its neighbor's death untouched
+    let survivor = std::thread::spawn(move || {
+        http_post(addr, "/generate?affinity=1", survivor_body).unwrap()
+    });
+    assert!(
+        wait_until(
+            || {
+                let m = fetch_metrics(addr);
+                m.get("queue_depth").as_usize() == Some(0)
+                    && m.get("inflight_sessions").as_usize() == Some(2)
+            },
+            Duration::from_secs(10)
+        ),
+        "survivor never claimed by replica 1"
+    );
+
+    // kill: the next granted step on replica 0 panics its scheduler; the
+    // WorkerGuard must quarantine exactly that replica
+    kill.kill();
+    assert!(
+        wait_until(
+            || {
+                pace0.grant(1);
+                fetch_metrics(addr).get("engine_replicas_alive").as_usize() == Some(1)
+            },
+            Duration::from_secs(10)
+        ),
+        "replica 0's death never quarantined it"
+    );
+
+    // one dead replica must NOT mark the server down
+    let (status, hbody) = http_get(addr, "/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(hbody, "ok", "one dead replica must not fail /healthz");
+
+    // the victim's stream is cut without the chunked terminator
+    let dead_deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        assert!(Instant::now() < dead_deadline, "victim stream never terminated");
+        match victim.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+    }
+    let tail = String::from_utf8_lossy(&buf);
+    assert!(
+        !tail.ends_with("0\r\n\r\n"),
+        "a killed stream must not terminate cleanly: {tail}"
+    );
+
+    // the survivor rides out the death bit-identically
+    pace1.open();
+    let (status, sbody) = survivor.join().unwrap();
+    assert_eq!(status, 200, "{sbody}");
+    let v = json::parse(&sbody).unwrap();
+    assert_eq!(v.get("n_generated").as_usize(), Some(12));
+    assert_eq!(v.get("session_id").as_usize(), Some(2), "survivor decoded on replica 1");
+    assert_eq!(
+        v.get("text").as_str(),
+        Some(control_text.as_str()),
+        "replica death changed a survivor's tokens"
+    );
+
+    // affinity keys remap over the alive set: a key that pinned to the
+    // dead replica 0 now lands on replica 1 — the queue is still open and
+    // the result is still bit-identical
+    let (status, rbody) = http_post(addr, "/generate?affinity=0", survivor_body).unwrap();
+    assert_eq!(status, 200, "queue must stay open after a replica death: {rbody}");
+    let v = json::parse(&rbody).unwrap();
+    assert_eq!(v.get("text").as_str(), Some(control_text.as_str()));
+    assert_eq!(
+        v.get("session_id").as_usize(),
+        Some(4),
+        "remapped session must decode on replica 1"
+    );
+
+    let m = fetch_metrics(addr);
+    assert_eq!(m.get("engine_replicas_alive").as_usize(), Some(1));
+    assert_eq!(
+        m.get("failed_sessions").as_usize(),
+        Some(1),
+        "the victim is a failure, not a completion"
+    );
+    assert_eq!(m.get("completed_sessions").as_usize(), Some(2));
+    assert!(m.get("errors").as_usize().unwrap() >= 1, "the victim's 500 went uncounted");
+    let replicas = m.get("replicas").as_arr().unwrap();
+    assert_eq!(replicas[0].get("alive").as_bool(), Some(false));
+    assert_eq!(replicas[1].get("alive").as_bool(), Some(true));
+    assert_eq!(replicas[1].get("completed_sessions").as_usize(), Some(2));
 }

@@ -2,7 +2,7 @@
 //! system's core invariants.
 
 use moe_offload::cache::{LayerCache, PolicyKind};
-use moe_offload::engine::{EngineConfig, InferenceEngine};
+use moe_offload::engine::{EngineConfig, EngineReplica, InferenceEngine};
 use moe_offload::metrics::{PrecisionRecall, RoundBatchStats, ServeMetrics};
 use moe_offload::model::sampler::{top_k, Sampler, Sampling};
 use moe_offload::model::weights::generate_weights;
@@ -13,9 +13,11 @@ use moe_offload::offload::store::{HostExpertStore, HostTierConfig};
 use moe_offload::quant::{QTensor, Scheme};
 use moe_offload::runtime::native::NativeBackend;
 use moe_offload::serve::scheduler::{
-    run_scheduler, RoundReport, Scheduler, SchedulerConfig, ServeSnapshot,
+    run_replica, RoundReport, Scheduler, SchedulerConfig, ServeSnapshot,
 };
-use moe_offload::serve::{AdmissionQueue, GenRequest, GenResult, Priority, ReplyTo};
+use moe_offload::serve::{
+    AdmissionQueue, GenRequest, GenResult, Priority, ReplicaRouter, ReplyTo,
+};
 use moe_offload::sim::{cachesim, tracegen};
 use moe_offload::util::json::{self, Value};
 use moe_offload::util::quickcheck::{forall, Gen};
@@ -361,15 +363,19 @@ fn prop_tiered_store_bit_identical_to_all_ram() {
 
 #[test]
 fn prop_serve_admission_exactly_once() {
-    // serve-layer admission invariants, across random (transfer workers,
-    // session cap, queue depth, request bursts):
+    // serve-layer admission invariants, across random (engine replicas,
+    // transfer workers, session cap, queue depth, request bursts):
     //   * every accepted request gets EXACTLY one answer;
     //   * a rejected request is never also served;
     //   * answers match their request (distinct n_tokens per request — a
     //     cross-session payload swap would be visible immediately);
     //   * stale requests are shed with 503 and consume zero engine steps
-    //     (engine.total_steps() equals the steps of served sessions only).
+    //     (summed total_steps() equals the steps of served sessions only);
+    //   * with N ∈ {1, 2, 4} replicas racing to claim from the ONE queue,
+    //     each request — pinned by affinity or not — is still answered
+    //     exactly once: claim-or-shed is atomic under the queue lock.
     forall(6, |g: &mut Gen| {
+        let n_replicas = *g.choose(&[1usize, 2, 4]);
         let transfer_workers = *g.choose(&[0usize, 1, 3]);
         let max_sessions = g.usize(1..=4);
         let depth = g.usize(1..=6);
@@ -382,35 +388,46 @@ fn prop_serve_admission_exactly_once() {
 
         let metrics = Arc::new(ServeMetrics::default());
         let queue = AdmissionQueue::new(depth, Arc::clone(&metrics));
-        let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+        let router = ReplicaRouter::new(n_replicas);
         let (completions, _completion_rx) = channel();
 
-        // the engine is not Send: build it on the scheduler thread
-        let sched_queue = Arc::clone(&queue);
-        let sched_metrics = Arc::clone(&metrics);
-        let scheduler = std::thread::spawn(move || {
-            let cfg_model =
-                ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY };
-            let weights = Arc::new(generate_weights(cfg_model, 7));
-            let store = Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
-            let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
-            cfg.transfer_workers = transfer_workers;
-            let engine =
-                InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg);
-            let engine = run_scheduler(
-                engine,
-                sched_queue,
-                completions,
-                SchedulerConfig {
-                    max_sessions,
-                    queue_timeout: Some(timeout),
-                    ..SchedulerConfig::default()
-                },
-                sched_metrics,
-                Arc::clone(&snapshot),
-            );
-            engine.total_steps()
-        });
+        // the engines are not Send: each replica builds its own on its
+        // scheduler thread; all N race to claim from the one queue
+        let schedulers: Vec<_> = (0..n_replicas)
+            .map(|r| {
+                let sched_queue = Arc::clone(&queue);
+                let sched_metrics = Arc::clone(&metrics);
+                let sched_router = Arc::clone(&router);
+                let sched_completions = completions.clone();
+                let snapshot = Arc::new(Mutex::new(ServeSnapshot::default()));
+                std::thread::spawn(move || {
+                    let cfg_model =
+                        ModelConfig { vocab_size: 320, max_seq: 96, ..ModelConfig::TINY };
+                    let weights = Arc::new(generate_weights(cfg_model, 7));
+                    let store =
+                        Arc::new(HostExpertStore::build(&weights, Scheme::F32).unwrap());
+                    let mut cfg = EngineConfig::serving(4, PolicyKind::Lfu, false);
+                    cfg.transfer_workers = transfer_workers;
+                    let engine =
+                        InferenceEngine::new(Box::new(NativeBackend::new(weights)), store, cfg);
+                    let engine = run_replica(
+                        EngineReplica::new(r, engine),
+                        sched_queue,
+                        sched_completions,
+                        SchedulerConfig {
+                            max_sessions,
+                            queue_timeout: Some(timeout),
+                            ..SchedulerConfig::default()
+                        },
+                        sched_metrics,
+                        snapshot,
+                        sched_router,
+                    );
+                    engine.total_steps()
+                })
+            })
+            .collect();
+        drop(completions);
 
         let mut accepted: Vec<(usize, Receiver<GenResult>, bool)> = Vec::new();
         let mut rejected: Vec<(usize, Receiver<GenResult>)> = Vec::new();
@@ -430,6 +447,10 @@ fn prop_serve_admission_exactly_once() {
                     sampling: Sampling::Greedy,
                     priority: Priority::Interactive,
                     reply: ReplyTo::Channel(tx),
+                    // a random subset is affinity-pinned: pinned requests
+                    // are claimable by exactly one replica, which must
+                    // not break exactly-once (nor strand them)
+                    affinity: g.bool().then_some((i % 5) as u64),
                     enqueued,
                 };
                 match queue.try_push(req) {
@@ -443,7 +464,10 @@ fn prop_serve_admission_exactly_once() {
             std::thread::sleep(Duration::from_millis(g.usize(0..=2) as u64));
         }
         queue.close();
-        let total_steps = scheduler.join().expect("scheduler thread");
+        let total_steps: u64 = schedulers
+            .into_iter()
+            .map(|s| s.join().expect("scheduler thread"))
+            .sum();
 
         let mut served_steps = 0u64;
         let mut shed_count = 0u64;
@@ -562,6 +586,7 @@ fn prop_chunked_prefill_fair_and_bit_identical() {
                         sampling,
                         priority: Priority::Interactive,
                         reply: ReplyTo::Channel(tx),
+                        affinity: None,
                         enqueued: Instant::now(),
                     })
                     .ok()
@@ -718,6 +743,7 @@ fn prop_round_batching_bit_identical() {
                         sampling,
                         priority: Priority::Interactive,
                         reply: ReplyTo::Channel(tx),
+                        affinity: None,
                         enqueued: Instant::now(),
                     })
                     .ok()
@@ -858,6 +884,7 @@ fn prop_cancel_releases_everything() {
                         sampling,
                         priority: Priority::Interactive,
                         reply: ReplyTo::Channel(tx),
+                        affinity: None,
                         enqueued: Instant::now(),
                     })
                     .ok()
